@@ -1,0 +1,71 @@
+//! Serving scenario: the expm service under a CIFAR-10-shaped request
+//! stream, reporting throughput and latency percentiles.
+//!
+//!   cargo run --release --example expm_service -- [--calls 200] [--native-only]
+//!
+//! This is the paper's workload (Figures 2a-2h) recast as a *service*:
+//! every trace call becomes a client request; the coordinator plans (m, s)
+//! per matrix with Algorithm 4, groups compatible matrices across
+//! requests, and executes on PJRT artifacts (or natively off-grid).
+
+use std::time::Instant;
+
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::runtime::default_artifact_dir;
+use expmflow::trace::{generate, TraceKind};
+use expmflow::util::cli::Args;
+use expmflow::util::stats::percentile;
+
+fn main() {
+    let args = Args::from_env();
+    let calls = args.get_usize("calls", 200);
+    let native_only = args.has("native-only");
+    let cfg = ServiceConfig {
+        artifact_dir: if native_only {
+            None
+        } else {
+            Some(default_artifact_dir())
+        },
+        ..Default::default()
+    };
+    let svc = ExpmService::start(cfg);
+
+    let trace = generate(TraceKind::Cifar10, calls, 77);
+    let total_matrices: usize =
+        trace.iter().map(|c| c.matrices.len()).sum();
+    println!(
+        "replaying {calls} CIFAR-10-shaped expm calls ({total_matrices} matrices) \
+         through the service{}",
+        if native_only { " [native only]" } else { "" }
+    );
+
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(calls);
+    // Submit in waves of 8 concurrent requests — a training loop with
+    // pipelined layers produces exactly this pattern.
+    for wave in trace.chunks(8) {
+        let pending: Vec<_> = wave
+            .iter()
+            .map(|call| (Instant::now(), svc.submit(call.matrices.clone(), 1e-8)))
+            .collect();
+        for (sent, rx) in pending {
+            let resp = rx.recv().expect("service alive");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            latencies.push(sent.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\nthroughput: {:.0} expm/s  ({:.1} calls/s, {wall:.2}s total)",
+        total_matrices as f64 / wall,
+        calls as f64 / wall
+    );
+    println!(
+        "request latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms",
+        percentile(&latencies, 50.0),
+        percentile(&latencies, 90.0),
+        percentile(&latencies, 99.0)
+    );
+    println!("\n{}", svc.metrics.snapshot().render());
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the public API in five minutes.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Computes e^A natively with the paper's method (Algorithm 2 + 4),
+//!    the Paterson–Stockmeyer variant (Algorithm 3) and the Xiao–Liu
+//!    baseline (Algorithm 1), comparing accuracy and matrix products.
+//! 2. Starts the expm service and pushes one batched request through the
+//!    dynamic batcher (PJRT-backed if `make artifacts` has run).
+
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::expm::{expm, pade::expm_pade13, ExpmOptions, Method};
+use expmflow::linalg::{norm1, Matrix};
+use expmflow::util::rng::Rng;
+
+fn main() {
+    // --- 1. Direct library calls -----------------------------------------
+    let n = 32;
+    let mut rng = Rng::new(42);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let a = a.scaled(3.0 / norm1(&a)); // ||A||_1 = 3
+    let oracle = expm_pade13(&a);
+
+    println!("e^A, {n}x{n}, ||A||_1 = 3, tol = 1e-8:");
+    println!(
+        "{:<18} {:>3} {:>3} {:>9} {:>12}",
+        "method", "m", "s", "products", "rel error"
+    );
+    for method in Method::all_dynamic() {
+        let r = expm(&a, &ExpmOptions { method, tol: 1e-8 });
+        let err = (&r.value - &oracle).max_abs() / oracle.max_abs();
+        println!(
+            "{:<18} {:>3} {:>3} {:>9} {:>12.2e}",
+            method.name(),
+            r.stats.m,
+            r.stats.s,
+            r.stats.matrix_products,
+            err
+        );
+    }
+
+    // --- 2. The expm service ---------------------------------------------
+    let svc = ExpmService::start(ServiceConfig::default());
+    let mats: Vec<Matrix> = (0..16)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i);
+            let target = rng.log_uniform(1e-3, 12.0);
+            let m = Matrix::from_fn(16, 16, |_, _| rng.normal());
+            let nn = norm1(&m);
+            m.scaled(target / nn)
+        })
+        .collect();
+    match svc.compute(mats, 1e-8) {
+        Ok(results) => {
+            let backends: Vec<&str> =
+                results.iter().map(|r| r.backend).collect();
+            let products: usize =
+                results.iter().map(|r| r.stats.matrix_products).sum();
+            println!(
+                "\nservice: 16 matrices -> {} results, {} products, backend(s): {:?}",
+                results.len(),
+                products,
+                backends.iter().collect::<std::collections::BTreeSet<_>>()
+            );
+        }
+        Err(e) => println!("\nservice error: {e}"),
+    }
+    println!("\n{}", svc.metrics.snapshot().render());
+}

@@ -1,0 +1,92 @@
+//! Figure-6 scenario: execution time of 1000 matrix exponentials vs
+//! matrix order, single matrices and batched tensors, baseline vs the
+//! paper's method.
+//!
+//!   cargo run --release --example scaling_study -- [--max-n 256] [--reps 1000]
+//!
+//! Reproduces the *shape* of Figure 6: the relative advantage of
+//! expm_flow_sastre grows with n as the run time becomes dominated by
+//! matrix products (see DESIGN.md experiment F6).
+
+use std::time::Instant;
+
+use expmflow::expm::{expm, ExpmOptions, Method};
+use expmflow::linalg::{norm1, Matrix};
+use expmflow::util::cli::Args;
+use expmflow::util::rng::Rng;
+
+fn bench_1000(n: usize, reps: usize, method: Method, batched: bool) -> f64 {
+    let mut rng = Rng::new(n as u64);
+    // Norm ~2: both methods need real work (m = 8/15 + squarings).
+    let count = if batched { 16 } else { 1 };
+    let mats: Vec<Matrix> = (0..count)
+        .map(|_| {
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let nn = norm1(&a);
+            a.scaled(2.0 / nn)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < reps {
+        for a in &mats {
+            let r = expm(a, &ExpmOptions { method, tol: 1e-8 });
+            std::hint::black_box(&r.value);
+            done += 1;
+            if done >= reps {
+                break;
+            }
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let max_n = args.get_usize("max-n", 256);
+    let reps = args.get_usize("reps", 1000);
+    let sizes: Vec<usize> = [2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+        .into_iter()
+        .filter(|&n| n <= max_n)
+        .collect();
+
+    for batched in [false, true] {
+        println!(
+            "\n== {} — time (s) for {reps} expm evaluations ==",
+            if batched {
+                "batched tensors (n x 16 matrices)"
+            } else {
+                "single n x n matrices"
+            }
+        );
+        println!(
+            "{:>6} {:>12} {:>14} {:>9}",
+            "n", "expm_flow", "expm_sastre", "speedup"
+        );
+        for &n in &sizes {
+            // Scale reps down for big n to keep wall time sane.
+            let r = if n >= 512 {
+                reps / 20
+            } else if n >= 128 {
+                reps / 4
+            } else {
+                reps
+            }
+            .max(10);
+            let t_base = bench_1000(n, r, Method::Baseline, batched);
+            let t_sast = bench_1000(n, r, Method::Sastre, batched);
+            // Normalize both to `reps` evaluations.
+            let f = reps as f64 / r as f64;
+            println!(
+                "{n:>6} {:>12.4} {:>14.4} {:>8.2}x",
+                t_base * f,
+                t_sast * f,
+                t_base / t_sast
+            );
+        }
+    }
+    println!(
+        "\npaper Figure 6: the speedup rises with n as matrix products \
+         dominate; crossover near n = 16-32."
+    );
+}

@@ -1,0 +1,215 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + manifest.json.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the Rust
+runtime (rust/src/runtime/) loads the HLO text through
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+HLO **text** — not ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects (``proto.id() <= INT_MAX``). The HLO text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE = jnp.float64
+
+# --------------------------------------------------------------------------
+# Artifact grid. Kept in lock-step with rust/src/runtime/artifact.rs, which
+# only trusts what the manifest declares.
+# --------------------------------------------------------------------------
+
+#: (n, batch) grid for the standalone expm artifacts used by the coordinator.
+EXPM_SHAPES = [
+    (8, 1), (8, 16), (8, 64),
+    (16, 1), (16, 16), (16, 64),
+    (32, 1), (32, 16), (32, 64),
+    (64, 1), (64, 16), (64, 64),
+]
+
+#: Sastre orders (Algorithm 4's M vector; "15" is the 15+ scheme).
+SASTRE_ORDERS = [1, 2, 4, 8, 15]
+
+#: Baseline Horner degrees emitted for Algorithm-1-style fixed pipelines.
+TAYLOR_ORDERS = [10]
+
+#: Flow configuration (dim, blocks, train batch, sample batches).
+FLOW_DIM = 64
+FLOW_BLOCKS = 4
+FLOW_TRAIN_BATCH = 64
+FLOW_SAMPLE_BATCHES = [1, 128]
+
+#: Low-rank variant shapes: (n, t) with batch 1 (paper eq. (8)).
+LOWRANK_SHAPES = [(64, 8), (128, 16)]
+LOWRANK_ORDER = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_shapes, *, kind: str, **meta):
+        """Lower ``fn`` at ``arg_shapes`` and record a manifest entry."""
+        args = [spec(s) for s in arg_shapes]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            list(o.shape) for o in lowered.out_info
+        ] if hasattr(lowered, "out_info") else None
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "dtype": "f64",
+            "inputs": [list(s) for s in arg_shapes],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            **meta,
+        }
+        if out_shapes is not None:
+            entry["outputs"] = out_shapes
+        self.entries.append(entry)
+        print(f"  wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    def finish(self):
+        manifest = {
+            "format": 1,
+            "dtype": "f64",
+            "flow": {
+                "dim": FLOW_DIM,
+                "blocks": FLOW_BLOCKS,
+                "train_batch": FLOW_TRAIN_BATCH,
+                "sample_batches": FLOW_SAMPLE_BATCHES,
+            },
+            "artifacts": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"manifest: {path} ({len(self.entries)} artifacts)",
+              file=sys.stderr)
+
+
+def build_all(out_dir: str, *, fast: bool = False) -> None:
+    b = Builder(out_dir)
+
+    shapes = EXPM_SHAPES[:3] if fast else EXPM_SHAPES
+
+    # 1. Standalone Sastre polynomial evaluators (coordinator hot path).
+    for n, batch in shapes:
+        for m in SASTRE_ORDERS:
+            b.emit(
+                f"poly_sastre_m{m}_n{n}_b{batch}",
+                model.poly_fn(m),
+                [(batch, n, n)],
+                kind="poly", family="sastre", m=m, n=n, batch=batch,
+            )
+        for m in TAYLOR_ORDERS:
+            b.emit(
+                f"poly_taylor_m{m}_n{n}_b{batch}",
+                model.taylor_fn(m),
+                [(batch, n, n)],
+                kind="poly", family="taylor", m=m, n=n, batch=batch,
+            )
+        # 2. Squaring step (Algorithm 2, line 5), applied s times by Rust.
+        b.emit(
+            f"square_n{n}_b{batch}",
+            model.square_fn,
+            [(batch, n, n)],
+            kind="square", n=n, batch=batch,
+        )
+
+    # 3. Low-rank variant, eq. (8).
+    for n, t in ([] if fast else LOWRANK_SHAPES):
+        b.emit(
+            f"lowrank_m{LOWRANK_ORDER}_n{n}_t{t}",
+            model.lowrank_fn(LOWRANK_ORDER),
+            [(n, t), (t, n)],
+            kind="lowrank", m=LOWRANK_ORDER, n=n, t=t,
+        )
+
+    # 4. Flow train/sample/nll steps for both expm methods.
+    if not fast:
+        d, k, tb = FLOW_DIM, FLOW_BLOCKS, FLOW_TRAIN_BATCH
+        pshapes = [s for _, s in model.flow_params_spec(d, k)]
+        for method in ("taylor", "sastre"):
+            b.emit(
+                f"flow_train_{method}",
+                model.flow_train_step_fn(method, d, k),
+                [(tb, d), ()] + pshapes * 3,
+                kind="train", method=method, dim=d, blocks=k, batch=tb,
+            )
+            b.emit(
+                f"flow_nll_{method}",
+                model.flow_nll_fn(method, d, k),
+                [(tb, d)] + pshapes,
+                kind="nll", method=method, dim=d, blocks=k, batch=tb,
+            )
+            for sb in FLOW_SAMPLE_BATCHES:
+                b.emit(
+                    f"flow_sample_{method}_b{sb}",
+                    model.flow_sample_fn(method, d, k),
+                    [(sb, d)] + pshapes,
+                    kind="sample", method=method, dim=d, blocks=k, batch=sb,
+                )
+
+    b.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file target (Makefile stamp)")
+    ap.add_argument("--fast", action="store_true",
+                    help="emit a reduced grid (CI smoke)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or out_dir
+    build_all(out_dir, fast=args.fast)
+    if args.out:
+        # Makefile freshness stamp.
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Coefficients of the Sastre evaluation formulas (paper Tables 2-3).
+
+Single source of truth for the Python side; the Rust side mirrors these in
+``rust/src/expm/coeffs.rs`` and a unit test cross-checks the two via the
+AOT artifacts.
+
+Formulas (paper eqs. (10)-(17)):
+
+  T1(A) = A + I
+  T2(A) = A^2/2 + A + I
+  T4(A) = ((A^2/4 + A)/3 + I) A^2/2 + A + I            (Paterson-Stockmeyer)
+
+  order 8 (Table 2, eqs. (13)-(14)), cost 3M:
+    y02 = A2 (c1 A2 + c2 A)
+    T8  = (y02 + c3 A2 + c4 A)(y02 + c5 A2) + c6 y02 + A2/2 + A + I
+
+  order 15+ (Table 3, eqs. (15)-(17)), cost 4M:
+    y02 = A2 (c1 A2 + c2 A)
+    y12 = (y02 + c3 A2 + c4 A)(y02 + c5 A2) + c6 y02 + c7 A2
+    y22 = (y12 + c8 A2 + c9 A)(y12 + c10 y02 + c11 A)
+          + c12 y12 + c13 y02 + c14 A2 + c15 A + c16 I
+
+In exact arithmetic y22(A) = T15(A) + b16 A^16 with b16 = c1^4 (eq. (18)).
+"""
+
+from __future__ import annotations
+
+import math
+
+# Table 2 — order m = 8.
+C8 = (
+    4.980119205559973e-3,   # c1
+    1.992047682223989e-2,   # c2
+    7.665265321119147e-2,   # c3
+    8.765009801785554e-1,   # c4
+    1.225521150112075e-1,   # c5
+    2.974307204847627e0,    # c6
+)
+
+# Table 3 — order m = 15+.
+C15 = (
+    4.018761610201036e-4,   # c1
+    2.945531440279683e-3,   # c2
+    -8.709066576837676e-3,  # c3
+    4.017568440673568e-1,   # c4
+    3.230762888122312e-2,   # c5
+    5.768988513026145e0,    # c6
+    2.338576034271299e-2,   # c7
+    2.381070373870987e-1,   # c8
+    2.224209172496374e0,    # c9
+    -5.792361707073261e0,   # c10
+    -4.130276365929783e-2,  # c11
+    1.040801735231354e1,    # c12
+    -6.331712455883370e1,   # c13
+    3.484665863364574e-1,   # c14
+    1.0,                    # c15
+    1.0,                    # c16
+)
+
+#: eq. (20): the x^16 coefficient of y22, b16 = c1^4.
+B16 = C15[0] ** 4
+
+#: |b16 - 1/16!|, the order-16 remainder coefficient of the 15+ scheme
+#: (penultimate entry of vector C in Algorithm 4).
+B16_REMAINDER = abs(B16 - 1.0 / math.factorial(16))
+
+#: Supported "Sastre" orders (Algorithm 4's vector M; 15 denotes 15+).
+SASTRE_ORDERS = (1, 2, 4, 8, 15)
+
+#: Paterson-Stockmeyer orders used by Algorithm 3 (vector M).
+PS_ORDERS = (1, 2, 4, 6, 9, 12, 16)
+
+#: Matrix-product cost of each Sastre evaluation (paper Section 3.1).
+SASTRE_COST = {1: 0, 2: 1, 4: 2, 8: 3, 15: 4}
+
+
+def ps_blocking(m: int) -> tuple[int, int]:
+    """Paterson-Stockmeyer blocking (j, k) for degree ``m``.
+
+    j = ceil(sqrt(m)) as in Algorithm 3 (line 6), k = ceil(m / j).
+    The evaluation computes A^2..A^j (j-1 products) and runs k-1 Horner
+    steps, for a total of j + k - 2 products when j*k = m... the classic
+    count used by the paper's cost model lives in ``ps_cost``.
+    """
+    j = math.isqrt(m)
+    if j * j < m:
+        j += 1
+    k = -(-m // j)  # ceil
+    return j, k
+
+
+def ps_cost(m: int) -> int:
+    """Matrix products to evaluate a degree-``m`` polynomial with P-S."""
+    if m <= 1:
+        return 0
+    j, k = ps_blocking(m)
+    return (j - 1) + (k - 1)

@@ -1,0 +1,151 @@
+"""L1 Pallas kernels: fused Sastre polynomial evaluators (eqs. (10)-(17)).
+
+Each kernel consumes one matrix of the batch per grid step (the whole n x n
+operand is resident in VMEM) and performs the *entire* evaluation — A^2 and
+the 0/1/2/3 remaining products — inside a single fused kernel, so the HBM
+traffic per matrix is exactly one read of A and one write of T_m(A). This is
+the TPU translation of the paper's "fewer, larger multiplies" insight: the
+intermediate y02/y12 tiles never leave VMEM, where a CUDA implementation
+would round-trip them through global memory between cuBLAS calls.
+
+Matrix-product counts match the paper's cost model exactly:
+  T1 -> 0 dots, T2 -> 1, T4 -> 2, T8 -> 3, T15+ -> 4.
+
+VMEM budget (f64, per grid step): A, A2, y02, y12 and the output tile, i.e.
+about 5 n^2 doubles; n = 512 -> 10 MiB, inside a 16 MiB/core budget, n <= 256
+leaves >75% headroom (see DESIGN.md §Perf for the table).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import coeffs
+
+
+def _dot(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def _eye(n, dtype):
+    return jnp.eye(n, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernels. Block shape is (1, n, n); index [0] peels the batch dim.
+# ---------------------------------------------------------------------------
+
+def t1_kernel(a_ref, o_ref):
+    a = a_ref[0, :, :]
+    o_ref[0, :, :] = a + _eye(a.shape[-1], a.dtype)
+
+
+def t2_kernel(a_ref, o_ref):
+    a = a_ref[0, :, :]
+    a2 = _dot(a, a)
+    o_ref[0, :, :] = a2 * 0.5 + a + _eye(a.shape[-1], a.dtype)
+
+
+def t4_kernel(a_ref, o_ref):
+    """Eq. (12) verbatim: ((A2/4 + A)/3 + I) @ A2 / 2 + A + I — 2 dots."""
+    a = a_ref[0, :, :]
+    eye = _eye(a.shape[-1], a.dtype)
+    a2 = _dot(a, a)
+    inner = (a2 * 0.25 + a) / 3.0 + eye
+    o_ref[0, :, :] = _dot(inner, a2) * 0.5 + a + eye
+
+
+def t8_kernel(a_ref, o_ref):
+    """Eqs. (13)-(14): 3 fused dots (A2, y02, final product)."""
+    c1, c2, c3, c4, c5, c6 = coeffs.C8
+    a = a_ref[0, :, :]
+    eye = _eye(a.shape[-1], a.dtype)
+    a2 = _dot(a, a)
+    y02 = _dot(a2, c1 * a2 + c2 * a)
+    o_ref[0, :, :] = (
+        _dot(y02 + c3 * a2 + c4 * a, y02 + c5 * a2)
+        + c6 * y02
+        + a2 * 0.5
+        + a
+        + eye
+    )
+
+
+def t15_kernel(a_ref, o_ref):
+    """Eqs. (15)-(17): 4 fused dots (A2, y02, y12, y22)."""
+    c = coeffs.C15
+    a = a_ref[0, :, :]
+    eye = _eye(a.shape[-1], a.dtype)
+    a2 = _dot(a, a)
+    y02 = _dot(a2, c[0] * a2 + c[1] * a)
+    y12 = _dot(y02 + c[2] * a2 + c[3] * a, y02 + c[4] * a2) \
+        + c[5] * y02 + c[6] * a2
+    y22 = (
+        _dot(y12 + c[7] * a2 + c[8] * a, y12 + c[9] * y02 + c[10] * a)
+        + c[11] * y12
+        + c[12] * y02
+        + c[13] * a2
+        + c[14] * a
+        + c[15] * eye
+    )
+    o_ref[0, :, :] = y22
+
+
+_KERNELS = {1: t1_kernel, 2: t2_kernel, 4: t4_kernel, 8: t8_kernel,
+            15: t15_kernel}
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def sastre_poly(a, m: int):
+    """Fused T_m(A) over a batch: a is (b, n, n), m in {1, 2, 4, 8, 15}."""
+    b, n, n2 = a.shape
+    assert n == n2, "square matrices required"
+    if m not in _KERNELS:
+        raise ValueError(f"unsupported Sastre order {m}")
+    return pl.pallas_call(
+        _KERNELS[m],
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), a.dtype),
+        interpret=True,
+    )(a)
+
+
+def taylor_horner_kernel_factory(m: int):
+    """Baseline Algorithm-1 style kernel: degree-m Taylor via Horner.
+
+    Horner needs m-1 dots for degree m — the same count as the paper's
+    term-by-term loop (7): C_orig = m - 1 products. Used by the baseline
+    (expm_flow) artifacts so both methods run on identical infrastructure.
+    """
+
+    def kernel(a_ref, o_ref):
+        a = a_ref[0, :, :]
+        eye = _eye(a.shape[-1], a.dtype)
+        # Horner: T = I + A(1/1! + A(1/2! + ... )) evaluated innermost-first.
+        import math
+        acc = eye / math.factorial(m) * 1.0
+        for k in range(m - 1, -1, -1):
+            acc = _dot(a, acc) + eye / math.factorial(k)
+        o_ref[0, :, :] = acc
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def taylor_poly(a, m: int):
+    """Baseline degree-m Taylor polynomial (Horner), batched."""
+    b, n, _ = a.shape
+    return pl.pallas_call(
+        taylor_horner_kernel_factory(m),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), a.dtype),
+        interpret=True,
+    )(a)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernels: batched tiled GEMM and the squaring step.
+
+The paper's cost model counts matrix products M; on TPU each product is an
+MXU-bound GEMM streamed HBM -> VMEM. We express the HBM<->VMEM schedule with
+``BlockSpec``: the grid iterates (batch, i-tile, j-tile, k-tile) and the
+accumulator tile lives in VMEM across the k loop (revisiting grid pattern).
+
+interpret=True everywhere: real-TPU lowering would emit a Mosaic custom
+call the CPU PJRT plugin cannot execute; numerics are validated through the
+interpret path, TPU performance is estimated analytically (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (n is a power of two here)."""
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+def matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bk) x (bk, bn) MAC into the (bm, bn) accumulator tile."""
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, :, :] += jnp.dot(
+        x_ref[0, :, :], y_ref[0, :, :], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def batched_matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Batched matrix product via the tiled Pallas kernel.
+
+    x: (b, m, k), y: (b, k, n) -> (b, m, n). Tile sizes are VMEM-budgeted:
+    three f64 128x128 tiles = 3 * 128KiB, far under the ~16 MiB/core VMEM.
+    """
+    b, m, k = x.shape
+    _, k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    bk = _pick_tile(k, bk)
+    grid = (b, m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b_, i, j, kk: (b_, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda b_, i, j, kk: (b_, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b_, i, j, kk: (b_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def square_kernel(x_ref, y_ref, o_ref):
+    """Same MAC kernel; used with x == y for the squaring stage."""
+    matmul_kernel(x_ref, y_ref, o_ref)
+
+
+@jax.jit
+def batched_square(x):
+    """One squaring step X <- X @ X of Algorithm 2's loop (line 5)."""
+    return batched_matmul(x, x)

@@ -1,0 +1,179 @@
+"""Pure-jnp oracles for the expm kernels — the correctness ground truth.
+
+Everything here is written in the most straightforward way (no fusion, no
+Pallas): truncated Taylor series by direct summation, the Sastre formulas
+transcribed term by term, and a Paterson-Stockmeyer evaluator. The Pallas
+kernels in ``gemm_pallas.py`` / ``expm_poly.py`` and the Rust native engine
+must agree with these to tight tolerances (pytest / cargo test enforce it).
+
+All functions accept a single matrix ``(n, n)`` or a batch ``(b, n, n)``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from . import coeffs
+
+
+def _eye_like(a: jnp.ndarray) -> jnp.ndarray:
+    n = a.shape[-1]
+    eye = jnp.eye(n, dtype=a.dtype)
+    if a.ndim == 3:
+        eye = jnp.broadcast_to(eye, a.shape)
+    return eye
+
+
+def taylor_ref(a: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Degree-``m`` Taylor polynomial of e^A by direct term accumulation."""
+    out = _eye_like(a)
+    term = None
+    for k in range(1, m + 1):
+        # First term is A itself — no product — so degree m costs m-1
+        # products, matching Algorithm 1's C_orig = m - 1 (paper eq. (7)).
+        term = a if term is None else jnp.matmul(term, a) / k
+        out = out + term
+    return out
+
+
+def expm_ref(a: jnp.ndarray, s: int | None = None, m: int = 30) -> jnp.ndarray:
+    """Scaling-and-squaring Taylor reference for e^A (oracle quality).
+
+    With the default degree 30 and ||A/2^s||_1 <= 1/2 the truncation error
+    is far below double-precision roundoff.
+    """
+    if s is None:
+        norm = float(jnp.max(jnp.sum(jnp.abs(a), axis=-2)))
+        s = max(0, math.ceil(math.log2(max(norm, 1e-300) / 0.5)))
+        s = max(0, min(s, 60))
+    x = taylor_ref(a / (2.0**s), m)
+    for _ in range(s):
+        x = jnp.matmul(x, x)
+    return x
+
+
+def ps_eval_ref(a: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Degree-``m`` Taylor polynomial via Paterson-Stockmeyer blocking.
+
+    Splits T_m(A) = sum_{i=0}^{m} A^i / i! into k blocks of width j
+    (j = ceil(sqrt(m))) and evaluates with a Horner recurrence in A^j.
+    """
+    if m == 0:
+        return _eye_like(a)
+    j, k = coeffs.ps_blocking(m)
+    # powers[i] = A^i for i = 0..j
+    powers = [_eye_like(a), a]
+    for _ in range(2, j + 1):
+        powers.append(jnp.matmul(powers[-1], a))
+    c = [1.0 / math.factorial(i) for i in range(m + 1)]
+    # Highest block first. The top block absorbs all remaining
+    # coefficients up to m (incl. c_m A^j when j | m — A^j is cached, so
+    # that term costs no extra product: the classic P-S fold).
+    out = None
+    for bk in range(k - 1, -1, -1):
+        lo = bk * j
+        hi = m if bk == k - 1 else lo + j - 1
+        block = c[lo] * powers[0]
+        for i in range(lo + 1, hi + 1):
+            block = block + c[i] * powers[i - lo]
+        if out is None:
+            out = block
+        else:
+            out = jnp.matmul(out, powers[j]) + block
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sastre evaluation formulas, transcribed from eqs. (10)-(17).
+# ---------------------------------------------------------------------------
+
+def t1_ref(a):
+    return a + _eye_like(a)
+
+
+def t2_ref(a):
+    a2 = jnp.matmul(a, a)
+    return a2 / 2.0 + a + _eye_like(a)
+
+
+def t4_ref(a):
+    """Eq. (12): ((A2/4 + A)/3 + I) A2/2 + A + I (P-S form, 2 products)."""
+    eye = _eye_like(a)
+    a2 = jnp.matmul(a, a)
+    return jnp.matmul((a2 / 4.0 + a) / 3.0 + eye, a2) / 2.0 + a + eye
+
+
+def y02_ref(a, a2, c1, c2):
+    return jnp.matmul(a2, c1 * a2 + c2 * a)
+
+
+def t8_ref(a):
+    """Eqs. (13)-(14), Table 2 coefficients; 3 products total."""
+    c1, c2, c3, c4, c5, c6 = coeffs.C8
+    eye = _eye_like(a)
+    a2 = jnp.matmul(a, a)
+    y02 = y02_ref(a, a2, c1, c2)
+    return (
+        jnp.matmul(y02 + c3 * a2 + c4 * a, y02 + c5 * a2)
+        + c6 * y02
+        + a2 / 2.0
+        + a
+        + eye
+    )
+
+
+def t15_ref(a):
+    """Eqs. (15)-(17), Table 3 coefficients; 4 products total (order 15+)."""
+    c = coeffs.C15
+    eye = _eye_like(a)
+    a2 = jnp.matmul(a, a)
+    y02 = y02_ref(a, a2, c[0], c[1])
+    y12 = (
+        jnp.matmul(y02 + c[2] * a2 + c[3] * a, y02 + c[4] * a2)
+        + c[5] * y02
+        + c[6] * a2
+    )
+    y22 = (
+        jnp.matmul(y12 + c[7] * a2 + c[8] * a, y12 + c[9] * y02 + c[10] * a)
+        + c[11] * y12
+        + c[12] * y02
+        + c[13] * a2
+        + c[14] * a
+        + c[15] * eye
+    )
+    return y22
+
+
+SASTRE_REF = {1: t1_ref, 2: t2_ref, 4: t4_ref, 8: t8_ref, 15: t15_ref}
+
+
+def sastre_ref(a, m):
+    return SASTRE_REF[m](a)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank variant, paper eq. (8): e^{A1 A2} ≈ I + A1 [sum V^i/(i+1)!] A2.
+# ---------------------------------------------------------------------------
+
+def lowrank_series_ref(v: jnp.ndarray, m: int) -> jnp.ndarray:
+    """G_m(V) = sum_{i=0}^{m} V^i / (i+1)!  (the bracket of eq. (8))."""
+    out = _eye_like(v)  # i = 0 term: V^0 / 1! = I
+    term = _eye_like(v)
+    for i in range(1, m + 1):
+        term = jnp.matmul(term, v)
+        # float(): factorial(i+1) overflows int64 weak-typing for i >= 20.
+        out = out + term / float(math.factorial(i + 1))
+    return out
+
+
+def expm_lowrank_ref(a1: jnp.ndarray, a2: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Eq. (8) applied to W = A1 @ A2 with A1 (n,t), A2 (t,n)."""
+    v = jnp.matmul(a2, a1)
+    g = lowrank_series_ref(v, m)
+    n = a1.shape[-2]
+    eye = jnp.eye(n, dtype=a1.dtype)
+    if a1.ndim == 3:
+        eye = jnp.broadcast_to(eye, (a1.shape[0], n, n))
+    return eye + jnp.matmul(a1, jnp.matmul(g, a2))

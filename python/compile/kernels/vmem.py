@@ -1,0 +1,122 @@
+"""Analytic TPU cost model for the Pallas kernels (the L1 §Perf story).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so kernel
+structure is optimized against this model instead: per-kernel VMEM
+footprint, HBM traffic, MXU-cycle estimates and utilization at a given
+(n, batch). `python -m compile.kernels.vmem` prints the DESIGN.md table.
+
+Model assumptions (documented in DESIGN.md §Hardware-Adaptation):
+- VMEM budget per core: 16 MiB; MXU: 128x128 systolic array, one
+  128x128x128 MAC block per ~128 cycles => peak 2*128^3/128 = 256k
+  FLOP/cycle-ish. We report *utilization* = useful MACs / MACs issued
+  with padded tiles, which only depends on shapes.
+- f64 runs at 1/4 MXU rate vs bf16; the table reports both.
+- Fused evaluator residency: A, A2, y02, y12 (order 15+), the accumulator
+  and one operand scratch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MXU = 128
+VMEM_BUDGET = 16 * 2**20
+
+
+@dataclass
+class KernelCost:
+    name: str
+    n: int
+    batch: int
+    dtype_bytes: int
+    dots: int           # matrix products inside the fused kernel
+    resident: int       # matrices resident in VMEM per grid step
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Per-grid-step VMEM footprint (batch dim streams, so batch=1)."""
+        return self.resident * self.n * self.n * self.dtype_bytes
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BUDGET
+
+    @property
+    def hbm_bytes(self) -> int:
+        """One read of A and one write of the result per matrix."""
+        return 2 * self.batch * self.n * self.n * self.dtype_bytes
+
+    @property
+    def macs(self) -> int:
+        """Useful multiply-accumulates across the batch."""
+        return self.batch * self.dots * self.n**3
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Useful MACs / issued MACs with ceil-padded 128-tiles."""
+        tiles = -(-self.n // MXU)
+        padded = (tiles * MXU) ** 3
+        return self.n**3 / padded
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte — the roofline x-coordinate."""
+        return 2.0 * self.macs / max(self.hbm_bytes, 1)
+
+
+#: dots and VMEM-resident matrices per fused evaluator (f64 path).
+KERNELS = {
+    "t1": (0, 2),
+    "t2": (1, 3),
+    "t4": (2, 4),
+    "t8": (3, 5),       # A, A2, y02, lhs/rhs scratch, out
+    "t15": (4, 6),      # + y12
+    "taylor_m10": (9, 3),  # Horner: A, acc, out
+    "square": (1, 3),
+}
+
+
+def cost(name: str, n: int, batch: int, dtype_bytes: int = 8) -> KernelCost:
+    dots, resident = KERNELS[name]
+    return KernelCost(name, n, batch, dtype_bytes, dots, resident)
+
+
+def sweep(ns=(8, 16, 32, 64, 128, 256, 512), batch: int = 64):
+    rows = []
+    for name in KERNELS:
+        for n in ns:
+            rows.append(cost(name, n, batch))
+    return rows
+
+
+def render(rows) -> str:
+    header = (
+        f"{'kernel':<12}{'n':>6}{'dots':>6}{'VMEM/step':>12}"
+        f"{'fits':>6}{'AI (F/B)':>10}{'MXU util':>10}"
+    )
+    out = [header, "-" * len(header)]
+    for r in rows:
+        out.append(
+            f"{r.name:<12}{r.n:>6}{r.dots:>6}"
+            f"{r.vmem_bytes / 2**20:>10.2f}Mi"
+            f"{'yes' if r.fits_vmem else 'NO':>6}"
+            f"{r.arithmetic_intensity:>10.1f}"
+            f"{r.mxu_utilization:>10.2f}"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("Analytic TPU cost model for the fused expm kernels (f64)")
+    print(render(sweep()))
+    print(
+        "\nreading: t8 at n=256 streams 1 read + 1 write per matrix and"
+        "\nruns 3 fused dots from VMEM — the HBM traffic of ONE cuBLAS"
+        "\nGEMM for the work of three (the paper's fewer-larger-multiplies"
+        "\ninsight, realized as VMEM residency instead of global-memory"
+        "\nround-trips)."
+    )
+
+
+if __name__ == "__main__":
+    main()

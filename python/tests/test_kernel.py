@@ -1,0 +1,202 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/batches/scales; fixed-seed cases pin exact
+coefficients identities from the paper (eqs. (18)-(20)).
+"""
+
+import math
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coeffs, expm_poly, gemm_pallas, ref
+
+RNG = np.random.default_rng(20250710)
+
+
+def rand_batch(b, n, scale=0.5, rng=RNG):
+    return jnp.asarray(rng.normal(size=(b, n, n)) * scale / math.sqrt(n))
+
+
+# ---------------------------------------------------------------------------
+# Fused Sastre kernels vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", coeffs.SASTRE_ORDERS)
+@pytest.mark.parametrize("b,n", [(1, 4), (3, 8), (2, 16), (1, 32)])
+def test_sastre_kernel_matches_ref(m, b, n):
+    a = rand_batch(b, n)
+    got = np.asarray(expm_poly.sastre_poly(a, m))
+    want = np.asarray(ref.sastre_ref(a, m))
+    np.testing.assert_allclose(got, want, rtol=1e-13, atol=1e-13)
+
+
+@pytest.mark.parametrize("m", (1, 2, 4, 8))
+def test_sastre_equals_taylor_polynomial(m):
+    """For m in {1,2,4,8} the Sastre formulas reproduce T_m exactly."""
+    a = rand_batch(2, 8)
+    got = np.asarray(ref.sastre_ref(a, m))
+    want = np.asarray(ref.taylor_ref(a, m))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-13)
+
+
+def test_t15_plus_identity():
+    """Eq. (18): y22(A) = T15(A) + b16 A^16 with b16 = c1^4 (eq. (20))."""
+    a = rand_batch(2, 8, scale=0.8)
+    a16 = a
+    for _ in range(4):  # A^16 by repeated squaring
+        a16 = jnp.matmul(a16, a16)
+    want = np.asarray(ref.taylor_ref(a, 15) + coeffs.B16 * a16)
+    got = np.asarray(ref.t15_ref(a))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+
+def test_b16_value():
+    """Eq. (20): b16 = c1^4 ≈ 2.608...e-14; rel. error vs 1/16! ≈ 0.454."""
+    assert coeffs.B16 == pytest.approx(2.608368698098256e-14, rel=1e-12)
+    rel = abs(coeffs.B16 - 1 / math.factorial(16)) * math.factorial(16)
+    assert rel == pytest.approx(0.454, abs=5e-3)
+
+
+@pytest.mark.parametrize("m", coeffs.SASTRE_ORDERS)
+def test_sastre_order_of_accuracy(m):
+    """T_m matches e^A to O(||A||^{m+1}): halving ||A|| cuts the error by
+    ~2^{m+1} (checked loosely, factor >= 2^m)."""
+    a = rand_batch(1, 8, scale=0.25)
+    exact = np.asarray(ref.expm_ref(a))
+    e1 = np.abs(np.asarray(ref.sastre_ref(a, m)) - exact).max()
+    exact2 = np.asarray(ref.expm_ref(a / 2))
+    e2 = np.abs(np.asarray(ref.sastre_ref(a / 2, m)) - exact2).max()
+    if e1 > 1e-14:  # below roundoff the ratio is meaningless
+        assert e1 / max(e2, 1e-18) > 2.0**m * 0.5
+
+
+# ---------------------------------------------------------------------------
+# GEMM / squaring kernels
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 3),
+    n=st.sampled_from([4, 8, 16, 32]),
+    bm=st.sampled_from([4, 8, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_gemm_kernel_hypothesis(b, n, bm, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, n, n)))
+    y = jnp.asarray(rng.normal(size=(b, n, n)))
+    got = np.asarray(gemm_pallas.batched_matmul(x, y, bm=bm, bn=bm, bk=bm))
+    want = np.asarray(jnp.matmul(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_gemm_rectangular_tiles():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 16, 8)))
+    y = jnp.asarray(rng.normal(size=(2, 8, 32)))
+    got = np.asarray(gemm_pallas.batched_matmul(x, y, bm=8, bn=8, bk=4))
+    np.testing.assert_allclose(got, np.asarray(jnp.matmul(x, y)), rtol=1e-12)
+
+
+def test_square_kernel():
+    x = rand_batch(3, 16, scale=1.0)
+    got = np.asarray(gemm_pallas.batched_square(x))
+    np.testing.assert_allclose(got, np.asarray(jnp.matmul(x, x)), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Baseline Horner Taylor kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 16),
+    n=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_taylor_kernel_hypothesis(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(2, n, n)) * 0.4)
+    got = np.asarray(expm_poly.taylor_poly(a, m))
+    want = np.asarray(ref.taylor_ref(a, m))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: full pipeline truncation error respects the paper bound
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.sampled_from([4, 8, 15]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.05, 0.45),
+)
+@settings(max_examples=20, deadline=None)
+def test_remainder_bound_eq6(m, seed, scale):
+    """||R_m(A)||_1 <= bound (6) whenever ||A||_1 < m + 2."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(1, 8, 8)) * scale)
+    norm = float(jnp.max(jnp.sum(jnp.abs(a[0]), axis=0)))
+    if norm >= m + 1.5 or norm == 0.0:
+        return
+    exact = np.asarray(ref.expm_ref(a))
+    # Use the *true* Taylor polynomial for the bound check (the 15+ scheme
+    # perturbs the order-16 coefficient, handled by B16_REMAINDER instead).
+    approx = np.asarray(ref.taylor_ref(a, m))
+    err = np.abs(approx - exact).sum(axis=-2).max()  # 1-norm of remainder
+    bound = norm ** (m + 1) / math.factorial(m + 1) / (1 - norm / (m + 2))
+    assert err <= bound * (1 + 1e-6) + 1e-15
+
+
+def test_expm_ref_against_scipy():
+    import scipy.linalg as sla
+
+    rng = np.random.default_rng(3)
+    for n in (4, 16, 48):
+        a = rng.normal(size=(n, n))
+        got = np.asarray(ref.expm_ref(jnp.asarray(a)))
+        want = sla.expm(a)
+        np.testing.assert_allclose(
+            got, want, rtol=1e-10, atol=1e-10 * np.abs(want).max()
+        )
+
+
+# ---------------------------------------------------------------------------
+# Low-rank variant (eq. (8))
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    t=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_lowrank_vs_full(n, t, seed):
+    """e^{A1 A2} via eq. (8) matches the full expm of W = A1 A2."""
+    rng = np.random.default_rng(seed)
+    a1 = jnp.asarray(rng.normal(size=(n, t)) * 0.3 / math.sqrt(t))
+    a2 = jnp.asarray(rng.normal(size=(t, n)) * 0.3 / math.sqrt(n))
+    w = jnp.matmul(a1, a2)
+    got = np.asarray(ref.expm_lowrank_ref(a1, a2, m=20))
+    want = np.asarray(ref.expm_ref(w))
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-11)
+
+
+def test_lowrank_remainder_bound_eq9():
+    """Theorem 3 / eq. (9): remainder of the V-series stays below bound."""
+    rng = np.random.default_rng(11)
+    t, m = 4, 6
+    v = jnp.asarray(rng.normal(size=(t, t)) * 0.4)
+    norm = float(jnp.max(jnp.sum(jnp.abs(v), axis=0)))
+    full = np.asarray(ref.lowrank_series_ref(v, 40))
+    trunc = np.asarray(ref.lowrank_series_ref(v, m))
+    err = np.abs(full - trunc).sum(axis=0).max()
+    bound = norm ** (m + 1) / math.factorial(m + 2) / (1 - norm / (m + 3))
+    assert err <= bound * (1 + 1e-9) + 1e-16

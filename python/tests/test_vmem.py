@@ -1,0 +1,58 @@
+"""Tests for the analytic TPU cost model (L1 §Perf)."""
+
+import pytest
+
+from compile.kernels import coeffs, vmem
+
+
+def test_dot_counts_match_paper_cost_model():
+    """Fused kernel dot counts == the paper's M counts (Section 3.1)."""
+    for name, m in [("t1", 1), ("t2", 2), ("t4", 4), ("t8", 8), ("t15", 15)]:
+        dots, _ = vmem.KERNELS[name]
+        assert dots == coeffs.SASTRE_COST[m], name
+
+
+def test_vmem_budget_for_flow_sizes():
+    """Every kernel fits VMEM for the artifact grid (n <= 64) and up to
+    n = 512; t15 at n = 1024 must overflow (documented split point)."""
+    for name in vmem.KERNELS:
+        for n in (8, 16, 32, 64, 128, 256, 512):
+            assert vmem.cost(name, n, 64).fits_vmem, (name, n)
+    assert not vmem.cost("t15", 1024, 1).fits_vmem
+
+
+def test_mxu_utilization_properties():
+    """Full at multiples of 128, degraded below, monotone within a tile."""
+    assert vmem.cost("t8", 128, 1).mxu_utilization == 1.0
+    assert vmem.cost("t8", 256, 1).mxu_utilization == 1.0
+    u64 = vmem.cost("t8", 64, 1).mxu_utilization
+    u32 = vmem.cost("t8", 32, 1).mxu_utilization
+    assert u64 == pytest.approx(0.125)  # (64/128)^3
+    assert u32 < u64 < 1.0
+
+
+def test_arithmetic_intensity_scales_with_n_and_dots():
+    """AI = dots * n / 1 (reads+writes): grows linearly in n; the fused
+    t8 has 3x the AI of the squaring kernel at equal shape — that is the
+    fusion win."""
+    t8 = vmem.cost("t8", 128, 16)
+    sq = vmem.cost("square", 128, 16)
+    assert t8.arithmetic_intensity == pytest.approx(3 * sq.arithmetic_intensity)
+    big = vmem.cost("t8", 256, 16)
+    assert big.arithmetic_intensity == pytest.approx(
+        2 * t8.arithmetic_intensity
+    )
+
+
+def test_taylor_baseline_worse_intensity_per_work():
+    """The Algorithm-1-cost kernel does 3x the dots of t8 for the same
+    approximation quality class -> 3x the MXU work at equal HBM traffic."""
+    t8 = vmem.cost("t8", 64, 64)
+    tay = vmem.cost("taylor_m10", 64, 64)
+    assert tay.macs == pytest.approx(3 * t8.macs)
+    assert tay.hbm_bytes == t8.hbm_bytes
+
+
+def test_render_table():
+    text = vmem.render(vmem.sweep(ns=(64,)))
+    assert "t8" in text and "MXU util" in text

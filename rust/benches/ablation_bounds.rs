@@ -1,0 +1,131 @@
+//! Ablation (DESIGN.md design choice): norm-product bounds (the paper's
+//! Algorithms 3/4 as listed) vs the Theorem-2 α_p refinement using the
+//! 1-norm power estimator. Measures how many squarings/products the
+//! sharper nonnormal bounds save across matrix classes — quantifying the
+//! paper's Section-3.2 claim that (22) "can be significantly strict".
+//!
+//!   cargo bench --bench ablation_bounds
+
+use expmflow::expm::eval::Powers;
+use expmflow::expm::selection::{select_sastre, SelectOptions};
+use expmflow::expm::{coeffs, expm_dynamic, Method};
+use expmflow::linalg::{gallery, norm1, Matrix};
+use expmflow::report::render_table;
+use expmflow::util::rng::Rng;
+
+fn products_for(a: &Matrix, power_est: bool) -> (usize, u32) {
+    let opts = SelectOptions { tol: 1e-8, power_est };
+    let mut p = Powers::new(a.clone());
+    let sel = select_sastre(&mut p, &opts);
+    let eval = if sel.m == 0 {
+        0
+    } else {
+        coeffs::sastre_eval_cost(sel.m)
+    };
+    (eval + sel.s as usize, sel.s)
+}
+
+fn main() {
+    println!("== ablation: norm-product bounds vs Theorem-2 power-estimate bounds ==\n");
+    let mut rng = Rng::new(404);
+    // Matrix classes ordered by nonnormality.
+    let classes: Vec<(&str, Vec<Matrix>)> = vec![
+        (
+            "normal-ish (symmetrized randn)",
+            (0..20)
+                .map(|_| {
+                    let n = 16;
+                    let g = gallery::randn(n, 3.0 / (n as f64).sqrt(), &mut rng);
+                    // (G + G^T)/2 is symmetric = normal.
+                    let mut s = Matrix::zeros(n, n);
+                    for i in 0..n {
+                        for j in 0..n {
+                            s[(i, j)] = 0.5 * (g[(i, j)] + g[(j, i)]);
+                        }
+                    }
+                    s
+                })
+                .collect(),
+        ),
+        (
+            "grcar / lesp (mildly nonnormal)",
+            (4..12)
+                .flat_map(|k| {
+                    vec![gallery::grcar(16, k % 5 + 1), gallery::lesp(16)]
+                })
+                .collect(),
+        ),
+        (
+            "nilpotent random (extreme gap)",
+            (0..20)
+                .map(|_| gallery::nilpotent_rand(16, 4.0, &mut rng))
+                .collect(),
+        ),
+        (
+            "overscale [[1,b],[0,-1]] family",
+            (0..10)
+                .map(|i| gallery::overscale(16, 50.0 * (i + 1) as f64))
+                .collect(),
+        ),
+    ];
+
+    let mut tab = vec![vec![
+        "class".to_string(),
+        "plain products".into(),
+        "theorem-2 products".into(),
+        "saved".into(),
+        "max s plain".into(),
+        "max s th2".into(),
+    ]];
+    for (name, mats) in &classes {
+        let (mut p0, mut p1) = (0usize, 0usize);
+        let (mut s0, mut s1) = (0u32, 0u32);
+        for a in mats {
+            let (pp, ps) = products_for(a, false);
+            let (qp, qs) = products_for(a, true);
+            assert!(
+                qp <= pp,
+                "estimator must never increase cost ({})",
+                name
+            );
+            p0 += pp;
+            p1 += qp;
+            s0 = s0.max(ps);
+            s1 = s1.max(qs);
+        }
+        tab.push(vec![
+            name.to_string(),
+            p0.to_string(),
+            p1.to_string(),
+            format!(
+                "{:.0}%",
+                100.0 * (p0 as f64 - p1 as f64) / p0.max(1) as f64
+            ),
+            s0.to_string(),
+            s1.to_string(),
+        ]);
+    }
+    print!("{}", render_table(&tab));
+
+    // Accuracy is preserved under the sharper bounds.
+    println!("\naccuracy check (sharper bounds must stay within tolerance):");
+    let mut worst = 0.0f64;
+    for (_, mats) in &classes {
+        for a in mats {
+            let r = expm_dynamic(
+                a,
+                Method::Sastre,
+                &SelectOptions { tol: 1e-8, power_est: true },
+            );
+            let oracle = expmflow::expm::pade::expm_pade13(a);
+            if oracle.is_finite() && oracle.max_abs() < 1e60 {
+                let err = (&r.value - &oracle).max_abs()
+                    / oracle.max_abs().max(1.0);
+                worst = worst.max(err);
+            }
+        }
+    }
+    println!("worst relative error with power_est bounds: {worst:.2e}");
+    assert!(worst < 1e-5, "sharper bounds broke the tolerance");
+    let _ = norm1(&classes[0].1[0]);
+}

@@ -1,0 +1,144 @@
+//! Figure 1 (a–h) — the MCT/EMP-style gallery study: normwise relative
+//! errors against the oracle (with the cond·ε reference line), the
+//! Dolan–Moré performance profile, accuracy pies, degree/scaling whisker
+//! summaries, and total products/time bars for the three methods.
+//!
+//!   cargo bench --bench fig1_gallery [-- --max-n 128 --full]
+//!
+//! Output is textual (this environment has no plotting); each block is
+//! labelled with the sub-figure it regenerates. CSVs land in
+//! target/bench-data/fig1/ for external plotting.
+
+use std::time::Instant;
+
+use expmflow::expm::cond::cond_expm;
+use expmflow::expm::{expm, pade::expm_pade13, ExpmOptions, Method};
+use expmflow::linalg::{gallery, rel_err_fro};
+use expmflow::report::profile::{default_alphas, performance_profile};
+use expmflow::report::summary::{pie_line, totals_block, whisker_block, MethodRun};
+use expmflow::report::{render_table, write_csv};
+use expmflow::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let max_n = args.get_usize("max-n", 64);
+    let tol = 1e-8;
+    let sizes: Vec<usize> = [4usize, 8, 16, 32, 64, 128, 256, 512, 1024]
+        .into_iter()
+        .filter(|&s| s <= max_n)
+        .collect();
+    let bed = gallery::testbed(&sizes, 20250710);
+    println!(
+        "== Figure 1: gallery study ({} matrices, sizes {:?}, eps = 1e-8) ==",
+        bed.len(),
+        sizes
+    );
+
+    let methods = [Method::Sastre, Method::PatersonStockmeyer, Method::Baseline];
+    let mut runs: Vec<MethodRun> =
+        methods.iter().map(|m| MethodRun::new(m.name())).collect();
+    let mut err_rows: Vec<Vec<f64>> = Vec::new();
+    let mut fig1a = vec![vec![
+        "matrix".to_string(),
+        "cond*eps".into(),
+        "err sastre".into(),
+        "err ps".into(),
+        "err flow".into(),
+    ]];
+    let mut screened = 0usize;
+    for (idx, t) in bed.iter().enumerate() {
+        let oracle = expm_pade13(&t.a);
+        if !oracle.is_finite() || oracle.max_abs() > 1e100 {
+            screened += 1;
+            continue;
+        }
+        // cond * eps reference line (Fig 1a black line); the Fréchet
+        // estimate is oracle-priced, so sample it on a subset.
+        let cond_eps = if idx % 7 == 0 && t.a.order() <= 32 {
+            cond_expm(&t.a, 3) * tol
+        } else {
+            f64::NAN
+        };
+        let mut row = Vec::new();
+        for (j, &method) in methods.iter().enumerate() {
+            let t0 = Instant::now();
+            let r = expm(&t.a, &ExpmOptions { method, tol });
+            runs[j].wall_s += t0.elapsed().as_secs_f64();
+            let err = rel_err_fro(&r.value, &oracle);
+            runs[j].record(err, r.stats.m, r.stats.s, r.stats.matrix_products);
+            row.push(err);
+        }
+        if !cond_eps.is_nan() {
+            fig1a.push(vec![
+                t.name.clone(),
+                format!("{cond_eps:.2e}"),
+                format!("{:.2e}", row[0]),
+                format!("{:.2e}", row[1]),
+                format!("{:.2e}", row[2]),
+            ]);
+        }
+        err_rows.push(row);
+    }
+    println!(
+        "screened out {screened} matrices (oracle unreliable — paper's exclusion rule)\n"
+    );
+
+    println!("-- Fig 1a: errors vs cond*eps line (sampled) --");
+    print!("{}", render_table(&fig1a));
+
+    println!("\n-- Fig 1c: performance profile (fraction within alpha of best) --");
+    let names: Vec<String> =
+        methods.iter().map(|m| m.name().to_string()).collect();
+    let alphas = default_alphas();
+    let curves = performance_profile(&names, &err_rows, &alphas);
+    let mut ptab = vec![{
+        let mut h = vec!["alpha".to_string()];
+        h.extend(names.iter().cloned());
+        h
+    }];
+    for (k, &a) in alphas.iter().enumerate().step_by(4) {
+        let mut row = vec![format!("{a:.1}")];
+        for c in &curves {
+            row.push(format!("{:.2}", c.fractions[k]));
+        }
+        ptab.push(row);
+    }
+    print!("{}", render_table(&ptab));
+
+    println!("\n-- Fig 1d: accuracy pies --\n{}", pie_line(&runs));
+    println!("\n-- Fig 1e/1f: degree & scaling whiskers --\n{}", whisker_block(&runs));
+    println!("-- Fig 1g/1h: totals (base = expm_flow_sastre) --\n{}", totals_block(&runs));
+
+    // Shape assertions — the paper's qualitative claims.
+    let (sastre, ps, flow) = (&runs[0], &runs[1], &runs[2]);
+    let prod_ratio_flow = flow.products as f64 / sastre.products as f64;
+    let prod_ratio_ps = ps.products as f64 / sastre.products as f64;
+    println!(
+        "products ratio: flow/sastre = {prod_ratio_flow:.2} (paper 2.08), \
+         ps/sastre = {prod_ratio_ps:.2} (paper 1.20)"
+    );
+    assert!(prod_ratio_flow > 1.4, "baseline must cost ~2x products");
+    assert!(
+        (0.9..2.0).contains(&prod_ratio_ps),
+        "ps within the paper's band"
+    );
+
+    // CSV dump for plotting.
+    let dir = std::path::Path::new("target/bench-data/fig1");
+    let mut rows = vec![vec![
+        "case".to_string(),
+        "sastre".into(),
+        "ps".into(),
+        "flow".into(),
+    ]];
+    for (i, r) in err_rows.iter().enumerate() {
+        rows.push(vec![
+            i.to_string(),
+            format!("{:e}", r[0]),
+            format!("{:e}", r[1]),
+            format!("{:e}", r[2]),
+        ]);
+    }
+    write_csv(&dir.join("errors.csv"), &rows).expect("csv");
+    println!("\nCSV written to target/bench-data/fig1/errors.csv");
+}

@@ -1,0 +1,84 @@
+//! Figures 2, 3, 4 (a–h) — the CIFAR-10 / ImageNet32 / ImageNet64 expm
+//! workload traces: per-call errors, performance profiles, accuracy pies,
+//! degree/scaling whiskers, and the product/time totals with the
+//! baseline-vs-sastre ratios the paper headlines (1.99/1.86/1.88x products;
+//! 1.87/1.97/2.5x time).
+//!
+//!   cargo bench --bench fig234_traces [-- --calls 400]
+
+use expmflow::expm::Method;
+use expmflow::report::profile::{default_alphas, performance_profile};
+use expmflow::report::render_table;
+use expmflow::report::summary::{pie_line, totals_block, whisker_block, MethodRun};
+use expmflow::trace::replay::replay;
+use expmflow::trace::{generate, TraceKind};
+use expmflow::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let calls = args.get_usize("calls", 300);
+    let tol = 1e-8;
+    for kind in TraceKind::all() {
+        let trace = generate(kind, calls, 99);
+        let total_m: usize = trace.iter().map(|c| c.matrices.len()).sum();
+        println!(
+            "\n==== {} trace: {calls} calls, {total_m} matrices ====",
+            kind.name()
+        );
+        let methods =
+            [Method::Sastre, Method::PatersonStockmeyer, Method::Baseline];
+        let mut runs: Vec<MethodRun> =
+            methods.iter().map(|m| MethodRun::new(m.name())).collect();
+        let mut err_rows: Vec<Vec<f64>> = vec![Vec::new(); calls];
+        for (j, &method) in methods.iter().enumerate() {
+            let s = replay(&trace, method, tol, true);
+            runs[j].wall_s = s.total_wall_s;
+            for (i, rec) in s.records.iter().enumerate() {
+                runs[j].record(rec.max_err, rec.m, rec.s, rec.products);
+                err_rows[i].push(rec.max_err.max(1e-18));
+            }
+        }
+        println!("-- Fig {}c-like performance profile --", kind_fig(kind));
+        let names: Vec<String> =
+            methods.iter().map(|m| m.name().to_string()).collect();
+        let alphas = default_alphas();
+        let curves = performance_profile(&names, &err_rows, &alphas);
+        let mut ptab = vec![{
+            let mut h = vec!["alpha".to_string()];
+            h.extend(names.iter().cloned());
+            h
+        }];
+        for (k, &a) in alphas.iter().enumerate().step_by(8) {
+            let mut row = vec![format!("{a:.1}")];
+            for c in &curves {
+                row.push(format!("{:.2}", c.fractions[k]));
+            }
+            ptab.push(row);
+        }
+        print!("{}", render_table(&ptab));
+        println!("-- pies --\n{}", pie_line(&runs));
+        println!("-- whiskers --\n{}", whisker_block(&runs));
+        println!("-- totals --\n{}", totals_block(&runs));
+        let ratio_products =
+            runs[2].products as f64 / runs[0].products.max(1) as f64;
+        let ratio_time = runs[2].wall_s / runs[0].wall_s.max(1e-12);
+        println!(
+            "{}: flow/sastre products {ratio_products:.2} (paper ~1.9-2.0), \
+             time {ratio_time:.2} (paper 1.9-2.5)",
+            kind.name()
+        );
+        assert!(
+            ratio_products > 1.3,
+            "{}: baseline must need substantially more products",
+            kind.name()
+        );
+    }
+}
+
+fn kind_fig(kind: TraceKind) -> usize {
+    match kind {
+        TraceKind::Cifar10 => 2,
+        TraceKind::ImageNet32 => 3,
+        TraceKind::ImageNet64 => 4,
+    }
+}

@@ -1,0 +1,94 @@
+//! Figure 6 — time for 1000 expm evaluations vs matrix order, for single
+//! n×n matrices (left panel) and batched n×16×16 tensors (right panel),
+//! expm_flow vs expm_flow_sastre.
+//!
+//!   cargo bench --bench fig6_scaling [-- --max-n 256 --reps 300]
+
+use std::time::Instant;
+
+use expmflow::expm::{expm, ExpmOptions, Method};
+use expmflow::linalg::{norm1, Matrix};
+use expmflow::report::render_table;
+use expmflow::util::cli::Args;
+use expmflow::util::rng::Rng;
+
+fn time_evals(
+    mats: &[Matrix],
+    reps: usize,
+    method: Method,
+) -> f64 {
+    // Warmup.
+    for a in mats.iter().take(2) {
+        std::hint::black_box(expm(a, &ExpmOptions { method, tol: 1e-8 }));
+    }
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    'outer: loop {
+        for a in mats {
+            std::hint::black_box(expm(a, &ExpmOptions { method, tol: 1e-8 }));
+            done += 1;
+            if done >= reps {
+                break 'outer;
+            }
+        }
+    }
+    t0.elapsed().as_secs_f64() / done as f64
+}
+
+fn make(n: usize, count: usize, seed: u64) -> Vec<Matrix> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let nn = norm1(&a);
+            // Norm 2.0: a mid-ladder case (m = 8/15, s small).
+            a.scaled(2.0 / nn)
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let max_n = args.get_usize("max-n", 128);
+    let reps = args.get_usize("reps", 200);
+    let sizes: Vec<usize> = [2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+        .into_iter()
+        .filter(|&n| n <= max_n)
+        .collect();
+
+    for (panel, batch) in [("single n x n (Fig 6 left)", 1usize),
+        ("tensor n x 16 x 16 (Fig 6 right)", 16)]
+    {
+        println!("\n== {panel}: projected time for 1000 evaluations ==");
+        let mut tab = vec![vec![
+            "n".to_string(),
+            "expm_flow (s)".into(),
+            "expm_flow_sastre (s)".into(),
+            "speedup".into(),
+        ]];
+        for &n in &sizes {
+            let r = if n >= 512 {
+                reps / 10
+            } else if n >= 128 {
+                reps / 4
+            } else {
+                reps
+            }
+            .max(8);
+            let mats = make(n, batch.min(8), n as u64);
+            let t_flow = time_evals(&mats, r, Method::Baseline) * 1000.0;
+            let t_sast = time_evals(&mats, r, Method::Sastre) * 1000.0;
+            tab.push(vec![
+                n.to_string(),
+                format!("{t_flow:.4}"),
+                format!("{t_sast:.4}"),
+                format!("{:.2}x", t_flow / t_sast),
+            ]);
+        }
+        print!("{}", render_table(&tab));
+    }
+    println!(
+        "\nshape check (paper Fig 6): speedup grows with n as products \
+         dominate fixed overheads."
+    );
+}

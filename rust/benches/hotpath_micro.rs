@@ -1,0 +1,134 @@
+//! Hot-path microbenchmarks for the §Perf pass: native GEMM throughput,
+//! evaluation-scheme costs, selection overhead, and service dispatch
+//! overhead. Not a paper artifact — this is the profiling harness whose
+//! before/after numbers are logged in EXPERIMENTS.md §Perf.
+//!
+//!   cargo bench --bench hotpath_micro [-- --max-n 512]
+
+use expmflow::coordinator::selector::plan_matrix;
+use expmflow::expm::eval::{eval_sastre, Powers};
+use expmflow::expm::{expm, ExpmOptions, Method};
+use expmflow::linalg::{matmul_into, norm1, Matrix};
+use expmflow::report::render_table;
+use expmflow::util::cli::Args;
+use expmflow::util::rng::Rng;
+use expmflow::util::stats::bench_loop;
+
+fn randm(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, n, |_, _| rng.normal())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let max_n = args.get_usize("max-n", 512);
+
+    // --- GEMM roofline --------------------------------------------------
+    println!("== native GEMM throughput (no BLAS) ==");
+    let mut tab = vec![vec![
+        "n".to_string(),
+        "time/mult (ms)".into(),
+        "GFLOP/s".into(),
+    ]];
+    for n in [32usize, 64, 128, 256, 512, 1024] {
+        if n > max_n {
+            break;
+        }
+        let a = randm(n, 1);
+        let b = randm(n, 2);
+        let mut c = Matrix::zeros(n, n);
+        let t = bench_loop(2, 5, 0.2, || {
+            matmul_into(&a, &b, &mut c);
+            std::hint::black_box(&c);
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        tab.push(vec![
+            n.to_string(),
+            format!("{:.3}", t.min_s * 1e3),
+            format!("{:.2}", flops / t.min_s / 1e9),
+        ]);
+    }
+    print!("{}", render_table(&tab));
+
+    // --- evaluation schemes ----------------------------------------------
+    println!("\n== T_m evaluation cost at n = 128 (per call) ==");
+    let a = {
+        let m = randm(128, 3);
+        let nn = norm1(&m);
+        m.scaled(1.5 / nn)
+    };
+    let mut tab = vec![vec![
+        "scheme".to_string(),
+        "products".into(),
+        "time (ms)".into(),
+    ]];
+    for m in [2usize, 4, 8, 15] {
+        let t = bench_loop(1, 5, 0.2, || {
+            let mut p = Powers::new(a.clone());
+            std::hint::black_box(eval_sastre(&mut p, m).value);
+        });
+        let mut p = Powers::new(a.clone());
+        eval_sastre(&mut p, m);
+        tab.push(vec![
+            format!("sastre T{m}"),
+            p.products.to_string(),
+            format!("{:.3}", t.min_s * 1e3),
+        ]);
+    }
+    print!("{}", render_table(&tab));
+
+    // --- full dynamic expm & selection overhead ---------------------------
+    println!("\n== dynamic expm & selection overhead (n = 64, ||A|| = 4) ==");
+    let a = {
+        let m = randm(64, 5);
+        let nn = norm1(&m);
+        m.scaled(4.0 / nn)
+    };
+    let t_full = bench_loop(2, 10, 0.2, || {
+        std::hint::black_box(
+            expm(&a, &ExpmOptions { method: Method::Sastre, tol: 1e-8 })
+                .value
+                .max_abs(),
+        );
+    });
+    let t_plan = bench_loop(2, 10, 0.2, || {
+        std::hint::black_box(plan_matrix(&a, 1e-8));
+    });
+    println!(
+        "full expm: {:.3} ms | plan only: {:.3} ms ({:.1}% of full — \
+         includes the reusable A^2 product)",
+        t_full.min_s * 1e3,
+        t_plan.min_s * 1e3,
+        100.0 * t_plan.min_s / t_full.min_s
+    );
+
+    // --- baseline-vs-sastre end-to-end ratio ------------------------------
+    println!("\n== end-to-end per-call ratio at n = 256, ||A|| = 4 ==");
+    if max_n >= 256 {
+        let a = {
+            let m = randm(256, 7);
+            let nn = norm1(&m);
+            m.scaled(4.0 / nn)
+        };
+        let t_s = bench_loop(1, 3, 0.3, || {
+            std::hint::black_box(
+                expm(&a, &ExpmOptions { method: Method::Sastre, tol: 1e-8 })
+                    .value
+                    .max_abs(),
+            );
+        });
+        let t_b = bench_loop(1, 3, 0.3, || {
+            std::hint::black_box(
+                expm(&a, &ExpmOptions { method: Method::Baseline, tol: 1e-8 })
+                    .value
+                    .max_abs(),
+            );
+        });
+        println!(
+            "sastre {:.2} ms | baseline {:.2} ms | speedup {:.2}x",
+            t_s.min_s * 1e3,
+            t_b.min_s * 1e3,
+            t_b.min_s / t_s.min_s
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Table 5 — inference/sampling latency: 1 sample vs a 128-sample batch,
+//! expm_flow vs expm_flow_sastre, through the AOT sampler artifacts.
+//!
+//!   cargo bench --bench table5_sampling [-- --reps 10]
+
+use expmflow::flow;
+use expmflow::report::render_table;
+use expmflow::runtime::{default_artifact_dir, Executor};
+use expmflow::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let reps = args.get_usize("reps", 10);
+    let dir = default_artifact_dir();
+    let exec = match Executor::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP table5: artifacts unavailable ({e})");
+            return;
+        }
+    };
+    let fc = exec.manifest.flow.clone().expect("flow config");
+    let state = flow::init_params(fc.dim, fc.blocks, 2024);
+
+    println!("== Table 5: sampling latency (s), best of {reps} ==\n");
+    let mut results = std::collections::BTreeMap::new();
+    for method in ["taylor", "sastre"] {
+        for &batch in &fc.sample_batches {
+            // Warmup compiles the executable.
+            flow::sample::sample(&exec, method, &state, batch, 0)
+                .expect("warmup sample");
+            let mut best = f64::INFINITY;
+            for s in 0..reps {
+                let (_, st) =
+                    flow::sample::sample(&exec, method, &state, batch, s as u64)
+                        .expect("sample");
+                best = best.min(st.wall_s);
+            }
+            results.insert((method, batch), best);
+        }
+    }
+    let b = fc.sample_batches.clone();
+    let mut tab = vec![vec![
+        "sample".to_string(),
+        format!("{} sample", b[0]),
+        format!("{} samples", b[1]),
+    ]];
+    for method in ["taylor", "sastre"] {
+        let label = if method == "taylor" {
+            "expm_flow time"
+        } else {
+            "expm_flow_sastre time"
+        };
+        tab.push(vec![
+            label.to_string(),
+            format!("{:.5}", results[&(method, b[0])]),
+            format!("{:.5}", results[&(method, b[1])]),
+        ]);
+    }
+    tab.push(vec![
+        "speed-up".to_string(),
+        format!(
+            "{:.3}",
+            results[&("taylor", b[0])] / results[&("sastre", b[0])]
+        ),
+        format!(
+            "{:.3}",
+            results[&("taylor", b[1])] / results[&("sastre", b[1])]
+        ),
+    ]);
+    print!("{}", render_table(&tab));
+    println!(
+        "\npaper Table 5: 1-sample speed-up 1.001 (overhead-bound), \
+         128-sample speed-up 1.951 (expm-bound)."
+    );
+    let sp128 =
+        results[&("taylor", b[1])] / results[&("sastre", b[1])];
+    assert!(
+        sp128 > 1.0,
+        "batched sampling must favour the sastre pipeline ({sp128:.3})"
+    );
+}

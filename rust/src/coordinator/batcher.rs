@@ -1,0 +1,198 @@
+//! Dynamic batcher: accumulates planned matrices and flushes groups that
+//! share an execution shape (n, m, s) when either the group reaches
+//! `max_batch` or the oldest item exceeds `max_wait` — the same
+//! size-or-deadline policy production inference routers use.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::request::Collector;
+use super::selector::Plan;
+use crate::linalg::Matrix;
+
+/// One matrix waiting for execution.
+pub struct Item {
+    pub matrix: Matrix,
+    pub plan: Plan,
+    pub tol: f64,
+    /// Powers (W, W^2) cached by the selector; the native backend
+    /// evaluates from these so the selection-time A^2 is reused.
+    pub powers: Option<crate::expm::eval::Powers>,
+    /// Where to deliver, and at which slot index of the request.
+    pub collector: Arc<Collector>,
+    pub slot: usize,
+    pub enqueued: Instant,
+}
+
+/// Flush policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush a group as soon as it holds this many matrices.
+    pub max_batch: usize,
+    /// Flush everything whose head-of-line item is older than this.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Grouped pending work.
+#[derive(Default)]
+pub struct Batcher {
+    groups: HashMap<(usize, usize, u32), Vec<Item>>,
+    len: usize,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, item: Item) {
+        self.len += 1;
+        self.groups.entry(item.plan.key()).or_default().push(item);
+    }
+
+    /// Groups that hit the size threshold.
+    pub fn take_full(&mut self, policy: &BatchPolicy) -> Vec<Vec<Item>> {
+        let keys: Vec<_> = self
+            .groups
+            .iter()
+            .filter(|(_, v)| v.len() >= policy.max_batch)
+            .map(|(k, _)| *k)
+            .collect();
+        keys.iter()
+            .map(|k| {
+                let mut items = self.groups.remove(k).unwrap();
+                // Cap each flushed batch at max_batch; requeue the tail.
+                let mut out = Vec::new();
+                while items.len() > policy.max_batch {
+                    let tail = items.split_off(policy.max_batch);
+                    out.push(std::mem::replace(&mut items, tail));
+                }
+                if !items.is_empty() {
+                    out.push(items);
+                }
+                out
+            })
+            .flatten()
+            .inspect(|v| self.len -= v.len())
+            .collect()
+    }
+
+    /// Flush *everything* whose oldest item breached the deadline — the
+    /// paper's workloads arrive in waves, so one stale group drains all
+    /// (avoids order inversion between a request's sub-groups).
+    pub fn take_expired(&mut self, policy: &BatchPolicy) -> Vec<Vec<Item>> {
+        let now = Instant::now();
+        let stale = self.groups.values().any(|v| {
+            v.first()
+                .map(|i| now.duration_since(i.enqueued) >= policy.max_wait)
+                .unwrap_or(false)
+        });
+        if !stale {
+            return Vec::new();
+        }
+        self.drain_all()
+    }
+
+    /// Unconditional drain (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Vec<Item>> {
+        let mut out: Vec<Vec<Item>> = Vec::new();
+        for (_, items) in self.groups.drain() {
+            out.push(items);
+        }
+        self.len = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn item(n: usize, m: usize, s: u32) -> Item {
+        let (tx, _rx) = channel();
+        // Leak the receiver side: these tests never deliver.
+        std::mem::forget(_rx);
+        Item {
+            matrix: Matrix::identity(n),
+            plan: Plan { n, m, s },
+            tol: 1e-8,
+            powers: None,
+            collector: Collector::new(0, 1, tx),
+            slot: 0,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn groups_by_key() {
+        let mut b = Batcher::new();
+        b.push(item(8, 8, 0));
+        b.push(item(8, 8, 0));
+        b.push(item(8, 15, 2));
+        assert_eq!(b.len(), 3);
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::ZERO };
+        let full = b.take_full(&policy);
+        assert_eq!(full.len(), 1);
+        assert_eq!(full[0].len(), 2);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn full_groups_split_at_max_batch() {
+        let mut b = Batcher::new();
+        for _ in 0..5 {
+            b.push(item(4, 2, 0));
+        }
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::ZERO };
+        let full = b.take_full(&policy);
+        let sizes: Vec<usize> = full.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 5);
+        assert!(sizes.iter().all(|&s| s <= 2));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn expired_drains_everything() {
+        let mut b = Batcher::new();
+        b.push(item(4, 2, 0));
+        b.push(item(8, 8, 1));
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::ZERO, // everything is instantly stale
+        };
+        let drained = b.take_expired(&policy);
+        assert_eq!(drained.iter().map(Vec::len).sum::<usize>(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn not_expired_returns_nothing() {
+        let mut b = Batcher::new();
+        b.push(item(4, 2, 0));
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+        };
+        assert!(b.take_expired(&policy).is_empty());
+        assert_eq!(b.len(), 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Backend dispatch: execute a planned group either on the native f64
+//! engine (any shape, thread-parallel) or through the PJRT artifacts (grid
+//! shapes, the production path). Both implement the Algorithm-2 pipeline
+//! with the plan's (m, s) forced, so results are method-identical.
+
+use anyhow::Result;
+
+use crate::expm::eval::{eval_sastre, Powers};
+use crate::expm::scaling::repeated_square;
+use crate::expm::{coeffs, ExpmStats};
+use crate::linalg::Matrix;
+use crate::runtime::Executor;
+use crate::util::threads::parallel_map;
+
+/// Which compute engine a group ran on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+/// Execute e^W with a fixed plan on the native engine.
+pub fn native_expm_planned(w: &Matrix, m: usize, s: u32) -> (Matrix, ExpmStats) {
+    if m == 0 {
+        return (
+            Matrix::identity(w.order()),
+            ExpmStats { m: 0, s: 0, matrix_products: 0 },
+        );
+    }
+    let scaled = w.scaled((2.0f64).powi(-(s as i32)));
+    native_expm_from_powers(Powers::new(scaled), m, s)
+}
+
+/// Same pipeline, but starting from the selector's cached powers of the
+/// *unscaled* W (rescaled in place here) — saves recomputing A^2 (§Perf).
+pub fn native_expm_planned_pow(
+    mut powers: Powers,
+    m: usize,
+    s: u32,
+) -> (Matrix, ExpmStats) {
+    if m == 0 {
+        return (
+            Matrix::identity(powers.order()),
+            ExpmStats { m: 0, s: 0, matrix_products: 0 },
+        );
+    }
+    powers.rescale(s);
+    native_expm_from_powers(powers, m, s)
+}
+
+fn native_expm_from_powers(
+    mut powers: Powers,
+    m: usize,
+    s: u32,
+) -> (Matrix, ExpmStats) {
+    let out = eval_sastre(&mut powers, m);
+    let mut value = out.value;
+    let squarings = repeated_square(&mut value, s);
+    (
+        value,
+        ExpmStats {
+            m,
+            s,
+            matrix_products: powers.products + squarings,
+        },
+    )
+}
+
+/// Execute a whole group natively (parallel across matrices). When the
+/// selector's cached powers are supplied, evaluation starts from them.
+pub fn native_group(
+    mats: &[Matrix],
+    powers: Vec<Option<Powers>>,
+    m: usize,
+    s: u32,
+) -> Vec<(Matrix, ExpmStats)> {
+    let one = |i: usize, p: Option<Powers>| match p {
+        Some(p) => native_expm_planned_pow(p, m, s),
+        None => native_expm_planned(&mats[i], m, s),
+    };
+    if mats.len() == 1 {
+        let p = powers.into_iter().next().flatten();
+        return vec![one(0, p)];
+    }
+    // parallel_map wants Fn (not FnMut); wrap the consumed powers in
+    // per-slot mutexes so each index takes its own.
+    let slots: Vec<std::sync::Mutex<Option<Powers>>> =
+        powers.into_iter().map(std::sync::Mutex::new).collect();
+    parallel_map(mats.len(), |i| {
+        let p = slots[i].lock().unwrap().take();
+        one(i, p)
+    })
+}
+
+/// Execute a group through the PJRT artifacts. Product accounting uses the
+/// paper's cost model (the kernels perform exactly those dots in VMEM).
+pub fn pjrt_group(
+    exec: &Executor,
+    mats: &[Matrix],
+    m: usize,
+    s: u32,
+) -> Result<Vec<(Matrix, ExpmStats)>> {
+    let values = exec.expm_batch(mats, m, s)?;
+    let per = ExpmStats {
+        m,
+        s,
+        matrix_products: if m == 0 {
+            0
+        } else {
+            coeffs::sastre_eval_cost(m) + s as usize
+        },
+    };
+    Ok(values.into_iter().map(|v| (v, per)).collect())
+}
+
+/// Route a group: PJRT when the artifact grid covers the plan's order and
+/// an executor is available, native otherwise.
+pub fn execute_group(
+    exec: Option<&Executor>,
+    mats: &[Matrix],
+    powers: Vec<Option<Powers>>,
+    m: usize,
+    s: u32,
+) -> (Vec<(Matrix, ExpmStats)>, BackendKind) {
+    if let Some(e) = exec {
+        let n = mats[0].order();
+        if e.manifest.supports_order(n) && m != 0 {
+            match pjrt_group(e, mats, m, s) {
+                Ok(v) => return (v, BackendKind::Pjrt),
+                Err(err) => {
+                    // Fail soft: PJRT issues degrade to the native engine.
+                    eprintln!("pjrt group failed ({err}); falling back");
+                }
+            }
+        }
+    }
+    (native_group(mats, powers, m, s), BackendKind::Native)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expm::pade::expm_pade13;
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+
+    fn randm(n: usize, target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let nn = norm1(&a);
+        a.scaled(target / nn)
+    }
+
+    #[test]
+    fn native_planned_matches_oracle() {
+        let a = randm(10, 1.0, 1);
+        let (v, st) = native_expm_planned(&a, 8, 2);
+        let want = expm_pade13(&a);
+        let err = (&v - &want).max_abs() / want.max_abs();
+        assert!(err < 1e-9, "{err}");
+        assert_eq!(st.matrix_products, 3 + 2);
+    }
+
+    #[test]
+    fn native_group_parallel_matches_serial() {
+        let mats: Vec<Matrix> =
+            (0..7).map(|i| randm(8, 0.8, 100 + i)).collect();
+        let group = native_group(&mats, vec![None; mats.len()], 8, 1);
+        for (i, (v, _)) in group.iter().enumerate() {
+            let (want, _) = native_expm_planned(&mats[i], 8, 1);
+            assert_eq!(v, &want);
+        }
+    }
+
+    #[test]
+    fn zero_order_plan_yields_identity() {
+        let (v, st) = native_expm_planned(&Matrix::zeros(5, 5), 0, 0);
+        assert_eq!(v, Matrix::identity(5));
+        assert_eq!(st.matrix_products, 0);
+    }
+
+    #[test]
+    fn execute_group_without_executor_is_native() {
+        let mats = vec![randm(6, 0.5, 9)];
+        let (res, kind) = execute_group(None, &mats, vec![None], 4, 0);
+        assert_eq!(kind, BackendKind::Native);
+        assert_eq!(res.len(), 1);
+    }
+}

@@ -1,0 +1,175 @@
+//! Service metrics: everything the paper's Figures 2e–2h plot per call —
+//! degrees, scalings, products, latencies — aggregated lock-cheaply.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated counters. One per service; snapshot with [`Metrics::snapshot`].
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default, Clone)]
+struct Inner {
+    requests: u64,
+    matrices: u64,
+    errors: u64,
+    batches: u64,
+    matrix_products: u64,
+    degree_hist: BTreeMap<usize, u64>,
+    scaling_hist: BTreeMap<u32, u64>,
+    batch_fill: Vec<f64>,
+    latencies_s: Vec<f64>,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub matrices: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub matrix_products: u64,
+    pub degree_hist: BTreeMap<usize, u64>,
+    pub scaling_hist: BTreeMap<u32, u64>,
+    pub mean_batch_fill: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, matrices: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.matrices += matrices as u64;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_batch(&self, size: usize, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_fill.push(size as f64 / capacity.max(1) as f64);
+    }
+
+    pub fn record_matrix(&self, m: usize, s: u32, products: usize) {
+        let mut g = self.inner.lock().unwrap();
+        *g.degree_hist.entry(m).or_default() += 1;
+        *g.scaling_hist.entry(s).or_default() += 1;
+        g.matrix_products += products as u64;
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.inner.lock().unwrap().latencies_s.push(d.as_secs_f64());
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap().clone();
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let p99 = if g.latencies_s.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::percentile(&g.latencies_s, 99.0)
+        };
+        Snapshot {
+            requests: g.requests,
+            matrices: g.matrices,
+            errors: g.errors,
+            batches: g.batches,
+            matrix_products: g.matrix_products,
+            degree_hist: g.degree_hist,
+            scaling_hist: g.scaling_hist,
+            mean_batch_fill: mean(&g.batch_fill),
+            mean_latency_s: mean(&g.latencies_s),
+            p99_latency_s: p99,
+        }
+    }
+}
+
+impl Snapshot {
+    /// Render a compact human-readable block (the `serve --stats` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests={} matrices={} errors={} batches={} products={}\n",
+            self.requests,
+            self.matrices,
+            self.errors,
+            self.batches,
+            self.matrix_products
+        ));
+        s.push_str(&format!(
+            "mean_batch_fill={:.2} mean_latency={:.3}ms p99={:.3}ms\n",
+            self.mean_batch_fill,
+            self.mean_latency_s * 1e3,
+            self.p99_latency_s * 1e3
+        ));
+        s.push_str("degree histogram:");
+        for (m, c) in &self.degree_hist {
+            s.push_str(&format!(" m={m}:{c}"));
+        }
+        s.push_str("\nscaling histogram:");
+        for (sc, c) in &self.scaling_hist {
+            s.push_str(&format!(" s={sc}:{c}"));
+        }
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(3);
+        m.record_request(2);
+        m.record_batch(4, 8);
+        m.record_matrix(8, 1, 4);
+        m.record_matrix(8, 0, 3);
+        m.record_matrix(15, 2, 6);
+        m.record_latency(Duration::from_millis(10));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.matrices, 5);
+        assert_eq!(s.matrix_products, 13);
+        assert_eq!(s.degree_hist[&8], 2);
+        assert_eq!(s.scaling_hist[&2], 1);
+        assert!((s.mean_batch_fill - 0.5).abs() < 1e-12);
+        assert!(s.mean_latency_s > 0.009);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_latency_s, 0.0);
+        assert_eq!(s.p99_latency_s, 0.0);
+        assert!(s.render().contains("requests=0"));
+    }
+
+    #[test]
+    fn render_contains_histograms() {
+        let m = Metrics::new();
+        m.record_matrix(15, 3, 7);
+        let out = m.snapshot().render();
+        assert!(out.contains("m=15:1"));
+        assert!(out.contains("s=3:1"));
+    }
+}

@@ -1,0 +1,337 @@
+//! L3 coordinator — the expm *service*. This is the paper's system-side
+//! contribution made production-shaped: a router in the vLLM mold that
+//!
+//! 1. validates incoming [`ExpmRequest`]s,
+//! 2. plans each matrix with the paper's Algorithm 4 ([`selector`]),
+//! 3. dynamically batches matrices that share an execution shape
+//!    (n, m, s) ([`batcher`]),
+//! 4. dispatches groups to the PJRT artifacts or the native engine
+//!    ([`dispatch`]), and
+//! 5. accounts products/degrees/scalings/latencies ([`metrics`]).
+//!
+//! Threading: clients talk to the service over an mpsc channel; a single
+//! dispatcher thread owns the (non-Sync) PJRT executor and drives the
+//! batch loop; native groups fan out over the scoped thread pool.
+//! (tokio is not in the offline vendor set — std threads + channels carry
+//! the same architecture.)
+
+pub mod batcher;
+pub mod dispatch;
+pub mod metrics;
+pub mod request;
+pub mod selector;
+pub mod server;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::linalg::Matrix;
+use crate::runtime::Executor;
+use batcher::{BatchPolicy, Batcher, Item};
+use dispatch::{execute_group, BackendKind};
+use metrics::Metrics;
+use request::{validate, Collector, ExpmRequest, ExpmResponse, MatrixResult};
+pub use selector::Plan;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub policy: BatchPolicy,
+    /// Artifact directory; `None` disables the PJRT backend entirely.
+    pub artifact_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            policy: BatchPolicy::default(),
+            artifact_dir: Some(crate::runtime::default_artifact_dir()),
+        }
+    }
+}
+
+enum Msg {
+    Request(ExpmRequest, Sender<ExpmResponse>),
+    Shutdown,
+}
+
+/// Handle to a running expm service.
+pub struct ExpmService {
+    tx: Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl ExpmService {
+    /// Start the dispatcher thread. If the artifact dir is configured but
+    /// unusable, the service logs once and runs native-only.
+    pub fn start(config: ServiceConfig) -> ExpmService {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("expm-dispatch".into())
+            .spawn(move || dispatcher(rx, config, m2))
+            .expect("spawn dispatcher");
+        ExpmService {
+            tx,
+            worker: Some(worker),
+            metrics,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Submit asynchronously; the returned receiver yields the response.
+    pub fn submit(
+        &self,
+        matrices: Vec<Matrix>,
+        tol: f64,
+    ) -> Receiver<ExpmResponse> {
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = ExpmRequest { id, matrices, tol };
+        self.tx
+            .send(Msg::Request(req, rtx))
+            .expect("service thread alive");
+        rrx
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn compute(
+        &self,
+        matrices: Vec<Matrix>,
+        tol: f64,
+    ) -> Result<Vec<MatrixResult>, String> {
+        let resp = self
+            .submit(matrices, tol)
+            .recv()
+            .map_err(|_| "service stopped".to_string())?;
+        match resp.error {
+            Some(e) => Err(e),
+            None => Ok(resp.results),
+        }
+    }
+}
+
+impl Drop for ExpmService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The dispatch loop: receive with a deadline equal to the batch window,
+/// plan + enqueue, flush full groups eagerly and stale groups on timeout.
+fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
+    let executor: Option<Executor> = match &config.artifact_dir {
+        Some(dir) => match Executor::new(dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!(
+                    "expm-service: PJRT backend unavailable ({err}); \
+                     running native-only"
+                );
+                None
+            }
+        },
+        None => None,
+    };
+    let mut batcher = Batcher::new();
+    loop {
+        let msg = if batcher.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv_timeout(config.policy.max_wait) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        match msg {
+            Some(Msg::Shutdown) => {
+                flush(
+                    batcher.drain_all(),
+                    executor.as_ref(),
+                    &metrics,
+                    &config.policy,
+                );
+                break;
+            }
+            Some(Msg::Request(req, reply)) => {
+                metrics.record_request(req.matrices.len());
+                if let Err(e) = validate(&req) {
+                    metrics.record_error();
+                    let _ = reply.send(ExpmResponse {
+                        id: req.id,
+                        results: Vec::new(),
+                        latency_s: 0.0,
+                        error: Some(e),
+                    });
+                    continue;
+                }
+                let collector =
+                    Collector::new(req.id, req.matrices.len(), reply);
+                let plans =
+                    selector::plan_all_with_powers(&req.matrices, req.tol);
+                for (slot, (matrix, (plan, powers))) in
+                    req.matrices.into_iter().zip(plans).enumerate()
+                {
+                    batcher.push(Item {
+                        matrix,
+                        plan,
+                        tol: req.tol,
+                        powers: Some(powers),
+                        collector: collector.clone(),
+                        slot,
+                        enqueued: Instant::now(),
+                    });
+                }
+                flush(
+                    batcher.take_full(&config.policy),
+                    executor.as_ref(),
+                    &metrics,
+                    &config.policy,
+                );
+            }
+            None => {
+                // Batch window elapsed: drain stale groups.
+                flush(
+                    batcher.take_expired(&config.policy),
+                    executor.as_ref(),
+                    &metrics,
+                    &config.policy,
+                );
+            }
+        }
+    }
+}
+
+fn flush(
+    groups: Vec<Vec<Item>>,
+    executor: Option<&Executor>,
+    metrics: &Metrics,
+    policy: &BatchPolicy,
+) {
+    for mut group in groups {
+        if group.is_empty() {
+            continue;
+        }
+        let started = Instant::now();
+        let plan = group[0].plan;
+        metrics.record_batch(group.len(), policy.max_batch);
+        let mats: Vec<Matrix> =
+            group.iter().map(|i| i.matrix.clone()).collect();
+        let powers: Vec<_> =
+            group.iter_mut().map(|i| i.powers.take()).collect();
+        let (results, kind) =
+            execute_group(executor, &mats, powers, plan.m, plan.s);
+        let backend = match kind {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        };
+        for (item, (value, stats)) in group.iter().zip(results) {
+            metrics.record_matrix(stats.m, stats.s, stats.matrix_products);
+            item.collector.fulfill(
+                item.slot,
+                MatrixResult { value, stats, backend },
+            );
+        }
+        metrics.record_latency(started.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expm::pade::expm_pade13;
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+
+    fn native_service() -> ExpmService {
+        ExpmService::start(ServiceConfig {
+            policy: BatchPolicy::default(),
+            artifact_dir: None,
+        })
+    }
+
+    fn randm(n: usize, target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let nn = norm1(&a);
+        a.scaled(target / nn)
+    }
+
+    #[test]
+    fn end_to_end_native() {
+        let svc = native_service();
+        let mats: Vec<Matrix> = (0..5).map(|i| randm(8, 1.0, i)).collect();
+        let results = svc.compute(mats.clone(), 1e-8).unwrap();
+        assert_eq!(results.len(), 5);
+        for (r, a) in results.iter().zip(&mats) {
+            let want = expm_pade13(a);
+            let err = (&r.value - &want).max_abs() / want.max_abs();
+            assert!(err < 1e-7, "{err}");
+            assert_eq!(r.backend, "native");
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.matrices, 5);
+        assert!(snap.matrix_products > 0);
+    }
+
+    #[test]
+    fn invalid_request_reports_error() {
+        let svc = native_service();
+        let err = svc.compute(vec![Matrix::zeros(2, 3)], 1e-8).unwrap_err();
+        assert!(err.contains("not square"), "{err}");
+        assert_eq!(svc.metrics.snapshot().errors, 1);
+    }
+
+    #[test]
+    fn mixed_orders_one_request() {
+        let svc = native_service();
+        let mats = vec![randm(4, 0.5, 1), randm(16, 2.0, 2), randm(8, 0.1, 3)];
+        let results = svc.compute(mats.clone(), 1e-8).unwrap();
+        assert_eq!(results.len(), 3);
+        // Results come back in request order despite regrouping.
+        for (r, a) in results.iter().zip(&mats) {
+            assert_eq!(r.value.order(), a.order());
+        }
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let svc = Arc::new(native_service());
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let svc = svc.clone();
+            joins.push(std::thread::spawn(move || {
+                let mats: Vec<Matrix> =
+                    (0..4).map(|i| randm(8, 1.0, t * 10 + i)).collect();
+                svc.compute(mats, 1e-8).unwrap().len()
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 4);
+        }
+        assert_eq!(svc.metrics.snapshot().matrices, 32);
+    }
+
+    #[test]
+    fn zero_matrices_give_identity() {
+        let svc = native_service();
+        let results =
+            svc.compute(vec![Matrix::zeros(6, 6)], 1e-8).unwrap();
+        assert_eq!(results[0].value, Matrix::identity(6));
+        assert_eq!(results[0].stats.matrix_products, 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Request/response types for the expm service.
+
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::expm::ExpmStats;
+use crate::linalg::Matrix;
+
+/// A client request: one or more square matrices to exponentiate under a
+/// shared tolerance. Matrices may have different orders; the batcher
+/// regroups them.
+#[derive(Clone, Debug)]
+pub struct ExpmRequest {
+    pub id: u64,
+    pub matrices: Vec<Matrix>,
+    pub tol: f64,
+}
+
+/// Per-matrix outcome.
+#[derive(Clone, Debug)]
+pub struct MatrixResult {
+    pub value: Matrix,
+    pub stats: ExpmStats,
+    /// Which backend produced it ("native" | "pjrt").
+    pub backend: &'static str,
+}
+
+/// Full response, delivered once every matrix of the request completes.
+#[derive(Debug)]
+pub struct ExpmResponse {
+    pub id: u64,
+    pub results: Vec<MatrixResult>,
+    pub latency_s: f64,
+    pub error: Option<String>,
+}
+
+/// Validation errors surfaced to the client instead of panicking.
+pub fn validate(req: &ExpmRequest) -> Result<(), String> {
+    if req.matrices.is_empty() {
+        return Err("request has no matrices".into());
+    }
+    if !(req.tol.is_finite() && req.tol > 0.0) {
+        return Err(format!("invalid tolerance {}", req.tol));
+    }
+    for (i, m) in req.matrices.iter().enumerate() {
+        if !m.is_square() {
+            return Err(format!(
+                "matrix {i} is {}x{}, not square",
+                m.rows(),
+                m.cols()
+            ));
+        }
+        if m.order() == 0 {
+            return Err(format!("matrix {i} is empty"));
+        }
+        if !m.is_finite() {
+            return Err(format!("matrix {i} has non-finite entries"));
+        }
+    }
+    Ok(())
+}
+
+/// Gathers per-matrix results for one request and fires the reply channel
+/// when the last slot fills. Shared by all batch groups the request was
+/// split across.
+pub struct Collector {
+    id: u64,
+    started: Instant,
+    slots: Mutex<CollectorState>,
+    reply: Sender<ExpmResponse>,
+}
+
+struct CollectorState {
+    results: Vec<Option<MatrixResult>>,
+    remaining: usize,
+    error: Option<String>,
+}
+
+impl Collector {
+    pub fn new(
+        id: u64,
+        count: usize,
+        reply: Sender<ExpmResponse>,
+    ) -> Arc<Collector> {
+        Arc::new(Collector {
+            id,
+            started: Instant::now(),
+            slots: Mutex::new(CollectorState {
+                results: (0..count).map(|_| None).collect(),
+                remaining: count,
+                error: None,
+            }),
+            reply,
+        })
+    }
+
+    /// Install result `idx`; sends the response when complete.
+    pub fn fulfill(&self, idx: usize, result: MatrixResult) {
+        let mut st = self.slots.lock().unwrap();
+        if st.remaining == 0 {
+            return; // already failed or completed
+        }
+        if st.results[idx].is_none() {
+            st.results[idx] = Some(result);
+            st.remaining -= 1;
+        }
+        if st.remaining == 0 {
+            let results =
+                st.results.drain(..).map(Option::unwrap).collect();
+            let _ = self.reply.send(ExpmResponse {
+                id: self.id,
+                results,
+                latency_s: self.started.elapsed().as_secs_f64(),
+                error: st.error.take(),
+            });
+        }
+    }
+
+    /// Abort: report an error for the whole request immediately.
+    pub fn fail(&self, msg: String) {
+        let mut st = self.slots.lock().unwrap();
+        if st.remaining == 0 {
+            return;
+        }
+        st.remaining = 0;
+        let _ = self.reply.send(ExpmResponse {
+            id: self.id,
+            results: Vec::new(),
+            latency_s: self.started.elapsed().as_secs_f64(),
+            error: Some(msg),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn dummy_result() -> MatrixResult {
+        MatrixResult {
+            value: Matrix::identity(2),
+            stats: Default::default(),
+            backend: "native",
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_requests() {
+        let ok = ExpmRequest {
+            id: 1,
+            matrices: vec![Matrix::identity(3)],
+            tol: 1e-8,
+        };
+        assert!(validate(&ok).is_ok());
+        let empty = ExpmRequest { id: 1, matrices: vec![], tol: 1e-8 };
+        assert!(validate(&empty).is_err());
+        let bad_tol = ExpmRequest {
+            id: 1,
+            matrices: vec![Matrix::identity(3)],
+            tol: f64::NAN,
+        };
+        assert!(validate(&bad_tol).is_err());
+        let rect = ExpmRequest {
+            id: 1,
+            matrices: vec![Matrix::zeros(2, 3)],
+            tol: 1e-8,
+        };
+        assert!(validate(&rect).is_err());
+        let mut nan = Matrix::identity(2);
+        nan[(0, 0)] = f64::INFINITY;
+        let inf = ExpmRequest { id: 1, matrices: vec![nan], tol: 1e-8 };
+        assert!(validate(&inf).is_err());
+    }
+
+    #[test]
+    fn collector_fires_once_complete() {
+        let (tx, rx) = channel();
+        let c = Collector::new(9, 3, tx);
+        c.fulfill(1, dummy_result());
+        assert!(rx.try_recv().is_err());
+        c.fulfill(0, dummy_result());
+        c.fulfill(2, dummy_result());
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.results.len(), 3);
+        assert!(resp.error.is_none());
+    }
+
+    #[test]
+    fn collector_duplicate_fulfill_ignored() {
+        let (tx, rx) = channel();
+        let c = Collector::new(1, 2, tx);
+        c.fulfill(0, dummy_result());
+        c.fulfill(0, dummy_result());
+        assert!(rx.try_recv().is_err());
+        c.fulfill(1, dummy_result());
+        assert!(rx.try_recv().is_ok());
+    }
+
+    #[test]
+    fn collector_fail_short_circuits() {
+        let (tx, rx) = channel();
+        let c = Collector::new(2, 5, tx);
+        c.fail("boom".into());
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.error.as_deref(), Some("boom"));
+        // Later fulfills must not fire a second response.
+        c.fulfill(0, dummy_result());
+        assert!(rx.try_recv().is_err());
+    }
+}

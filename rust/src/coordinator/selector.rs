@@ -1,0 +1,104 @@
+//! Per-request planning: run the paper's Algorithm 4 on each matrix to fix
+//! (m, s) *before* dispatch, so the batcher can group matrices that share
+//! an execution shape. Norm work is O(n^2) per matrix plus one n×n product
+//! for ||W^2|| — that product's result is thrown away here (the PJRT poly
+//! kernels recompute A^2 in VMEM); the native backend keeps it. The
+//! accounting below follows the paper's convention of charging the
+//! evaluation-formula totals of Section 3.1.
+
+use crate::expm::eval::Powers;
+use crate::expm::selection::{select_sastre, SelectOptions, Selection};
+use crate::linalg::Matrix;
+
+/// Execution plan for one matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Plan {
+    /// Matrix order n.
+    pub n: usize,
+    /// Polynomial order (Algorithm 4 ladder; 0 = zero matrix).
+    pub m: usize,
+    /// Squarings.
+    pub s: u32,
+}
+
+impl Plan {
+    /// Batch-group key: matrices with equal keys run in one PJRT call.
+    pub fn key(&self) -> (usize, usize, u32) {
+        (self.n, self.m, self.s)
+    }
+}
+
+/// Plan a single matrix under tolerance `tol`.
+pub fn plan_matrix(w: &Matrix, tol: f64) -> Plan {
+    plan_matrix_with_powers(w, tol).0
+}
+
+/// Plan a matrix AND keep the powers (W, W^2) the bounds computed — the
+/// native backend evaluates straight from them, so the A^2 product paid
+/// during selection is never repeated (§Perf L3; the PJRT kernels
+/// recompute A^2 in VMEM by design, so the PJRT path ignores them).
+pub fn plan_matrix_with_powers(w: &Matrix, tol: f64) -> (Plan, Powers) {
+    let mut powers = Powers::new(w.clone());
+    let opts = SelectOptions { tol, power_est: false };
+    let sel: Selection = select_sastre(&mut powers, &opts);
+    (Plan { n: w.order(), m: sel.m, s: sel.s }, powers)
+}
+
+/// Plan every matrix of a request.
+pub fn plan_all(mats: &[Matrix], tol: f64) -> Vec<Plan> {
+    mats.iter().map(|m| plan_matrix(m, tol)).collect()
+}
+
+/// Plan every matrix, retaining powers for the native fast path.
+pub fn plan_all_with_powers(
+    mats: &[Matrix],
+    tol: f64,
+) -> Vec<(Plan, Powers)> {
+    mats.iter().map(|m| plan_matrix_with_powers(m, tol)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plans_group_by_shape() {
+        let mut rng = Rng::new(31);
+        let mk = |n: usize, target: f64, rng: &mut Rng| {
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let nn = norm1(&a);
+            a.scaled(target / nn)
+        };
+        // The same matrix (rescaled identically) -> identical key.
+        let a = mk(16, 1.0, &mut rng);
+        let b = a.clone();
+        let pa = plan_matrix(&a, 1e-8);
+        let pb = plan_matrix(&b, 1e-8);
+        assert_eq!(pa.key(), pb.key());
+        // A much larger norm forces a different (m, s).
+        let c = mk(16, 500.0, &mut rng);
+        let pc = plan_matrix(&c, 1e-8);
+        assert_ne!(pa.key(), pc.key());
+    }
+
+    #[test]
+    fn zero_matrix_plan() {
+        let p = plan_matrix(&Matrix::zeros(8, 8), 1e-8);
+        assert_eq!((p.m, p.s), (0, 0));
+    }
+
+    #[test]
+    fn plan_orders_come_from_ladder() {
+        let mut rng = Rng::new(32);
+        for _ in 0..20 {
+            let n = 8;
+            let a = Matrix::from_fn(n, n, |_, _| rng.normal())
+                .scaled(rng.log_uniform(1e-6, 50.0));
+            let p = plan_matrix(&a, 1e-8);
+            assert!([0usize, 1, 2, 4, 8, 15].contains(&p.m), "{p:?}");
+            assert!(p.s <= 20);
+        }
+    }
+}

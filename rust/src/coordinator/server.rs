@@ -1,0 +1,369 @@
+//! Network front-end: a line-delimited JSON protocol over TCP, making the
+//! expm service deployable as a standalone daemon (the "launcher" role of
+//! the production stack; std-only since tokio isn't vendored).
+//!
+//! Protocol (one JSON object per line):
+//!
+//!   -> {"id": 7, "tol": 1e-8, "matrices": [[...row-major...], ...],
+//!       "orders": [n1, n2, ...]}
+//!   <- {"id": 7, "ok": true, "results": [[...], ...],
+//!       "stats": [{"m": 8, "s": 1, "products": 4}, ...]}
+//!   <- {"id": 7, "ok": false, "error": "..."}
+//!
+//! A request with `"cmd": "stats"` returns the metrics snapshot; with
+//! `"cmd": "shutdown"` it stops the listener (used by tests).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::ExpmService;
+use crate::linalg::Matrix;
+use crate::util::json::{self, Json};
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `svc`.
+    pub fn spawn(
+        addr: &str,
+        svc: Arc<ExpmService>,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("expm-server".into())
+            .spawn(move || {
+                listener
+                    .set_nonblocking(false)
+                    .expect("blocking listener");
+                // Accept loop; each connection gets a thread.
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let svc = svc.clone();
+                            let stop3 = stop2.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, svc, stop3);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, join: Some(join) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Block until a client sends `{"cmd": "shutdown"}` (daemon mode).
+    pub fn shutdown_wait(&mut self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        if let Some(j) = self.join.take() {
+            // Unblock accept() so the loop can exit.
+            let _ = TcpStream::connect(self.addr);
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn error_reply(id: f64, msg: &str) -> String {
+    json::to_string(&obj(vec![
+        ("id", Json::Num(id)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+    ]))
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    svc: Arc<ExpmService>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, &svc, &stop) {
+            Ok(r) => r,
+            Err(msg) => error_reply(-1.0, &msg),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn handle_line(
+    line: &str,
+    svc: &ExpmService,
+    stop: &AtomicBool,
+) -> Result<String, String> {
+    let req = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let id = req.get("id").and_then(Json::as_f64).unwrap_or(-1.0);
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => {
+                let snap = svc.metrics.snapshot();
+                Ok(json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("ok", Json::Bool(true)),
+                    ("requests", Json::Num(snap.requests as f64)),
+                    ("matrices", Json::Num(snap.matrices as f64)),
+                    ("products", Json::Num(snap.matrix_products as f64)),
+                    ("errors", Json::Num(snap.errors as f64)),
+                ])))
+            }
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                Ok(json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("ok", Json::Bool(true)),
+                ])))
+            }
+            other => Err(format!("unknown cmd {other:?}")),
+        };
+    }
+    let tol = req.get("tol").and_then(Json::as_f64).unwrap_or(1e-8);
+    let orders = req
+        .get("orders")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'orders'")?;
+    let data = req
+        .get("matrices")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'matrices'")?;
+    if orders.len() != data.len() {
+        return Err("orders/matrices length mismatch".into());
+    }
+    let mut mats = Vec::with_capacity(data.len());
+    for (o, d) in orders.iter().zip(data) {
+        let n = o.as_usize().ok_or("bad order")?;
+        let vals = d.as_arr().ok_or("matrix must be an array")?;
+        if vals.len() != n * n {
+            return Err(format!(
+                "matrix data length {} != {n}x{n}",
+                vals.len()
+            ));
+        }
+        let flat: Option<Vec<f64>> =
+            vals.iter().map(Json::as_f64).collect();
+        let flat = flat.ok_or("matrix entries must be numbers")?;
+        if !flat.iter().all(|x| x.is_finite()) {
+            return Err("matrix entries must be finite".into());
+        }
+        mats.push(Matrix::from_vec(n, n, flat));
+    }
+    match svc.compute(mats, tol) {
+        Ok(results) => {
+            let vals: Vec<Json> = results
+                .iter()
+                .map(|r| {
+                    Json::Arr(
+                        r.value.data().iter().map(|&x| Json::Num(x)).collect(),
+                    )
+                })
+                .collect();
+            let stats: Vec<Json> = results
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("m", Json::Num(r.stats.m as f64)),
+                        ("s", Json::Num(r.stats.s as f64)),
+                        (
+                            "products",
+                            Json::Num(r.stats.matrix_products as f64),
+                        ),
+                        ("backend", Json::Str(r.backend.into())),
+                    ])
+                })
+                .collect();
+            Ok(json::to_string(&obj(vec![
+                ("id", Json::Num(id)),
+                ("ok", Json::Bool(true)),
+                ("results", Json::Arr(vals)),
+                ("stats", Json::Arr(stats)),
+            ])))
+        }
+        Err(e) => Ok(error_reply(id, &e)),
+    }
+}
+
+/// Minimal blocking client (used by tests, examples and the CLI).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut out = String::new();
+        self.reader.read_line(&mut out)?;
+        Ok(out)
+    }
+
+    /// Convenience: exponentiate one matrix remotely.
+    pub fn expm(
+        &mut self,
+        a: &Matrix,
+        tol: f64,
+    ) -> Result<Matrix, String> {
+        let entries: Vec<String> =
+            a.data().iter().map(|x| format!("{x}")).collect();
+        let line = format!(
+            "{{\"id\": 1, \"tol\": {tol}, \"orders\": [{}], \"matrices\": [[{}]]}}",
+            a.order(),
+            entries.join(",")
+        );
+        let reply = self.roundtrip(&line).map_err(|e| e.to_string())?;
+        let v = json::parse(&reply).map_err(|e| e.to_string())?;
+        if v.get("ok") != Some(&Json::Bool(true)) {
+            return Err(v
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+                .to_string());
+        }
+        let arr = v
+            .get("results")
+            .and_then(Json::as_arr)
+            .and_then(|r| r.first())
+            .and_then(Json::as_arr)
+            .ok_or("malformed results")?;
+        let flat: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
+        let flat = flat.ok_or("non-numeric results")?;
+        Ok(Matrix::from_vec(a.order(), a.order(), flat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+    use crate::expm::pade::expm_pade13;
+    use crate::util::rng::Rng;
+
+    fn start() -> (Server, Arc<ExpmService>) {
+        let svc = Arc::new(ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            ..Default::default()
+        }));
+        let server = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+        (server, svc)
+    }
+
+    #[test]
+    fn tcp_roundtrip_expm() {
+        let (server, _svc) = start();
+        let mut client = Client::connect(server.addr).unwrap();
+        let mut rng = Rng::new(3);
+        let a = Matrix::from_fn(6, 6, |_, _| rng.normal() * 0.4);
+        let got = client.expm(&a, 1e-8).unwrap();
+        let want = expm_pade13(&a);
+        let err = (&got - &want).max_abs() / want.max_abs();
+        assert!(err < 1e-7, "{err}");
+    }
+
+    #[test]
+    fn tcp_stats_and_errors() {
+        let (server, _svc) = start();
+        let mut client = Client::connect(server.addr).unwrap();
+        // Malformed JSON.
+        let reply = client.roundtrip("{not json").unwrap();
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        // Bad shape.
+        let reply = client
+            .roundtrip(r#"{"id": 2, "orders": [3], "matrices": [[1, 2]]}"#)
+            .unwrap();
+        assert!(reply.contains("\"ok\":false"));
+        // Non-finite entries rejected.
+        let reply = client
+            .roundtrip(
+                r#"{"id": 5, "orders": [1], "matrices": [[1e999]]}"#,
+            )
+            .unwrap();
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        // Stats works.
+        let reply = client.roundtrip(r#"{"id": 3, "cmd": "stats"}"#).unwrap();
+        assert!(reply.contains("\"ok\":true"));
+        assert!(reply.contains("\"requests\""));
+    }
+
+    #[test]
+    fn tcp_multiple_clients() {
+        let (server, _svc) = start();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut rng = Rng::new(t);
+                    let a =
+                        Matrix::from_fn(4, 4, |_, _| rng.normal() * 0.3);
+                    let got = client.expm(&a, 1e-8).unwrap();
+                    let want = expm_pade13(&a);
+                    (&got - &want).max_abs()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn tcp_shutdown_cmd() {
+        let (mut server, _svc) = start();
+        let mut client = Client::connect(server.addr).unwrap();
+        let reply =
+            client.roundtrip(r#"{"id": 9, "cmd": "shutdown"}"#).unwrap();
+        assert!(reply.contains("\"ok\":true"));
+        server.shutdown(); // must not hang
+    }
+}

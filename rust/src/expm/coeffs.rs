@@ -1,0 +1,140 @@
+//! Coefficients of the evaluation formulas — Rust mirror of
+//! `python/compile/kernels/coeffs.py` (paper Tables 2 and 3, eqs. (10)–(20)).
+
+/// Table 2 — order m = 8 coefficients (c1..c6), IEEE-double rounded.
+pub const C8: [f64; 6] = [
+    4.980119205559973e-3,
+    1.992047682223989e-2,
+    7.665265321119147e-2,
+    8.765009801785554e-1,
+    1.225521150112075e-1,
+    2.974307204847627e0,
+];
+
+/// Table 3 — order m = 15+ coefficients (c1..c16), IEEE-double rounded.
+pub const C15: [f64; 16] = [
+    4.018761610201036e-4,
+    2.945531440279683e-3,
+    -8.709066576837676e-3,
+    4.017568440673568e-1,
+    3.230762888122312e-2,
+    5.768988513026145e0,
+    2.338576034271299e-2,
+    2.381070373870987e-1,
+    2.224209172496374e0,
+    -5.792361707073261e0,
+    -4.130276365929783e-2,
+    1.040801735231354e1,
+    -6.331712455883370e1,
+    3.484665863364574e-1,
+    1.0,
+    1.0,
+];
+
+/// Eq. (20): the x^16 coefficient of y22 is b16 = c1^4.
+pub fn b16() -> f64 {
+    C15[0].powi(4)
+}
+
+/// n! as f64 (exact for n <= 22, plenty for the C vectors).
+pub fn factorial(n: usize) -> f64 {
+    (1..=n).map(|k| k as f64).product()
+}
+
+/// 1/n! as f64.
+pub fn inv_factorial(n: usize) -> f64 {
+    1.0 / factorial(n)
+}
+
+/// Algorithm 4's degree ladder (15 denotes the 15+ scheme).
+pub const SASTRE_ORDERS: [usize; 5] = [1, 2, 4, 8, 15];
+
+/// Algorithm 3's degree ladder.
+pub const PS_ORDERS: [usize; 7] = [1, 2, 4, 6, 9, 12, 16];
+
+/// Matrix-product cost of evaluating T_m with the Sastre formulas,
+/// *including* the A^2 product (Section 3.1, note 2).
+pub fn sastre_eval_cost(m: usize) -> usize {
+    match m {
+        1 => 0,
+        2 => 1,
+        4 => 2,
+        8 => 3,
+        15 => 4,
+        _ => panic!("no Sastre formula for order {m}"),
+    }
+}
+
+/// Paterson–Stockmeyer blocking: j = ceil(sqrt(m)), k = ceil(m / j).
+pub fn ps_blocking(m: usize) -> (usize, usize) {
+    let mut j = (m as f64).sqrt().floor() as usize;
+    if j * j < m {
+        j += 1;
+    }
+    let k = m.div_ceil(j.max(1));
+    (j.max(1), k.max(1))
+}
+
+/// Products to evaluate T_m via P–S: (j-1) power products + (k-1) Horner.
+pub fn ps_eval_cost(m: usize) -> usize {
+    if m <= 1 {
+        return 0;
+    }
+    let (j, k) = ps_blocking(m);
+    (j - 1) + (k - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b16_matches_paper_eq20() {
+        let b = b16();
+        assert!((b - 2.608368698098256e-14).abs() < 1e-26, "{b}");
+        // Relative error vs 1/16! ~ 0.454 (paper, below eq. (20)).
+        let rel = (b - inv_factorial(16)).abs() * factorial(16);
+        assert!((rel - 0.454).abs() < 5e-3, "{rel}");
+    }
+
+    #[test]
+    fn factorials_exact() {
+        assert_eq!(factorial(0), 1.0);
+        assert_eq!(factorial(5), 120.0);
+        assert_eq!(factorial(10), 3628800.0);
+        assert!((factorial(17) - 355687428096000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn ps_blocking_matches_algorithm3() {
+        // Algorithm 3's M -> J table: [1,2,4,6,9,12,16] -> ceil(sqrt).
+        let want_j = [1usize, 2, 2, 3, 3, 4, 4];
+        let want_k = [1usize, 1, 2, 2, 3, 3, 4];
+        for (i, &m) in PS_ORDERS.iter().enumerate() {
+            let (j, k) = ps_blocking(m);
+            assert_eq!(j, want_j[i], "m={m}");
+            assert_eq!(k, want_k[i], "m={m}");
+        }
+    }
+
+    #[test]
+    fn ps_cost_matches_table1() {
+        // Table 1, P–S row: order 6 -> 3M, 9 -> 4M, 12 -> 5M, 16 -> 6M.
+        assert_eq!(ps_eval_cost(6), 3);
+        assert_eq!(ps_eval_cost(9), 4);
+        assert_eq!(ps_eval_cost(12), 5);
+        assert_eq!(ps_eval_cost(16), 6);
+        // And order 20 -> 7M (Table 1's last P–S column).
+        assert_eq!(ps_eval_cost(20), 7);
+    }
+
+    #[test]
+    fn sastre_cost_matches_table1() {
+        // Table 1, Sastre row: 8 -> 3M, 15+ -> 4M (21+ -> 5M not used).
+        assert_eq!(sastre_eval_cost(8), 3);
+        assert_eq!(sastre_eval_cost(15), 4);
+        assert_eq!(sastre_eval_cost(4), 2);
+        assert_eq!(sastre_eval_cost(2), 1);
+        assert_eq!(sastre_eval_cost(1), 0);
+    }
+}

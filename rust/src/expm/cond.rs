@@ -1,0 +1,108 @@
+//! Condition number of the matrix exponential — the reference line in the
+//! paper's Figure 1a (cond · ε).
+//!
+//! κ_exp(A) = ||L_exp(A)|| ||A|| / ||e^A|| with L the Fréchet derivative.
+//! We estimate ||L|| by power iteration, evaluating L(A, E) through the
+//! classic 2n×2n block identity: expm([[A, E], [0, A]]) has L(A, E) in its
+//! upper-right block. Oracle-grade cost — only used by the Figure-1 bench.
+
+use super::pade::expm_pade13;
+use crate::linalg::{norm_fro, Matrix};
+
+/// L(A, E) via the block-triangular embedding.
+pub fn frechet(a: &Matrix, e: &Matrix) -> Matrix {
+    let n = a.order();
+    assert_eq!(e.rows(), n);
+    let mut big = Matrix::zeros(2 * n, 2 * n);
+    for i in 0..n {
+        for j in 0..n {
+            big[(i, j)] = a[(i, j)];
+            big[(n + i, n + j)] = a[(i, j)];
+            big[(i, n + j)] = e[(i, j)];
+        }
+    }
+    let eb = expm_pade13(&big);
+    Matrix::from_fn(n, n, |i, j| eb[(i, n + j)])
+}
+
+/// Relative condition number estimate (Frobenius-norm power iteration on
+/// the Fréchet map; `iters` ~ 3-5 suffices for an order-of-magnitude line).
+pub fn cond_expm(a: &Matrix, iters: usize) -> f64 {
+    let n = a.order();
+    let ea = expm_pade13(a);
+    let norm_ea = norm_fro(&ea).max(1e-300);
+    let norm_a = norm_fro(a);
+    if norm_a == 0.0 {
+        return 1.0;
+    }
+    // Power iteration on E -> L(A, E) (linear in E).
+    let mut e = Matrix::from_fn(n, n, |i, j| {
+        // Deterministic pseudo-random direction.
+        let h = (i * 31 + j * 17 + 7) % 13;
+        (h as f64 - 6.0) / 6.0
+    });
+    let mut norm_l = 0.0;
+    for _ in 0..iters.max(1) {
+        let ne = norm_fro(&e).max(1e-300);
+        e.scale_in_place(1.0 / ne);
+        let le = frechet(a, &e);
+        norm_l = norm_fro(&le);
+        e = le;
+    }
+    norm_l * norm_a / norm_ea
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frechet_linearity() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::from_fn(5, 5, |_, _| rng.normal() * 0.5);
+        let e1 = Matrix::from_fn(5, 5, |_, _| rng.normal());
+        let e2 = Matrix::from_fn(5, 5, |_, _| rng.normal());
+        let l1 = frechet(&a, &e1);
+        let l2 = frechet(&a, &e2);
+        let mut sum = e1.clone();
+        sum.axpy(2.0, &e2);
+        let lsum = frechet(&a, &sum);
+        let mut want = l1.clone();
+        want.axpy(2.0, &l2);
+        let err = (&lsum - &want).max_abs() / want.max_abs().max(1.0);
+        assert!(err < 1e-9, "{err}");
+    }
+
+    #[test]
+    fn frechet_matches_finite_difference() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::from_fn(4, 4, |_, _| rng.normal() * 0.4);
+        let e = Matrix::from_fn(4, 4, |_, _| rng.normal());
+        let h = 1e-7;
+        let mut ah = a.clone();
+        ah.axpy(h, &e);
+        let fd = (&expm_pade13(&ah) - &expm_pade13(&a)).scaled(1.0 / h);
+        let l = frechet(&a, &e);
+        let err = (&fd - &l).max_abs() / l.max_abs().max(1.0);
+        assert!(err < 1e-5, "{err}");
+    }
+
+    #[test]
+    fn cond_normal_matrix_close_to_norm() {
+        // For normal A, kappa_exp is modest (≈ ||A|| for symmetric).
+        let d = Matrix::from_fn(4, 4, |i, j| if i == j { 1.0 } else { 0.0 });
+        let k = cond_expm(&d, 4);
+        assert!(k > 0.3 && k < 5.0, "{k}");
+    }
+
+    #[test]
+    fn cond_grows_for_nonnormal() {
+        // Highly nonnormal matrices have large expm condition numbers.
+        let a = crate::linalg::gallery::jordbloc(8, -0.5);
+        let k_jordan = cond_expm(&a, 4);
+        let d = Matrix::identity(8).scaled(0.5);
+        let k_diag = cond_expm(&d, 4);
+        assert!(k_jordan > k_diag, "{k_jordan} vs {k_diag}");
+    }
+}

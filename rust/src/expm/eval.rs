@@ -1,0 +1,328 @@
+//! Polynomial evaluation engines: the Sastre formulas (10)–(17) and the
+//! Paterson–Stockmeyer scheme, with exact matrix-product accounting.
+//!
+//! Every function takes the precomputed powers it needs (the selection
+//! algorithms already computed W^2 — and W^3/W^4 for P–S — while bounding
+//! the remainder, and Algorithm 2 reuses them), so the *incremental*
+//! product counts here are the paper's totals minus the shared powers.
+
+use super::coeffs::{self, C15, C8};
+use crate::linalg::{matmul, Matrix};
+
+/// Precomputed powers of the (already scaled) matrix W.
+/// `pows[0]` is W itself, `pows[1]` = W^2, ... up to W^jmax.
+#[derive(Clone)]
+pub struct Powers {
+    pows: Vec<Matrix>,
+    /// Products spent building the powers.
+    pub products: usize,
+}
+
+impl Powers {
+    pub fn new(w: Matrix) -> Powers {
+        Powers { pows: vec![w], products: 0 }
+    }
+
+    pub fn w(&self) -> &Matrix {
+        &self.pows[0]
+    }
+
+    /// W^k, computing (and caching) intermediate powers on demand.
+    pub fn get(&mut self, k: usize) -> &Matrix {
+        assert!(k >= 1);
+        while self.pows.len() < k {
+            let next = matmul(self.pows.last().unwrap(), &self.pows[0]);
+            self.pows.push(next);
+            self.products += 1;
+        }
+        &self.pows[k - 1]
+    }
+
+    pub fn have(&self, k: usize) -> bool {
+        k >= 1 && self.pows.len() >= k
+    }
+
+    pub fn order(&self) -> usize {
+        self.pows[0].order()
+    }
+
+    /// Rescale all cached powers for W <- W / 2^s (W^k scales by 2^{-ks}).
+    pub fn rescale(&mut self, s: u32) {
+        if s == 0 {
+            return;
+        }
+        for (idx, p) in self.pows.iter_mut().enumerate() {
+            let k = (idx + 1) as i32;
+            p.scale_in_place((2.0f64).powi(-(k * s as i32)));
+        }
+    }
+}
+
+/// Result of a polynomial evaluation: T_m(W) plus products spent *in the
+/// evaluation itself* (not counting powers already in `Powers`).
+pub struct EvalOut {
+    pub value: Matrix,
+    pub products: usize,
+}
+
+/// Evaluate T_m(W) by the Sastre formulas, m in {1, 2, 4, 8, 15}.
+pub fn eval_sastre(p: &mut Powers, m: usize) -> EvalOut {
+    let n = p.order();
+    let before = p.products;
+    let value = match m {
+        1 => {
+            // (10): A + I
+            let mut x = p.w().clone();
+            x.add_diag(1.0);
+            x
+        }
+        2 => {
+            // (11): A^2/2 + A + I
+            let mut x = p.get(2).scaled(0.5);
+            x.axpy(1.0, &p.pows[0].clone());
+            x.add_diag(1.0);
+            x
+        }
+        4 => {
+            // (12): ((A2/4 + A)/3 + I) A2/2 + A + I
+            let a2 = p.get(2).clone();
+            let a = p.w().clone();
+            let mut inner = a2.scaled(0.25);
+            inner.axpy(1.0, &a);
+            inner.scale_in_place(1.0 / 3.0);
+            inner.add_diag(1.0);
+            let mut x = matmul(&inner, &a2);
+            x.scale_in_place(0.5);
+            x.axpy(1.0, &a);
+            x.add_diag(1.0);
+            p.products += 1; // the product with A2
+            x
+        }
+        8 => {
+            // (13)-(14), 2 products beyond A^2.
+            let a2 = p.get(2).clone();
+            let a = p.w().clone();
+            let [c1, c2, c3, c4, c5, c6] = C8;
+            let mut rhs = a2.scaled(c1);
+            rhs.axpy(c2, &a);
+            let y02 = matmul(&a2, &rhs);
+            let mut left = y02.clone();
+            left.axpy(c3, &a2);
+            left.axpy(c4, &a);
+            let mut right = y02.clone();
+            right.axpy(c5, &a2);
+            let mut x = matmul(&left, &right);
+            x.axpy(c6, &y02);
+            x.axpy(0.5, &a2);
+            x.axpy(1.0, &a);
+            x.add_diag(1.0);
+            p.products += 2;
+            x
+        }
+        15 => {
+            // (15)-(17), 3 products beyond A^2.
+            let a2 = p.get(2).clone();
+            let a = p.w().clone();
+            let c = C15;
+            let mut rhs = a2.scaled(c[0]);
+            rhs.axpy(c[1], &a);
+            let y02 = matmul(&a2, &rhs);
+            let mut l1 = y02.clone();
+            l1.axpy(c[2], &a2);
+            l1.axpy(c[3], &a);
+            let mut r1 = y02.clone();
+            r1.axpy(c[4], &a2);
+            let mut y12 = matmul(&l1, &r1);
+            y12.axpy(c[5], &y02);
+            y12.axpy(c[6], &a2);
+            let mut l2 = y12.clone();
+            l2.axpy(c[7], &a2);
+            l2.axpy(c[8], &a);
+            let mut r2 = y12.clone();
+            r2.axpy(c[9], &y02);
+            r2.axpy(c[10], &a);
+            let mut y22 = matmul(&l2, &r2);
+            y22.axpy(c[11], &y12);
+            y22.axpy(c[12], &y02);
+            y22.axpy(c[13], &a2);
+            y22.axpy(c[14], &a);
+            y22.add_diag(c[15]);
+            p.products += 3;
+            y22
+        }
+        _ => panic!("no Sastre formula for order {m} (n = {n})"),
+    };
+    EvalOut { value, products: p.products - before }
+}
+
+/// Evaluate T_m(W) (exact Taylor coefficients 1/i!) by Paterson–Stockmeyer
+/// with blocking j = ceil(sqrt(m)).
+pub fn eval_ps(p: &mut Powers, m: usize) -> EvalOut {
+    let n = p.order();
+    let before = p.products;
+    if m == 0 {
+        return EvalOut { value: Matrix::identity(n), products: 0 };
+    }
+    let (j, k) = coeffs::ps_blocking(m);
+    // Ensure powers up to W^j (cached; may already exist from selection).
+    p.get(j);
+    let coef: Vec<f64> = (0..=m).map(coeffs::inv_factorial).collect();
+    let mut out: Option<Matrix> = None;
+    for bk in (0..k).rev() {
+        let lo = bk * j;
+        // The top block absorbs every remaining coefficient up to m —
+        // including c_m W^j itself when j | m, which costs no product
+        // because W^j is cached (the classic P–S fold that makes order
+        // j*k evaluable with (j-1) + (k-1) multiplications).
+        let hi = if bk == k - 1 { m } else { lo + j - 1 };
+        debug_assert!(hi - lo <= j);
+        // Block polynomial sum_{i=lo..hi} c_i W^{i-lo}.
+        let mut block = Matrix::zeros(n, n);
+        block.add_diag(coef[lo]);
+        for i in (lo + 1)..=hi {
+            block.axpy(coef[i], p.get(i - lo));
+        }
+        out = Some(match out {
+            None => block,
+            Some(acc) => {
+                let mut t = matmul(&acc, p.get(j));
+                p.products += 1;
+                t.axpy(1.0, &block);
+                t
+            }
+        });
+    }
+    EvalOut { value: out.unwrap(), products: p.products - before }
+}
+
+/// Degree-m Taylor by explicit term recurrence — the reference evaluator
+/// (m-1 products, the baseline Algorithm-1 inner loop cost).
+pub fn eval_taylor_terms(w: &Matrix, m: usize) -> EvalOut {
+    let n = w.order();
+    let mut out = Matrix::identity(n);
+    let mut products = 0;
+    let mut term = w.clone();
+    out.axpy(1.0, &term);
+    for k in 2..=m {
+        term = matmul(&term, w);
+        term.scale_in_place(1.0 / k as f64);
+        products += 1;
+        out.axpy(1.0, &term);
+    }
+    EvalOut { value: out, products }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(n: usize, scale: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, n, |_, _| rng.normal() * scale / (n as f64).sqrt())
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        let denom = b.max_abs().max(1.0);
+        let err = (a - b).max_abs() / denom;
+        assert!(err < tol, "rel err {err}");
+    }
+
+    #[test]
+    fn sastre_matches_taylor_for_exact_orders() {
+        // For m in {1, 2, 4, 8} the formulas reproduce T_m exactly.
+        let a = randm(10, 0.6, 1);
+        for m in [1usize, 2, 4, 8] {
+            let mut p = Powers::new(a.clone());
+            let s = eval_sastre(&mut p, m);
+            let t = eval_taylor_terms(&a, m);
+            assert_close(&s.value, &t.value, 1e-13);
+        }
+    }
+
+    #[test]
+    fn sastre15_is_t15_plus_b16_a16() {
+        // Eq. (18): y22(A) = T15(A) + b16 A^16.
+        let a = randm(8, 0.9, 2);
+        let mut p = Powers::new(a.clone());
+        let got = eval_sastre(&mut p, 15).value;
+        let t15 = eval_taylor_terms(&a, 15).value;
+        // A^16 by four squarings.
+        let mut a16 = a.clone();
+        for _ in 0..4 {
+            a16 = matmul(&a16, &a16);
+        }
+        let mut want = t15;
+        want.axpy(coeffs::b16(), &a16);
+        assert_close(&got, &want, 1e-12);
+    }
+
+    #[test]
+    fn product_counts_match_paper() {
+        let a = randm(6, 0.5, 3);
+        // Sastre totals incl. A^2: 0, 1, 2, 3, 4 (Section 3.1).
+        for (m, want) in [(1usize, 0usize), (2, 1), (4, 2), (8, 3), (15, 4)] {
+            let mut p = Powers::new(a.clone());
+            let e = eval_sastre(&mut p, m);
+            assert_eq!(e.products + if m == 1 { 0 } else { 0 }, p.products);
+            assert_eq!(p.products, want, "m={m}");
+        }
+        // P–S totals: Table 1 row one — 6 -> 3M, 9 -> 4M, 12 -> 5M, 16 -> 6M.
+        for (m, want) in [(6usize, 3usize), (9, 4), (12, 5), (16, 6)] {
+            let mut p = Powers::new(a.clone());
+            eval_ps(&mut p, m);
+            assert_eq!(p.products, want, "m={m}");
+        }
+    }
+
+    #[test]
+    fn ps_matches_taylor_all_orders() {
+        let a = randm(7, 0.8, 4);
+        for m in 1..=20usize {
+            let mut p = Powers::new(a.clone());
+            let got = eval_ps(&mut p, m);
+            let want = eval_taylor_terms(&a, m);
+            assert_close(&got.value, &want.value, 1e-12);
+        }
+    }
+
+    #[test]
+    fn powers_cache_reuse() {
+        let a = randm(5, 1.0, 5);
+        let mut p = Powers::new(a.clone());
+        p.get(4);
+        assert_eq!(p.products, 3);
+        p.get(2); // cached
+        p.get(4); // cached
+        assert_eq!(p.products, 3);
+    }
+
+    #[test]
+    fn powers_rescale_consistent() {
+        let a = randm(5, 1.0, 6);
+        let mut p = Powers::new(a.clone());
+        p.get(3);
+        p.rescale(2);
+        // After rescale, pows must equal powers of (A / 4).
+        let a4 = a.scaled(0.25);
+        let mut q = Powers::new(a4);
+        q.get(3);
+        for k in 1..=3 {
+            assert_close(p.get(k), q.get(k), 1e-14);
+        }
+    }
+
+    #[test]
+    fn identity_matrix_evaluation() {
+        // T_m(0) = I for every scheme.
+        let z = Matrix::zeros(4, 4);
+        let mut p = Powers::new(z.clone());
+        assert_close(
+            &eval_sastre(&mut p, 8).value,
+            &Matrix::identity(4),
+            1e-15,
+        );
+        let mut p = Powers::new(z);
+        assert_close(&eval_ps(&mut p, 9).value, &Matrix::identity(4), 1e-15);
+    }
+}

@@ -1,0 +1,229 @@
+//! Padé scaling-and-squaring oracle — Higham (2005), the algorithm behind
+//! MATLAB's `expm`. This is the repo's "exact" reference (DESIGN.md §3):
+//! the paper computed ground truth with eig + 256-digit VPA; at ε = 1e-8
+//! a double-precision Padé-13 oracle is accurate to ~u·cond, which leaves
+//! the method ordering unchanged.
+
+use crate::linalg::{matmul, norm1, Lu, Matrix};
+
+/// θ_m thresholds from Higham 2005, Table 2.3 (double precision).
+const THETA3: f64 = 1.495_585_217_958_292e-2;
+const THETA5: f64 = 2.539_398_330_063_23e-1;
+const THETA7: f64 = 9.504_178_996_162_932e-1;
+const THETA9: f64 = 2.097_847_961_257_068e0;
+const THETA13: f64 = 5.371_920_351_148_152e0;
+
+/// Padé-13 coefficients.
+const B13: [f64; 14] = [
+    64764752532480000.0,
+    32382376266240000.0,
+    7771770303897600.0,
+    1187353796428800.0,
+    129060195264000.0,
+    10559470521600.0,
+    670442572800.0,
+    33522128640.0,
+    1323241920.0,
+    40840800.0,
+    960960.0,
+    16380.0,
+    182.0,
+    1.0,
+];
+
+fn pade_coeffs(m: usize) -> Vec<f64> {
+    // b_j = (2m-j)! m! / ((2m)! (m-j)! j!)
+    let fact = |n: usize| -> f64 { (1..=n).map(|k| k as f64).product() };
+    (0..=m)
+        .map(|j| {
+            fact(2 * m - j) * fact(m)
+                / (fact(2 * m) * fact(m - j) * fact(j))
+        })
+        .collect()
+}
+
+/// Evaluate the degree-m (m in {3,5,7,9}) Padé approximant r_m(A).
+fn pade_small(a: &Matrix, m: usize) -> Matrix {
+    let n = a.order();
+    let b = pade_coeffs(m);
+    let a2 = matmul(a, a);
+    // U = A * (sum_{odd}) ; V = sum_{even}; powers of A^2.
+    let mut even = Matrix::zeros(n, n);
+    even.add_diag(b[0]);
+    let mut odd = Matrix::zeros(n, n);
+    odd.add_diag(b[1]);
+    let mut p = Matrix::identity(n); // A^{2k}
+    for k in 1..=(m / 2) {
+        p = matmul(&p, &a2);
+        even.axpy(b[2 * k], &p);
+        if 2 * k + 1 <= m {
+            odd.axpy(b[2 * k + 1], &p);
+        }
+    }
+    let u = matmul(a, &odd);
+    // Solve (V - U) X = (V + U).
+    let vm = &even - &u;
+    let vp = &even + &u;
+    Lu::new(&vm).solve(&vp)
+}
+
+/// Degree-13 Padé with the economical U/V split (Higham 2005, eq. (2.9)).
+fn pade13(a: &Matrix) -> Matrix {
+    let n = a.order();
+    let b = B13;
+    let a2 = matmul(a, a);
+    let a4 = matmul(&a2, &a2);
+    let a6 = matmul(&a2, &a4);
+    // U = A [ A6 (b13 A6 + b11 A4 + b9 A2) + b7 A6 + b5 A4 + b3 A2 + b1 I ]
+    let mut inner_u = a6.scaled(b[13]);
+    inner_u.axpy(b[11], &a4);
+    inner_u.axpy(b[9], &a2);
+    let mut u = matmul(&a6, &inner_u);
+    u.axpy(b[7], &a6);
+    u.axpy(b[5], &a4);
+    u.axpy(b[3], &a2);
+    u.add_diag(b[1]);
+    let u = matmul(a, &u);
+    // V = A6 (b12 A6 + b10 A4 + b8 A2) + b6 A6 + b4 A4 + b2 A2 + b0 I
+    let mut inner_v = a6.scaled(b[12]);
+    inner_v.axpy(b[10], &a4);
+    inner_v.axpy(b[8], &a2);
+    let mut v = matmul(&a6, &inner_v);
+    v.axpy(b[6], &a6);
+    v.axpy(b[4], &a4);
+    v.axpy(b[2], &a2);
+    v.add_diag(b[0]);
+    let _ = n;
+    let vm = &v - &u;
+    let vp = &v + &u;
+    Lu::new(&vm).solve(&vp)
+}
+
+/// Higham-2005 expm: pick the smallest Padé degree whose θ covers ||A||_1,
+/// else scale and use degree 13.
+pub fn expm_pade(a: &Matrix) -> Matrix {
+    let na = norm1(a);
+    if na <= THETA3 {
+        return pade_small(a, 3);
+    }
+    if na <= THETA5 {
+        return pade_small(a, 5);
+    }
+    if na <= THETA7 {
+        return pade_small(a, 7);
+    }
+    if na <= THETA9 {
+        return pade_small(a, 9);
+    }
+    expm_pade13(a)
+}
+
+/// Degree-13 path with scaling and squaring (also the oracle entry point —
+/// fixed top degree maximizes headroom).
+pub fn expm_pade13(a: &Matrix) -> Matrix {
+    let na = norm1(a);
+    let s = if na > THETA13 {
+        (na / THETA13).log2().ceil().max(0.0) as u32
+    } else {
+        0
+    };
+    let scaled = a.scaled((2.0f64).powi(-(s as i32)));
+    let mut x = pade13(&scaled);
+    for _ in 0..s {
+        x = matmul(&x, &x);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rel_err(a: &Matrix, b: &Matrix) -> f64 {
+        (a - b).max_abs() / b.max_abs().max(1e-300)
+    }
+
+    #[test]
+    fn exp_zero_is_identity() {
+        let z = Matrix::zeros(5, 5);
+        assert!(rel_err(&expm_pade(&z), &Matrix::identity(5)) < 1e-15);
+    }
+
+    #[test]
+    fn exp_diagonal() {
+        let d = Matrix::from_fn(3, 3, |i, j| {
+            if i == j {
+                [0.5, -1.0, 2.0][i]
+            } else {
+                0.0
+            }
+        });
+        let e = expm_pade(&d);
+        for (i, want) in [0.5f64, -1.0, 2.0].iter().enumerate() {
+            assert!((e[(i, i)] - want.exp()).abs() < 1e-13);
+        }
+        assert!(e[(0, 1)].abs() < 1e-14);
+    }
+
+    #[test]
+    fn exp_rotation() {
+        // exp([[0, t], [-t, 0]]) = rotation by t.
+        for t in [0.1f64, 1.0, 3.0, 10.0] {
+            let a = Matrix::from_rows(&[vec![0.0, t], vec![-t, 0.0]]);
+            let e = expm_pade13(&a);
+            assert!((e[(0, 0)] - t.cos()).abs() < 1e-12, "t={t}");
+            assert!((e[(0, 1)] - t.sin()).abs() < 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn exp_nilpotent_exact() {
+        // exp(N) for the 3x3 Jordan nilpotent: I + N + N^2/2 exactly.
+        let n = crate::linalg::gallery::jordbloc(3, 0.0);
+        let e = expm_pade(&n);
+        assert!((e[(0, 1)] - 1.0).abs() < 1e-14);
+        assert!((e[(0, 2)] - 0.5).abs() < 1e-14);
+        assert!((e[(1, 2)] - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn group_property() {
+        // e^{A} e^{-A} = I.
+        let mut rng = Rng::new(12);
+        let a = Matrix::from_fn(8, 8, |_, _| rng.normal() * 0.7);
+        let e = expm_pade13(&a);
+        let einv = expm_pade13(&a.scaled(-1.0));
+        let prod = matmul(&e, &einv);
+        assert!(rel_err(&prod, &Matrix::identity(8)) < 1e-11);
+    }
+
+    #[test]
+    fn det_identity() {
+        // det(e^A) = e^{tr A}.
+        let mut rng = Rng::new(13);
+        let a = Matrix::from_fn(6, 6, |_, _| rng.normal() * 0.5);
+        let e = expm_pade13(&a);
+        let det = Lu::new(&e).det();
+        assert!((det.ln() - a.trace()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn small_and_large_norm_paths_agree() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::from_fn(6, 6, |_, _| rng.normal());
+        let a = a.scaled(0.2 / norm1(&a)); // small: degree 5/7 path
+        let via_small = expm_pade(&a);
+        let via_13 = expm_pade13(&a);
+        assert!(rel_err(&via_small, &via_13) < 1e-12);
+    }
+
+    #[test]
+    fn taylor_cross_check() {
+        // Against the independent term-summation Taylor engine.
+        let mut rng = Rng::new(15);
+        let a = Matrix::from_fn(7, 7, |_, _| rng.normal() * 0.05);
+        let t = crate::expm::eval::eval_taylor_terms(&a, 20).value;
+        assert!(rel_err(&expm_pade(&a), &t) < 1e-13);
+    }
+}

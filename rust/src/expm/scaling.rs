@@ -1,0 +1,53 @@
+//! Squaring stage of Algorithm 2 (lines 4–6): X <- X^2, s times.
+
+use crate::linalg::{matmul_into, Matrix};
+
+/// Square `x` in place `s` times; returns the number of products spent (s).
+pub fn repeated_square(x: &mut Matrix, s: u32) -> usize {
+    let n = x.order();
+    let mut tmp = Matrix::zeros(n, n);
+    for _ in 0..s {
+        matmul_into(x, x, &mut tmp);
+        std::mem::swap(x, &mut tmp);
+    }
+    s as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_squarings_is_identity_op() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::from_fn(5, 5, |_, _| rng.normal());
+        let mut x = a.clone();
+        assert_eq!(repeated_square(&mut x, 0), 0);
+        assert_eq!(x, a);
+    }
+
+    #[test]
+    fn three_squarings_is_eighth_power() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::from_fn(6, 6, |_, _| rng.normal() * 0.3);
+        let mut x = a.clone();
+        assert_eq!(repeated_square(&mut x, 3), 3);
+        let mut want = a.clone();
+        for _ in 0..7 {
+            want = matmul(&want, &a);
+        }
+        let err = (&x - &want).max_abs() / want.max_abs().max(1.0);
+        assert!(err < 1e-12, "{err}");
+    }
+
+    #[test]
+    fn scaling_squaring_identity_exp() {
+        // (e^{A/2^s})^{2^s} == e^A exercised end-to-end in expm::tests;
+        // here: squaring the identity stays the identity.
+        let mut x = Matrix::identity(4);
+        repeated_square(&mut x, 5);
+        assert_eq!(x, Matrix::identity(4));
+    }
+}

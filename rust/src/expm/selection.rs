@@ -1,0 +1,351 @@
+//! Dynamic (m, s) selection — the paper's Algorithms 3 and 4.
+//!
+//! Both walk a degree ladder M, bounding the first two remainder terms
+//! ||W^{m+1}||/(m+1)! + ||W^{m+2}||/(m+2)! through norms of the explicitly
+//! computed powers (W^2, and for P–S also W^3, W^4 — eq. (42)); the first
+//! degree whose bound clears the tolerance wins with s = 0. If none does,
+//! the top degree is kept and the scaling parameter follows eq. (44),
+//! capped at s = 20 to avoid overscaling.
+//!
+//! The powers computed while selecting are *retained* in [`Powers`] so the
+//! subsequent evaluation reuses them — that bookkeeping is what makes the
+//! total product counts match Table 1 + s.
+
+use super::coeffs::{b16, inv_factorial};
+use super::eval::Powers;
+use crate::linalg::norms::{norm1, norm1_power_est};
+
+/// Overscaling cap (Algorithms 3/4, last lines).
+pub const MAX_S: u32 = 20;
+
+/// Outcome of the order/scale selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Selection {
+    /// Chosen polynomial order (15 means the 15+ scheme in Algorithm 4).
+    pub m: usize,
+    /// Scaling parameter: W is divided by 2^s and squared s times after.
+    pub s: u32,
+    /// The two remainder-term bounds at the accepted (m, s = 0) stage.
+    pub e1: f64,
+    pub e2: f64,
+}
+
+/// Knobs shared by both algorithms.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectOptions {
+    /// Error tolerance ε (must be >= unit roundoff; paper uses 1e-8).
+    pub tol: f64,
+    /// Refine the ||W^{m+1}|| bounds with the 1-norm power estimator
+    /// (Theorem 2's a_k route) instead of pure norm products. Sharper on
+    /// strongly nonnormal matrices; costs O(n^2) matvecs, zero products.
+    pub power_est: bool,
+}
+
+impl Default for SelectOptions {
+    fn default() -> Self {
+        SelectOptions { tol: 1e-8, power_est: false }
+    }
+}
+
+fn ceil_log2_ratio(e: f64, tol: f64, denom: f64) -> i64 {
+    if e <= tol || !e.is_finite() {
+        // Infinite bounds force the cap; satisfied bounds need no scaling.
+        return if e.is_finite() { 0 } else { MAX_S as i64 };
+    }
+    ((e / tol).log2() / denom).ceil() as i64
+}
+
+/// Shared tail: eq. (44) — the minimal s making both terms clear tol.
+fn scale_from_bounds(m: usize, e1: f64, e2: f64, tol: f64) -> u32 {
+    let s1 = ceil_log2_ratio(e1, tol, (m + 1) as f64);
+    let s2 = ceil_log2_ratio(e2, tol, (m + 2) as f64);
+    s1.max(s2).clamp(0, MAX_S as i64) as u32
+}
+
+/// Optionally sharpen an a_k = prod-of-norms bound with the power-method
+/// estimate of ||W^k||_1 (never *raises* the bound).
+fn refine(powers: &Powers, k: usize, bound: f64, opts: &SelectOptions) -> f64 {
+    if !opts.power_est || !bound.is_finite() {
+        return bound;
+    }
+    let est = norm1_power_est(powers.w(), k, 4);
+    // The estimator is a lower bound on the true norm; inflate by a safety
+    // factor before trusting it as an a_k (Theorem 2 needs upper bounds).
+    let guarded = est * 3.0;
+    bound.min(guarded.max(f64::MIN_POSITIVE))
+}
+
+/// Algorithm 4: degree ladder for the Sastre evaluation formulas.
+///
+/// M = [1, 2, 4, 8, 15], J = [1, 2, 2, 2, 2], K = ceil(M/J); the C vector
+/// pairs 1/(m+1)!, 1/(m+2)! except for 15+ where the order-16 coefficient
+/// is |1/16! - b16| (eq. (19)) and the order-17 one is 1/17!.
+pub fn select_sastre(powers: &mut Powers, opts: &SelectOptions) -> Selection {
+    let nw = norm1(powers.w());
+    if nw == 0.0 {
+        return Selection { m: 0, s: 0, e1: 0.0, e2: 0.0 };
+    }
+    const M: [usize; 5] = [1, 2, 4, 8, 15];
+    const J: [usize; 5] = [1, 2, 2, 2, 2];
+    const K: [usize; 5] = [1, 1, 2, 4, 8];
+    let c: [f64; 10] = [
+        inv_factorial(2),
+        inv_factorial(3),
+        inv_factorial(3),
+        inv_factorial(4),
+        inv_factorial(5),
+        inv_factorial(6),
+        inv_factorial(9),
+        inv_factorial(10),
+        (inv_factorial(16) - b16()).abs(),
+        inv_factorial(17),
+    ];
+    let mut last = (0.0f64, 0.0f64);
+    for i in 0..M.len() {
+        let (m, j, k) = (M[i], J[i], K[i]);
+        let p = 2 * i;
+        // raw1/raw2 bound ||W^{m+1}||_1 and ||W^{m+2}||_1 via norm products.
+        let (mut raw1, mut raw2);
+        if m == 1 {
+            raw1 = nw * nw;
+            raw2 = nw * nw * nw;
+        } else {
+            let nwj = norm1(powers.get(j));
+            let nw2 = nwj; // j = 2 throughout this ladder
+            let base = nwj.powi(k as i32);
+            if j * k == m {
+                raw1 = base * nw;
+                raw2 = base * nw2;
+            } else {
+                // j*k = m + 1 (the 15+ case): base already has order m+1.
+                raw1 = base;
+                raw2 = base * nw;
+            }
+        }
+        raw1 = refine(powers, m + 1, raw1, opts);
+        raw2 = refine(powers, m + 2, raw2, opts);
+        let e1 = c[p] * raw1;
+        let e2 = c[p + 1] * raw2;
+        last = (e1, e2);
+        if e1 + e2 <= opts.tol {
+            return Selection { m, s: 0, e1, e2 };
+        }
+    }
+    let m = 15;
+    let s = scale_from_bounds(m, last.0, last.1, opts.tol);
+    Selection { m, s, e1: last.0, e2: last.1 }
+}
+
+/// Algorithm 3: degree ladder for Paterson–Stockmeyer evaluation.
+///
+/// M = [1, 2, 4, 6, 9, 12, 16]; J = ceil(sqrt(M)); bounds use the highest
+/// computed power ||W^j|| (so selection leaves W^2..W^4 cached for eval).
+pub fn select_ps(powers: &mut Powers, opts: &SelectOptions) -> Selection {
+    let nw = norm1(powers.w());
+    if nw == 0.0 {
+        return Selection { m: 0, s: 0, e1: 0.0, e2: 0.0 };
+    }
+    const M: [usize; 7] = [1, 2, 4, 6, 9, 12, 16];
+    const J: [usize; 7] = [1, 2, 2, 3, 3, 4, 4];
+    const K: [usize; 7] = [1, 1, 2, 2, 3, 3, 4];
+    let c: [f64; 14] = [
+        inv_factorial(2),
+        inv_factorial(3),
+        inv_factorial(3),
+        inv_factorial(4),
+        inv_factorial(5),
+        inv_factorial(6),
+        inv_factorial(7),
+        inv_factorial(8),
+        inv_factorial(10),
+        inv_factorial(11),
+        inv_factorial(13),
+        inv_factorial(14),
+        inv_factorial(17),
+        inv_factorial(18),
+    ];
+    let mut nw2 = f64::NAN;
+    let mut last = (0.0f64, 0.0f64);
+    for i in 0..M.len() {
+        let (m, j, k) = (M[i], J[i], K[i]);
+        let p = 2 * i;
+        let (mut raw1, mut raw2);
+        if m == 1 {
+            raw1 = nw * nw;
+            raw2 = nw * nw * nw;
+        } else {
+            let nwj = norm1(powers.get(j));
+            if nw2.is_nan() {
+                nw2 = norm1(powers.get(2));
+            }
+            let base = nwj.powi(k as i32);
+            raw1 = base * nw;
+            raw2 = base * nw2;
+        }
+        raw1 = refine(powers, m + 1, raw1, opts);
+        raw2 = refine(powers, m + 2, raw2, opts);
+        let e1 = c[p] * raw1;
+        let e2 = c[p + 1] * raw2;
+        last = (e1, e2);
+        if e1 + e2 <= opts.tol {
+            return Selection { m, s: 0, e1, e2 };
+        }
+    }
+    let m = 16;
+    let s = scale_from_bounds(m, last.0, last.1, opts.tol);
+    Selection { m, s, e1: last.0, e2: last.1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn opts(tol: f64) -> SelectOptions {
+        SelectOptions { tol, power_est: false }
+    }
+
+    fn scaled_randn(n: usize, norm_target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let nn = norm1(&a);
+        a.scaled(norm_target / nn)
+    }
+
+    #[test]
+    fn zero_matrix_selects_order_zero() {
+        let mut p = Powers::new(Matrix::zeros(5, 5));
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        assert_eq!((sel.m, sel.s), (0, 0));
+        let mut p = Powers::new(Matrix::zeros(5, 5));
+        let sel = select_ps(&mut p, &opts(1e-8));
+        assert_eq!((sel.m, sel.s), (0, 0));
+    }
+
+    #[test]
+    fn tiny_norm_selects_low_order() {
+        let a = scaled_randn(8, 1e-6, 1);
+        let mut p = Powers::new(a.clone());
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        assert!(sel.m <= 2, "m = {}", sel.m);
+        assert_eq!(sel.s, 0);
+    }
+
+    #[test]
+    fn moderate_norm_avoids_scaling() {
+        // ||W|| ~ 1.5 should fit one of the higher orders with s = 0.
+        let a = scaled_randn(8, 1.5, 2);
+        let mut p = Powers::new(a.clone());
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        assert_eq!(sel.s, 0, "sel = {sel:?}");
+        assert!(sel.m >= 8);
+    }
+
+    #[test]
+    fn huge_norm_scales() {
+        let a = scaled_randn(8, 300.0, 3);
+        let mut p = Powers::new(a.clone());
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        assert_eq!(sel.m, 15);
+        assert!(sel.s >= 3, "sel = {sel:?}");
+        assert!(sel.s <= MAX_S);
+    }
+
+    #[test]
+    fn selection_monotone_in_tolerance() {
+        // Looser tolerance must never pick a larger (m, s).
+        let a = scaled_randn(10, 4.0, 4);
+        let mut tols = [1e-14, 1e-10, 1e-8, 1e-4, 1e-1];
+        tols.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let mut prev: Option<(usize, u32)> = None;
+        for &t in tols.iter().rev() {
+            let mut p = Powers::new(a.clone());
+            let sel = select_sastre(&mut p, &opts(t));
+            if let Some((pm, ps)) = prev {
+                assert!(
+                    sel.m >= pm || sel.s >= ps,
+                    "tightening tol lowered both m and s"
+                );
+            }
+            prev = Some((sel.m, sel.s));
+        }
+    }
+
+    #[test]
+    fn guaranteed_bound_after_scaling() {
+        // After scaling by the selected s, the two-term bound holds.
+        for seed in 0..10u64 {
+            let a = scaled_randn(6, 50.0, seed);
+            let mut p = Powers::new(a.clone());
+            let sel = select_sastre(&mut p, &opts(1e-8));
+            assert_eq!(sel.m, 15);
+            // E terms contract by 2^{-s(m+i)}.
+            let e1s = sel.e1 * (2.0f64).powi(-((sel.m as i32 + 1) * sel.s as i32));
+            let e2s = sel.e2 * (2.0f64).powi(-((sel.m as i32 + 2) * sel.s as i32));
+            assert!(
+                e1s <= 1e-8 && e2s <= 1e-8,
+                "seed {seed}: {e1s} {e2s} s={}",
+                sel.s
+            );
+        }
+    }
+
+    #[test]
+    fn ps_reaches_higher_orders() {
+        let a = scaled_randn(8, 2.5, 7);
+        let mut p = Powers::new(a.clone());
+        let sel = select_ps(&mut p, &opts(1e-8));
+        assert!(sel.m >= 9, "sel = {sel:?}");
+    }
+
+    #[test]
+    fn nilpotent_exploits_power_norms() {
+        // Strictly-upper-triangular W: ||W^2|| << ||W||^2, so Algorithm 4's
+        // power-based bounds pick a small order even at large ||W||.
+        let n = 12;
+        let mut rng = Rng::new(8);
+        let a = Matrix::from_fn(n, n, |i, j| {
+            if j == i + 1 {
+                rng.normal() * 10.0
+            } else {
+                0.0
+            }
+        });
+        let mut p = Powers::new(a.clone());
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        // A naive ||W||-based rule would need heavy scaling; the power
+        // bounds should keep s low.
+        let naive_s = (norm1(&a) / 0.5).log2().ceil() as u32;
+        assert!(sel.s < naive_s, "sel = {sel:?} naive = {naive_s}");
+    }
+
+    #[test]
+    fn overscaling_cap_respected() {
+        let a = scaled_randn(6, 1e9, 9);
+        let mut p = Powers::new(a.clone());
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        assert!(sel.s <= MAX_S);
+        let mut p = Powers::new(a);
+        let sel = select_ps(&mut p, &opts(1e-8));
+        assert!(sel.s <= MAX_S);
+    }
+
+    #[test]
+    fn power_est_never_increases_selection() {
+        for seed in 0..6u64 {
+            let a = scaled_randn(9, 20.0, seed + 100);
+            let mut p1 = Powers::new(a.clone());
+            let plain = select_sastre(&mut p1, &opts(1e-8));
+            let mut p2 = Powers::new(a);
+            let est = select_sastre(
+                &mut p2,
+                &SelectOptions { tol: 1e-8, power_est: true },
+            );
+            assert!(
+                est.s <= plain.s,
+                "estimator raised s: {est:?} vs {plain:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Synthetic image-like dataset for the end-to-end flow training runs.
+//!
+//! Substitution for CIFAR-10 / ImageNet32/64 (DESIGN.md §3): Table 4
+//! measures expm cost inside training, not image fidelity, so the data
+//! only needs realistic statistics — multi-modal, spatially correlated,
+//! bounded. We synthesize D-dimensional "images" as a mixture of K
+//! smoothed Gaussian modes (deterministic seed).
+
+use crate::util::rng::Rng;
+
+/// Dataset of `count` flattened images of dimension `dim`.
+#[derive(Clone)]
+pub struct Dataset {
+    pub dim: usize,
+    data: Vec<f64>,
+}
+
+impl Dataset {
+    /// Mixture of `modes` smoothed prototypes + per-sample noise.
+    pub fn synthetic(count: usize, dim: usize, modes: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        // Mode prototypes: random walks smoothed by a 3-tap filter to give
+        // neighbouring "pixels" the correlation natural images have.
+        let mut protos = Vec::with_capacity(modes);
+        for _ in 0..modes {
+            let mut p: Vec<f64> = Vec::with_capacity(dim);
+            let mut acc = 0.0;
+            for _ in 0..dim {
+                acc = 0.7 * acc + rng.normal();
+                p.push(acc);
+            }
+            // light smoothing pass
+            let mut sm = p.clone();
+            for i in 1..dim - 1 {
+                sm[i] = 0.25 * p[i - 1] + 0.5 * p[i] + 0.25 * p[i + 1];
+            }
+            protos.push(sm);
+        }
+        let mut data = Vec::with_capacity(count * dim);
+        for _ in 0..count {
+            let k = rng.below(modes);
+            for j in 0..dim {
+                data.push(protos[k][j] + 0.3 * rng.normal());
+            }
+        }
+        Dataset { dim, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major (batch, dim) slice of samples [start, start + count).
+    pub fn batch(&self, start: usize, count: usize) -> Vec<f64> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(count * self.dim);
+        for i in 0..count {
+            let idx = (start + i) % n;
+            out.extend_from_slice(
+                &self.data[idx * self.dim..(idx + 1) * self.dim],
+            );
+        }
+        out
+    }
+
+    pub fn sample(&self, idx: usize) -> &[f64] {
+        &self.data[idx * self.dim..(idx + 1) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = Dataset::synthetic(100, 64, 4, 7);
+        let b = Dataset::synthetic(100, 64, 4, 7);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.batch(0, 2), b.batch(0, 2));
+    }
+
+    #[test]
+    fn batches_wrap_around() {
+        let d = Dataset::synthetic(10, 8, 2, 1);
+        let b = d.batch(8, 4); // wraps to samples 8, 9, 0, 1
+        assert_eq!(b.len(), 32);
+        assert_eq!(&b[16..24], d.sample(0));
+    }
+
+    #[test]
+    fn modes_are_distinct() {
+        let d = Dataset::synthetic(400, 32, 2, 3);
+        // Variance across samples must exceed within-sample noise (0.3^2),
+        // i.e. the mode structure is present.
+        let n = d.len();
+        let mean_x0: f64 =
+            (0..n).map(|i| d.sample(i)[16]).sum::<f64>() / n as f64;
+        let var_x0: f64 = (0..n)
+            .map(|i| (d.sample(i)[16] - mean_x0).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!(var_x0 > 0.09, "var {var_x0}");
+    }
+
+    #[test]
+    fn neighbouring_pixels_correlate() {
+        let d = Dataset::synthetic(500, 64, 4, 9);
+        let n = d.len();
+        let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+        for i in 0..n {
+            let s = d.sample(i);
+            sxy += s[20] * s[21];
+            sxx += s[20] * s[20];
+            syy += s[21] * s[21];
+        }
+        let corr = sxy / (sxx.sqrt() * syy.sqrt());
+        assert!(corr > 0.5, "corr {corr}");
+    }
+}

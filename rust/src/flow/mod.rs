@@ -1,0 +1,12 @@
+//! Generative-flow driver: the matrix-exponential flow of Xiao & Liu [25]
+//! (f = W_K phi(... phi(W_1 x)), W_i = e^{A_i}) trained and sampled from
+//! Rust through the AOT artifacts, plus a pure-native mirror used for
+//! cross-validation. See python/compile/model.py for the graph definitions.
+
+pub mod data;
+pub mod native;
+pub mod sample;
+pub mod train;
+
+pub use data::Dataset;
+pub use train::{init_params, train_epoch, train_step, TrainState};

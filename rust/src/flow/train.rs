@@ -1,0 +1,183 @@
+//! Flow training driver: drives the AOT `flow_train_{method}` artifact
+//! through PJRT, batch after batch, entirely from Rust. This is the
+//! Table-4 engine — swap `method` between `taylor` (Algorithm-1 cost
+//! profile) and `sastre` (the paper's scheme) on identical graphs.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::data::Dataset;
+use crate::runtime::{array_to_literal, Executor};
+
+/// Flat training state (manifest parameter order: A0, b0, A1, b1, ...).
+pub struct TrainState {
+    pub dim: usize,
+    pub blocks: usize,
+    pub params: Vec<Vec<f64>>,
+    pub adam_m: Vec<Vec<f64>>,
+    pub adam_v: Vec<Vec<f64>>,
+    pub step: u64,
+}
+
+/// Parameter shapes in manifest order.
+pub fn param_shapes(dim: usize, blocks: usize) -> Vec<Vec<usize>> {
+    let mut s = Vec::new();
+    for _ in 0..blocks {
+        s.push(vec![dim, dim]);
+        s.push(vec![dim]);
+    }
+    s
+}
+
+/// Deterministic init (matches `flow::native::init_blocks`).
+pub fn init_params(dim: usize, blocks: usize, seed: u64) -> TrainState {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut params = Vec::new();
+    for _ in 0..blocks {
+        let mut a = vec![0.0; dim * dim];
+        rng.fill_normal(&mut a, 0.2 / (dim as f64).sqrt());
+        params.push(a);
+        params.push(vec![0.0; dim]);
+    }
+    let zeros: Vec<Vec<f64>> =
+        params.iter().map(|p| vec![0.0; p.len()]).collect();
+    TrainState {
+        dim,
+        blocks,
+        adam_m: zeros.clone(),
+        adam_v: zeros,
+        params,
+        step: 0,
+    }
+}
+
+/// One epoch's outcome.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub mean_loss: f64,
+    pub final_loss: f64,
+    pub steps: usize,
+    pub wall_s: f64,
+}
+
+/// Run one training step; returns the loss.
+pub fn train_step(
+    exec: &Executor,
+    method: &str,
+    state: &mut TrainState,
+    xbatch: &[f64],
+    batch: usize,
+) -> Result<f64> {
+    let dim = state.dim;
+    let shapes = param_shapes(dim, state.blocks);
+    state.step += 1;
+    let mut inputs = Vec::with_capacity(2 + 3 * shapes.len());
+    inputs.push(array_to_literal(&[batch, dim], xbatch)?);
+    inputs.push(array_to_literal(&[], &[state.step as f64])?);
+    for group in [&state.params, &state.adam_m, &state.adam_v] {
+        for (p, shape) in group.iter().zip(&shapes) {
+            inputs.push(array_to_literal(shape, p)?);
+        }
+    }
+    let name = format!("flow_train_{method}");
+    let outs = exec.run(&name, &inputs)?;
+    let np = shapes.len();
+    anyhow::ensure!(
+        outs.len() == 1 + 3 * np,
+        "{name}: expected {} outputs, got {}",
+        1 + 3 * np,
+        outs.len()
+    );
+    let loss = outs[0]
+        .to_vec::<f64>()
+        .map_err(|e| anyhow!("loss fetch: {e}"))?[0];
+    for (i, out) in outs.iter().enumerate().skip(1) {
+        let v = out.to_vec::<f64>().map_err(|e| anyhow!("param fetch: {e}"))?;
+        let j = (i - 1) % np;
+        match (i - 1) / np {
+            0 => state.params[j] = v,
+            1 => state.adam_m[j] = v,
+            _ => state.adam_v[j] = v,
+        }
+    }
+    Ok(loss)
+}
+
+/// Train for `steps` steps over `data`, logging every `log_every`.
+pub fn train_epoch(
+    exec: &Executor,
+    method: &str,
+    state: &mut TrainState,
+    data: &Dataset,
+    batch: usize,
+    steps: usize,
+    log_every: usize,
+) -> Result<EpochStats> {
+    let t0 = Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let xb = data.batch(k * batch, batch);
+        let loss = train_step(exec, method, state, &xb, batch)?;
+        anyhow::ensure!(
+            loss.is_finite(),
+            "loss diverged at step {k}: {loss}"
+        );
+        losses.push(loss);
+        if log_every > 0 && (k % log_every == 0 || k + 1 == steps) {
+            eprintln!(
+                "  [{method}] step {k:>4}  loss {loss:>10.4}  ({:.2}s)",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    Ok(EpochStats {
+        mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+        final_loss: *losses.last().unwrap_or(&f64::NAN),
+        steps,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Evaluation-only NLL via the `flow_nll_{method}` artifact.
+pub fn eval_nll(
+    exec: &Executor,
+    method: &str,
+    state: &TrainState,
+    xbatch: &[f64],
+    batch: usize,
+) -> Result<f64> {
+    let shapes = param_shapes(state.dim, state.blocks);
+    let mut inputs = Vec::new();
+    inputs.push(array_to_literal(&[batch, state.dim], xbatch)?);
+    for (p, shape) in state.params.iter().zip(&shapes) {
+        inputs.push(array_to_literal(shape, p)?);
+    }
+    let outs = exec.run(&format!("flow_nll_{method}"), &inputs)?;
+    Ok(outs[0].to_vec::<f64>().map_err(|e| anyhow!("{e}"))?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = init_params(8, 2, 42);
+        let b = init_params(8, 2, 42);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.params.len(), 4);
+        assert_eq!(a.params[0].len(), 64);
+        assert_eq!(a.params[1].len(), 8);
+        assert!(a.adam_m.iter().all(|v| v.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn param_shapes_layout() {
+        let s = param_shapes(16, 3);
+        assert_eq!(s.len(), 6);
+        assert_eq!(s[0], vec![16, 16]);
+        assert_eq!(s[1], vec![16]);
+    }
+    // PJRT train paths covered by rust/tests/integration_flow.rs.
+}

@@ -1,0 +1,37 @@
+//! # expm-flows
+//!
+//! Production reproduction of *"Improving Matrix Exponential for Generative
+//! AI Flows: A Taylor-Based Approach Beyond Paterson–Stockmeyer"*
+//! (Sastre, Faronbi, Alonso, Traver, Ibáñez, Lloret; 2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! - **L3 (this crate)** — the coordinator: dynamic order/scale selection
+//!   (the paper's Algorithms 3 & 4), an expm *service* with dynamic
+//!   batching, the native f64 engine, the generative-flow driver, the
+//!   trace replayer and every bench harness.
+//! - **L2 (python/compile/model.py)** — JAX graphs AOT-lowered to HLO text
+//!   artifacts executed here through PJRT (`runtime`).
+//! - **L1 (python/compile/kernels/)** — fused Pallas evaluation kernels.
+//!
+//! Quick taste (native engine, no artifacts needed):
+//!
+//! ```
+//! use expmflow::expm::{expm, ExpmOptions, Method};
+//! use expmflow::linalg::Matrix;
+//!
+//! let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![-1.0, 0.0]]);
+//! let r = expm(&a, &ExpmOptions { method: Method::Sastre, tol: 1e-8 });
+//! // e^A is a rotation by 1 radian:
+//! assert!((r.value[(0, 0)] - 1f64.cos()).abs() < 1e-8);
+//! assert!(r.stats.matrix_products <= 5);
+//! ```
+
+pub mod coordinator;
+pub mod expm;
+pub mod flow;
+pub mod linalg;
+pub mod report;
+pub mod runtime;
+pub mod trace;
+pub mod util;

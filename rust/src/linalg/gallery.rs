@@ -1,0 +1,431 @@
+//! Matrix gallery — a Rust port of the test classes behind the paper's
+//! Figure-1 testbed (Higham's Matrix Computation Toolbox + EigTool-style
+//! nonnormal operators). Real-valued subset: the paper's experiments run
+//! expm on real weight matrices, and every class below stresses one of the
+//! code paths the selection logic must get right (nonnormality, nilpotency,
+//! ill conditioning, extreme norms, heavy defectiveness).
+//!
+//! Substitution note (DESIGN.md §3): these are the same *families* MATLAB's
+//! `matrix(k, n)` and EigTool expose, regenerated deterministically from a
+//! seeded PRNG.
+
+use super::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// A named testbed matrix.
+#[derive(Clone, Debug)]
+pub struct TestMatrix {
+    pub name: String,
+    pub a: Matrix,
+}
+
+/// Jordan block with eigenvalue `lambda` — maximally defective.
+pub fn jordbloc(n: usize, lambda: f64) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            lambda
+        } else if j == i + 1 {
+            1.0
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Frank matrix — ill-conditioned eigenvalues, upper Hessenberg.
+pub fn frank(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        let (i, j) = (i + 1, j + 1);
+        if j + 1 < i {
+            0.0
+        } else if j + 1 == i {
+            (n - j) as f64
+        } else {
+            (n + 1 - i.max(j)) as f64
+        }
+    })
+}
+
+/// Grcar matrix — classic EigTool nonnormal Toeplitz operator.
+pub fn grcar(n: usize, k: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j + 1 {
+            -1.0
+        } else if j >= i && j <= i + k {
+            1.0
+        } else {
+            0.0
+        }
+    })
+}
+
+/// triw — upper triangular with 1s on the diagonal and `alpha` above:
+/// Higham's canonical "nilpotent + identity" stress matrix.
+pub fn triw(n: usize, alpha: f64) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            1.0
+        } else if j > i {
+            alpha
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Chebyshev spectral differentiation matrix (chebspec, nilpotent variant).
+pub fn chebspec(n: usize) -> Matrix {
+    // Gauss–Lobatto points x_k = cos(k pi / n), k = 0..n; the (n x n)
+    // submatrix dropping the first row/col is similar to a nilpotent.
+    let m = n; // full order of output
+    let big = m + 1;
+    let x: Vec<f64> = (0..big)
+        .map(|k| (std::f64::consts::PI * k as f64 / m as f64).cos())
+        .collect();
+    let c = |k: usize| -> f64 {
+        let ck = if k == 0 || k == m { 2.0 } else { 1.0 };
+        ck * if k % 2 == 0 { 1.0 } else { -1.0 }
+    };
+    let mut d = Matrix::zeros(big, big);
+    for i in 0..big {
+        for j in 0..big {
+            if i != j {
+                d[(i, j)] = c(i) / (c(j) * (x[i] - x[j]));
+            }
+        }
+    }
+    for i in 0..big {
+        let mut s = 0.0;
+        for j in 0..big {
+            if i != j {
+                s += d[(i, j)];
+            }
+        }
+        d[(i, i)] = -s;
+    }
+    // Drop first row and column -> n x n.
+    Matrix::from_fn(m, m, |i, j| d[(i + 1, j + 1)])
+}
+
+/// lesp — tridiagonal with real sensitive eigenvalues (-1, ..., -2n+?).
+pub fn lesp(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            -((2 * (i + 1) + 3) as f64)
+        } else if j == i + 1 {
+            (i + 2) as f64
+        } else if i == j + 1 {
+            1.0 / (i + 1) as f64
+        } else {
+            0.0
+        }
+    })
+}
+
+/// gearmat — 0/±1 matrix with all eigenvalues on the unit circle.
+pub fn gearmat(n: usize) -> Matrix {
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n - 1 {
+        a[(i, i + 1)] = 1.0;
+        a[(i + 1, i)] = 1.0;
+    }
+    a[(0, n - 1)] = 1.0;
+    a[(n - 1, 0)] = -1.0;
+    a
+}
+
+/// Redheffer matrix — 0/1, det related to the Mertens function.
+pub fn redheff(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        let (i, j) = (i + 1, j + 1);
+        if j == 1 || j % i == 0 {
+            1.0
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Riemann matrix — A(i,j) = i-1 if i | j else -1 (indices from 2).
+pub fn riemann(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        let (i, j) = (i + 2, j + 2);
+        if j % i == 0 {
+            (i - 1) as f64
+        } else {
+            -1.0
+        }
+    })
+}
+
+/// Hanowa matrix [[alpha I, -D], [D, alpha I]]: eigenvalues alpha ± k i.
+/// Order must be even.
+pub fn hanowa(n: usize, alpha: f64) -> Matrix {
+    assert!(n % 2 == 0);
+    let h = n / 2;
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            alpha
+        } else if i < h && j == i + h {
+            -((i + 1) as f64)
+        } else if i >= h && j + h == i {
+            (j + 1) as f64
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Parter matrix — Cauchy-like with singular values near pi.
+pub fn parter(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        1.0 / (i as f64 - j as f64 + 0.5)
+    })
+}
+
+/// Clement tridiagonal (zero diagonal, eigenvalues ±(n-1), ±(n-3), ...).
+pub fn clement(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if j == i + 1 {
+            (i + 1) as f64
+        } else if i == j + 1 {
+            (n - j - 1) as f64
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Forsythe matrix — perturbed Jordan block (eps at the bottom-left).
+pub fn forsythe(n: usize, eps: f64) -> Matrix {
+    let mut a = jordbloc(n, 0.0);
+    a[(n - 1, 0)] = eps;
+    a
+}
+
+/// Circulant generated by the first row (c0, c1, ..., c_{n-1}).
+pub fn circulant(n: usize, first: impl Fn(usize) -> f64) -> Matrix {
+    let row: Vec<f64> = (0..n).map(first).collect();
+    Matrix::from_fn(n, n, |i, j| row[(j + n - i) % n])
+}
+
+/// Dense random Gaussian, entries N(0, sigma^2).
+pub fn randn(n: usize, sigma: f64, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(n, n, |_, _| rng.normal() * sigma)
+}
+
+/// Random orthogonal matrix via modified Gram–Schmidt on a Gaussian.
+pub fn rand_orth(n: usize, rng: &mut Rng) -> Matrix {
+    let g = randn(n, 1.0, rng);
+    // Columns of g -> orthonormal columns of q.
+    let mut q = vec![vec![0.0f64; n]; n]; // q[col][row]
+    for j in 0..n {
+        let mut v: Vec<f64> = (0..n).map(|i| g[(i, j)]).collect();
+        for qc in q.iter().take(j) {
+            let dot: f64 = qc.iter().zip(&v).map(|(a, b)| a * b).sum();
+            for (vi, qi) in v.iter_mut().zip(qc) {
+                *vi -= dot * qi;
+            }
+        }
+        let len = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        // Gaussian columns are a.s. independent; len > 0.
+        for vi in &mut v {
+            *vi /= len;
+        }
+        q[j] = v;
+    }
+    Matrix::from_fn(n, n, |i, j| q[j][i])
+}
+
+/// randsvd-like: U diag(sigma) V^T with log-spaced singular values and
+/// condition number `kappa`.
+pub fn randsvd(n: usize, kappa: f64, rng: &mut Rng) -> Matrix {
+    let u = rand_orth(n, rng);
+    let v = rand_orth(n, rng);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        let t = if n == 1 { 0.0 } else { i as f64 / (n - 1) as f64 };
+        d[(i, i)] = kappa.powf(-t);
+    }
+    let ud = crate::linalg::gemm::matmul(&u, &d);
+    crate::linalg::gemm::matmul(&ud, &v.transpose())
+}
+
+/// The classic overscaling example [[1, b], [0, -1]] embedded in order n:
+/// ||A||_1 is huge but e^A is benign (Al-Mohy & Higham, Sec. 1).
+pub fn overscale(n: usize, b: f64) -> Matrix {
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        a[(i, i)] = if i % 2 == 0 { 1.0 } else { -1.0 };
+    }
+    for i in 0..n - 1 {
+        a[(i, i + 1)] = b;
+    }
+    a
+}
+
+/// Strictly upper-triangular random (nilpotent): exercises the
+/// ||A^k|| << ||A||^k gap that Theorem 2 exploits.
+pub fn nilpotent_rand(n: usize, sigma: f64, rng: &mut Rng) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if j > i {
+            rng.normal() * sigma
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Build the full testbed: every generator at every size, plus scaled
+/// variants covering the norm range the selection logic must handle.
+///
+/// `sizes` should be powers of two (the paper uses 4..1024). The default
+/// driver uses 4..=128 to keep the oracle affordable; benches raise it.
+pub fn testbed(sizes: &[usize], seed: u64) -> Vec<TestMatrix> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut push = |name: String, a: Matrix| {
+        debug_assert!(a.is_finite(), "{name} not finite");
+        out.push(TestMatrix { name, a });
+    };
+    for &n in sizes {
+        if n < 4 {
+            continue;
+        }
+        push(format!("jordbloc-0.5_{n}"), jordbloc(n, -0.5));
+        push(format!("jordbloc-3_{n}"), jordbloc(n, -3.0));
+        push(format!("frank_{n}"), frank(n).scaled(1.0 / n as f64));
+        push(format!("grcar3_{n}"), grcar(n, 3));
+        push(format!("triw-1_{n}"), triw(n, -1.0));
+        push(
+            format!("triw-4_{n}"),
+            triw(n, -4.0).scaled(0.5),
+        );
+        push(format!("chebspec_{n}"), chebspec(n).scaled(1.0 / (n * n) as f64));
+        push(format!("lesp_{n}"), lesp(n).scaled(0.25));
+        push(format!("gearmat_{n}"), gearmat(n));
+        push(format!("redheff_{n}"), redheff(n).scaled(0.5 / (n as f64).sqrt()));
+        push(format!("riemann_{n}"), riemann(n).scaled(1.0 / n as f64));
+        if n % 2 == 0 {
+            push(format!("hanowa_{n}"), hanowa(n, -1.0).scaled(2.0 / n as f64));
+        }
+        push(format!("parter_{n}"), parter(n));
+        push(format!("clement_{n}"), clement(n).scaled(1.0 / n as f64));
+        push(format!("forsythe_{n}"), forsythe(n, 1e-10));
+        push(
+            format!("circulant_{n}"),
+            circulant(n, |k| if k == 0 { -2.0 } else if k == 1 || k == n - 1 { 1.0 } else { 0.0 }),
+        );
+        push(format!("randn_{n}"), randn(n, 1.0 / (n as f64).sqrt(), &mut rng));
+        push(format!("randn-big_{n}"), randn(n, 4.0 / (n as f64).sqrt(), &mut rng));
+        push(format!("randsvd1e6_{n}"), randsvd(n, 1e6, &mut rng));
+        push(format!("nilrand_{n}"), nilpotent_rand(n, 1.0, &mut rng));
+        push(format!("overscale_{n}"), overscale(n, 8.0));
+        // Norm-range variants: tiny and large multiples of a random base.
+        let base = randn(n, 1.0 / n as f64, &mut rng);
+        push(format!("scaled-1e-4_{n}"), base.scaled(1e-4));
+        push(format!("scaled-1e2_{n}"), base.scaled(1e2));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::linalg::norms::norm1;
+
+    #[test]
+    fn jordan_block_shape() {
+        let j = jordbloc(4, 2.0);
+        assert_eq!(j[(0, 0)], 2.0);
+        assert_eq!(j[(0, 1)], 1.0);
+        assert_eq!(j[(1, 0)], 0.0);
+        assert_eq!(j.trace(), 8.0);
+    }
+
+    #[test]
+    fn nilpotent_matrices_power_to_zero() {
+        for a in [jordbloc(5, 0.0), forsythe(5, 0.0), nilpotent_rand(5, 1.0, &mut Rng::new(1))] {
+            let mut p = a.clone();
+            for _ in 0..5 {
+                p = matmul(&p, &a);
+            }
+            assert!(p.max_abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn chebspec_nilpotent_gap() {
+        // chebspec-like operator is strongly nonnormal:
+        // ||A^8||^{1/8} is well below ||A|| (the Theorem-2 gap).
+        let a = chebspec(8);
+        let mut p = a.clone();
+        for _ in 0..7 {
+            p = matmul(&p, &a);
+        }
+        let gap = norm1(&p).powf(1.0 / 8.0) / norm1(&a);
+        assert!(gap < 0.8, "gap {gap}");
+    }
+
+    #[test]
+    fn gearmat_powers_bounded_by_norm_product() {
+        // Gear-matrix eigenvalues are 2cos(..) in [-2, 2]; powers respect
+        // the submultiplicative bound ||A^10|| <= ||A||^10 and stay finite.
+        let a = gearmat(16);
+        let mut p = a.clone();
+        for _ in 0..9 {
+            p = matmul(&p, &a);
+        }
+        assert!(norm1(&p) <= norm1(&a).powi(10) * (1.0 + 1e-12));
+        assert!(p.is_finite());
+    }
+
+    #[test]
+    fn rand_orth_is_orthogonal() {
+        let q = rand_orth(12, &mut Rng::new(5));
+        let qtq = matmul(&q.transpose(), &q);
+        let err = (&qtq - &Matrix::identity(12)).max_abs();
+        assert!(err < 1e-10, "err {err}");
+    }
+
+    #[test]
+    fn randsvd_condition() {
+        let a = randsvd(10, 1e6, &mut Rng::new(6));
+        let k = crate::linalg::lu::cond1(&a);
+        // kappa_1 within a modest factor of the target 2-norm kappa.
+        assert!(k > 1e4 && k < 1e9, "cond {k}");
+    }
+
+    #[test]
+    fn clement_eigen_symmetry_via_trace() {
+        // Eigenvalues come in ± pairs -> trace 0 and tr(A^3) = 0.
+        let a = clement(9);
+        assert_eq!(a.trace(), 0.0);
+        let a3 = matmul(&matmul(&a, &a), &a);
+        assert!(a3.trace().abs() < 1e-9);
+    }
+
+    #[test]
+    fn testbed_sizes_and_determinism() {
+        let t1 = testbed(&[4, 8], 42);
+        let t2 = testbed(&[4, 8], 42);
+        assert_eq!(t1.len(), t2.len());
+        assert!(t1.len() >= 40, "got {}", t1.len());
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.a, b.a);
+        }
+        // Norm coverage: the testbed must span tiny to huge norms.
+        let norms: Vec<f64> = t1.iter().map(|t| norm1(&t.a)).collect();
+        assert!(norms.iter().cloned().fold(f64::INFINITY, f64::min) < 1e-3);
+        assert!(norms.iter().cloned().fold(0.0, f64::max) > 10.0);
+    }
+
+    #[test]
+    fn overscale_norm_gap() {
+        // Huge norm, tame exponential: the overscaling guard's test case.
+        let a = overscale(8, 100.0);
+        assert!(norm1(&a) >= 100.0);
+    }
+}

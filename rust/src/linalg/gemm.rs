@@ -1,0 +1,255 @@
+//! GEMM — the operation the whole paper counts. `matmul` routes by size:
+//! a straightforward ikj kernel for small matrices, and a cache-blocked,
+//! thread-parallel kernel (row panels over `util::threads`) for larger
+//! ones. No BLAS is linked anywhere in this repo; this module *is* the
+//! substrate, and its throughput is measured in `benches/hotpath_micro.rs`
+//! and recorded in EXPERIMENTS.md §Perf.
+
+use super::matrix::Matrix;
+use crate::util::threads::parallel_for_chunks;
+
+/// Below this order, threading and blocking overhead beat the gains.
+const SMALL_N: usize = 96;
+/// Cache block edge (f64): 64^2 * 8 B = 32 KiB per operand block — one L1.
+const BLOCK: usize = 64;
+/// Row-panel granularity for the parallel outer loop.
+const MIN_PANEL: usize = 16;
+
+/// C = A * B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul: inner dims {}x{} * {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A * B into preallocated storage (hot-loop friendly).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()));
+    c.data_mut().fill(0.0);
+    if a.rows().max(a.cols()).max(b.cols()) <= SMALL_N {
+        ikj_kernel(a, b, c, 0, a.rows());
+    } else {
+        blocked_parallel(a, b, c);
+    }
+}
+
+/// Square in place helper: returns X * X.
+pub fn square(x: &Matrix) -> Matrix {
+    matmul(x, x)
+}
+
+/// The classic ikj loop: unit-stride on both B and C rows, auto-vectorizes.
+fn ikj_kernel(a: &Matrix, b: &Matrix, c: &mut Matrix, row_lo: usize, row_hi: usize) {
+    let k_dim = a.cols();
+    let n = b.cols();
+    let bd = b.data();
+    for i in row_lo..row_hi {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate().take(k_dim) {
+            if aik == 0.0 {
+                continue; // pays off on the gallery's triangular matrices
+            }
+            let brow = &bd[k * n..(k + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// Cache-blocked kernel parallelised over row panels of C, with a 4-row
+/// register-blocked micro-kernel. The inner loop is branch-free (no
+/// zero-skip — that branch defeats FMA vectorization on dense inputs;
+/// sparse/triangular matrices take the small path's skip instead) and
+/// reuses each B row across four accumulator rows, quartering B traffic.
+fn blocked_parallel(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let m = a.rows();
+    let n = b.cols();
+    let k_dim = a.cols();
+    let bd = b.data();
+    // SAFETY: each worker writes a disjoint row range [lo, hi) of C.
+    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
+    parallel_for_chunks(m, MIN_PANEL, |lo, hi| {
+        let c_ptr = &c_ptr;
+        let cdata: &mut [f64] = unsafe {
+            std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n)
+        };
+        // Block over k and j to keep B panels cache-resident.
+        for kb in (0..k_dim).step_by(BLOCK) {
+            let ke = (kb + BLOCK).min(k_dim);
+            for jb in (0..n).step_by(BLOCK) {
+                let je = (jb + BLOCK).min(n);
+                let mut i = lo;
+                // 4-row micro-kernel: four disjoint C row slices, inner
+                // loop fully zipped so bounds checks vanish and LLVM emits
+                // FMA vector code.
+                while i + 4 <= hi {
+                    let (a0, a1, a2, a3) =
+                        (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+                    let base = (i - lo) * n;
+                    let quad = &mut cdata[base..base + 4 * n];
+                    let (r0, rest) = quad.split_at_mut(n);
+                    let (r1, rest) = rest.split_at_mut(n);
+                    let (r2, r3) = rest.split_at_mut(n);
+                    let c0 = &mut r0[jb..je];
+                    let c1 = &mut r1[jb..je];
+                    let c2 = &mut r2[jb..je];
+                    let c3 = &mut r3[jb..je];
+                    for k in kb..ke {
+                        let (x0, x1, x2, x3) =
+                            (a0[k], a1[k], a2[k], a3[k]);
+                        let brow = &bd[k * n + jb..k * n + je];
+                        for ((((bv, y0), y1), y2), y3) in brow
+                            .iter()
+                            .zip(c0.iter_mut())
+                            .zip(c1.iter_mut())
+                            .zip(c2.iter_mut())
+                            .zip(c3.iter_mut())
+                        {
+                            *y0 += x0 * bv;
+                            *y1 += x1 * bv;
+                            *y2 += x2 * bv;
+                            *y3 += x3 * bv;
+                        }
+                    }
+                    i += 4;
+                }
+                // Remainder rows.
+                while i < hi {
+                    let arow = a.row(i);
+                    let crow = &mut cdata[(i - lo) * n..(i - lo + 1) * n];
+                    for k in kb..ke {
+                        let aik = arow[k];
+                        let brow = &bd[k * n + jb..k * n + je];
+                        for (dj, &bv) in brow.iter().enumerate() {
+                            crow[jb + dj] += aik * bv;
+                        }
+                    }
+                    i += 1;
+                }
+            }
+        }
+    });
+}
+
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = randm(&mut rng, 7, 7);
+        let i = Matrix::identity(7);
+        assert_close(&matmul(&a, &i), &a, 1e-15);
+        assert_close(&matmul(&i, &a), &a, 1e-15);
+    }
+
+    #[test]
+    fn small_matches_naive() {
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(3, 4, 5), (8, 8, 8), (17, 9, 33)] {
+            let a = randm(&mut rng, m, k);
+            let b = randm(&mut rng, k, n);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-13);
+        }
+    }
+
+    #[test]
+    fn large_blocked_matches_naive() {
+        let mut rng = Rng::new(3);
+        // Above SMALL_N so the blocked/parallel path runs; non-multiple of
+        // BLOCK to exercise edge tiles.
+        let a = randm(&mut rng, 130, 97);
+        let b = randm(&mut rng, 97, 141);
+        assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-12);
+    }
+
+    #[test]
+    fn square_power_of_two_sizes() {
+        let mut rng = Rng::new(4);
+        for n in [16usize, 64, 128, 256] {
+            let a = randm(&mut rng, n, n);
+            let c = square(&a);
+            let want = naive(&a, &a);
+            assert_close(&c, &want, 1e-11);
+        }
+    }
+
+    #[test]
+    fn associativity_numerically() {
+        let mut rng = Rng::new(5);
+        let a = randm(&mut rng, 20, 20);
+        let b = randm(&mut rng, 20, 20);
+        let c = randm(&mut rng, 20, 20);
+        let left = matmul(&matmul(&a, &b), &c);
+        let right = matmul(&a, &matmul(&b, &c));
+        assert_close(&left, &right, 1e-10);
+    }
+
+    #[test]
+    fn zero_skip_correctness() {
+        // Triangular A exercises the aik == 0 early-out.
+        let mut rng = Rng::new(6);
+        let mut a = randm(&mut rng, 50, 50);
+        for i in 0..50 {
+            for j in 0..i {
+                a[(i, j)] = 0.0;
+            }
+        }
+        let b = randm(&mut rng, 50, 50);
+        assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-13);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        matmul(&a, &b);
+    }
+}

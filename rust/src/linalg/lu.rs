@@ -1,0 +1,223 @@
+//! LU with partial pivoting — the `D ≈ 4/3 M` solver of paper eq. (1).
+//! Needed by the Padé oracle (rational approximants solve a linear system)
+//! and by the gallery's condition-number screening.
+
+use super::matrix::Matrix;
+
+/// PA = LU factorization (Doolittle, partial pivoting).
+pub struct Lu {
+    /// Combined L (unit lower, below diag) and U (upper incl. diag).
+    lu: Matrix,
+    /// Row permutation: pivot row chosen at column j.
+    piv: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+    /// True if a zero (or subnormal) pivot was hit — matrix singular.
+    singular: bool,
+}
+
+impl Lu {
+    pub fn new(a: &Matrix) -> Lu {
+        assert!(a.is_square());
+        let n = a.order();
+        let mut lu = a.clone();
+        let mut piv = Vec::with_capacity(n);
+        let mut sign = 1.0;
+        let mut singular = false;
+        for j in 0..n {
+            // Pivot search in column j.
+            let mut p = j;
+            let mut best = lu[(j, j)].abs();
+            for i in (j + 1)..n {
+                let v = lu[(i, j)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            piv.push(p);
+            if p != j {
+                sign = -sign;
+                for k in 0..n {
+                    let tmp = lu[(j, k)];
+                    lu[(j, k)] = lu[(p, k)];
+                    lu[(p, k)] = tmp;
+                }
+            }
+            let pivot = lu[(j, j)];
+            if pivot.abs() < f64::MIN_POSITIVE {
+                singular = true;
+                continue;
+            }
+            for i in (j + 1)..n {
+                let m = lu[(i, j)] / pivot;
+                lu[(i, j)] = m;
+                if m != 0.0 {
+                    for k in (j + 1)..n {
+                        let v = lu[(j, k)];
+                        lu[(i, k)] -= m * v;
+                    }
+                }
+            }
+        }
+        Lu { lu, piv, sign, singular }
+    }
+
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    pub fn det(&self) -> f64 {
+        if self.singular {
+            return 0.0;
+        }
+        let n = self.lu.order();
+        (0..n).map(|i| self.lu[(i, i)]).product::<f64>() * self.sign
+    }
+
+    /// Solve A x = b for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.order();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        // Apply permutation and forward substitution (L has unit diagonal).
+        for j in 0..n {
+            x.swap(j, self.piv[j]);
+        }
+        for j in 0..n {
+            let xj = x[j];
+            if xj != 0.0 {
+                for i in (j + 1)..n {
+                    x[i] -= self.lu[(i, j)] * xj;
+                }
+            }
+        }
+        // Back substitution with U.
+        for j in (0..n).rev() {
+            x[j] /= self.lu[(j, j)];
+            let xj = x[j];
+            if xj != 0.0 {
+                for i in 0..j {
+                    x[i] -= self.lu[(i, j)] * xj;
+                }
+            }
+        }
+        x
+    }
+
+    /// Solve A X = B column-by-column.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        let n = self.lu.order();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        // Work on columns of B (strided extraction; fine for oracle use).
+        for c in 0..b.cols() {
+            let col: Vec<f64> = (0..n).map(|r| b[(r, c)]).collect();
+            let x = self.solve_vec(&col);
+            for r in 0..n {
+                out[(r, c)] = x[r];
+            }
+        }
+        out
+    }
+
+    /// A^{-1} (oracle/conditioning use only — never on the hot path).
+    pub fn inverse(&self) -> Matrix {
+        let n = self.lu.order();
+        self.solve(&Matrix::identity(n))
+    }
+}
+
+/// 1-norm condition number estimate: kappa_1 = ||A||_1 ||A^{-1}||_1,
+/// with the inverse norm taken exactly via `inverse()` (testbed sizes only).
+pub fn cond1(a: &Matrix) -> f64 {
+    let lu = Lu::new(a);
+    if lu.is_singular() {
+        return f64::INFINITY;
+    }
+    let inv = lu.inverse();
+    super::norms::norm1(a) * super::norms::norm1(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let mut rng = Rng::new(10);
+        for n in [1usize, 2, 5, 20, 64] {
+            let a = Matrix::from_fn(n, n, |i, j| {
+                rng.normal() + if i == j { 4.0 } else { 0.0 }
+            });
+            let x: Vec<f64> = (0..n).map(|i| (i as f64) - 1.5).collect();
+            let b = a.matvec(&x);
+            let lu = Lu::new(&a);
+            assert!(!lu.is_singular());
+            let xs = lu.solve_vec(&b);
+            for (xi, yi) in x.iter().zip(&xs) {
+                assert!((xi - yi).abs() < 1e-9, "{xi} vs {yi}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(11);
+        let n = 16;
+        let a = Matrix::from_fn(n, n, |i, j| {
+            rng.normal() + if i == j { 3.0 } else { 0.0 }
+        });
+        let inv = Lu::new(&a).inverse();
+        let prod = matmul(&a, &inv);
+        let err = (&prod - &Matrix::identity(n)).max_abs();
+        assert!(err < 1e-10, "err {err}");
+    }
+
+    #[test]
+    fn det_of_triangular() {
+        let a = Matrix::from_rows(&[
+            vec![2.0, 1.0, 0.0],
+            vec![0.0, 3.0, 5.0],
+            vec![0.0, 0.0, 4.0],
+        ]);
+        assert!((Lu::new(&a).det() - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_permutation_sign() {
+        // Swap rows of the identity: determinant -1.
+        let a = Matrix::from_rows(&[
+            vec![0.0, 1.0, 0.0],
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ]);
+        assert!((Lu::new(&a).det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 4.0],
+        ]);
+        let lu = Lu::new(&a);
+        assert!(lu.is_singular());
+        assert_eq!(lu.det(), 0.0);
+        assert_eq!(cond1(&a), f64::INFINITY);
+    }
+
+    #[test]
+    fn cond_of_identity_is_one() {
+        assert!((cond1(&Matrix::identity(8)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cond_grows_with_ill_conditioning() {
+        // diag(1, eps) has cond 1/eps.
+        let a = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1e-8]]);
+        assert!((cond1(&a) - 1e8).abs() / 1e8 < 1e-10);
+    }
+}

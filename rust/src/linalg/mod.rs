@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK): matrix type, GEMM,
+//! norms, LU, and the gallery of test matrices behind the paper's
+//! Figure-1 experiments.
+
+pub mod gallery;
+pub mod gemm;
+pub mod lu;
+pub mod matrix;
+pub mod norms;
+
+pub use gemm::{matmul, matmul_into, square};
+pub use lu::{cond1, Lu};
+pub use matrix::Matrix;
+pub use norms::{norm1, norm2_est, norm_fro, norm_inf, rel_err_fro};

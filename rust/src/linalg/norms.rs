@@ -1,0 +1,212 @@
+//! Matrix norms. The selection algorithms live and die by `norm1` (the
+//! paper works in the 1-norm throughout) plus a Higham–Tisseur-style
+//! estimator for ||A^k||_1 that never forms the power explicitly.
+
+use super::matrix::Matrix;
+
+/// ||A||_1 = max column absolute sum.
+pub fn norm1(a: &Matrix) -> f64 {
+    let (r, c) = (a.rows(), a.cols());
+    let mut sums = vec![0.0f64; c];
+    for i in 0..r {
+        let row = a.row(i);
+        for j in 0..c {
+            sums[j] += row[j].abs();
+        }
+    }
+    sums.into_iter().fold(0.0, f64::max)
+}
+
+/// ||A||_inf = max row absolute sum.
+pub fn norm_inf(a: &Matrix) -> f64 {
+    (0..a.rows())
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Frobenius norm.
+pub fn norm_fro(a: &Matrix) -> f64 {
+    a.data().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// 2-norm estimate by power iteration on A^T A.
+pub fn norm2_est(a: &Matrix, iters: usize) -> f64 {
+    let n = a.cols();
+    if n == 0 {
+        return 0.0;
+    }
+    // Deterministic start: the all-ones direction with a twist so we don't
+    // sit in a null space of structured matrices.
+    let mut v: Vec<f64> =
+        (0..n).map(|j| 1.0 + 0.25 * ((j % 7) as f64)).collect();
+    let mut norm = 0.0;
+    for _ in 0..iters.max(2) {
+        let av = a.matvec(&v);
+        let atav = a.matvec_t(&av);
+        let len = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if len == 0.0 {
+            return 0.0;
+        }
+        norm = av.iter().map(|x| x * x).sum::<f64>().sqrt()
+            / v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+        for (vi, yi) in v.iter_mut().zip(&atav) {
+            *vi = yi / len;
+        }
+    }
+    norm
+}
+
+/// Estimate ||A^k||_1 without forming A^k, by the 1-norm power method
+/// (Higham–Tisseur block estimator with t = 1, applied to x -> A^k x).
+///
+/// Returns a *lower* bound that is within a small factor of the true norm
+/// in practice; Algorithms 3/4 use norm *products* as upper bounds and this
+/// estimator to refine the nonnormality gap (Theorem 2's a_k).
+pub fn norm1_power_est(a: &Matrix, k: usize, iters: usize) -> f64 {
+    let n = a.order();
+    if n == 0 || k == 0 {
+        return 1.0;
+    }
+    let apply = |x: &[f64]| -> Vec<f64> {
+        let mut y = x.to_vec();
+        for _ in 0..k {
+            y = a.matvec(&y);
+        }
+        y
+    };
+    let apply_t = |x: &[f64]| -> Vec<f64> {
+        let mut y = x.to_vec();
+        for _ in 0..k {
+            y = a.matvec_t(&y);
+        }
+        y
+    };
+    // Start with the uniform vector (exact for nonnegative matrices).
+    let mut x = vec![1.0 / n as f64; n];
+    let mut est = 0.0f64;
+    for _ in 0..iters.max(2) {
+        let y = apply(&x);
+        est = y.iter().map(|v| v.abs()).sum::<f64>();
+        // xi = sign(y)
+        let xi: Vec<f64> =
+            y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let z = apply_t(&xi);
+        // Pick the unit vector e_j with largest |z_j| as the next probe.
+        let (jmax, zmax) = z
+            .iter()
+            .enumerate()
+            .fold((0usize, 0.0f64), |(bj, bz), (j, &v)| {
+                if v.abs() > bz {
+                    (j, v.abs())
+                } else {
+                    (bj, bz)
+                }
+            });
+        let zx: f64 = z.iter().zip(&x).map(|(a, b)| a * b).sum();
+        if zmax <= zx.abs() {
+            break; // converged
+        }
+        x = vec![0.0; n];
+        x[jmax] = 1.0;
+    }
+    // One column verification never hurts: ||A^k e_j||_1 is a lower bound.
+    est
+}
+
+/// Normwise relative error in an approximate 2-norm (paper eq. (45)).
+pub fn rel_err_2(approx: &Matrix, exact: &Matrix) -> f64 {
+    let diff = approx - exact;
+    let denom = norm2_est(exact, 12).max(1e-300);
+    norm2_est(&diff, 12) / denom
+}
+
+/// Normwise relative error in the Frobenius norm (cheap, rank-agnostic;
+/// within sqrt(n) of the 2-norm version and monotone with it).
+pub fn rel_err_fro(approx: &Matrix, exact: &Matrix) -> f64 {
+    let diff = approx - exact;
+    norm_fro(&diff) / norm_fro(exact).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn norm1_column_sums() {
+        let a = Matrix::from_rows(&[vec![1.0, -2.0], vec![-3.0, 0.5]]);
+        assert_eq!(norm1(&a), 4.0); // col 0: 1+3
+        assert_eq!(norm_inf(&a), 3.5); // row 1: 3+0.5
+    }
+
+    #[test]
+    fn norms_of_identity() {
+        let i = Matrix::identity(5);
+        assert_eq!(norm1(&i), 1.0);
+        assert_eq!(norm_inf(&i), 1.0);
+        assert!((norm_fro(&i) - 5.0f64.sqrt()).abs() < 1e-15);
+        assert!((norm2_est(&i, 8) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn norm2_diagonal() {
+        let d = Matrix::from_fn(4, 4, |i, j| {
+            if i == j {
+                (i + 1) as f64
+            } else {
+                0.0
+            }
+        });
+        assert!((norm2_est(&d, 30) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_inequalities() {
+        let mut rng = Rng::new(8);
+        for _ in 0..10 {
+            let a = Matrix::from_fn(12, 12, |_, _| rng.normal());
+            let n1 = norm1(&a);
+            let ninf = norm_inf(&a);
+            let n2 = norm2_est(&a, 40);
+            let nf = norm_fro(&a);
+            // Standard equivalences: n2 <= sqrt(n1*ninf); n2 <= nf.
+            assert!(n2 <= (n1 * ninf).sqrt() * (1.0 + 1e-6));
+            assert!(n2 <= nf * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn power_est_close_to_true_norm() {
+        let mut rng = Rng::new(9);
+        for k in 1..=4usize {
+            let a = Matrix::from_fn(10, 10, |_, _| rng.normal() * 0.5);
+            // true ||A^k||_1
+            let mut p = Matrix::identity(10);
+            for _ in 0..k {
+                p = matmul(&p, &a);
+            }
+            let truth = norm1(&p);
+            let est = norm1_power_est(&a, k, 6);
+            assert!(est <= truth * (1.0 + 1e-9), "est {est} > {truth}");
+            assert!(est >= truth * 0.1, "k={k}: est {est} << {truth}");
+        }
+    }
+
+    #[test]
+    fn power_est_exact_for_nonnegative() {
+        let a = Matrix::from_fn(6, 6, |i, j| ((i + j) % 3) as f64 * 0.2);
+        let p = matmul(&a, &a);
+        assert!(
+            (norm1_power_est(&a, 2, 4) - norm1(&p)).abs()
+                <= 1e-12 * norm1(&p)
+        );
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        let a = Matrix::identity(4);
+        assert_eq!(rel_err_fro(&a, &a), 0.0);
+        assert!(rel_err_2(&a, &a) < 1e-12);
+    }
+}

@@ -1,0 +1,333 @@
+//! `expmflow` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   demo                   quick native demo: one expm, all methods
+//!   serve [--requests N]   run the expm service against synthetic load
+//!   gallery [--max-n N]    Figure-1-style accuracy/cost study (text)
+//!   trace --dataset D      Figures-2/3/4-style trace replay (text)
+//!   flow --steps N         train the generative flow via PJRT artifacts
+//!   sample --batch B       sample from the flow (Table-5 path)
+//!   daemon --addr A        expose the service over TCP (JSON lines)
+//!   info                   artifact manifest + platform report
+
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::expm::{expm, pade::expm_pade13, ExpmOptions, Method};
+use expmflow::flow::{self, Dataset};
+use expmflow::linalg::{gallery, norm1, Matrix};
+use expmflow::report::{self, summary::MethodRun};
+use expmflow::runtime::{default_artifact_dir, Executor};
+use expmflow::trace::{generate, replay::replay, TraceKind};
+use expmflow::util::cli::Args;
+use expmflow::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("demo");
+    let code = match cmd {
+        "demo" => cmd_demo(&args),
+        "serve" => cmd_serve(&args),
+        "gallery" => cmd_gallery(&args),
+        "trace" => cmd_trace(&args),
+        "flow" => cmd_flow(&args),
+        "sample" => cmd_sample(&args),
+        "daemon" => cmd_daemon(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("unknown command {other:?}");
+            eprintln!(
+                "usage: expmflow <demo|serve|gallery|trace|flow|sample|info> [--flags]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_demo(args: &Args) -> i32 {
+    let n = args.get_usize("n", 16);
+    let norm = args.get_f64("norm", 2.0);
+    let tol = args.get_f64("tol", 1e-8);
+    let mut rng = Rng::new(args.get_usize("seed", 7) as u64);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let a = a.scaled(norm / norm1(&a));
+    println!("e^A for a random {n}x{n} matrix with ||A||_1 = {norm}");
+    let oracle = expm_pade13(&a);
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "m".into(),
+        "s".into(),
+        "products".into(),
+        "rel err vs oracle".into(),
+    ]];
+    for method in Method::all_dynamic() {
+        let r = expm(&a, &ExpmOptions { method, tol });
+        let err = (&r.value - &oracle).max_abs() / oracle.max_abs();
+        rows.push(vec![
+            method.name().into(),
+            r.stats.m.to_string(),
+            r.stats.s.to_string(),
+            r.stats.matrix_products.to_string(),
+            format!("{err:.2e}"),
+        ]);
+    }
+    print!("{}", report::render_table(&rows));
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let requests = args.get_usize("requests", 100);
+    let per = args.get_usize("matrices", 8);
+    let n = args.get_usize("n", 32);
+    let tol = args.get_f64("tol", 1e-8);
+    let native_only = args.has("native-only");
+    let cfg = ServiceConfig {
+        artifact_dir: if native_only {
+            None
+        } else {
+            Some(default_artifact_dir())
+        },
+        ..Default::default()
+    };
+    let svc = ExpmService::start(cfg);
+    let mut rng = Rng::new(1);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let mats: Vec<Matrix> = (0..per)
+            .map(|_| {
+                let target = rng.log_uniform(1e-4, 12.0);
+                let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+                let nn = norm1(&a);
+                a.scaled(target / nn)
+            })
+            .collect();
+        pending.push(svc.submit(mats, tol));
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(resp) if resp.error.is_none() => ok += 1,
+            Ok(resp) => {
+                eprintln!("request {} failed: {:?}", resp.id, resp.error)
+            }
+            Err(_) => eprintln!("service dropped a response"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{requests} requests ({} matrices) in {wall:.3}s -> {:.0} expm/s",
+        requests * per,
+        (requests * per) as f64 / wall
+    );
+    print!("{}", svc.metrics.snapshot().render());
+    if ok == requests {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_gallery(args: &Args) -> i32 {
+    let max_n = args.get_usize("max-n", 64);
+    let tol = args.get_f64("tol", 1e-8);
+    let sizes: Vec<usize> = [4usize, 8, 16, 32, 64, 128, 256, 512, 1024]
+        .into_iter()
+        .filter(|&s| s <= max_n)
+        .collect();
+    let bed = gallery::testbed(&sizes, 20250710);
+    println!("gallery: {} matrices (sizes {:?})", bed.len(), sizes);
+    let methods = Method::all_dynamic();
+    let mut runs: Vec<MethodRun> =
+        methods.iter().map(|m| MethodRun::new(m.name())).collect();
+    let mut errs: Vec<Vec<f64>> = Vec::new();
+    for t in &bed {
+        let oracle = expm_pade13(&t.a);
+        if !oracle.is_finite() || oracle.max_abs() > 1e100 {
+            continue; // screened, as in the paper's exclusion rule
+        }
+        let mut row = Vec::new();
+        for (j, &method) in methods.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            let r = expm(&t.a, &ExpmOptions { method, tol });
+            runs[j].wall_s += t0.elapsed().as_secs_f64();
+            let err = expmflow::linalg::rel_err_fro(&r.value, &oracle);
+            runs[j].record(err, r.stats.m, r.stats.s, r.stats.matrix_products);
+            row.push(err);
+        }
+        errs.push(row);
+    }
+    println!(
+        "\n== accuracy pies (Fig 1d)\n{}",
+        report::summary::pie_line(&runs)
+    );
+    println!(
+        "\n== degree / scaling whiskers (Fig 1e/1f)\n{}",
+        report::summary::whisker_block(&runs)
+    );
+    println!(
+        "== products & time (Fig 1g/1h)\n{}",
+        report::summary::totals_block(&runs)
+    );
+    0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let kind = match args.get_str("dataset", "cifar10") {
+        "cifar10" => TraceKind::Cifar10,
+        "imagenet32" => TraceKind::ImageNet32,
+        "imagenet64" => TraceKind::ImageNet64,
+        other => {
+            eprintln!("unknown dataset {other}");
+            return 2;
+        }
+    };
+    let calls = args.get_usize("calls", 500);
+    let tol = args.get_f64("tol", 1e-8);
+    let trace = generate(kind, calls, 99);
+    println!("{}: {} expm invocations", kind.name(), calls);
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "products".into(),
+        "time (s)".into(),
+        "x vs sastre".into(),
+    ]];
+    let mut base_prod = 0usize;
+    for method in Method::all_dynamic() {
+        let s = replay(&trace, method, tol, false);
+        if method == Method::Sastre {
+            base_prod = s.total_products;
+        }
+        rows.push(vec![
+            method.name().into(),
+            s.total_products.to_string(),
+            format!("{:.3}", s.total_wall_s),
+            format!(
+                "{:.2}",
+                s.total_products as f64 / base_prod.max(1) as f64
+            ),
+        ]);
+    }
+    print!("{}", report::render_table(&rows));
+    0
+}
+
+fn cmd_flow(args: &Args) -> i32 {
+    let steps = args.get_usize("steps", 200);
+    let batch = args.get_usize("batch", 64);
+    let method = args.get_str("method", "sastre").to_string();
+    let dir = default_artifact_dir();
+    let exec = match Executor::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot load artifacts from {}: {e}", dir.display());
+            eprintln!("run `make artifacts` first");
+            return 1;
+        }
+    };
+    let fc = exec.manifest.flow.clone().expect("flow config in manifest");
+    let data = Dataset::synthetic(4096, fc.dim, 6, 13);
+    let mut state = flow::init_params(fc.dim, fc.blocks, 2024);
+    println!(
+        "training flow (dim={} blocks={}) with expm method `{method}` for {steps} steps",
+        fc.dim, fc.blocks
+    );
+    match flow::train_epoch(&exec, &method, &mut state, &data, batch, steps, 10)
+    {
+        Ok(st) => {
+            println!(
+                "done: mean loss {:.4}, final loss {:.4}, {:.2}s ({:.1} steps/s)",
+                st.mean_loss,
+                st.final_loss,
+                st.wall_s,
+                st.steps as f64 / st.wall_s
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sample(args: &Args) -> i32 {
+    let batch = args.get_usize("batch", 128);
+    let method = args.get_str("method", "sastre").to_string();
+    let dir = default_artifact_dir();
+    let exec = match Executor::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e}");
+            return 1;
+        }
+    };
+    let fc = exec.manifest.flow.clone().expect("flow config");
+    let state = flow::init_params(fc.dim, fc.blocks, 2024);
+    match flow::sample::sample(&exec, &method, &state, batch, 5) {
+        Ok((x, st)) => {
+            let mean: f64 = x.iter().sum::<f64>() / x.len() as f64;
+            println!(
+                "sampled {batch} x dim={} in {:.4}s (mean pixel {mean:.3})",
+                fc.dim, st.wall_s
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("sampling failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_daemon(args: &Args) -> i32 {
+    use expmflow::coordinator::server::Server;
+    let addr = args.get_str("addr", "127.0.0.1:7788").to_string();
+    let native_only = args.has("native-only");
+    let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: if native_only {
+            None
+        } else {
+            Some(default_artifact_dir())
+        },
+        ..Default::default()
+    }));
+    match Server::spawn(&addr, svc) {
+        Ok(mut server) => {
+            println!(
+                "expm daemon listening on {} (JSON lines; \
+                 {{\"cmd\":\"shutdown\"}} to stop)",
+                server.addr
+            );
+            // Block until the accept loop exits (shutdown cmd).
+            server.shutdown_wait();
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(_args: &Args) -> i32 {
+    let dir = default_artifact_dir();
+    match Executor::new(&dir) {
+        Ok(exec) => {
+            println!("platform: {}", exec.platform());
+            println!("artifact dir: {}", dir.display());
+            println!("artifacts: {}", exec.manifest.artifacts.len());
+            println!("poly grid (n, batch): {:?}", exec.manifest.poly_grid);
+            if let Some(f) = &exec.manifest.flow {
+                println!(
+                    "flow: dim={} blocks={} train_batch={} sample_batches={:?}",
+                    f.dim, f.blocks, f.train_batch, f.sample_batches
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("no artifacts at {}: {e}", dir.display());
+            1
+        }
+    }
+}

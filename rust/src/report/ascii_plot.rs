@@ -1,0 +1,174 @@
+//! ASCII plotting: loss curves, performance profiles and log-log scatter
+//! rendered directly into the bench output (the environment has no
+//! graphical plotting; these make `cargo bench` output self-contained).
+
+/// Render series as an ASCII line chart. `series` = (label, points);
+/// points are (x, y). Returns a multi-line string.
+pub fn line_chart(
+    title: &str,
+    series: &[(String, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    log_y: bool,
+) -> String {
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for (_, s) in series {
+        pts.extend(s.iter().filter(|(x, y)| x.is_finite() && y.is_finite()));
+    }
+    if pts.is_empty() {
+        return format!("{title}\n(no finite data)\n");
+    }
+    let ymap = |y: f64| if log_y { y.max(1e-300).log10() } else { y };
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(ymap(y));
+        ymax = ymax.max(ymap(y));
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for &(x, y) in s {
+            if !(x.is_finite() && y.is_finite()) {
+                continue;
+            }
+            let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64)
+                .round() as usize;
+            let row = (((ymap(y) - ymin) / (ymax - ymin))
+                * (height - 1) as f64)
+                .round() as usize;
+            let r = height - 1 - row.min(height - 1);
+            grid[r][col.min(width - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let ylab = |v: f64| {
+        if log_y {
+            format!("1e{v:.1}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+        let label = if r == 0 || r == height - 1 || r == height / 2 {
+            format!("{:>9}", ylab(yv))
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(9));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:>10}{:>width$.3}\n",
+        format!("{xmin:.3}"),
+        xmax,
+        width = width - 4
+    ));
+    // Legend.
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} = {}\n",
+            glyphs[si % glyphs.len()],
+            label
+        ));
+    }
+    out
+}
+
+/// Horizontal bar chart for totals (Fig 1g/1h style).
+pub fn bar_chart(title: &str, bars: &[(String, f64)], width: usize) -> String {
+    let max = bars
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(0.0f64, f64::max)
+        .max(1e-300);
+    let lw = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in bars {
+        let filled = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {label:<lw$} |{} {v:.3}\n",
+            "█".repeat(filled),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_all_series() {
+        let s = vec![
+            ("a".to_string(), vec![(0.0, 1.0), (1.0, 2.0), (2.0, 3.0)]),
+            ("b".to_string(), vec![(0.0, 3.0), (2.0, 1.0)]),
+        ];
+        let text = line_chart("test", &s, 30, 10, false);
+        assert!(text.contains('*'));
+        assert!(text.contains('o'));
+        assert!(text.contains("a"));
+        assert!(text.lines().count() > 10);
+    }
+
+    #[test]
+    fn log_scale_handles_decades() {
+        let s = vec![(
+            "err".to_string(),
+            vec![(1.0, 1e-12), (2.0, 1e-6), (3.0, 1.0)],
+        )];
+        let text = line_chart("log", &s, 20, 8, true);
+        assert!(text.contains("1e"), "{text}");
+    }
+
+    #[test]
+    fn empty_data_is_graceful() {
+        let text = line_chart("none", &[("x".into(), vec![])], 10, 5, false);
+        assert!(text.contains("no finite data"));
+        let text = line_chart(
+            "nan",
+            &[("x".into(), vec![(f64::NAN, 1.0)])],
+            10,
+            5,
+            false,
+        );
+        assert!(text.contains("no finite data"));
+    }
+
+    #[test]
+    fn bar_chart_proportions() {
+        let text = bar_chart(
+            "bars",
+            &[("long".into(), 10.0), ("short".into(), 5.0)],
+            20,
+        );
+        let lines: Vec<&str> = text.lines().collect();
+        let count = |l: &str| l.matches('█').count();
+        assert_eq!(count(lines[1]), 20);
+        assert_eq!(count(lines[2]), 10);
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = vec![("c".to_string(), vec![(0.0, 5.0), (1.0, 5.0)])];
+        let _ = line_chart("flat", &s, 12, 6, false);
+    }
+}

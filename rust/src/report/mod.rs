@@ -1,0 +1,136 @@
+//! Reporting toolkit shared by the benches: Dolan–Moré performance
+//! profiles (Figures 1c/2c/3c/4c), accuracy pies (1d), whisker summaries
+//! (1e/1f), bar totals (1g/1h) and plain-text table renderers.
+
+pub mod ascii_plot;
+pub mod profile;
+pub mod summary;
+
+/// Render an aligned text table (first row = header).
+pub fn render_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(Vec::len).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (j, cell) in row.iter().enumerate() {
+            widths[j] = widths[j].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        for (j, cell) in row.iter().enumerate() {
+            if j > 0 {
+                out.push_str("  ");
+            }
+            let pad = widths[j] - cell.chars().count();
+            // Right-align numbers, left-align text.
+            let numeric = cell
+                .chars()
+                .next()
+                .map(|c| c.is_ascii_digit() || c == '-' || c == '+')
+                .unwrap_or(false);
+            if numeric && j > 0 {
+                out.push_str(&" ".repeat(pad));
+                out.push_str(cell);
+            } else {
+                out.push_str(cell);
+                out.push_str(&" ".repeat(pad));
+            }
+        }
+        // Trim trailing pad.
+        while out.ends_with(' ') {
+            out.pop();
+        }
+        out.push('\n');
+        if i == 0 {
+            for (j, w) in widths.iter().enumerate() {
+                if j > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&"-".repeat(*w));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Write rows as CSV into `path` (for external plotting).
+pub fn write_csv(
+    path: &std::path::Path,
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Format a float compactly for tables.
+pub fn fmt_g(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1e4 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let rows = vec![
+            vec!["name".into(), "value".into()],
+            vec!["alpha".into(), "1.5".into()],
+            vec!["b".into(), "100".into()],
+        ];
+        let t = render_table(&rows);
+        assert!(t.contains("name"));
+        assert!(t.lines().count() == 4); // header + rule + 2 rows
+        // Separator row present.
+        assert!(t.lines().nth(1).unwrap().starts_with('-'));
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let dir = std::env::temp_dir().join("expmflow_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &[vec!["a,b".into(), "plain".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.trim(), "\"a,b\",plain");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fmt_g_ranges() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert!(fmt_g(12345.0).contains('e'));
+        assert!(fmt_g(1e-8).contains('e'));
+        assert_eq!(fmt_g(1.5), "1.5000");
+    }
+}

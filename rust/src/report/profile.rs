@@ -1,0 +1,177 @@
+//! Dolan–Moré performance profiles [24] — the paper's Figures 1c/2c/3c/4c.
+//!
+//! Given a cases × methods error (or cost) matrix, the profile of method j
+//! at factor α is the fraction of cases where `value[i][j] <= α * best_i`.
+
+/// One method's profile curve sampled at `alphas`.
+#[derive(Clone, Debug)]
+pub struct ProfileCurve {
+    pub method: String,
+    /// Fractions in [0, 1], one per alpha.
+    pub fractions: Vec<f64>,
+}
+
+/// Compute profiles. `values[i][j]`: metric of method j on case i (lower
+/// is better). Cases where every method scored non-finite are skipped.
+pub fn performance_profile(
+    methods: &[String],
+    values: &[Vec<f64>],
+    alphas: &[f64],
+) -> Vec<ProfileCurve> {
+    let nm = methods.len();
+    let mut counts = vec![vec![0usize; alphas.len()]; nm];
+    let mut cases = 0usize;
+    for row in values {
+        assert_eq!(row.len(), nm);
+        let best = row
+            .iter()
+            .cloned()
+            .filter(|x| x.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        if !best.is_finite() {
+            continue;
+        }
+        cases += 1;
+        // Treat exact zeros carefully: ratio of 0/0 counts as within any α.
+        for (j, &v) in row.iter().enumerate() {
+            for (k, &a) in alphas.iter().enumerate() {
+                let within = if best == 0.0 {
+                    v == 0.0 || !a.is_finite()
+                } else {
+                    v.is_finite() && v <= a * best
+                };
+                if within {
+                    counts[j][k] += 1;
+                }
+            }
+        }
+    }
+    methods
+        .iter()
+        .enumerate()
+        .map(|(j, m)| ProfileCurve {
+            method: m.clone(),
+            fractions: counts[j]
+                .iter()
+                .map(|&c| c as f64 / cases.max(1) as f64)
+                .collect(),
+        })
+        .collect()
+}
+
+/// Count, per method, how often it achieved the (joint-)minimum value —
+/// the paper's "most accurate" pie (Figure 1d left). Ties split equally
+/// is not what MATLAB does; the paper counts ties for each, so do we.
+pub fn best_counts(values: &[Vec<f64>]) -> Vec<usize> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let nm = values[0].len();
+    let mut wins = vec![0usize; nm];
+    for row in values {
+        let best = row
+            .iter()
+            .cloned()
+            .filter(|x| x.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        if !best.is_finite() {
+            continue;
+        }
+        for (j, &v) in row.iter().enumerate() {
+            if v <= best * (1.0 + 1e-12) {
+                wins[j] += 1;
+            }
+        }
+    }
+    wins
+}
+
+/// Same for the most *inaccurate* result (Figure 1d right).
+pub fn worst_counts(values: &[Vec<f64>]) -> Vec<usize> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let nm = values[0].len();
+    let mut losses = vec![0usize; nm];
+    for row in values {
+        let worst = row
+            .iter()
+            .cloned()
+            .filter(|x| x.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !worst.is_finite() {
+            continue;
+        }
+        for (j, &v) in row.iter().enumerate() {
+            if v >= worst * (1.0 - 1e-12) {
+                losses[j] += 1;
+            }
+        }
+    }
+    losses
+}
+
+/// Standard alpha grid for the profile plots.
+pub fn default_alphas() -> Vec<f64> {
+    (0..=40).map(|i| 1.0 + i as f64 * 0.25).collect() // 1.0 .. 11.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn methods() -> Vec<String> {
+        vec!["a".into(), "b".into()]
+    }
+
+    #[test]
+    fn profile_monotone_nondecreasing() {
+        let vals = vec![
+            vec![1.0, 2.0],
+            vec![3.0, 1.0],
+            vec![1.0, 10.0],
+            vec![5.0, 5.0],
+        ];
+        let alphas = [1.0, 2.0, 4.0, 16.0];
+        let curves = performance_profile(&methods(), &vals, &alphas);
+        for c in &curves {
+            for w in c.fractions.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+            assert!(*c.fractions.last().unwrap() <= 1.0);
+        }
+        // At the largest alpha both methods cover everything.
+        assert_eq!(curves[0].fractions.last(), Some(&1.0));
+        assert_eq!(curves[1].fractions.last(), Some(&1.0));
+    }
+
+    #[test]
+    fn profile_at_one_counts_wins() {
+        let vals = vec![vec![1.0, 2.0], vec![2.0, 1.0], vec![1.0, 1.0]];
+        let curves = performance_profile(&methods(), &vals, &[1.0]);
+        assert!((curves[0].fractions[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((curves[1].fractions[0] - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_and_worst_counts() {
+        let vals = vec![vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 3.0]];
+        assert_eq!(best_counts(&vals), vec![1 + 1, 1 + 1]); // tie on row 3
+        assert_eq!(worst_counts(&vals), vec![1 + 1, 1 + 1]);
+    }
+
+    #[test]
+    fn zero_errors_handled() {
+        let vals = vec![vec![0.0, 0.0], vec![0.0, 1.0]];
+        let curves = performance_profile(&methods(), &vals, &[1.0, 2.0]);
+        assert_eq!(curves[0].fractions[0], 1.0);
+        assert!(curves[1].fractions[0] < 1.0);
+    }
+
+    #[test]
+    fn non_finite_rows_skipped() {
+        let vals = vec![vec![f64::NAN, f64::INFINITY], vec![1.0, 2.0]];
+        let curves = performance_profile(&methods(), &vals, &[1.0]);
+        assert_eq!(curves[0].fractions[0], 1.0); // only row 2 counted
+    }
+}

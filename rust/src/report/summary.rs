@@ -1,0 +1,159 @@
+//! Per-method aggregates behind Figures 1d–1h: accuracy pies, whisker
+//! stats of degree/scaling, product and time totals.
+
+use crate::util::stats::{whisker, Whisker};
+
+/// Everything one method accumulates over a testbed/trace run.
+#[derive(Clone, Debug, Default)]
+pub struct MethodRun {
+    pub method: String,
+    pub errors: Vec<f64>,
+    pub degrees: Vec<f64>,
+    pub scalings: Vec<f64>,
+    pub products: usize,
+    pub wall_s: f64,
+}
+
+impl MethodRun {
+    pub fn new(method: &str) -> MethodRun {
+        MethodRun { method: method.into(), ..Default::default() }
+    }
+
+    pub fn record(
+        &mut self,
+        err: f64,
+        m: usize,
+        s: u32,
+        products: usize,
+    ) {
+        self.errors.push(err);
+        self.degrees.push(m as f64);
+        self.scalings.push(s as f64);
+        self.products += products;
+    }
+
+    pub fn degree_whisker(&self) -> Whisker {
+        whisker(&self.degrees)
+    }
+
+    pub fn scaling_whisker(&self) -> Whisker {
+        whisker(&self.scalings)
+    }
+}
+
+/// Figure 1d as text: percentage of cases each method was (co-)best/worst.
+pub fn pie_line(methods: &[MethodRun]) -> String {
+    let values: Vec<Vec<f64>> = (0..methods[0].errors.len())
+        .map(|i| methods.iter().map(|m| m.errors[i]).collect())
+        .collect();
+    let best = super::profile::best_counts(&values);
+    let worst = super::profile::worst_counts(&values);
+    let n = values.len().max(1);
+    let mut out = String::from("most accurate: ");
+    for (m, b) in methods.iter().zip(&best) {
+        out.push_str(&format!("{}={:.0}% ", m.method, 100.0 * *b as f64 / n as f64));
+    }
+    out.push_str("| most inaccurate: ");
+    for (m, w) in methods.iter().zip(&worst) {
+        out.push_str(&format!("{}={:.0}% ", m.method, 100.0 * *w as f64 / n as f64));
+    }
+    out
+}
+
+/// Figures 1e/1f as a text block: whisker summaries per method.
+pub fn whisker_block(methods: &[MethodRun]) -> String {
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "deg med".into(),
+        "deg q1-q3".into(),
+        "s med".into(),
+        "s q1-q3".into(),
+        "s max".into(),
+    ]];
+    for m in methods {
+        let dw = m.degree_whisker();
+        let sw = m.scaling_whisker();
+        let smax = m
+            .scalings
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        rows.push(vec![
+            m.method.clone(),
+            format!("{:.0}", dw.median),
+            format!("{:.0}-{:.0}", dw.q1, dw.q3),
+            format!("{:.0}", sw.median),
+            format!("{:.0}-{:.0}", sw.q1, sw.q3),
+            format!("{smax:.0}"),
+        ]);
+    }
+    super::render_table(&rows)
+}
+
+/// Figures 1g/1h as a text block: totals with ratios vs the first method.
+pub fn totals_block(methods: &[MethodRun]) -> String {
+    let base = &methods[0];
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "products".into(),
+        "xbase".into(),
+        "time (s)".into(),
+        "xbase".into(),
+    ]];
+    for m in methods {
+        rows.push(vec![
+            m.method.clone(),
+            format!("{}", m.products),
+            format!(
+                "{:.2}",
+                m.products as f64 / base.products.max(1) as f64
+            ),
+            format!("{:.3}", m.wall_s),
+            format!("{:.2}", m.wall_s / base.wall_s.max(1e-12)),
+        ]);
+    }
+    super::render_table(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(name: &str, errs: &[f64]) -> MethodRun {
+        let mut r = MethodRun::new(name);
+        for (i, &e) in errs.iter().enumerate() {
+            r.record(e, 8, (i % 3) as u32, 4);
+        }
+        r.wall_s = 1.0;
+        r
+    }
+
+    #[test]
+    fn pie_line_percentages() {
+        let a = run("a", &[1.0, 1.0, 5.0, 1.0]);
+        let b = run("b", &[2.0, 2.0, 1.0, 2.0]);
+        let line = pie_line(&[a, b]);
+        assert!(line.contains("a=75%"), "{line}");
+        assert!(line.contains("b=25%"), "{line}");
+    }
+
+    #[test]
+    fn whisker_block_renders() {
+        let a = run("sastre", &[1.0; 9]);
+        let text = whisker_block(&[a]);
+        assert!(text.contains("sastre"));
+        assert!(text.contains("deg med"));
+    }
+
+    #[test]
+    fn totals_ratios() {
+        let mut a = run("base", &[1.0; 4]);
+        a.products = 100;
+        a.wall_s = 2.0;
+        let mut b = run("fast", &[1.0; 4]);
+        b.products = 50;
+        b.wall_s = 1.0;
+        let t = totals_block(&[a, b]);
+        assert!(t.contains("0.50"), "{t}");
+    }
+}

@@ -1,0 +1,265 @@
+//! Artifact manifest — the L2↔L3 contract. `python/compile/aot.py` writes
+//! `artifacts/manifest.json`; this module parses and indexes it. The Rust
+//! side trusts only what the manifest declares (shapes, kinds, orders).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+    /// "poly" | "square" | "lowrank" | "train" | "nll" | "sample".
+    pub kind: String,
+    /// "sastre" | "taylor" for poly artifacts.
+    pub family: Option<String>,
+    /// Polynomial order for poly/lowrank artifacts.
+    pub m: Option<usize>,
+    /// Matrix order n for poly/square.
+    pub n: Option<usize>,
+    /// Batch size (poly/square/train/sample).
+    pub batch: Option<usize>,
+    /// Declared input shapes.
+    pub inputs: Vec<Vec<usize>>,
+    /// Declared output shapes (if recorded).
+    pub outputs: Vec<Vec<usize>>,
+    /// Flow method for train/sample/nll artifacts.
+    pub method: Option<String>,
+}
+
+/// Flow configuration blob from the manifest.
+#[derive(Clone, Debug)]
+pub struct FlowConfig {
+    pub dim: usize,
+    pub blocks: usize,
+    pub train_batch: usize,
+    pub sample_batches: Vec<usize>,
+}
+
+/// Parsed manifest with lookup indices.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+    pub flow: Option<FlowConfig>,
+    /// Available (n, batch) pairs for sastre poly artifacts.
+    pub poly_grid: Vec<(usize, usize)>,
+}
+
+fn shapes(v: Option<&Json>) -> Vec<Vec<usize>> {
+    v.and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| {
+                            dims.iter().filter_map(Json::as_usize).collect()
+                        })
+                        .unwrap_or_default()
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let mut artifacts = BTreeMap::new();
+        let list = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for entry in list {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact without name"))?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} without file"))?;
+            let apath = dir.join(file);
+            if !apath.exists() {
+                bail!("artifact file missing: {}", apath.display());
+            }
+            let art = Artifact {
+                name: name.clone(),
+                path: apath,
+                kind: entry
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                family: entry
+                    .get("family")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                m: entry.get("m").and_then(Json::as_usize),
+                n: entry.get("n").and_then(Json::as_usize),
+                batch: entry.get("batch").and_then(Json::as_usize),
+                inputs: shapes(entry.get("inputs")),
+                outputs: shapes(entry.get("outputs")),
+                method: entry
+                    .get("method")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            };
+            artifacts.insert(name, art);
+        }
+        let flow = root.get("flow").and_then(|f| {
+            Some(FlowConfig {
+                dim: f.get("dim")?.as_usize()?,
+                blocks: f.get("blocks")?.as_usize()?,
+                train_batch: f.get("train_batch")?.as_usize()?,
+                sample_batches: f
+                    .get("sample_batches")?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+            })
+        });
+        let mut poly_grid: Vec<(usize, usize)> = artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "poly" && a.family.as_deref() == Some("sastre")
+            })
+            .filter_map(|a| Some((a.n?, a.batch?)))
+            .collect();
+        poly_grid.sort();
+        poly_grid.dedup();
+        Ok(Manifest { dir, artifacts, flow, poly_grid })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+
+    /// Name of the Sastre poly artifact for (m, n, b), if in the grid.
+    pub fn poly_name(&self, m: usize, n: usize, b: usize) -> String {
+        format!("poly_sastre_m{m}_n{n}_b{b}")
+    }
+
+    pub fn square_name(&self, n: usize, b: usize) -> String {
+        format!("square_n{n}_b{b}")
+    }
+
+    /// Does the grid cover matrices of order n (any batch)?
+    pub fn supports_order(&self, n: usize) -> bool {
+        self.poly_grid.iter().any(|&(gn, _)| gn == n)
+    }
+
+    /// Batch sizes available for order n, ascending.
+    pub fn batches_for(&self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .poly_grid
+            .iter()
+            .filter(|&&(gn, _)| gn == n)
+            .map(|&(_, b)| b)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Greedy batch plan: cover `k` matrices with the available artifact batch
+/// sizes (ascending `avail`), largest-first, padding the final chunk up to
+/// the smallest size that covers the remainder.
+pub fn plan_batches(k: usize, avail: &[usize]) -> Vec<usize> {
+    assert!(!avail.is_empty());
+    let mut sizes = avail.to_vec();
+    sizes.sort();
+    let mut rem = k;
+    let mut plan = Vec::new();
+    // Greedy largest-first over all available sizes...
+    for &b in sizes.iter().rev() {
+        while rem >= b {
+            plan.push(b);
+            rem -= b;
+        }
+    }
+    // ...then pad the remainder (< smallest size) with the smallest batch.
+    if rem > 0 {
+        plan.push(sizes[0]);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_batches_exact_and_padded() {
+        let avail = [1usize, 16, 64];
+        assert_eq!(plan_batches(64, &avail), vec![64]);
+        assert_eq!(plan_batches(1, &avail), vec![1]);
+        assert_eq!(plan_batches(2, &avail), vec![1, 1]);
+        assert_eq!(plan_batches(80, &avail), vec![64, 16]);
+        assert_eq!(plan_batches(65, &avail), vec![64, 1]);
+        assert_eq!(plan_batches(130, &avail), vec![64, 64, 1, 1]);
+    }
+
+    #[test]
+    fn plan_batches_covers_request() {
+        let avail = [1usize, 16, 64];
+        for k in 1..200 {
+            let plan = plan_batches(k, &avail);
+            let total: usize = plan.iter().sum();
+            assert!(total >= k, "k={k} plan={plan:?}");
+            // With batch 1 available there is never padding waste.
+            assert_eq!(total, k, "k={k} plan={plan:?}");
+        }
+        // Without batch 1, waste is below the smallest size.
+        for k in 1..100 {
+            let plan = plan_batches(k, &[8, 32]);
+            let total: usize = plan.iter().sum();
+            assert!(total >= k && total - k < 8, "k={k} plan={plan:?}");
+        }
+    }
+
+    #[test]
+    fn plan_single_size() {
+        assert_eq!(plan_batches(5, &[4]), vec![4, 4]);
+        assert_eq!(plan_batches(4, &[4]), vec![4]);
+    }
+
+    #[test]
+    fn manifest_load_real() {
+        // Uses the repo's generated artifacts when present.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifacts.len() >= 50);
+        assert!(m.supports_order(64));
+        let batches = m.batches_for(64);
+        assert!(batches.contains(&1) && batches.contains(&64));
+        let flow = m.flow.as_ref().expect("flow config");
+        assert_eq!(flow.dim, 64);
+        // Every poly artifact has consistent declared shapes.
+        for a in m.artifacts.values() {
+            if a.kind == "poly" {
+                let (n, b) = (a.n.unwrap(), a.batch.unwrap());
+                assert_eq!(a.inputs, vec![vec![b, n, n]], "{}", a.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT execution engine: compiles HLO-text artifacts on the CPU client
+//! (lazily, cached) and runs them with `Matrix` marshalling.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file
+//! -> XlaComputation::from_proto -> client.compile -> execute`. All L2
+//! computations were lowered with `return_tuple=True`, so outputs are
+//! decomposed tuples.
+//!
+//! PJRT objects wrap raw C pointers without Sync guarantees, so the
+//! executor is deliberately `!Sync`-shaped: the coordinator owns one on its
+//! dispatch thread (see `coordinator::dispatch`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{plan_batches, Manifest};
+use crate::linalg::Matrix;
+
+/// Compiled-executable cache keyed by artifact name.
+pub struct Executor {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Compilations performed (for metrics / warmup verification).
+    pub compiles: RefCell<usize>,
+}
+
+/// A batch of square matrices marshalled as one (b, n, n) f64 literal.
+pub fn matrices_to_literal(mats: &[Matrix]) -> Result<xla::Literal> {
+    let b = mats.len();
+    anyhow::ensure!(b > 0, "empty batch");
+    let n = mats[0].order();
+    let mut data = Vec::with_capacity(b * n * n);
+    for m in mats {
+        anyhow::ensure!(m.order() == n, "mixed orders in batch");
+        data.extend_from_slice(m.data());
+    }
+    Ok(xla::Literal::vec1(&data).reshape(&[b as i64, n as i64, n as i64])?)
+}
+
+/// Inverse of [`matrices_to_literal`]; returns the first `take` matrices.
+pub fn literal_to_matrices(
+    lit: &xla::Literal,
+    n: usize,
+    take: usize,
+) -> Result<Vec<Matrix>> {
+    let data = lit.to_vec::<f64>()?;
+    anyhow::ensure!(
+        data.len() % (n * n) == 0,
+        "literal size {} not a multiple of {n}x{n}",
+        data.len()
+    );
+    let b = data.len() / (n * n);
+    anyhow::ensure!(take <= b, "take {take} > batch {b}");
+    Ok((0..take)
+        .map(|i| {
+            Matrix::from_vec(
+                n,
+                n,
+                data[i * n * n..(i + 1) * n * n].to_vec(),
+            )
+        })
+        .collect())
+}
+
+/// A flat f64 tensor literal (flow parameters, data batches).
+pub fn array_to_literal(shape: &[usize], data: &[f64]) -> Result<xla::Literal> {
+    let count: usize = shape.iter().product();
+    anyhow::ensure!(count == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+impl Executor {
+    /// Load the manifest in `dir` and connect the PJRT CPU client.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Executor> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Executor {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn compile(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&art.path)
+            .map_err(|e| {
+                anyhow!("parsing HLO text {}: {e}", art.path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        *self.compiles.borrow_mut() += 1;
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns decomposed outputs.
+    pub fn run(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetch result: {e}"))?;
+        // return_tuple=True: decompose (1-tuples included).
+        lit.to_tuple().map_err(|e| anyhow!("{name}: tuple: {e}"))
+    }
+
+    /// Warm the compile cache for the given artifact names.
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compile(n)?;
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // The expm pipeline over artifacts (Algorithm 2 with PJRT compute)
+    // ---------------------------------------------------------------------
+
+    /// e^{W_i} for a batch of same-order matrices with *uniform* (m, s)
+    /// (the coordinator groups requests so this holds). Scaling is done
+    /// natively (O(n^2)); the polynomial and the s squarings run on PJRT.
+    pub fn expm_batch(
+        &self,
+        mats: &[Matrix],
+        m: usize,
+        s: u32,
+    ) -> Result<Vec<Matrix>> {
+        anyhow::ensure!(!mats.is_empty(), "empty batch");
+        let n = mats[0].order();
+        anyhow::ensure!(
+            self.manifest.supports_order(n),
+            "order {n} not in the artifact grid"
+        );
+        if m == 0 {
+            return Ok(mats.iter().map(|w| Matrix::identity(w.order())).collect());
+        }
+        let avail = self.manifest.batches_for(n);
+        let plan = plan_batches(mats.len(), &avail);
+        let mut out = Vec::with_capacity(mats.len());
+        let mut cursor = 0usize;
+        let scale = (2.0f64).powi(-(s as i32));
+        for chunk in plan {
+            let take = chunk.min(mats.len() - cursor);
+            if take == 0 {
+                break;
+            }
+            // Scale natively and pad the chunk with zero matrices.
+            let mut scaled: Vec<Matrix> = mats[cursor..cursor + take]
+                .iter()
+                .map(|w| w.scaled(scale))
+                .collect();
+            while scaled.len() < chunk {
+                scaled.push(Matrix::zeros(n, n));
+            }
+            let lit = matrices_to_literal(&scaled)?;
+            let poly = self.manifest.poly_name(m, n, chunk);
+            let mut outs = self.run(&poly, &[lit])?;
+            let mut x = outs
+                .pop()
+                .ok_or_else(|| anyhow!("{poly}: no output"))?;
+            let square = self.manifest.square_name(n, chunk);
+            for _ in 0..s {
+                let mut outs = self.run(&square, &[x])?;
+                x = outs
+                    .pop()
+                    .ok_or_else(|| anyhow!("{square}: no output"))?;
+            }
+            out.extend(literal_to_matrices(&x, n, take)?);
+            cursor += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marshalling_roundtrip() {
+        let mats = vec![
+            Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64),
+            Matrix::identity(4),
+        ];
+        let lit = matrices_to_literal(&mats).unwrap();
+        let back = literal_to_matrices(&lit, 4, 2).unwrap();
+        assert_eq!(back[0], mats[0]);
+        assert_eq!(back[1], mats[1]);
+    }
+
+    #[test]
+    fn marshalling_rejects_mixed_orders() {
+        let mats = vec![Matrix::identity(3), Matrix::identity(4)];
+        assert!(matrices_to_literal(&mats).is_err());
+    }
+
+    #[test]
+    fn array_literal_shape_check() {
+        assert!(array_to_literal(&[2, 3], &[0.0; 6]).is_ok());
+        assert!(array_to_literal(&[2, 3], &[0.0; 5]).is_err());
+    }
+    // PJRT end-to-end paths are covered by rust/tests/integration_runtime.rs
+    // (they need the built artifacts).
+}

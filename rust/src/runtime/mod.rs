@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) produced by
+//! `make artifacts` and executes them on the CPU PJRT client. Python never
+//! runs here — the Rust binary is self-contained once `artifacts/` exists.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{plan_batches, Artifact, FlowConfig, Manifest};
+pub use executor::{
+    array_to_literal, literal_to_matrices, matrices_to_literal, Executor,
+};
+
+/// Default artifact directory: `$EXPMFLOW_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("EXPMFLOW_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

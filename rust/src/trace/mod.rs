@@ -1,0 +1,152 @@
+//! Workload traces — the Figures 2/3/4 substrate.
+//!
+//! The paper instruments 5000 expm invocations inside Glow training on
+//! CIFAR-10 / ImageNet32 / ImageNet64 and reports, per call: the tensor's
+//! matrix count and sizes plus the max matrix norm (∞-norms spanning
+//! 2.84e-4..12.57, 1.17e-5..12.49, 1.27e-5..12.8 respectively). We
+//! regenerate statistically matched synthetic traces: the expm methods
+//! only observe (n, batch, norms), so matching those distributions
+//! reproduces the degree/scaling/product/time distributions (DESIGN.md §3).
+
+pub mod replay;
+
+use crate::linalg::{norm1, Matrix};
+use crate::util::rng::Rng;
+
+/// Which paper workload a trace mimics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    Cifar10,
+    ImageNet32,
+    ImageNet64,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Cifar10 => "CIFAR-10",
+            TraceKind::ImageNet32 => "ImageNet32",
+            TraceKind::ImageNet64 => "ImageNet64",
+        }
+    }
+
+    /// Reported ∞-norm range of the weight matrices (paper Sec. 4.2).
+    pub fn norm_range(&self) -> (f64, f64) {
+        match self {
+            TraceKind::Cifar10 => (2.84e-4, 12.57),
+            TraceKind::ImageNet32 => (1.17e-5, 12.49),
+            TraceKind::ImageNet64 => (1.27e-5, 12.8),
+        }
+    }
+
+    /// Matrix orders appearing in the multi-scale Glow channel structure
+    /// (squeeze quadruples channels per level), mapped onto the artifact
+    /// grid {8, 16, 32, 64}.
+    pub fn orders(&self) -> &'static [usize] {
+        match self {
+            TraceKind::Cifar10 => &[8, 16, 32],
+            TraceKind::ImageNet32 => &[8, 16, 32, 64],
+            TraceKind::ImageNet64 => &[16, 32, 64],
+        }
+    }
+
+    pub fn all() -> [TraceKind; 3] {
+        [TraceKind::Cifar10, TraceKind::ImageNet32, TraceKind::ImageNet64]
+    }
+}
+
+/// One recorded expm invocation: a tensor of same-order weight matrices.
+pub struct TraceCall {
+    pub matrices: Vec<Matrix>,
+    pub n: usize,
+}
+
+/// Deterministic synthetic trace of `calls` invocations.
+///
+/// Per call: pick a layer order from the workload's ladder, a batch size
+/// from the Glow coupling structure (flows-per-level), and draw matrices
+/// as Gaussian ensembles rescaled to a log-uniform norm in the reported
+/// range. Training norms drift upward over time — later calls bias toward
+/// the upper decade, mirroring the paper's observation that weights grow.
+pub fn generate(kind: TraceKind, calls: usize, seed: u64) -> Vec<TraceCall> {
+    let mut rng = Rng::new(seed ^ 0xF10A);
+    let (lo, hi) = kind.norm_range();
+    let orders = kind.orders();
+    let mut out = Vec::with_capacity(calls);
+    for c in 0..calls {
+        let n = orders[rng.below(orders.len())];
+        // Glow-ish: K flow steps per level share one invocation.
+        let batch = [4usize, 8, 16, 32][rng.below(4)];
+        let progress = c as f64 / calls.max(1) as f64;
+        // Norm distribution: log-uniform, with the lower bound rising as
+        // training progresses (weights start near zero and grow).
+        let lo_c = lo * (hi / lo).powf(0.5 * progress);
+        let mut matrices = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let target = rng.log_uniform(lo_c, hi);
+            let mut a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let nn = norm1(&a);
+            a.scale_in_place(target / nn);
+            matrices.push(a);
+        }
+        out.push(TraceCall { matrices, n });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::norm_inf;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = generate(TraceKind::Cifar10, 10, 1);
+        let b = generate(TraceKind::Cifar10, 10, 1);
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.n, y.n);
+            assert_eq!(x.matrices[0], y.matrices[0]);
+        }
+    }
+
+    #[test]
+    fn norms_within_reported_range() {
+        for kind in TraceKind::all() {
+            let (lo, hi) = kind.norm_range();
+            let trace = generate(kind, 50, 2);
+            for call in &trace {
+                for m in &call.matrices {
+                    let n1 = norm1(m);
+                    assert!(
+                        n1 >= lo * 0.5 && n1 <= hi * 1.5,
+                        "{} norm {n1}",
+                        kind.name()
+                    );
+                    assert!(norm_inf(m).is_finite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn orders_follow_ladder() {
+        let trace = generate(TraceKind::ImageNet64, 40, 3);
+        for call in &trace {
+            assert!(TraceKind::ImageNet64.orders().contains(&call.n));
+            assert!(call.matrices.iter().all(|m| m.order() == call.n));
+        }
+    }
+
+    #[test]
+    fn norm_distribution_spans_decades() {
+        let trace = generate(TraceKind::ImageNet32, 300, 4);
+        let norms: Vec<f64> = trace
+            .iter()
+            .flat_map(|c| c.matrices.iter().map(norm1))
+            .collect();
+        let min = norms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = norms.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 1e3, "span {:.1e}", max / min);
+    }
+}

@@ -1,0 +1,113 @@
+//! Trace replay: run every call of a trace through each expm method and
+//! collect the per-call records the paper plots in Figures 2–4
+//! (error / degree / scaling / products / wall time).
+
+use std::time::Instant;
+
+use crate::expm::{expm, pade::expm_pade13, ExpmOptions, Method};
+use crate::linalg::norms::rel_err_fro;
+use crate::util::threads::parallel_map;
+
+use super::TraceCall;
+
+/// Per-call record for one method.
+#[derive(Clone, Debug)]
+pub struct CallRecord {
+    /// Max degree across the call's tensor (the paper logs per-call).
+    pub m: usize,
+    /// Max scaling parameter.
+    pub s: u32,
+    /// Total matrix products over the tensor.
+    pub products: usize,
+    /// Max normwise relative error vs the Padé oracle.
+    pub max_err: f64,
+    /// Wall time for the whole call (seconds).
+    pub wall_s: f64,
+}
+
+/// Replay summary for one method over a whole trace.
+#[derive(Clone, Debug, Default)]
+pub struct ReplaySummary {
+    pub records: Vec<CallRecord>,
+    pub total_products: usize,
+    pub total_wall_s: f64,
+}
+
+/// Replay `trace` with `method`. `with_error` additionally computes the
+/// oracle error per matrix (expensive — Padé per matrix), as the paper
+/// does for its accuracy plots.
+pub fn replay(
+    trace: &[TraceCall],
+    method: Method,
+    tol: f64,
+    with_error: bool,
+) -> ReplaySummary {
+    let records = parallel_map(trace.len(), |i| {
+        let call = &trace[i];
+        let t0 = Instant::now();
+        let mut rec = CallRecord {
+            m: 0,
+            s: 0,
+            products: 0,
+            max_err: 0.0,
+            wall_s: 0.0,
+        };
+        let mut values = Vec::with_capacity(call.matrices.len());
+        for a in &call.matrices {
+            let r = expm(a, &ExpmOptions { method, tol });
+            rec.m = rec.m.max(r.stats.m);
+            rec.s = rec.s.max(r.stats.s);
+            rec.products += r.stats.matrix_products;
+            values.push(r.value);
+        }
+        rec.wall_s = t0.elapsed().as_secs_f64();
+        if with_error {
+            for (a, v) in call.matrices.iter().zip(&values) {
+                let oracle = expm_pade13(a);
+                if oracle.is_finite() {
+                    rec.max_err = rec.max_err.max(rel_err_fro(v, &oracle));
+                }
+            }
+        }
+        rec
+    });
+    let total_products = records.iter().map(|r| r.products).sum();
+    let total_wall_s = records.iter().map(|r| r.wall_s).sum();
+    ReplaySummary { records, total_products, total_wall_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate, TraceKind};
+
+    #[test]
+    fn replay_collects_all_calls() {
+        let trace = generate(TraceKind::Cifar10, 12, 5);
+        let s = replay(&trace, Method::Sastre, 1e-8, false);
+        assert_eq!(s.records.len(), 12);
+        assert!(s.total_products > 0);
+        assert!(s.total_wall_s > 0.0);
+    }
+
+    #[test]
+    fn sastre_products_beat_baseline_on_trace() {
+        let trace = generate(TraceKind::Cifar10, 30, 6);
+        let s = replay(&trace, Method::Sastre, 1e-8, false);
+        let b = replay(&trace, Method::Baseline, 1e-8, false);
+        let ratio = b.total_products as f64 / s.total_products as f64;
+        // Paper Fig. 2g: ~1.99x on CIFAR-10.
+        assert!(ratio > 1.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn errors_below_tolerance_scale() {
+        let trace = generate(TraceKind::ImageNet32, 10, 7);
+        let s = replay(&trace, Method::Sastre, 1e-8, true);
+        for r in &s.records {
+            // Normwise relative error can exceed the absolute truncation
+            // tolerance on tiny-norm outputs, but stays far below 1.
+            assert!(r.max_err < 1e-4, "err {}", r.max_err);
+        }
+    }
+}

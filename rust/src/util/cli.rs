@@ -1,0 +1,118 @@
+//! Tiny `--flag value` argument parser (clap is not vendored offline).
+//!
+//! Grammar: positional words and `--key [value]` pairs. A `--key` followed
+//! by another `--…` token or end-of-args is treated as a boolean flag.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(key.to_string(), v);
+                    }
+                    _ => {
+                        out.flags.insert(key.to_string(), "true".into());
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NB: a bare token following a flag is consumed as its value
+        // (`--verbose x` means verbose = "x"); boolean flags must come
+        // last or use `--flag=true`.
+        let a = parse(&["serve", "x", "--port", "8080", "--verbose"]);
+        assert_eq!(a.positional, vec!["serve", "x"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--n=64", "--eps=1e-8"]);
+        assert_eq!(a.get_usize("n", 0), 64);
+        assert!((a.get_f64("eps", 0.0) - 1e-8).abs() < 1e-20);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("mode", "native"), "native");
+        assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--fast"]);
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A "--key" followed by "--..." is a flag, so negative numbers must
+        // use the = form; verify that works.
+        let a = parse(&["--shift=-3.5"]);
+        assert!((a.get_f64("shift", 0.0) + 3.5).abs() < 1e-12);
+    }
+}

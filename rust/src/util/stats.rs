@@ -1,0 +1,166 @@
+//! Small statistics toolkit for the benches and figure renderers:
+//! percentiles/quartiles (the paper's whisker plots), means, and a
+//! micro-bench timing loop with warmup (criterion is not vendored).
+
+use std::time::Instant;
+
+/// Percentile by linear interpolation on the sorted copy (MATLAB-style).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Five-number whisker summary as drawn in the paper's Figures 1e/1f:
+/// median, quartiles, whiskers at 1.5 IQR, and outliers beyond them.
+#[derive(Clone, Debug)]
+pub struct Whisker {
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+    pub lo: f64,
+    pub hi: f64,
+    pub outliers: usize,
+}
+
+pub fn whisker(xs: &[f64]) -> Whisker {
+    let q1 = percentile(xs, 25.0);
+    let q3 = percentile(xs, 75.0);
+    let iqr = q3 - q1;
+    let (wlo, whi) = (q1 - 1.5 * iqr, q3 + 1.5 * iqr);
+    let inside: Vec<f64> = xs
+        .iter()
+        .cloned()
+        .filter(|&x| x >= wlo && x <= whi)
+        .collect();
+    Whisker {
+        median: median(xs),
+        q1,
+        q3,
+        lo: min(&inside),
+        hi: max(&inside),
+        outliers: xs.len() - inside.len(),
+    }
+}
+
+/// Timing summary from `bench_loop`.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub total_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then measure until
+/// either `min_iters` iterations AND `min_time_s` seconds have elapsed.
+pub fn bench_loop<F: FnMut()>(
+    warmup: usize,
+    min_iters: usize,
+    min_time_s: f64,
+    mut f: F,
+) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= min_iters
+            && start.elapsed().as_secs_f64() >= min_time_s
+        {
+            break;
+        }
+    }
+    Timing {
+        iters: samples.len(),
+        mean_s: mean(&samples),
+        median_s: median(&samples),
+        min_s: min(&samples),
+        total_s: samples.iter().sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((median(&[1.0, 2.0, 3.0, 10.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whisker_flags_outliers() {
+        let mut xs: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        xs.push(50.0); // far outlier
+        let w = whisker(&xs);
+        assert_eq!(w.outliers, 1);
+        assert!(w.hi <= 1.0 + 1e-12);
+        assert!((w.median - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut n = 0usize;
+        let t = bench_loop(2, 5, 0.0, || n += 1);
+        assert_eq!(t.iters, 5);
+        assert_eq!(n, 7);
+        assert!(t.min_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        assert_eq!(median(&xs), 5.0);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 9.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Scoped data-parallel helpers (rayon is not in the offline vendor set).
+//!
+//! `parallel_for_chunks` splits an index range across up to
+//! `available_parallelism()` OS threads using `std::thread::scope`. The
+//! closure receives a contiguous index sub-range; captures may borrow from
+//! the caller because the scope joins before returning. This is the
+//! work-horse under the blocked GEMM and the gallery/bench sweeps.
+
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for a problem of `work` units.
+pub fn thread_count(work: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1);
+    hw.min(work.max(1))
+}
+
+/// Run `f(lo, hi)` over disjoint chunks of `0..n` on multiple threads.
+///
+/// Chunks are sized so that each thread gets one contiguous block — good
+/// for cache locality in GEMM row panels. Falls back to a plain call when
+/// `n` is small or only one CPU is available.
+pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = thread_count(n / min_chunk.max(1));
+    if workers <= 1 || n <= min_chunk {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            if lo >= n {
+                break;
+            }
+            let hi = (lo + chunk).min(n);
+            let fref = &f;
+            scope.spawn(move || fref(lo, hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing loop: threads atomically claim indices `0..n` and
+/// call `f(i)`. Better than static chunks when per-item cost is skewed
+/// (e.g. gallery matrices of wildly different sizes).
+pub fn parallel_for_dynamic<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = thread_count(n);
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let fref = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                fref(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for_dynamic(n, |i| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 16, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_range_exactly_once() {
+        let n = 517;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_dynamic(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sums_match_serial() {
+        let n = 10_000usize;
+        let total = AtomicU64::new(0);
+        parallel_for_chunks(n, 64, |lo, hi| {
+            let mut local = 0u64;
+            for i in lo..hi {
+                local += i as u64;
+            }
+            total.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(
+            total.load(Ordering::Relaxed),
+            (n as u64 - 1) * n as u64 / 2
+        );
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        parallel_for_chunks(0, 8, |_, _| panic!("must not run"));
+        parallel_for_dynamic(0, |_| panic!("must not run"));
+    }
+}

@@ -1,0 +1,38 @@
+//! Shared helpers for the integration/property test binaries.
+#![allow(dead_code)] // each test binary uses a different subset
+
+use expmflow::linalg::{norm1, Matrix};
+use expmflow::util::rng::Rng;
+
+/// Artifact dir for this workspace; tests that need PJRT call
+/// [`artifacts_available`] and skip gracefully when `make artifacts`
+/// hasn't run.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn artifacts_available() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+pub fn skip_no_artifacts(test: &str) -> bool {
+    if artifacts_available() {
+        false
+    } else {
+        eprintln!("SKIP {test}: artifacts not built (run `make artifacts`)");
+        true
+    }
+}
+
+/// Random dense matrix rescaled to an exact 1-norm.
+pub fn randm_norm(n: usize, target: f64, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let nn = norm1(&a);
+    a.scaled(target / nn)
+}
+
+/// Normwise max-abs relative error.
+pub fn rel_err(a: &Matrix, b: &Matrix) -> f64 {
+    (a - b).max_abs() / b.max_abs().max(1e-300)
+}

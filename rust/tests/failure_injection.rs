@@ -1,0 +1,132 @@
+//! Failure injection: the runtime and service must degrade gracefully —
+//! corrupted HLO text, truncated manifests, missing files, poisoned
+//! requests — never panicking the dispatcher.
+
+mod common;
+
+use std::fs;
+
+use common::{artifacts_available, randm_norm};
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::linalg::Matrix;
+use expmflow::runtime::{Executor, Manifest};
+
+/// Copy the real artifact dir into a temp dir we can vandalize.
+fn clone_artifacts(tag: &str) -> Option<std::path::PathBuf> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let src = common::artifact_dir();
+    let dst = std::env::temp_dir().join(format!("expmflow_fi_{tag}"));
+    let _ = fs::remove_dir_all(&dst);
+    fs::create_dir_all(&dst).unwrap();
+    for entry in fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name();
+        fs::copy(entry.path(), dst.join(name)).unwrap();
+    }
+    Some(dst)
+}
+
+#[test]
+fn corrupted_hlo_text_is_an_error_not_a_crash() {
+    let Some(dir) = clone_artifacts("hlo") else { return };
+    // Vandalize one artifact body.
+    fs::write(dir.join("poly_sastre_m8_n8_b1.hlo.txt"), "ENTRY garbage {")
+        .unwrap();
+    let exec = Executor::new(&dir).unwrap();
+    let mats = vec![randm_norm(8, 0.5, 1)];
+    let err = exec.expm_batch(&mats, 8, 0);
+    assert!(err.is_err(), "corrupted artifact must error");
+    // Other artifacts still work.
+    let ok = exec.expm_batch(&mats, 4, 0);
+    assert!(ok.is_ok(), "unrelated artifacts unaffected: {ok:?}");
+    let _ = fs::remove_dir_all(dir);
+}
+
+#[test]
+fn missing_artifact_file_fails_manifest_load() {
+    let Some(dir) = clone_artifacts("missing") else { return };
+    fs::remove_file(dir.join("poly_sastre_m2_n16_b16.hlo.txt")).unwrap();
+    let res = Manifest::load(&dir);
+    assert!(res.is_err(), "missing file must fail load");
+    let _ = fs::remove_dir_all(dir);
+}
+
+#[test]
+fn truncated_manifest_is_an_error() {
+    let Some(dir) = clone_artifacts("manifest") else { return };
+    let path = dir.join("manifest.json");
+    let text = fs::read_to_string(&path).unwrap();
+    fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    let _ = fs::remove_dir_all(dir);
+}
+
+#[test]
+fn manifest_without_artifacts_key() {
+    let dir = std::env::temp_dir().join("expmflow_fi_nokey");
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(dir.join("manifest.json"), r#"{"format": 1}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    let _ = fs::remove_dir_all(dir);
+}
+
+#[test]
+fn service_with_bogus_artifact_dir_runs_native() {
+    // Nonexistent dir: service must come up in native-only mode and work.
+    let svc = ExpmService::start(ServiceConfig {
+        artifact_dir: Some("/nonexistent/expmflow".into()),
+        ..Default::default()
+    });
+    let mats = vec![randm_norm(16, 1.0, 9)];
+    let results = svc.compute(mats, 1e-8).unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].backend, "native");
+}
+
+#[test]
+fn service_survives_poisoned_then_valid_requests() {
+    let svc = ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        ..Default::default()
+    });
+    // A stream of invalid requests...
+    for _ in 0..5 {
+        assert!(svc.compute(vec![], 1e-8).is_err());
+        assert!(svc.compute(vec![Matrix::zeros(2, 3)], 1e-8).is_err());
+        assert!(svc
+            .compute(vec![Matrix::identity(3)], f64::NAN)
+            .is_err());
+    }
+    // ...must not poison subsequent valid work.
+    let r = svc.compute(vec![randm_norm(8, 1.0, 3)], 1e-8).unwrap();
+    assert_eq!(r.len(), 1);
+    assert!(r[0].value.is_finite());
+}
+
+#[test]
+fn vandalized_square_artifact_falls_back_in_service() {
+    // The dispatcher's PJRT failure path degrades to native per group.
+    let Some(dir) = clone_artifacts("svc") else { return };
+    for b in [1usize, 16, 64] {
+        fs::write(
+            dir.join(format!("square_n8_b{b}.hlo.txt")),
+            "HloModule broken",
+        )
+        .unwrap();
+    }
+    let svc = ExpmService::start(ServiceConfig {
+        artifact_dir: Some(dir.clone()),
+        ..Default::default()
+    });
+    // Norm big enough to force s >= 1 (i.e., touch the broken square).
+    let mats = vec![randm_norm(8, 6.0, 11)];
+    let results = svc.compute(mats.clone(), 1e-8).unwrap();
+    assert_eq!(results[0].backend, "native", "must fall back");
+    let oracle = expmflow::expm::pade::expm_pade13(&mats[0]);
+    assert!(common::rel_err(&results[0].value, &oracle) < 1e-7);
+    let _ = fs::remove_dir_all(dir);
+}

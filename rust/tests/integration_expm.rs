@@ -1,0 +1,163 @@
+//! Integration: the three dynamic methods across the whole gallery — the
+//! paper's headline properties as assertions (accuracy ordering, product
+//! ratios, scaling behaviour).
+
+mod common;
+
+use common::{randm_norm, rel_err};
+use expmflow::expm::{expm, pade::expm_pade13, ExpmOptions, Method};
+use expmflow::linalg::{gallery, norm1, Matrix};
+
+fn oracle_ok(o: &Matrix) -> bool {
+    o.is_finite() && o.max_abs() < 1e100
+}
+
+#[test]
+fn gallery_accuracy_all_methods() {
+    let bed = gallery::testbed(&[4, 8, 16, 32], 11);
+    let mut screened = 0usize;
+    let mut checked = 0usize;
+    for t in &bed {
+        let oracle = expm_pade13(&t.a);
+        if !oracle_ok(&oracle) {
+            screened += 1;
+            continue;
+        }
+        checked += 1;
+        for method in Method::all_dynamic() {
+            let r = expm(&t.a, &ExpmOptions { method, tol: 1e-8 });
+            assert!(r.value.is_finite(), "{} on {}", method.name(), t.name);
+            let err = rel_err(&r.value, &oracle);
+            assert!(
+                err < 1e-4,
+                "{} on {}: err {err:e}",
+                method.name(),
+                t.name
+            );
+        }
+    }
+    assert!(checked > 60, "checked {checked}, screened {screened}");
+}
+
+#[test]
+fn paper_product_ratio_on_gallery() {
+    // Figure 1g: baseline needs ~2.08x the products of sastre; ps ~1.20x.
+    let bed = gallery::testbed(&[8, 16, 32], 13);
+    let mut totals = [0usize; 3];
+    for t in &bed {
+        let oracle = expm_pade13(&t.a);
+        if !oracle_ok(&oracle) {
+            continue;
+        }
+        for (j, method) in Method::all_dynamic().into_iter().enumerate() {
+            let r = expm(&t.a, &ExpmOptions { method, tol: 1e-8 });
+            totals[j] += r.stats.matrix_products;
+        }
+    }
+    let (sastre, ps, baseline) = (totals[0], totals[1], totals[2]);
+    let r_baseline = baseline as f64 / sastre as f64;
+    let r_ps = ps as f64 / sastre as f64;
+    assert!(
+        r_baseline > 1.5,
+        "baseline/sastre products {r_baseline:.2} (want ~2)"
+    );
+    assert!(
+        r_ps > 0.95 && r_ps < 1.6,
+        "ps/sastre products {r_ps:.2} (want ~1.2)"
+    );
+}
+
+#[test]
+fn scaling_median_ordering() {
+    // Figure 1f: median s — ps ~1, sastre ~2, baseline ~5 (and the
+    // baseline's max blows up by orders of magnitude on big norms).
+    let bed = gallery::testbed(&[8, 16, 32], 17);
+    let mut smax = [0u32; 3];
+    let mut ssum = [0u64; 3];
+    let mut count = 0u64;
+    for t in &bed {
+        count += 1;
+        for (j, method) in Method::all_dynamic().into_iter().enumerate() {
+            let r = expm(&t.a, &ExpmOptions { method, tol: 1e-8 });
+            smax[j] = smax[j].max(r.stats.s);
+            ssum[j] += r.stats.s as u64;
+        }
+    }
+    let mean = |j: usize| ssum[j] as f64 / count as f64;
+    // Dynamic methods cap at 20; the baseline has no cap and scales by
+    // ||W|| alone, so it must scale more on average.
+    assert!(smax[0] <= 20 && smax[1] <= 20);
+    assert!(
+        mean(2) > mean(0),
+        "baseline mean s {} vs sastre {}",
+        mean(2),
+        mean(0)
+    );
+}
+
+#[test]
+fn tolerance_sweep_drives_cost() {
+    // Same matrix, loosening tolerance must not increase products.
+    let a = randm_norm(16, 3.0, 23);
+    let mut prev = usize::MAX;
+    for tol in [1e-14, 1e-10, 1e-8, 1e-5, 1e-2] {
+        let r = expm(&a, &ExpmOptions { method: Method::Sastre, tol });
+        assert!(r.stats.matrix_products <= prev);
+        prev = r.stats.matrix_products;
+        // And accuracy tracks the request.
+        let oracle = expm_pade13(&a);
+        let err = rel_err(&r.value, &oracle) * oracle.max_abs();
+        assert!(err <= tol * norm1(&oracle) * 1e3 + 1e-12, "tol {tol}: {err}");
+    }
+}
+
+#[test]
+fn special_matrices_exact_families() {
+    // Nilpotent: e^N is the finite sum — every method must nail it.
+    let n = gallery::jordbloc(6, 0.0);
+    for method in Method::all_dynamic() {
+        let r = expm(&n, &ExpmOptions { method, tol: 1e-10 });
+        // (e^N)[0][k] = 1/k!.
+        for k in 0..6usize {
+            let want = 1.0 / (1..=k).map(|x| x as f64).product::<f64>().max(1.0);
+            assert!(
+                (r.value[(0, k)] - want).abs() < 1e-9,
+                "{}: entry (0,{k})",
+                method.name()
+            );
+        }
+    }
+    // Skew-symmetric: e^A is orthogonal.
+    let a = {
+        let b = randm_norm(8, 2.0, 29);
+        let mut s = Matrix::zeros(8, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                s[(i, j)] = 0.5 * (b[(i, j)] - b[(j, i)]);
+            }
+        }
+        s
+    };
+    for method in Method::all_dynamic() {
+        let r = expm(&a, &ExpmOptions { method, tol: 1e-10 });
+        let prod = expmflow::linalg::matmul(&r.value, &r.value.transpose());
+        let err = (&prod - &Matrix::identity(8)).max_abs();
+        assert!(err < 1e-8, "{}: orthogonality {err:e}", method.name());
+    }
+}
+
+#[test]
+fn overscaling_guard_on_pathological_matrix() {
+    // The [[1, b], [0, -1]]-style matrix with huge b: the baseline scales
+    // by log2(||W||) (s ~ 11+), the dynamic methods cap and stay sane.
+    let a = gallery::overscale(8, 2000.0);
+    let oracle = expm_pade13(&a);
+    for method in Method::all_dynamic() {
+        let r = expm(&a, &ExpmOptions { method, tol: 1e-8 });
+        let err = rel_err(&r.value, &oracle);
+        assert!(err < 1e-5, "{}: {err:e}", method.name());
+    }
+    let base = expm(&a, &ExpmOptions { method: Method::Baseline, tol: 1e-8 });
+    let sast = expm(&a, &ExpmOptions { method: Method::Sastre, tol: 1e-8 });
+    assert!(base.stats.s > sast.stats.s);
+}

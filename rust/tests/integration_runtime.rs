@@ -1,0 +1,150 @@
+//! Integration: PJRT runtime vs the native engine and the jnp-built
+//! artifacts. These are the tests that prove the three layers compose —
+//! HLO text written by jax/Pallas, parsed and compiled by the xla crate,
+//! executed from Rust, matching the native f64 engine bit-for-bit-ish.
+
+mod common;
+
+use common::{randm_norm, rel_err, skip_no_artifacts};
+use expmflow::coordinator::dispatch::native_expm_planned;
+use expmflow::expm::pade::expm_pade13;
+use expmflow::linalg::Matrix;
+use expmflow::runtime::{matrices_to_literal, Executor};
+
+fn executor() -> Executor {
+    Executor::new(common::artifact_dir()).expect("load artifacts")
+}
+
+#[test]
+fn poly_artifacts_match_native_all_orders() {
+    if skip_no_artifacts("poly_artifacts_match_native_all_orders") {
+        return;
+    }
+    let exec = executor();
+    for &m in &[1usize, 2, 4, 8, 15] {
+        let mats: Vec<Matrix> =
+            (0..3).map(|i| randm_norm(16, 0.8, 100 + i + m as u64)).collect();
+        let got = exec.expm_batch(&mats, m, 0).expect("pjrt expm");
+        for (g, a) in got.iter().zip(&mats) {
+            // s = 0: the artifact computes the bare polynomial T_m(A).
+            let (want, _) = native_expm_planned(a, m, 0);
+            let err = rel_err(g, &want);
+            assert!(err < 1e-12, "m={m}: err {err:e}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_with_squaring_matches_oracle() {
+    if skip_no_artifacts("pipeline_with_squaring_matches_oracle") {
+        return;
+    }
+    let exec = executor();
+    for (i, &(norm, m, s)) in
+        [(4.0f64, 8usize, 3u32), (1.5, 15, 1), (0.9, 8, 1)].iter().enumerate()
+    {
+        let mats: Vec<Matrix> =
+            (0..2).map(|j| randm_norm(32, norm, 7 * i as u64 + j)).collect();
+        let got = exec.expm_batch(&mats, m, s).expect("pjrt expm");
+        for (g, a) in got.iter().zip(&mats) {
+            let want = expm_pade13(a);
+            let err = rel_err(g, &want);
+            assert!(err < 1e-7, "case {i}: err {err:e}");
+        }
+    }
+}
+
+#[test]
+fn batch_padding_and_chunking() {
+    if skip_no_artifacts("batch_padding_and_chunking") {
+        return;
+    }
+    let exec = executor();
+    // 70 matrices -> plan [64, 1, ...]: exercises chunk + pad paths.
+    let mats: Vec<Matrix> =
+        (0..70).map(|i| randm_norm(8, 1.0, 500 + i)).collect();
+    let got = exec.expm_batch(&mats, 8, 1).expect("pjrt expm");
+    assert_eq!(got.len(), 70);
+    for (g, a) in got.iter().zip(&mats) {
+        let (want, _) = native_expm_planned(a, 8, 1);
+        assert!(rel_err(g, &want) < 1e-11);
+    }
+}
+
+#[test]
+fn executable_cache_hits() {
+    if skip_no_artifacts("executable_cache_hits") {
+        return;
+    }
+    let exec = executor();
+    let mats: Vec<Matrix> = (0..2).map(|i| randm_norm(8, 0.5, i)).collect();
+    exec.expm_batch(&mats, 4, 0).unwrap();
+    let after_first = *exec.compiles.borrow();
+    exec.expm_batch(&mats, 4, 0).unwrap();
+    assert_eq!(
+        *exec.compiles.borrow(),
+        after_first,
+        "second run must not recompile"
+    );
+}
+
+#[test]
+fn unsupported_order_is_an_error() {
+    if skip_no_artifacts("unsupported_order_is_an_error") {
+        return;
+    }
+    let exec = executor();
+    let mats = vec![randm_norm(12, 1.0, 1)]; // 12 not in {8,16,32,64}
+    assert!(exec.expm_batch(&mats, 8, 0).is_err());
+}
+
+#[test]
+fn square_artifact_is_a_true_square() {
+    if skip_no_artifacts("square_artifact_is_a_true_square") {
+        return;
+    }
+    let exec = executor();
+    // b=2 isn't in the grid; only declared shapes exist.
+    let mats: Vec<Matrix> = (0..2).map(|i| randm_norm(16, 1.0, 50 + i)).collect();
+    let lit = matrices_to_literal(&mats).unwrap();
+    assert!(exec.run("square_n16_b2", &[lit]).is_err());
+    // The declared one works:
+    let mats16: Vec<Matrix> =
+        (0..16).map(|i| randm_norm(16, 1.0, 60 + i)).collect();
+    let lit = matrices_to_literal(&mats16).unwrap();
+    let outs = exec.run("square_n16_b16", &[lit]).unwrap();
+    let sq = expmflow::runtime::literal_to_matrices(&outs[0], 16, 16).unwrap();
+    for (s, a) in sq.iter().zip(&mats16) {
+        let want = expmflow::linalg::matmul(a, a);
+        assert!(rel_err(s, &want) < 1e-12);
+    }
+}
+
+#[test]
+fn lowrank_artifact_matches_native() {
+    if skip_no_artifacts("lowrank_artifact_matches_native") {
+        return;
+    }
+    let exec = executor();
+    let name = "lowrank_m8_n64_t8";
+    if exec.manifest.get(name).is_err() {
+        eprintln!("SKIP: {name} not emitted");
+        return;
+    }
+    use expmflow::util::rng::Rng;
+    let mut rng = Rng::new(77);
+    let a1 = Matrix::from_fn(64, 8, |_, _| rng.normal() * 0.1);
+    let a2 = Matrix::from_fn(8, 64, |_, _| rng.normal() * 0.1);
+    let l1 = expmflow::runtime::array_to_literal(&[64, 8], a1.data()).unwrap();
+    let l2 = expmflow::runtime::array_to_literal(&[8, 64], a2.data()).unwrap();
+    let outs = exec.run(name, &[l1, l2]).unwrap();
+    let got =
+        expmflow::runtime::literal_to_matrices(&outs[0], 64, 1).unwrap();
+    let (want, _) = expmflow::expm::baseline::expm_lowrank(&a1, &a2, 1e-16);
+    // The artifact uses fixed order m=8; the native loop runs further, so
+    // compare both against the true exponential of A1 A2.
+    let w = expmflow::linalg::matmul(&a1, &a2);
+    let oracle = expm_pade13(&w);
+    assert!(rel_err(&got[0], &oracle) < 1e-8);
+    assert!(rel_err(&want, &oracle) < 1e-8);
+}

@@ -1,0 +1,132 @@
+//! Integration: the expm service end-to-end, including the PJRT backend
+//! when artifacts are present (grid orders route to PJRT, off-grid orders
+//! fall back to native, both give oracle-grade answers through one API).
+
+mod common;
+
+use common::{artifact_dir, artifacts_available, randm_norm, rel_err};
+use expmflow::coordinator::batcher::BatchPolicy;
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::expm::pade::expm_pade13;
+use expmflow::linalg::Matrix;
+use std::time::Duration;
+
+fn pjrt_service() -> ExpmService {
+    ExpmService::start(ServiceConfig {
+        policy: BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        },
+        artifact_dir: Some(artifact_dir()),
+    })
+}
+
+#[test]
+fn service_routes_grid_orders_to_pjrt() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let svc = pjrt_service();
+    let mats: Vec<Matrix> = (0..6).map(|i| randm_norm(16, 1.0, i)).collect();
+    let results = svc.compute(mats.clone(), 1e-8).unwrap();
+    for (r, a) in results.iter().zip(&mats) {
+        assert_eq!(r.backend, "pjrt", "grid order must route to PJRT");
+        let oracle = expm_pade13(a);
+        assert!(rel_err(&r.value, &oracle) < 1e-7);
+    }
+}
+
+#[test]
+fn service_off_grid_falls_back_native() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let svc = pjrt_service();
+    let mats: Vec<Matrix> = (0..3).map(|i| randm_norm(12, 1.0, i)).collect();
+    let results = svc.compute(mats.clone(), 1e-8).unwrap();
+    for (r, a) in results.iter().zip(&mats) {
+        assert_eq!(r.backend, "native");
+        let oracle = expm_pade13(a);
+        assert!(rel_err(&r.value, &oracle) < 1e-7);
+    }
+}
+
+#[test]
+fn mixed_grid_and_off_grid_request() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let svc = pjrt_service();
+    let mats = vec![
+        randm_norm(16, 0.5, 1), // grid
+        randm_norm(10, 0.5, 2), // off-grid
+        randm_norm(64, 2.0, 3), // grid
+    ];
+    let results = svc.compute(mats.clone(), 1e-8).unwrap();
+    assert_eq!(results.len(), 3);
+    for (r, a) in results.iter().zip(&mats) {
+        assert_eq!(r.value.order(), a.order());
+        let oracle = expm_pade13(a);
+        assert!(rel_err(&r.value, &oracle) < 1e-7);
+    }
+    assert_eq!(results[0].backend, "pjrt");
+    assert_eq!(results[1].backend, "native");
+    assert_eq!(results[2].backend, "pjrt");
+}
+
+#[test]
+fn throughput_metrics_accumulate() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let svc = pjrt_service();
+    let mut pending = Vec::new();
+    for k in 0..10u64 {
+        let mats: Vec<Matrix> =
+            (0..8).map(|i| randm_norm(32, 1.5, k * 100 + i)).collect();
+        pending.push(svc.submit(mats, 1e-8));
+    }
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.latency_s < 30.0);
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.requests, 10);
+    assert_eq!(snap.matrices, 80);
+    assert!(snap.batches >= 5);
+    assert!(snap.matrix_products > 0);
+    assert!(snap.mean_batch_fill > 0.0);
+}
+
+#[test]
+fn paper_norm_range_workload() {
+    // Drive the service with the CIFAR-10-like norm distribution and
+    // check the degree histogram is spread across the ladder (low norms
+    // pick low orders — the core of the paper's cost win).
+    let svc = ExpmService::start(ServiceConfig {
+        policy: BatchPolicy::default(),
+        artifact_dir: if artifacts_available() {
+            Some(artifact_dir())
+        } else {
+            None
+        },
+    });
+    let trace = expmflow::trace::generate(
+        expmflow::trace::TraceKind::Cifar10,
+        40,
+        5,
+    );
+    for call in &trace {
+        let results = svc.compute(call.matrices.clone(), 1e-8).unwrap();
+        assert_eq!(results.len(), call.matrices.len());
+    }
+    let snap = svc.metrics.snapshot();
+    let degrees: Vec<usize> = snap.degree_hist.keys().cloned().collect();
+    assert!(degrees.len() >= 3, "degree spread {degrees:?}");
+    assert!(degrees.iter().all(|d| [0, 1, 2, 4, 8, 15].contains(d)));
+}

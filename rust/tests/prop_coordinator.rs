@@ -1,0 +1,171 @@
+//! Property tests on the coordinator: routing, batching and state
+//! invariants under randomized request mixes (the L3 analogue of the
+//! paper's "no request is lost, no result is reordered" contract).
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::randm_norm;
+use expmflow::coordinator::batcher::{BatchPolicy, Batcher, Item};
+use expmflow::coordinator::request::Collector;
+use expmflow::coordinator::selector::{plan_all, plan_matrix, Plan};
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::expm::pade::expm_pade13;
+use expmflow::linalg::Matrix;
+use expmflow::util::rng::Rng;
+
+const CASES: u64 = 25;
+
+fn native_service() -> ExpmService {
+    ExpmService::start(ServiceConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        artifact_dir: None,
+    })
+}
+
+#[test]
+fn prop_every_request_answered_in_order() {
+    // Random mixes of orders/norms/request sizes: every request gets all
+    // its matrices back, in submission slot order, numerically correct.
+    let svc = Arc::new(native_service());
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let count = 1 + rng.below(6);
+        let mats: Vec<Matrix> = (0..count)
+            .map(|i| {
+                let n = [4usize, 8, 12, 16][rng.below(4)];
+                randm_norm(n, rng.log_uniform(1e-4, 10.0), seed * 100 + i as u64)
+            })
+            .collect();
+        let results = svc.compute(mats.clone(), 1e-8).unwrap();
+        assert_eq!(results.len(), mats.len(), "seed {seed}");
+        for (r, a) in results.iter().zip(&mats) {
+            assert_eq!(r.value.order(), a.order(), "seed {seed}: order swap");
+            let oracle = expm_pade13(a);
+            let err = common::rel_err(&r.value, &oracle);
+            assert!(err < 1e-6, "seed {seed}: err {err:e}");
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_items() {
+    // Push random items, flush with random policies: nothing lost, nothing
+    // duplicated, every flushed group is key-homogeneous and within size.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let total = 1 + rng.below(200);
+        let mut batcher = Batcher::new();
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let collector = Collector::new(0, total, tx);
+        for slot in 0..total {
+            let plan = Plan {
+                n: [4usize, 8][rng.below(2)],
+                m: [2usize, 8, 15][rng.below(3)],
+                s: rng.below(3) as u32,
+            };
+            batcher.push(Item {
+                matrix: Matrix::identity(plan.n),
+                plan,
+                tol: 1e-8,
+                powers: None,
+                collector: collector.clone(),
+                slot,
+                enqueued: std::time::Instant::now(),
+            });
+        }
+        let max_batch = 1 + rng.below(16);
+        let policy =
+            BatchPolicy { max_batch, max_wait: Duration::ZERO };
+        let mut seen = 0usize;
+        let full = batcher.take_full(&policy);
+        for group in &full {
+            assert!(group.len() <= max_batch, "seed {seed}");
+            let key = group[0].plan.key();
+            assert!(group.iter().all(|i| i.plan.key() == key), "seed {seed}");
+            seen += group.len();
+        }
+        let rest = batcher.drain_all();
+        for group in &rest {
+            let key = group[0].plan.key();
+            assert!(group.iter().all(|i| i.plan.key() == key), "seed {seed}");
+            seen += group.len();
+        }
+        assert_eq!(seen, total, "seed {seed}: lost/duplicated items");
+        assert!(batcher.is_empty());
+    }
+}
+
+#[test]
+fn prop_plans_deterministic_and_scale_covariant() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let n = 4 + rng.below(10);
+        let a = randm_norm(n, rng.log_uniform(1e-3, 10.0), 3000 + seed);
+        let p1 = plan_matrix(&a, 1e-8);
+        let p2 = plan_matrix(&a, 1e-8);
+        assert_eq!(p1, p2, "seed {seed}: nondeterministic plan");
+        // Halving the matrix can only shrink the plan (m, s ordering).
+        let ph = plan_matrix(&a.scaled(0.5), 1e-8);
+        assert!(
+            ph.s <= p1.s && ph.m <= p1.m,
+            "seed {seed}: {ph:?} vs {p1:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_group_keys_partition_requests() {
+    // plan_all output, grouped by key, covers each index exactly once.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let count = 1 + rng.below(40);
+        let mats: Vec<Matrix> = (0..count)
+            .map(|i| {
+                let n = [4usize, 6, 8][rng.below(3)];
+                randm_norm(n, rng.log_uniform(1e-5, 30.0), 5000 + seed + i as u64)
+            })
+            .collect();
+        let plans = plan_all(&mats, 1e-8);
+        assert_eq!(plans.len(), mats.len());
+        let mut by_key: HashMap<(usize, usize, u32), Vec<usize>> =
+            HashMap::new();
+        for (i, p) in plans.iter().enumerate() {
+            assert_eq!(p.n, mats[i].order(), "seed {seed}");
+            by_key.entry(p.key()).or_default().push(i);
+        }
+        let covered: usize = by_key.values().map(Vec::len).sum();
+        assert_eq!(covered, count, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_service_survives_error_storms() {
+    // Interleave valid and invalid requests: errors never poison later
+    // requests, metrics count them all.
+    let svc = native_service();
+    let mut rng = Rng::new(9);
+    let mut ok = 0usize;
+    let mut bad = 0usize;
+    for seed in 0..40u64 {
+        if rng.below(3) == 0 {
+            let e = svc.compute(vec![Matrix::zeros(3, 5)], 1e-8);
+            assert!(e.is_err());
+            bad += 1;
+        } else {
+            let a = randm_norm(6, 1.0, 7000 + seed);
+            let r = svc.compute(vec![a], 1e-8).unwrap();
+            assert_eq!(r.len(), 1);
+            ok += 1;
+        }
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.errors as usize, bad);
+    assert_eq!(snap.requests as usize, ok + bad);
+}

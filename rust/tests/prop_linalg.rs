@@ -1,0 +1,182 @@
+//! Property tests over the linear-algebra substrate (randomized,
+//! seed-sweeping; proptest isn't vendored, so generators are explicit and
+//! failures print the seed for replay).
+
+mod common;
+
+use expmflow::linalg::{
+    cond1, matmul, norm1, norm2_est, norm_fro, norm_inf, Lu, Matrix,
+};
+use expmflow::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+fn randm(rng: &mut Rng, n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |_, _| rng.normal())
+}
+
+#[test]
+fn prop_matmul_distributes_over_addition() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(20);
+        let a = randm(&mut rng, n);
+        let b = randm(&mut rng, n);
+        let c = randm(&mut rng, n);
+        let left = matmul(&a, &(&b + &c));
+        let right = &matmul(&a, &b) + &matmul(&a, &c);
+        let err = (&left - &right).max_abs();
+        assert!(err < 1e-10 * n as f64, "seed {seed}: {err}");
+    }
+}
+
+#[test]
+fn prop_transpose_reverses_products() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let n = 2 + rng.below(16);
+        let a = randm(&mut rng, n);
+        let b = randm(&mut rng, n);
+        let left = matmul(&a, &b).transpose();
+        let right = matmul(&b.transpose(), &a.transpose());
+        assert!((&left - &right).max_abs() < 1e-11, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_norm_submultiplicative() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let n = 2 + rng.below(12);
+        let a = randm(&mut rng, n);
+        let b = randm(&mut rng, n);
+        let ab = matmul(&a, &b);
+        assert!(
+            norm1(&ab) <= norm1(&a) * norm1(&b) * (1.0 + 1e-12),
+            "seed {seed}"
+        );
+        assert!(
+            norm_inf(&ab) <= norm_inf(&a) * norm_inf(&b) * (1.0 + 1e-12),
+            "seed {seed}"
+        );
+        assert!(
+            norm_fro(&ab) <= norm_fro(&a) * norm_fro(&b) * (1.0 + 1e-12),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_norm_triangle_inequality() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let n = 1 + rng.below(15);
+        let a = randm(&mut rng, n);
+        let b = randm(&mut rng, n);
+        let s = &a + &b;
+        assert!(norm1(&s) <= norm1(&a) + norm1(&b) + 1e-12, "seed {seed}");
+        assert!(
+            norm_fro(&s) <= norm_fro(&a) + norm_fro(&b) + 1e-12,
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_norm2_between_bounds() {
+    // ||A||_2 <= sqrt(||A||_1 ||A||_inf), ||A||_2 >= ||A||_F / sqrt(n).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let n = 2 + rng.below(10);
+        let a = randm(&mut rng, n);
+        let n2 = norm2_est(&a, 50);
+        assert!(
+            n2 <= (norm1(&a) * norm_inf(&a)).sqrt() * (1.0 + 1e-8),
+            "seed {seed}"
+        );
+        assert!(
+            n2 >= norm_fro(&a) / (n as f64).sqrt() * (1.0 - 1e-2),
+            "seed {seed}: {n2} vs {}",
+            norm_fro(&a) / (n as f64).sqrt()
+        );
+    }
+}
+
+#[test]
+fn prop_lu_solve_residual() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let n = 1 + rng.below(24);
+        let mut a = randm(&mut rng, n);
+        a.add_diag(3.0); // keep comfortably nonsingular
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let lu = Lu::new(&a);
+        assert!(!lu.is_singular(), "seed {seed}");
+        let x = lu.solve_vec(&b);
+        let ax = a.matvec(&x);
+        let res: f64 = ax
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        assert!(res < 1e-9, "seed {seed}: residual {res}");
+    }
+}
+
+#[test]
+fn prop_det_multiplicative() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(6000 + seed);
+        let n = 2 + rng.below(8);
+        let a = randm(&mut rng, n);
+        let b = randm(&mut rng, n);
+        let da = Lu::new(&a).det();
+        let db = Lu::new(&b).det();
+        let dab = Lu::new(&matmul(&a, &b)).det();
+        let denom = dab.abs().max(1e-12);
+        assert!(
+            ((da * db - dab) / denom).abs() < 1e-6,
+            "seed {seed}: {} vs {}",
+            da * db,
+            dab
+        );
+    }
+}
+
+#[test]
+fn prop_cond_at_least_one() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(7000 + seed);
+        let n = 2 + rng.below(8);
+        let mut a = randm(&mut rng, n);
+        a.add_diag(2.0);
+        let k = cond1(&a);
+        assert!(k >= 1.0 - 1e-12, "seed {seed}: cond {k}");
+    }
+}
+
+#[test]
+fn prop_gemm_blocked_equals_small_path() {
+    // Cross-validate the two GEMM kernels on sizes straddling SMALL_N.
+    for seed in 0..6 {
+        let mut rng = Rng::new(8000 + seed);
+        for &n in &[90usize, 100, 130] {
+            let a = randm(&mut rng, n);
+            let b = randm(&mut rng, n);
+            let fast = matmul(&a, &b);
+            // Reference: plain triple loop.
+            let mut want = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += a[(i, k)] * b[(k, j)];
+                    }
+                    want[(i, j)] = s;
+                }
+            }
+            let err = (&fast - &want).max_abs() / want.max_abs();
+            assert!(err < 1e-12, "seed {seed} n={n}: {err}");
+        }
+    }
+}

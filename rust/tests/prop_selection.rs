@@ -1,0 +1,168 @@
+//! Property tests on the dynamic selection + evaluation pipeline — the
+//! paper's correctness invariants over randomized inputs.
+
+mod common;
+
+use common::{randm_norm, rel_err};
+use expmflow::expm::eval::{eval_sastre, eval_taylor_terms, Powers};
+use expmflow::expm::pade::expm_pade13;
+use expmflow::expm::selection::{
+    select_ps, select_sastre, SelectOptions, MAX_S,
+};
+use expmflow::expm::{expm, ExpmOptions, Method};
+use expmflow::linalg::{norm1, Matrix};
+use expmflow::util::rng::Rng;
+
+const CASES: u64 = 50;
+
+fn opts(tol: f64) -> SelectOptions {
+    SelectOptions { tol, power_est: false }
+}
+
+#[test]
+fn prop_selected_bound_actually_holds() {
+    // Whatever (m, s) the selector returns, the *true* remainder of T_m at
+    // W/2^s stays below the tolerance (the bound is an upper bound).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = 4 + rng.below(12);
+        let target = rng.log_uniform(1e-6, 50.0);
+        let a = randm_norm(n, target, seed + 10_000);
+        let mut p = Powers::new(a.clone());
+        let sel = select_sastre(&mut p, &opts(1e-8));
+        if sel.m == 0 {
+            continue;
+        }
+        let scaled = a.scaled((2.0f64).powi(-(sel.s as i32)));
+        let exact = expm_pade13(&scaled);
+        // For the 15+ scheme compare against the scheme itself.
+        let mut pw = Powers::new(scaled.clone());
+        let approx = eval_sastre(&mut pw, sel.m).value;
+        let err = norm1(&(&exact - &approx));
+        assert!(
+            err <= 1e-8 * 1.10 + 1e-14,
+            "seed {seed}: sel {sel:?} true remainder {err:e}"
+        );
+    }
+}
+
+#[test]
+fn prop_scale_never_exceeds_cap_and_scaled_norm_reasonable() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(100 + seed);
+        let n = 4 + rng.below(10);
+        let target = rng.log_uniform(1e-8, 1e8);
+        let a = randm_norm(n, target, seed + 20_000);
+        for select in [select_sastre, select_ps] {
+            let mut p = Powers::new(a.clone());
+            let sel = select(&mut p, &opts(1e-8));
+            assert!(sel.s <= MAX_S, "seed {seed}: {sel:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_sastre_equals_taylor_on_ladder() {
+    // For every ladder order but 15+, the fused formulas ARE T_m.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(200 + seed);
+        let n = 3 + rng.below(10);
+        let a = randm_norm(n, rng.log_uniform(0.05, 2.0), seed + 30_000);
+        for m in [1usize, 2, 4, 8] {
+            let mut p = Powers::new(a.clone());
+            let s = eval_sastre(&mut p, m).value;
+            let t = eval_taylor_terms(&a, m).value;
+            let err = (&s - &t).max_abs() / t.max_abs().max(1.0);
+            assert!(err < 1e-12, "seed {seed} m={m}: {err}");
+        }
+    }
+}
+
+#[test]
+fn prop_methods_agree_with_each_other() {
+    // All three dynamic methods compute the same function.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(300 + seed);
+        let n = 4 + rng.below(12);
+        let a = randm_norm(n, rng.log_uniform(1e-4, 20.0), seed + 40_000);
+        let rs: Vec<Matrix> = Method::all_dynamic()
+            .into_iter()
+            .map(|method| expm(&a, &ExpmOptions { method, tol: 1e-10 }).value)
+            .collect();
+        for r in &rs[1..] {
+            let err = rel_err(r, &rs[0]);
+            assert!(err < 1e-6, "seed {seed}: cross-method err {err:e}");
+        }
+    }
+}
+
+#[test]
+fn prop_semigroup_property() {
+    // e^{A} e^{A} = e^{2A} — relates the squaring stage to the function.
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(400 + seed);
+        let n = 3 + rng.below(8);
+        let a = randm_norm(n, rng.log_uniform(0.01, 2.0), seed + 50_000);
+        let e1 = expm(&a, &ExpmOptions::default()).value;
+        let e2 = expm(&a.scaled(2.0), &ExpmOptions::default()).value;
+        let sq = expmflow::linalg::matmul(&e1, &e1);
+        let err = rel_err(&sq, &e2);
+        assert!(err < 1e-6, "seed {seed}: {err:e}");
+    }
+}
+
+#[test]
+fn prop_inverse_property() {
+    // e^{A} e^{-A} = I for every method.
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(500 + seed);
+        let n = 3 + rng.below(8);
+        let a = randm_norm(n, rng.log_uniform(0.01, 5.0), seed + 60_000);
+        for method in Method::all_dynamic() {
+            let e = expm(&a, &ExpmOptions { method, tol: 1e-10 }).value;
+            let einv =
+                expm(&(-&a), &ExpmOptions { method, tol: 1e-10 }).value;
+            let prod = expmflow::linalg::matmul(&e, &einv);
+            let err = (&prod - &Matrix::identity(n)).max_abs();
+            assert!(err < 1e-6, "seed {seed} {}: {err:e}", method.name());
+        }
+    }
+}
+
+#[test]
+fn prop_products_monotone_in_norm() {
+    // Scaling a matrix up never reduces the product count.
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(600 + seed);
+        let n = 4 + rng.below(8);
+        let a = randm_norm(n, 0.1, seed + 70_000);
+        let mut prev = 0usize;
+        for mult in [1.0f64, 10.0, 100.0, 1000.0] {
+            let r = expm(
+                &a.scaled(mult),
+                &ExpmOptions { method: Method::Sastre, tol: 1e-8 },
+            );
+            assert!(
+                r.stats.matrix_products >= prev,
+                "seed {seed} mult {mult}: {} < {prev}",
+                r.stats.matrix_products
+            );
+            prev = r.stats.matrix_products;
+        }
+    }
+}
+
+#[test]
+fn prop_trace_determinant_identity() {
+    // det(e^A) = e^{tr A} — survives the full dynamic pipeline.
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(700 + seed);
+        let n = 2 + rng.below(6);
+        let a = randm_norm(n, rng.log_uniform(0.05, 2.0), seed + 80_000);
+        let e = expm(&a, &ExpmOptions::default()).value;
+        let det = expmflow::linalg::Lu::new(&e).det();
+        assert!(det > 0.0, "seed {seed}: det {det}");
+        let err = (det.ln() - a.trace()).abs();
+        assert!(err < 1e-7, "seed {seed}: {err}");
+    }
+}
