@@ -7,7 +7,7 @@
 
 use expmflow::coordinator::selector::plan_matrix;
 use expmflow::expm::eval::{eval_sastre, Powers};
-use expmflow::expm::{expm, ExpmOptions, Method};
+use expmflow::expm::{expm, expm_batch, ExpmOptions, Method};
 use expmflow::linalg::{matmul_into, norm1, Matrix};
 use expmflow::report::render_table;
 use expmflow::util::cli::Args;
@@ -100,6 +100,43 @@ fn main() {
         t_full.min_s * 1e3,
         t_plan.min_s * 1e3,
         100.0 * t_plan.min_s / t_full.min_s
+    );
+
+    // --- batched engine vs looped expm ------------------------------------
+    // The tentpole number: 64 generative-flow-sized matrices (order 32-64,
+    // mixed so bucketing is exercised) through expm_batch vs a serial expm
+    // loop. Below SMALL_N the engine fans out across the batch with
+    // single-threaded inner GEMMs, so this should scale with cores.
+    println!("\n== expm_batch vs looped expm (64 matrices, n = 32..64) ==");
+    let batch_mats: Vec<Matrix> = (0..64u64)
+        .map(|i| {
+            let n = [32usize, 48, 64][(i % 3) as usize];
+            let target = [0.5, 2.0, 8.0, 30.0][(i % 4) as usize];
+            let mut rng = Rng::new(9_000 + i);
+            let m = Matrix::from_fn(n, n, |_, _| rng.normal());
+            let nn = norm1(&m);
+            m.scaled(target / nn)
+        })
+        .collect();
+    let opts = ExpmOptions { method: Method::Sastre, tol: 1e-8 };
+    let t_loop = bench_loop(1, 5, 0.3, || {
+        let mut acc = 0.0;
+        for m in &batch_mats {
+            acc += expm(m, &opts).value[(0, 0)];
+        }
+        std::hint::black_box(acc);
+    });
+    let t_batch = bench_loop(1, 5, 0.3, || {
+        let rs = expm_batch(&batch_mats, &opts);
+        std::hint::black_box(rs.iter().map(|r| r.value[(0, 0)]).sum::<f64>());
+    });
+    let speedup = t_loop.min_s / t_batch.min_s;
+    println!(
+        "looped {:.2} ms | batched {:.2} ms | throughput x{:.2} \
+         (target >= 2x on multicore)",
+        t_loop.min_s * 1e3,
+        t_batch.min_s * 1e3,
+        speedup
     );
 
     // --- baseline-vs-sastre end-to-end ratio ------------------------------

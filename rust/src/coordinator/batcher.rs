@@ -77,7 +77,7 @@ impl Batcher {
             .map(|(k, _)| *k)
             .collect();
         keys.iter()
-            .map(|k| {
+            .flat_map(|k| {
                 let mut items = self.groups.remove(k).unwrap();
                 // Cap each flushed batch at max_batch; requeue the tail.
                 let mut out = Vec::new();
@@ -90,7 +90,6 @@ impl Batcher {
                 }
                 out
             })
-            .flatten()
             .inspect(|v| self.len -= v.len())
             .collect()
     }

@@ -3,14 +3,16 @@
 //! shapes, the production path). Both implement the Algorithm-2 pipeline
 //! with the plan's (m, s) forced, so results are method-identical.
 
+use std::sync::Mutex;
+
 use anyhow::Result;
 
+use crate::expm::batch::{run_bucket_into, Schedule};
 use crate::expm::eval::{eval_sastre, Powers};
 use crate::expm::scaling::repeated_square;
-use crate::expm::{coeffs, ExpmStats};
+use crate::expm::{coeffs, ExpmStats, Method};
 use crate::linalg::Matrix;
 use crate::runtime::Executor;
-use crate::util::threads::parallel_map;
 
 /// Which compute engine a group ran on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,23 +33,6 @@ pub fn native_expm_planned(w: &Matrix, m: usize, s: u32) -> (Matrix, ExpmStats) 
     native_expm_from_powers(Powers::new(scaled), m, s)
 }
 
-/// Same pipeline, but starting from the selector's cached powers of the
-/// *unscaled* W (rescaled in place here) — saves recomputing A^2 (§Perf).
-pub fn native_expm_planned_pow(
-    mut powers: Powers,
-    m: usize,
-    s: u32,
-) -> (Matrix, ExpmStats) {
-    if m == 0 {
-        return (
-            Matrix::identity(powers.order()),
-            ExpmStats { m: 0, s: 0, matrix_products: 0 },
-        );
-    }
-    powers.rescale(s);
-    native_expm_from_powers(powers, m, s)
-}
-
 fn native_expm_from_powers(
     mut powers: Powers,
     m: usize,
@@ -66,30 +51,39 @@ fn native_expm_from_powers(
     )
 }
 
-/// Execute a whole group natively (parallel across matrices). When the
-/// selector's cached powers are supplied, evaluation starts from them.
+/// Execute a whole group natively through the batched engine
+/// (`expm::batch`): one shared evaluation schedule for the group, one
+/// reusable workspace per worker, batch-parallel below the GEMM threshold
+/// and GEMM-parallel above it. When the selector's cached powers are
+/// supplied, evaluation starts from them (the A^2 product is reused).
 pub fn native_group(
     mats: &[Matrix],
     powers: Vec<Option<Powers>>,
     m: usize,
     s: u32,
 ) -> Vec<(Matrix, ExpmStats)> {
-    let one = |i: usize, p: Option<Powers>| match p {
-        Some(p) => native_expm_planned_pow(p, m, s),
-        None => native_expm_planned(&mats[i], m, s),
-    };
-    if mats.len() == 1 {
-        let p = powers.into_iter().next().flatten();
-        return vec![one(0, p)];
-    }
-    // parallel_map wants Fn (not FnMut); wrap the consumed powers in
-    // per-slot mutexes so each index takes its own.
-    let slots: Vec<std::sync::Mutex<Option<Powers>>> =
-        powers.into_iter().map(std::sync::Mutex::new).collect();
-    parallel_map(mats.len(), |i| {
-        let p = slots[i].lock().unwrap().take();
-        one(i, p)
-    })
+    let n = mats[0].order();
+    // Groups arrive pre-bucketed by the batcher's (n, m, s) key, so the
+    // whole group is one bucket sharing one schedule.
+    let sched = Schedule::new(Method::Sastre, m, s);
+    let jobs: Vec<(usize, Powers)> = powers
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            // The engine rescales W (and any cached powers) by 2^-s
+            // itself, so fresh Powers carry the *unscaled* matrix.
+            (i, p.unwrap_or_else(|| Powers::new(mats[i].clone())))
+        })
+        .collect();
+    let out: Vec<Mutex<Option<crate::expm::ExpmResult>>> =
+        (0..mats.len()).map(|_| Mutex::new(None)).collect();
+    run_bucket_into(n, &sched, jobs, &out);
+    out.into_iter()
+        .map(|slot| {
+            let r = slot.into_inner().unwrap().expect("group slot filled");
+            (r.value, r.stats)
+        })
+        .collect()
 }
 
 /// Execute a group through the PJRT artifacts. Product accounting uses the

@@ -5,8 +5,9 @@
 //! 2. plans each matrix with the paper's Algorithm 4 ([`selector`]),
 //! 3. dynamically batches matrices that share an execution shape
 //!    (n, m, s) ([`batcher`]),
-//! 4. dispatches groups to the PJRT artifacts or the native engine
-//!    ([`dispatch`]), and
+//! 4. dispatches groups to the PJRT artifacts or the native *batched*
+//!    engine (`expm::batch` via [`dispatch`]) — each group shares one
+//!    evaluation schedule and per-worker workspaces, and
 //! 5. accounts products/degrees/scalings/latencies ([`metrics`]).
 //!
 //! Threading: clients talk to the service over an mpsc channel; a single

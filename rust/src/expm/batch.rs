@@ -1,0 +1,482 @@
+//! Batched expm execution engine — the throughput path.
+//!
+//! The paper's workload (generative-flow training/sampling) arrives as
+//! *batches* of small-to-medium matrices, and once the product count is
+//! minimized (Algorithm 4), throughput is decided by how those products
+//! are executed. [`expm_batch`] turns a batch into three phases:
+//!
+//! 1. **Plan** — run the dynamic (m, s) selection on every matrix in
+//!    parallel, retaining the powers the norm bounds computed (the A^2
+//!    product is never repeated).
+//! 2. **Bucket** — group matrices by execution shape `(n, m, s)`. Every
+//!    bucket shares one [`Schedule`]: the blocking, coefficient table and
+//!    squaring count are derived once, not per matrix.
+//! 3. **Execute** — drive each bucket through per-worker [`Workspace`]s:
+//!    an arena of n×n buffers that feeds every `matmul_into`, the squaring
+//!    ping-pong and the recycled `Powers` storage, so the hot loop
+//!    performs no per-call allocation.
+//!
+//! Parallelism policy: below [`SMALL_N`] the GEMM kernel is serial, so the
+//! engine fans out *across* the batch (one workspace per worker); at or
+//! above it `matmul_into` parallelizes internally over row panels, so the
+//! bucket runs serially and the cores go to the inner GEMM. This is the
+//! batch-over-GEMM inversion that makes 64 concurrent 64×64 exponentials
+//! scale with cores instead of serializing behind one tiny GEMM.
+//!
+//! The float-op sequence of the workspace evaluators mirrors
+//! [`eval::eval_sastre`] / [`eval::eval_ps`] operation for operation, so
+//! batched results are bitwise identical to looping [`super::expm`] —
+//! `tests/prop_batch.rs` pins that contract.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::coeffs::{self, C15, C8};
+use super::eval::Powers;
+use super::selection::{self, SelectOptions, Selection};
+use super::{ExpmOptions, ExpmResult, ExpmStats, Method, UNIT_ROUNDOFF};
+use crate::linalg::{matmul_into, Matrix, SMALL_N};
+use crate::util::threads::{parallel_for_chunks, parallel_map};
+
+/// Cap on pooled buffers per workspace — powers + scratch of the deepest
+/// schedule (P–S m = 16 keeps W..W^4, 3 evaluation buffers and the
+/// squaring ping-pong) with headroom; beyond this, buffers are dropped.
+const MAX_POOL: usize = 12;
+
+/// Per-worker arena of n×n buffers. `take` hands out a *dirty* buffer —
+/// every consumer below fully overwrites it (via `copy_from`, a zero fill,
+/// or `matmul_into`, which clears its destination).
+pub struct Workspace {
+    n: usize,
+    free: Vec<Matrix>,
+}
+
+impl Workspace {
+    pub fn new(n: usize) -> Workspace {
+        Workspace { n, free: Vec::new() }
+    }
+
+    fn take(&mut self) -> Matrix {
+        self.free
+            .pop()
+            .unwrap_or_else(|| Matrix::zeros(self.n, self.n))
+    }
+
+    fn put(&mut self, m: Matrix) {
+        if m.rows() == self.n && m.cols() == self.n && self.free.len() < MAX_POOL
+        {
+            self.free.push(m);
+        }
+    }
+
+    /// Recycle a finished matrix's power buffers into the arena.
+    fn recycle(&mut self, powers: Powers) {
+        for buf in powers.into_buffers() {
+            self.put(buf);
+        }
+    }
+}
+
+/// Shared evaluation schedule for one `(n, m, s)` bucket: everything the
+/// per-matrix hot loop needs that does not depend on matrix values. For
+/// Paterson–Stockmeyer this includes the blocking and the 1/i! table,
+/// derived once per bucket instead of once per matrix.
+pub struct Schedule {
+    pub method: Method,
+    pub m: usize,
+    pub s: u32,
+    ps: Option<PsSchedule>,
+}
+
+struct PsSchedule {
+    j: usize,
+    k: usize,
+    coef: Vec<f64>,
+}
+
+impl Schedule {
+    pub fn new(method: Method, m: usize, s: u32) -> Schedule {
+        let ps = match method {
+            Method::PatersonStockmeyer if m > 0 => {
+                let (j, k) = coeffs::ps_blocking(m);
+                let coef = (0..=m).map(coeffs::inv_factorial).collect();
+                Some(PsSchedule { j, k, coef })
+            }
+            _ => None,
+        };
+        Schedule { method, m, s, ps }
+    }
+}
+
+/// Sastre formulas (10)–(17) through workspace buffers. The float-op
+/// sequence mirrors [`eval::eval_sastre`] exactly — only the allocation
+/// strategy differs — so values are bitwise identical to the serial path.
+fn eval_sastre_ws(ws: &mut Workspace, p: &mut Powers, m: usize) -> Matrix {
+    match m {
+        1 => {
+            let mut x = ws.take();
+            x.copy_from(p.w());
+            x.add_diag(1.0);
+            x
+        }
+        2 => {
+            let mut x = ws.take();
+            x.copy_from(p.get(2));
+            x.scale_in_place(0.5);
+            x.axpy(1.0, p.w());
+            x.add_diag(1.0);
+            x
+        }
+        4 => {
+            let mut inner = ws.take();
+            inner.copy_from(p.get(2));
+            inner.scale_in_place(0.25);
+            inner.axpy(1.0, p.w());
+            inner.scale_in_place(1.0 / 3.0);
+            inner.add_diag(1.0);
+            let mut x = ws.take();
+            matmul_into(&inner, p.get(2), &mut x);
+            x.scale_in_place(0.5);
+            x.axpy(1.0, p.w());
+            x.add_diag(1.0);
+            p.products += 1;
+            ws.put(inner);
+            x
+        }
+        8 => {
+            let [c1, c2, c3, c4, c5, c6] = C8;
+            let mut lhs = ws.take(); // rhs of (13), then the left factor
+            lhs.copy_from(p.get(2));
+            lhs.scale_in_place(c1);
+            lhs.axpy(c2, p.w());
+            let mut y02 = ws.take();
+            matmul_into(p.get(2), &lhs, &mut y02);
+            lhs.copy_from(&y02);
+            lhs.axpy(c3, p.get(2));
+            lhs.axpy(c4, p.w());
+            let mut rhs = ws.take();
+            rhs.copy_from(&y02);
+            rhs.axpy(c5, p.get(2));
+            let mut x = ws.take();
+            matmul_into(&lhs, &rhs, &mut x);
+            x.axpy(c6, &y02);
+            x.axpy(0.5, p.get(2));
+            x.axpy(1.0, p.w());
+            x.add_diag(1.0);
+            p.products += 2;
+            ws.put(lhs);
+            ws.put(rhs);
+            ws.put(y02);
+            x
+        }
+        15 => {
+            let c = C15;
+            let mut lhs = ws.take(); // rhs of (15), then l1, then l2
+            lhs.copy_from(p.get(2));
+            lhs.scale_in_place(c[0]);
+            lhs.axpy(c[1], p.w());
+            let mut y02 = ws.take();
+            matmul_into(p.get(2), &lhs, &mut y02);
+            lhs.copy_from(&y02);
+            lhs.axpy(c[2], p.get(2));
+            lhs.axpy(c[3], p.w());
+            let mut rhs = ws.take(); // r1, then r2
+            rhs.copy_from(&y02);
+            rhs.axpy(c[4], p.get(2));
+            let mut y12 = ws.take();
+            matmul_into(&lhs, &rhs, &mut y12);
+            y12.axpy(c[5], &y02);
+            y12.axpy(c[6], p.get(2));
+            lhs.copy_from(&y12);
+            lhs.axpy(c[7], p.get(2));
+            lhs.axpy(c[8], p.w());
+            rhs.copy_from(&y12);
+            rhs.axpy(c[9], &y02);
+            rhs.axpy(c[10], p.w());
+            let mut y22 = ws.take();
+            matmul_into(&lhs, &rhs, &mut y22);
+            y22.axpy(c[11], &y12);
+            y22.axpy(c[12], &y02);
+            y22.axpy(c[13], p.get(2));
+            y22.axpy(c[14], p.w());
+            y22.add_diag(c[15]);
+            p.products += 3;
+            ws.put(lhs);
+            ws.put(rhs);
+            ws.put(y12);
+            ws.put(y02);
+            y22
+        }
+        _ => panic!("no Sastre formula for order {m}"),
+    }
+}
+
+/// Paterson–Stockmeyer through workspace buffers with the bucket-shared
+/// blocking and coefficient table; op-order mirrors [`eval::eval_ps`].
+fn eval_ps_ws(ws: &mut Workspace, p: &mut Powers, sched: &PsSchedule, m: usize) -> Matrix {
+    let PsSchedule { j, k, coef } = sched;
+    let (j, k) = (*j, *k);
+    p.get(j); // cached from selection in the planned path
+    let mut block = ws.take();
+    let mut acc = ws.take();
+    let mut tmp = ws.take();
+    let mut have_acc = false;
+    for bk in (0..k).rev() {
+        let lo = bk * j;
+        // Top block absorbs every remaining coefficient up to m (the
+        // classic P–S fold — see eval::eval_ps).
+        let hi = if bk == k - 1 { m } else { lo + j - 1 };
+        block.data_mut().fill(0.0);
+        block.add_diag(coef[lo]);
+        for i in (lo + 1)..=hi {
+            block.axpy(coef[i], p.get(i - lo));
+        }
+        if !have_acc {
+            std::mem::swap(&mut acc, &mut block);
+            have_acc = true;
+        } else {
+            matmul_into(&acc, p.get(j), &mut tmp);
+            p.products += 1;
+            tmp.axpy(1.0, &block);
+            std::mem::swap(&mut acc, &mut tmp);
+        }
+    }
+    ws.put(block);
+    ws.put(tmp);
+    acc
+}
+
+/// Squaring stage through the arena's ping-pong buffer; op-order mirrors
+/// [`super::scaling::repeated_square`]. Returns the products spent (s).
+fn repeated_square_ws(ws: &mut Workspace, x: &mut Matrix, s: u32) -> usize {
+    if s == 0 {
+        return 0;
+    }
+    let mut tmp = ws.take();
+    for _ in 0..s {
+        matmul_into(x, x, &mut tmp);
+        std::mem::swap(x, &mut tmp);
+    }
+    ws.put(tmp);
+    s as usize
+}
+
+/// The scale–evaluate–square tail of Algorithm 2 for one matrix whose
+/// powers (of the *unscaled* W) and plan are already fixed.
+fn run_one(ws: &mut Workspace, mut powers: Powers, sched: &Schedule) -> ExpmResult {
+    if sched.m == 0 {
+        // Zero matrix: e^0 = I, zero products (matches expm_dynamic).
+        let value = Matrix::identity(powers.order());
+        ws.recycle(powers);
+        return ExpmResult {
+            value,
+            stats: ExpmStats { m: 0, s: 0, matrix_products: 0 },
+        };
+    }
+    powers.rescale(sched.s);
+    let mut value = match &sched.ps {
+        Some(ps) => eval_ps_ws(ws, &mut powers, ps, sched.m),
+        None => eval_sastre_ws(ws, &mut powers, sched.m),
+    };
+    let squarings = repeated_square_ws(ws, &mut value, sched.s);
+    let stats = ExpmStats {
+        m: sched.m,
+        s: sched.s,
+        matrix_products: powers.products + squarings,
+    };
+    ws.recycle(powers);
+    ExpmResult { value, stats }
+}
+
+/// Execute one bucket of same-`(n, m, s)` matrices into the output slots.
+///
+/// Below [`SMALL_N`] the batch fans out over worker chunks, each owning
+/// one [`Workspace`] reused across its whole chunk, and every inner GEMM
+/// stays single-threaded; at or above it the bucket runs serially so the
+/// blocked GEMM keeps the cores instead.
+pub fn run_bucket_into(
+    n: usize,
+    sched: &Schedule,
+    jobs: Vec<(usize, Powers)>,
+    out: &[Mutex<Option<ExpmResult>>],
+) {
+    if n >= SMALL_N || jobs.len() == 1 {
+        let mut ws = Workspace::new(n);
+        for (slot, powers) in jobs {
+            *out[slot].lock().unwrap() = Some(run_one(&mut ws, powers, sched));
+        }
+        return;
+    }
+    // parallel_for_chunks wants Fn; park each job in a per-slot mutex so
+    // the owning worker can move it out.
+    let jobs: Vec<Mutex<Option<(usize, Powers)>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    parallel_for_chunks(jobs.len(), 1, |lo, hi| {
+        let mut ws = Workspace::new(n);
+        for job in &jobs[lo..hi] {
+            let (slot, powers) =
+                job.lock().unwrap().take().expect("job claimed once");
+            *out[slot].lock().unwrap() = Some(run_one(&mut ws, powers, sched));
+        }
+    });
+}
+
+/// Compute e^{W_i} for a whole batch. Matches looping [`super::expm`] over
+/// the same matrices bitwise (values *and* stats); the difference is
+/// throughput — shared schedules, reused workspaces and batch-level
+/// parallelism (see the module docs for the full pipeline).
+pub fn expm_batch(mats: &[Matrix], opts: &ExpmOptions) -> Vec<ExpmResult> {
+    for w in mats {
+        assert!(w.is_square(), "expm_batch needs square matrices");
+    }
+    match mats.len() {
+        0 => return Vec::new(),
+        // Single matrix: the serial pipeline, no engine overhead.
+        1 => return vec![super::expm_serial(&mats[0], opts)],
+        _ => {}
+    }
+    let method = opts.method;
+    // Same policy as the execute phase: fan out across the batch only
+    // when the per-matrix GEMMs are serial; above SMALL_N the inner GEMM
+    // already takes the cores, and nesting both oversubscribes.
+    let outer_parallel = mats.iter().all(|w| w.order() < SMALL_N);
+    if !matches!(method, Method::Sastre | Method::PatersonStockmeyer) {
+        // Baseline/Padé have no planned-evaluation structure to share;
+        // they still get batch-level parallelism where it pays.
+        return if outer_parallel {
+            parallel_map(mats.len(), |i| super::expm_serial(&mats[i], opts))
+        } else {
+            mats.iter().map(|w| super::expm_serial(w, opts)).collect()
+        };
+    }
+    let tol = opts.tol.max(UNIT_ROUNDOFF);
+    let sel_opts = SelectOptions { tol, power_est: false };
+    // Phase 1: plan every matrix, keeping the powers the norm bounds
+    // computed so the A^2 product is never repeated.
+    let plan_one = |i: usize| {
+        let mut powers = Powers::new(mats[i].clone());
+        let sel = match method {
+            Method::Sastre => selection::select_sastre(&mut powers, &sel_opts),
+            Method::PatersonStockmeyer => {
+                selection::select_ps(&mut powers, &sel_opts)
+            }
+            _ => unreachable!("dynamic methods only"),
+        };
+        (sel, powers)
+    };
+    let planned: Vec<(Selection, Powers)> = if outer_parallel {
+        parallel_map(mats.len(), plan_one)
+    } else {
+        (0..mats.len()).map(plan_one).collect()
+    };
+    // Phase 2: bucket by execution shape.
+    let mut buckets: BTreeMap<(usize, usize, u32), Vec<(usize, Powers)>> =
+        BTreeMap::new();
+    for (i, (sel, powers)) in planned.into_iter().enumerate() {
+        buckets
+            .entry((mats[i].order(), sel.m, sel.s))
+            .or_default()
+            .push((i, powers));
+    }
+    // Phase 3: one schedule per bucket, workspace-driven execution.
+    let out: Vec<Mutex<Option<ExpmResult>>> =
+        (0..mats.len()).map(|_| Mutex::new(None)).collect();
+    for ((n, m, s), jobs) in buckets {
+        let sched = Schedule::new(method, m, s);
+        run_bucket_into(n, &sched, jobs, &out);
+    }
+    out.into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expm::expm;
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+
+    fn randm_norm(n: usize, target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let s = target / norm1(&a);
+        a.scaled(s)
+    }
+
+    #[test]
+    fn batch_matches_loop_bitwise_small() {
+        let mats: Vec<Matrix> = (0..9)
+            .map(|i| randm_norm(6 + i % 3, [0.3, 2.0, 40.0][i % 3], 70 + i as u64))
+            .collect();
+        for method in [Method::Sastre, Method::PatersonStockmeyer] {
+            let opts = ExpmOptions { method, tol: 1e-8 };
+            let batch = expm_batch(&mats, &opts);
+            for (i, r) in batch.iter().enumerate() {
+                let single = expm(&mats[i], &opts);
+                assert_eq!(r.value, single.value, "matrix {i}");
+                assert_eq!(
+                    r.stats.matrix_products,
+                    single.stats.matrix_products,
+                    "matrix {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_batches() {
+        let opts = ExpmOptions::default();
+        assert!(expm_batch(&[], &opts).is_empty());
+        let a = randm_norm(5, 1.0, 3);
+        let one = expm_batch(std::slice::from_ref(&a), &opts);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].value, expm(&a, &opts).value);
+    }
+
+    #[test]
+    fn zero_matrices_bucket_to_identity() {
+        let mats =
+            vec![Matrix::zeros(4, 4), randm_norm(4, 1.0, 9), Matrix::zeros(4, 4)];
+        let batch = expm_batch(&mats, &ExpmOptions::default());
+        assert_eq!(batch[0].value, Matrix::identity(4));
+        assert_eq!(batch[0].stats.matrix_products, 0);
+        assert_eq!(batch[2].value, Matrix::identity(4));
+        assert!(batch[1].stats.matrix_products > 0);
+    }
+
+    #[test]
+    fn workspace_reuse_is_invisible() {
+        // Two identical matrices in one bucket must produce identical
+        // results even though the second reuses the first's buffers.
+        let a = randm_norm(8, 3.0, 21);
+        let mats = vec![a.clone(), a.clone(), a.clone()];
+        let batch = expm_batch(&mats, &ExpmOptions::default());
+        assert_eq!(batch[0].value, batch[1].value);
+        assert_eq!(batch[1].value, batch[2].value);
+    }
+
+    #[test]
+    fn baseline_batch_falls_back_per_matrix() {
+        let mats: Vec<Matrix> =
+            (0..4).map(|i| randm_norm(6, 1.5, 40 + i)).collect();
+        let opts = ExpmOptions { method: Method::Baseline, tol: 1e-8 };
+        let batch = expm_batch(&mats, &opts);
+        for (i, r) in batch.iter().enumerate() {
+            let single = expm(&mats[i], &opts);
+            assert_eq!(r.value, single.value);
+            assert_eq!(r.stats.matrix_products, single.stats.matrix_products);
+        }
+    }
+
+    #[test]
+    fn schedule_shares_ps_coefficients() {
+        let sched = Schedule::new(Method::PatersonStockmeyer, 12, 1);
+        let ps = sched.ps.as_ref().expect("ps schedule");
+        assert_eq!((ps.j, ps.k), coeffs::ps_blocking(12));
+        assert_eq!(ps.coef.len(), 13);
+        assert_eq!(ps.coef[0], 1.0);
+        // Sastre needs no table.
+        assert!(Schedule::new(Method::Sastre, 8, 0).ps.is_none());
+    }
+}

@@ -56,6 +56,12 @@ impl Powers {
             p.scale_in_place((2.0f64).powi(-(k * s as i32)));
         }
     }
+
+    /// Tear down into the raw power buffers so a batched-engine workspace
+    /// can recycle the allocations (see `expm::batch::Workspace`).
+    pub fn into_buffers(self) -> Vec<Matrix> {
+        self.pows
+    }
 }
 
 /// Result of a polynomial evaluation: T_m(W) plus products spent *in the
@@ -295,6 +301,60 @@ mod tests {
         p.get(2); // cached
         p.get(4); // cached
         assert_eq!(p.products, 3);
+    }
+
+    #[test]
+    fn powers_products_counter_exact_after_rescale_and_reget() {
+        // The batched workspace reuse leans on three invariants: rescale
+        // never drops cached powers, never charges products, and a
+        // post-rescale extension charges exactly the new products while
+        // continuing from the *rescaled* W.
+        let a = randm(6, 1.0, 17);
+        let mut p = Powers::new(a.clone());
+        p.get(4);
+        assert_eq!(p.products, 3);
+        p.rescale(3);
+        assert_eq!(p.products, 3, "rescale must be product-free");
+        assert!(p.have(4), "rescale must keep the cache");
+        p.get(4);
+        p.get(2);
+        assert_eq!(p.products, 3, "re-get of cached powers is free");
+        p.get(6);
+        assert_eq!(p.products, 5, "extension charges exactly k - cached");
+        // Power-of-two scaling is exact in IEEE-754, so the extended
+        // powers match a fresh ladder on A/8 bitwise-tight.
+        let mut q = Powers::new(a.scaled(0.125));
+        q.get(6);
+        for k in 1..=6 {
+            assert_close(p.get(k), q.get(k), 1e-15);
+        }
+    }
+
+    #[test]
+    fn powers_rescale_zero_is_noop_and_get_one_is_free() {
+        let a = randm(5, 1.0, 18);
+        let mut p = Powers::new(a.clone());
+        p.get(3);
+        let w2_before = p.get(2).clone();
+        p.rescale(0);
+        assert_eq!(p.products, 2);
+        assert_eq!(p.get(2), &w2_before, "rescale(0) must not touch data");
+        // get(1) is W itself: never a product, always cached.
+        let before = p.products;
+        assert_eq!(p.get(1), &a);
+        assert_eq!(p.products, before);
+        assert!(p.have(1) && p.have(3) && !p.have(4));
+    }
+
+    #[test]
+    fn powers_into_buffers_returns_cached_ladder() {
+        let a = randm(4, 0.7, 19);
+        let mut p = Powers::new(a.clone());
+        p.get(3);
+        let bufs = p.into_buffers();
+        assert_eq!(bufs.len(), 3);
+        assert_eq!(bufs[0], a);
+        assert_eq!(bufs[2], matmul(&bufs[1], &a));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! paper's cost model predicts — the benches sum these for Figures 1g/2g/….
 
 pub mod baseline;
+pub mod batch;
 pub mod coeffs;
 pub mod cond;
 pub mod error;
@@ -24,6 +25,8 @@ pub mod selection;
 use crate::linalg::Matrix;
 use eval::Powers;
 use selection::{SelectOptions, Selection};
+
+pub use batch::expm_batch;
 
 /// Which expm pipeline to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -89,7 +92,18 @@ pub const UNIT_ROUNDOFF: f64 = 1.1102230246251565e-16; // 2^-53
 
 /// Compute e^W by the selected method. Panics on non-square or non-finite
 /// input (the service layer validates and returns errors instead).
+///
+/// Thin wrapper over [`expm_batch`]; batch callers should pass the whole
+/// batch instead so selection bucketing and workspace reuse apply.
 pub fn expm(w: &Matrix, opts: &ExpmOptions) -> ExpmResult {
+    expm_batch(std::slice::from_ref(w), opts)
+        .pop()
+        .expect("one result for one matrix")
+}
+
+/// The serial single-matrix pipeline — the reference implementation the
+/// batched engine must match bitwise (`tests/prop_batch.rs`).
+pub(crate) fn expm_serial(w: &Matrix, opts: &ExpmOptions) -> ExpmResult {
     assert!(w.is_square(), "expm needs a square matrix");
     let tol = opts.tol.max(UNIT_ROUNDOFF);
     match opts.method {
@@ -289,5 +303,135 @@ mod tests {
         let r = expm(&a, &ExpmOptions { method: Method::Sastre, tol: 1e-8 });
         assert!((r.value[(0, 0)] - 1f64.cos()).abs() < 1e-8);
         assert!(r.stats.matrix_products <= 5);
+    }
+
+    // --- golden closed-form exponentials: value AND product count pinned
+    // per method at tol = 1e-8 (regressions in either selection or
+    // evaluation shift one of the two) ------------------------------------
+
+    #[test]
+    fn golden_zero_matrix() {
+        let z = Matrix::zeros(4, 4);
+        for method in Method::all_dynamic() {
+            let r = expm(&z, &ExpmOptions { method, tol: 1e-8 });
+            assert_eq!(r.value, Matrix::identity(4), "{}", method.name());
+            assert_eq!(r.stats.matrix_products, 0, "{}", method.name());
+        }
+        let p = expm(&z, &ExpmOptions { method: Method::Pade, tol: 1e-8 });
+        assert!(rel_err(&p.value, &Matrix::identity(4)) < 1e-13);
+        assert_eq!(p.stats.matrix_products, 0);
+    }
+
+    #[test]
+    fn golden_rotation_2x2() {
+        // e^{[[0,1],[-1,0]]} = [[cos 1, sin 1], [-sin 1, cos 1]].
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![-1.0, 0.0]]);
+        let (c, s) = (1f64.cos(), 1f64.sin());
+        // (method, m, s, products, value tolerance): Sastre accepts the
+        // 15+ rung at ||A|| = 1 (4 products); P–S needs its m = 12 rung
+        // (3 powers + 2 Horner); Algorithm 1 scales to ||W/4|| = 1/4 and
+        // sums to degree 7 (7 term products + 2 squarings).
+        let cases = [
+            (Method::Sastre, 15usize, 0u32, 4usize, 1e-12),
+            (Method::PatersonStockmeyer, 12, 0, 5, 1e-9),
+            (Method::Baseline, 8, 2, 9, 1e-7),
+        ];
+        for (method, m, sq, prods, tol) in cases {
+            let r = expm(&a, &ExpmOptions { method, tol: 1e-8 });
+            assert_eq!(r.stats.m, m, "{}", method.name());
+            assert_eq!(r.stats.s, sq, "{}", method.name());
+            assert_eq!(r.stats.matrix_products, prods, "{}", method.name());
+            assert!(
+                (r.value[(0, 0)] - c).abs() < tol
+                    && (r.value[(0, 1)] - s).abs() < tol,
+                "{}: {:?}",
+                method.name(),
+                r.value
+            );
+            // A^2 = -I exactly, so every intermediate is alpha*I + beta*A
+            // and the rotation structure survives bitwise.
+            assert_eq!(r.value[(0, 0)], r.value[(1, 1)], "{}", method.name());
+            assert_eq!(r.value[(0, 1)], -r.value[(1, 0)], "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn golden_nilpotent_jordan_block() {
+        // J^4 = 0, so e^J = I + J + J^2/2 + J^3/6 exactly.
+        let a =
+            Matrix::from_fn(4, 4, |i, j| if j == i + 1 { 1.0 } else { 0.0 });
+        let want = |i: usize, j: usize| match j as i64 - i as i64 {
+            0 => 1.0,
+            1 => 1.0,
+            2 => 0.5,
+            3 => 1.0 / 6.0,
+            _ => 0.0,
+        };
+        // Power-norm bounds see ||J^k||_1 = 1 (and 0 from J^4), so: Sastre
+        // rides to 15+ (4 products); P–S accepts m = 12 the moment
+        // ||W^4|| = 0 (3 powers + 2 Horner); Algorithm 1 truncates at the
+        // vanished degree-4 term (3 term products + 2 squarings).
+        let cases = [
+            (Method::Sastre, 15usize, 0u32, 4usize),
+            (Method::PatersonStockmeyer, 12, 0, 5),
+            (Method::Baseline, 4, 2, 5),
+        ];
+        for (method, m, sq, prods) in cases {
+            let r = expm(&a, &ExpmOptions { method, tol: 1e-8 });
+            assert_eq!(r.stats.m, m, "{}", method.name());
+            assert_eq!(r.stats.s, sq, "{}", method.name());
+            assert_eq!(r.stats.matrix_products, prods, "{}", method.name());
+            for i in 0..4 {
+                for j in 0..4 {
+                    if j < i {
+                        // Upper-triangular inputs stay exactly triangular.
+                        assert_eq!(r.value[(i, j)], 0.0, "{}", method.name());
+                    } else {
+                        assert!(
+                            (r.value[(i, j)] - want(i, j)).abs() < 1e-13,
+                            "{} at ({i},{j}): {}",
+                            method.name(),
+                            r.value[(i, j)]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_diagonal() {
+        // e^diag(d) = diag(e^d); off-diagonals stay exactly zero.
+        let d = [-0.5, 0.1, 0.3];
+        let a =
+            Matrix::from_fn(3, 3, |i, j| if i == j { d[i] } else { 0.0 });
+        // ||A||_1 = 1/2: Sastre's m = 8 bound clears 1e-8 (A^2 + 2 eval
+        // products); P–S accepts m = 9 (2 powers + 2 Horner); Algorithm 1
+        // scales once (s = 1) and sums to degree 7.
+        let cases = [
+            (Method::Sastre, 8usize, 0u32, 3usize, 2e-8),
+            (Method::PatersonStockmeyer, 9, 0, 4, 1e-9),
+            (Method::Baseline, 8, 1, 8, 1e-7),
+        ];
+        for (method, m, sq, prods, tol) in cases {
+            let r = expm(&a, &ExpmOptions { method, tol: 1e-8 });
+            assert_eq!(r.stats.m, m, "{}", method.name());
+            assert_eq!(r.stats.s, sq, "{}", method.name());
+            assert_eq!(r.stats.matrix_products, prods, "{}", method.name());
+            for i in 0..3 {
+                for j in 0..3 {
+                    if i == j {
+                        assert!(
+                            (r.value[(i, i)] - d[i].exp()).abs() < tol,
+                            "{} at {i}: {}",
+                            method.name(),
+                            r.value[(i, i)]
+                        );
+                    } else {
+                        assert_eq!(r.value[(i, j)], 0.0, "{}", method.name());
+                    }
+                }
+            }
+        }
     }
 }

@@ -9,4 +9,5 @@ pub mod sample;
 pub mod train;
 
 pub use data::Dataset;
+pub use sample::{sample_native, state_blocks};
 pub use train::{init_params, train_epoch, train_step, TrainState};

@@ -3,7 +3,7 @@
 //! artifacts (integration tests assert loss agreement) and as the
 //! artifact-free fallback for the examples.
 
-use crate::expm::{expm, ExpmOptions, Method};
+use crate::expm::{expm_batch, ExpmOptions, Method};
 use crate::linalg::Matrix;
 
 pub const ALPHA: f64 = 0.5;
@@ -38,6 +38,25 @@ pub fn phi_inverse(y: f64) -> f64 {
     u
 }
 
+/// e^{±A_k} for every block in one [`expm_batch`] call — the flow's K
+/// exponentials share the batched engine's selection bucketing and
+/// workspace reuse instead of going through K independent expm calls.
+pub fn block_exponentials(
+    blocks: &[Block],
+    negate: bool,
+    method: Method,
+    tol: f64,
+) -> Vec<Matrix> {
+    let mats: Vec<Matrix> = blocks
+        .iter()
+        .map(|b| if negate { -&b.a } else { b.a.clone() })
+        .collect();
+    expm_batch(&mats, &ExpmOptions { method, tol })
+        .into_iter()
+        .map(|r| r.value)
+        .collect()
+}
+
 /// z = f(x) for a batch (rows of `x`); returns (z, per-sample logdet).
 pub fn forward(
     blocks: &[Block],
@@ -48,8 +67,9 @@ pub fn forward(
     let mut h: Vec<Vec<f64>> = x.to_vec();
     let mut logdet = vec![0.0; x.len()];
     let k = blocks.len();
+    let ws = block_exponentials(blocks, false, method, tol);
     for (bi, blk) in blocks.iter().enumerate() {
-        let w = expm(&blk.a, &ExpmOptions { method, tol }).value;
+        let w = &ws[bi];
         let tr = blk.a.trace();
         for (row, ld) in h.iter_mut().zip(logdet.iter_mut()) {
             // u = W h + b  (model.py uses h @ W.T, i.e. u_i = sum_j W_ij h_j)
@@ -83,8 +103,9 @@ pub fn inverse(
 ) -> Vec<Vec<f64>> {
     let mut h: Vec<Vec<f64>> = z.to_vec();
     let k = blocks.len();
+    let winvs = block_exponentials(blocks, true, method, tol);
     for (bi, blk) in blocks.iter().enumerate().rev() {
-        let winv = expm(&(-&blk.a), &ExpmOptions { method, tol }).value;
+        let winv = &winvs[bi];
         for row in h.iter_mut() {
             if bi < k - 1 {
                 for v in row.iter_mut() {

@@ -1,11 +1,17 @@
-//! Sampling driver: pulls base-normal draws through the inverse flow via
-//! the `flow_sample_{method}_b{B}` artifacts — the Table-5 engine.
+//! Sampling driver: pulls base-normal draws through the inverse flow —
+//! either via the `flow_sample_{method}_b{B}` artifacts (the Table-5
+//! engine) or natively through the batched expm engine
+//! ([`sample_native`]), which needs no artifacts and routes every
+//! per-block exponential through one `expm_batch` call.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::native::{self, Block};
 use super::train::{param_shapes, TrainState};
+use crate::expm::Method;
+use crate::linalg::Matrix;
 use crate::runtime::{array_to_literal, Executor};
 use crate::util::rng::Rng;
 
@@ -47,8 +53,86 @@ pub fn sample(
     Ok((x, SampleStats { batch, wall_s }))
 }
 
+/// View a [`TrainState`]'s flat parameters as native blocks (A_k, b_k) —
+/// manifest order is A0, b0, A1, b1, ....
+pub fn state_blocks(state: &TrainState) -> Vec<Block> {
+    (0..state.blocks)
+        .map(|k| Block {
+            a: Matrix::from_vec(
+                state.dim,
+                state.dim,
+                state.params[2 * k].clone(),
+            ),
+            b: state.params[2 * k + 1].clone(),
+        })
+        .collect()
+}
+
+/// Generate `batch` samples natively (no artifacts): z ~ N(0, I) pulled
+/// through the inverse flow, with all K per-block exponentials e^{-A_k}
+/// computed by a single `expm_batch` call inside
+/// [`native::inverse`] — the flow sampler's route into the batched
+/// engine. Returns row-major `batch × dim` samples.
+pub fn sample_native(
+    blocks: &[Block],
+    batch: usize,
+    seed: u64,
+    method: Method,
+    tol: f64,
+) -> (Vec<f64>, SampleStats) {
+    let dim = blocks.first().map(|b| b.a.order()).unwrap_or(0);
+    let mut rng = Rng::new(seed);
+    let mut z = vec![0.0; batch * dim];
+    rng.fill_normal(&mut z, 1.0);
+    let rows: Vec<Vec<f64>> =
+        z.chunks(dim.max(1)).map(<[f64]>::to_vec).collect();
+    let t0 = Instant::now();
+    let x = native::inverse(blocks, &rows, method, tol);
+    let wall_s = t0.elapsed().as_secs_f64();
+    (x.into_iter().flatten().collect(), SampleStats { batch, wall_s })
+}
+
 #[cfg(test)]
 mod tests {
-    // Exercised end-to-end in rust/tests/integration_flow.rs (needs
-    // artifacts); the literal plumbing is covered by runtime unit tests.
+    // The PJRT path is exercised end-to-end in
+    // rust/tests/integration_flow.rs (needs artifacts); the literal
+    // plumbing is covered by runtime unit tests.
+    use super::*;
+
+    #[test]
+    fn state_blocks_matches_init() {
+        let state = crate::flow::init_params(6, 3, 42);
+        let blocks = state_blocks(&state);
+        assert_eq!(blocks.len(), 3);
+        let reference = native::init_blocks(6, 3, 42);
+        for (b, r) in blocks.iter().zip(&reference) {
+            // Same draws; init_params folds sigma in one multiply while
+            // init_blocks does two, so equality is ulp-level, not bitwise.
+            let diff = (&b.a - &r.a).max_abs();
+            assert!(diff < 1e-15, "params/blocks diverged: {diff:e}");
+            assert_eq!(b.b, r.b);
+        }
+    }
+
+    #[test]
+    fn sample_native_shapes_and_inverts() {
+        let (dim, batch) = (8usize, 5usize);
+        let blocks = native::init_blocks(dim, 2, 7);
+        let (x, st) = sample_native(&blocks, batch, 11, Method::Sastre, 1e-10);
+        assert_eq!(x.len(), batch * dim);
+        assert_eq!(st.batch, batch);
+        assert!(x.iter().all(|v| v.is_finite()));
+        // Pushing the samples forward must recover the base draws.
+        let rows: Vec<Vec<f64>> =
+            x.chunks(dim).map(<[f64]>::to_vec).collect();
+        let (z, _) = native::forward(&blocks, &rows, Method::Sastre, 1e-10);
+        let mut rng = Rng::new(11);
+        let mut want = vec![0.0; batch * dim];
+        rng.fill_normal(&mut want, 1.0);
+        for (got, want) in
+            z.iter().flatten().zip(&want)
+        {
+            assert!((got - want).abs() < 1e-7, "{got} vs {want}");
+        }
+    }
 }

@@ -8,8 +8,11 @@
 use super::matrix::Matrix;
 use crate::util::threads::parallel_for_chunks;
 
-/// Below this order, threading and blocking overhead beat the gains.
-const SMALL_N: usize = 96;
+/// Below this order, threading and blocking overhead beat the gains: the
+/// serial ikj kernel runs and the cores are free for batch-level
+/// parallelism (see `expm::batch`). At or above it, `matmul_into` itself
+/// fans out over row panels, so callers should serialize *their* loop.
+pub const SMALL_N: usize = 96;
 /// Cache block edge (f64): 64^2 * 8 B = 32 KiB per operand block — one L1.
 const BLOCK: usize = 64;
 /// Row-panel granularity for the parallel outer loop.

@@ -124,6 +124,13 @@ impl Matrix {
         out
     }
 
+    /// Overwrite self with `src` (same shape) without reallocating — the
+    /// workhorse of the batched engine's buffer reuse.
+    pub fn copy_from(&mut self, src: &Matrix) {
+        assert_eq!((self.rows, self.cols), (src.rows, src.cols));
+        self.data.copy_from_slice(&src.data);
+    }
+
     /// self += alpha * other (the linear-combination step in (13)-(17)).
     pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));

@@ -8,7 +8,7 @@ pub mod lu;
 pub mod matrix;
 pub mod norms;
 
-pub use gemm::{matmul, matmul_into, square};
+pub use gemm::{matmul, matmul_into, square, SMALL_N};
 pub use lu::{cond1, Lu};
 pub use matrix::Matrix;
 pub use norms::{norm1, norm2_est, norm_fro, norm_inf, rel_err_fro};

@@ -1,0 +1,142 @@
+//! Property tests on the batched expm engine: `expm_batch` over any mix of
+//! sizes, norms and tolerances must match looping `expm` over the same
+//! matrices — values to <= 1e-13 relative (in practice bitwise: the
+//! workspace evaluators mirror the serial float-op sequence) and stats
+//! (m, s, product count) exactly. Randomized with explicit seeds, matching
+//! the repo's proptest-free convention.
+
+mod common;
+
+use common::{randm_norm, rel_err};
+use expmflow::expm::{expm, expm_batch, ExpmOptions, Method};
+use expmflow::linalg::Matrix;
+use expmflow::util::rng::Rng;
+
+const CASES: u64 = 10;
+
+/// Random batch: mixed orders 2..=24, log-uniform norms 1e-5..60, with a
+/// sprinkle of exact duplicates and zero matrices so buckets share work.
+fn random_batch(rng: &mut Rng) -> Vec<Matrix> {
+    let count = 2 + rng.below(22);
+    let mut mats: Vec<Matrix> = (0..count)
+        .map(|_| {
+            let n = 2 + rng.below(23);
+            let target = rng.log_uniform(1e-5, 60.0);
+            randm_norm(n, target, rng.next_u64())
+        })
+        .collect();
+    if count >= 4 {
+        let dup = mats[0].clone();
+        mats[count / 2] = dup; // same matrix lands twice in one bucket
+        let n = mats[1].rows();
+        mats[1] = Matrix::zeros(n, n); // m = 0 bucket
+    }
+    mats
+}
+
+fn check_method(method: Method, seed_base: u64) {
+    for case in 0..CASES {
+        let mut rng = Rng::new(seed_base + case);
+        let mats = random_batch(&mut rng);
+        let tol = [1e-6, 1e-8, 1e-11][(case % 3) as usize];
+        let opts = ExpmOptions { method, tol };
+        let batch = expm_batch(&mats, &opts);
+        assert_eq!(batch.len(), mats.len(), "case {case}");
+        for (i, r) in batch.iter().enumerate() {
+            let single = expm(&mats[i], &opts);
+            let err = rel_err(&r.value, &single.value);
+            assert!(
+                err <= 1e-13,
+                "{} case {case} matrix {i} (n = {}): rel err {err:e}",
+                method.name(),
+                mats[i].rows()
+            );
+            assert_eq!(
+                (r.stats.m, r.stats.s, r.stats.matrix_products),
+                (
+                    single.stats.m,
+                    single.stats.s,
+                    single.stats.matrix_products
+                ),
+                "{} case {case} matrix {i}: stats diverged",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batch_matches_looped_sastre() {
+    check_method(Method::Sastre, 41_000);
+}
+
+#[test]
+fn prop_batch_matches_looped_paterson_stockmeyer() {
+    check_method(Method::PatersonStockmeyer, 42_000);
+}
+
+#[test]
+fn prop_batch_matches_looped_baseline() {
+    check_method(Method::Baseline, 43_000);
+}
+
+#[test]
+fn prop_batch_is_order_invariant() {
+    // Reversing the batch must permute, not perturb, the results — the
+    // engine's bucketing and parallel execution cannot couple matrices.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(51_000 + seed);
+        let mats = random_batch(&mut rng);
+        let opts = ExpmOptions { method: Method::Sastre, tol: 1e-8 };
+        let fwd = expm_batch(&mats, &opts);
+        let rev_mats: Vec<Matrix> = mats.iter().rev().cloned().collect();
+        let rev = expm_batch(&rev_mats, &opts);
+        for (i, r) in fwd.iter().enumerate() {
+            let mirrored = &rev[mats.len() - 1 - i];
+            assert_eq!(r.value, mirrored.value, "seed {seed} matrix {i}");
+            assert_eq!(
+                r.stats.matrix_products,
+                mirrored.stats.matrix_products
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batch_identical_matrices_identical_results() {
+    // A bucket full of the same matrix: workspace reuse across the chunk
+    // must be invisible — every result bitwise equal to the first.
+    for seed in 0..CASES {
+        let a = randm_norm(2 + (seed as usize % 20), 3.0, 61_000 + seed);
+        let mats = vec![a; 17];
+        let batch =
+            expm_batch(&mats, &ExpmOptions { method: Method::Sastre, tol: 1e-8 });
+        for r in &batch[1..] {
+            assert_eq!(r.value, batch[0].value, "seed {seed}");
+            assert_eq!(
+                r.stats.matrix_products,
+                batch[0].stats.matrix_products
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batch_tolerance_ladder_consistent() {
+    // Within one batch, per-matrix planning must be independent of
+    // batch-mates: a matrix's (m, s) equals its solo plan at every tol.
+    for &tol in &[1e-4, 1e-8, 1e-12] {
+        let mats: Vec<Matrix> = (0..8)
+            .map(|i| randm_norm(10, [0.1, 1.0, 10.0, 200.0][i % 4], 71_000 + i as u64))
+            .collect();
+        for method in [Method::Sastre, Method::PatersonStockmeyer] {
+            let opts = ExpmOptions { method, tol };
+            let batch = expm_batch(&mats, &opts);
+            for (i, r) in batch.iter().enumerate() {
+                let solo = expm(&mats[i], &opts);
+                assert_eq!(r.stats.m, solo.stats.m, "{} {i}", method.name());
+                assert_eq!(r.stats.s, solo.stats.s, "{} {i}", method.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image vendors no external crates, so the real `anyhow`
+//! cannot be fetched. This shim keeps the workspace's public surface
+//! source-compatible: a string-backed [`Error`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, the [`Context`] extension trait and
+//! the [`Result`] alias. Like the real crate, [`Error`] deliberately does
+//! *not* implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// String-backed error value. Construction goes through [`Error::msg`],
+/// the [`anyhow!`] macro, or `?` on any `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, lazily or eagerly.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42);
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        assert_eq!(format!("{e:?}"), "boom 42");
+    }
+
+    #[test]
+    fn ensure_returns_error() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_ok());
+        assert_eq!(
+            check(-1).unwrap_err().to_string(),
+            "x must be positive, got -1"
+        );
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: std::result::Result<(), std::fmt::Error> =
+            Err(std::fmt::Error);
+        let e = r.with_context(|| "writing report").unwrap_err();
+        assert!(e.to_string().starts_with("writing report: "));
+        let o: Option<i32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+}

@@ -1,0 +1,189 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the PJRT C API and executes HLO artifacts; this
+//! build image has neither the library nor the artifacts, so the stub
+//! implements the marshalling half of the surface ([`Literal`]) for real
+//! — the coordinator's literal round-trip tests exercise it — while every
+//! client/executable entry point returns a descriptive [`Error`]. The
+//! runtime layer already treats executor construction as fallible, so the
+//! service degrades to the native f64 engine exactly as it does when
+//! `make artifacts` has not run.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for every stubbed PJRT operation.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT runtime not linked (offline xla stub); \
+             the native engine handles all computation"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    fn from_f64(x: f64) -> Self;
+}
+
+impl NativeType for f64 {
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+}
+
+/// Dense host literal: flat f64 storage plus a shape. Tuples (the
+/// `return_tuple=True` convention) carry their elements instead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+    elements: Vec<Literal>,
+}
+
+impl Literal {
+    /// Rank-1 literal over the given values.
+    pub fn vec1(values: &[f64]) -> Literal {
+        Literal {
+            data: values.to_vec(),
+            dims: vec![values.len() as i64],
+            elements: Vec::new(),
+        }
+    }
+
+    /// Same storage, new shape; errors when the element count differs.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+            elements: Vec::new(),
+        })
+    }
+
+    /// Flat element read-back.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        if self.elements.is_empty() {
+            Err(Error("to_tuple: literal is not a tuple".into()))
+        } else {
+            Ok(self.elements)
+        }
+    }
+
+    /// Declared shape (rank-n dimensions).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (never constructible through the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(
+        _path: P,
+    ) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper accepted by `compile`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.dims(), &[2, 3]);
+        assert_eq!(shaped.to_vec::<f64>().unwrap(), vec![
+            1.0, 2.0, 3.0, 4.0, 5.0, 6.0
+        ]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("offline xla stub"), "{err}");
+    }
+
+    #[test]
+    fn non_tuple_to_tuple_errors() {
+        assert!(Literal::vec1(&[1.0]).to_tuple().is_err());
+    }
+}
