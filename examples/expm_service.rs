@@ -46,11 +46,15 @@ fn main() {
     for wave in trace.chunks(8) {
         let pending: Vec<_> = wave
             .iter()
-            .map(|call| (Instant::now(), svc.submit(call.matrices.clone(), 1e-8)))
+            .map(|call| {
+                let ticket = svc
+                    .submit_batch(call.matrices.clone(), 1e-8)
+                    .expect("service alive");
+                (Instant::now(), ticket)
+            })
             .collect();
-        for (sent, rx) in pending {
-            let resp = rx.recv().expect("service alive");
-            assert!(resp.error.is_none(), "{:?}", resp.error);
+        for (sent, ticket) in pending {
+            ticket.wait().expect("request succeeds");
             latencies.push(sent.elapsed().as_secs_f64() * 1e3);
         }
     }

@@ -5,10 +5,12 @@
 //! 1. Computes e^A natively with the paper's method (Algorithm 2 + 4),
 //!    the Paterson–Stockmeyer variant (Algorithm 3) and the Xiao–Liu
 //!    baseline (Algorithm 1), comparing accuracy and matrix products.
-//! 2. Starts the expm service and pushes one batched request through the
-//!    dynamic batcher (PJRT-backed if `make artifacts` has run).
+//! 2. Starts the expm service and pushes one *job spec* — per-matrix
+//!    (method, tol) contracts in a single request — through the dynamic
+//!    batcher (PJRT-backed if `make artifacts` has run), streaming
+//!    results off the ticket as batch groups finish.
 
-use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::coordinator::{ExpmService, JobSpec, JobUpdate, ServiceConfig};
 use expmflow::expm::{expm, pade::expm_pade13, ExpmOptions, Method};
 use expmflow::linalg::{norm1, Matrix};
 use expmflow::util::rng::Rng;
@@ -39,29 +41,51 @@ fn main() {
         );
     }
 
-    // --- 2. The expm service ---------------------------------------------
+    // --- 2. The expm service (job-spec API) ------------------------------
     let svc = ExpmService::start(ServiceConfig::default());
-    let mats: Vec<Matrix> = (0..16)
-        .map(|i| {
-            let mut rng = Rng::new(100 + i);
-            let target = rng.log_uniform(1e-3, 12.0);
-            let m = Matrix::from_fn(16, 16, |_, _| rng.normal());
-            let nn = norm1(&m);
-            m.scaled(target / nn)
-        })
-        .collect();
-    match svc.compute(mats, 1e-8) {
-        Ok(results) => {
-            let backends: Vec<&str> =
-                results.iter().map(|r| r.backend).collect();
-            let products: usize =
-                results.iter().map(|r| r.stats.matrix_products).sum();
-            println!(
-                "\nservice: 16 matrices -> {} results, {} products, backend(s): {:?}",
-                results.len(),
-                products,
-                backends.iter().collect::<std::collections::BTreeSet<_>>()
-            );
+    let mut job = JobSpec::new();
+    for i in 0..16u64 {
+        let mut rng = Rng::new(100 + i);
+        let target = rng.log_uniform(1e-3, 12.0);
+        let m = Matrix::from_fn(16, 16, |_, _| rng.normal());
+        let nn = norm1(&m);
+        let matrix = m.scaled(target / nn);
+        // One job, mixed per-matrix contracts: the paper's method at two
+        // tolerances plus a Paterson–Stockmeyer comparison slice.
+        job = match i % 3 {
+            0 => job.push_with(matrix, Method::Sastre, 1e-8),
+            1 => job.push_with(matrix, Method::Sastre, 1e-4),
+            _ => job.push_with(matrix, Method::PatersonStockmeyer, 1e-8),
+        };
+    }
+    match svc.submit(job) {
+        Ok(ticket) => {
+            let mut streamed = 0usize;
+            let mut products = 0usize;
+            let mut backends = std::collections::BTreeSet::new();
+            while let Some(update) = ticket.recv() {
+                match update {
+                    JobUpdate::Result { result, .. } => {
+                        // Results stream as their batch groups finish —
+                        // no waiting for the slowest group.
+                        streamed += 1;
+                        products += result.stats.matrix_products;
+                        backends.insert(result.backend);
+                    }
+                    JobUpdate::Done { latency_s } => {
+                        println!(
+                            "\nservice: {streamed} results streamed in \
+                             {latency_s:.4}s, {products} products, \
+                             backend(s): {backends:?}"
+                        );
+                        break;
+                    }
+                    JobUpdate::Error { message } => {
+                        println!("\nservice error: {message}");
+                        break;
+                    }
+                }
+            }
         }
         Err(e) => println!("\nservice error: {e}"),
     }

@@ -7,7 +7,7 @@
 
 use expmflow::coordinator::selector::plan_matrix;
 use expmflow::expm::eval::{eval_sastre, Powers};
-use expmflow::expm::{expm, expm_batch, ExpmOptions, Method};
+use expmflow::expm::{expm, expm_batch, expm_multi, ExpmOptions, Method};
 use expmflow::linalg::{matmul_into, norm1, Matrix};
 use expmflow::report::render_table;
 use expmflow::util::cli::Args;
@@ -137,6 +137,38 @@ fn main() {
         t_loop.min_s * 1e3,
         t_batch.min_s * 1e3,
         speedup
+    );
+
+    // --- heterogeneous job specs ------------------------------------------
+    // The job-spec core under the service: the same 64 matrices with mixed
+    // per-matrix (method, tol) contracts through one expm_multi call vs a
+    // serial loop. Bucketing now keys on (n, method, m, s), so mixed
+    // contracts still share schedules where they coincide.
+    println!("\n== expm_multi, mixed per-matrix contracts (same 64) ==");
+    let contracts: Vec<ExpmOptions> = (0..batch_mats.len())
+        .map(|i| ExpmOptions {
+            method: [Method::Sastre, Method::PatersonStockmeyer][i % 2],
+            tol: [1e-8, 1e-6][(i / 2) % 2],
+        })
+        .collect();
+    let jobs: Vec<(&Matrix, ExpmOptions)> =
+        batch_mats.iter().zip(&contracts).map(|(m, o)| (m, *o)).collect();
+    let t_mloop = bench_loop(1, 5, 0.3, || {
+        let mut acc = 0.0;
+        for (m, o) in &jobs {
+            acc += expm(m, o).value[(0, 0)];
+        }
+        std::hint::black_box(acc);
+    });
+    let t_multi = bench_loop(1, 5, 0.3, || {
+        let rs = expm_multi(&jobs);
+        std::hint::black_box(rs.iter().map(|r| r.value[(0, 0)]).sum::<f64>());
+    });
+    println!(
+        "looped {:.2} ms | expm_multi {:.2} ms | throughput x{:.2}",
+        t_mloop.min_s * 1e3,
+        t_multi.min_s * 1e3,
+        t_mloop.min_s / t_multi.min_s
     );
 
     // --- baseline-vs-sastre end-to-end ratio ------------------------------

@@ -1,0 +1,409 @@
+//! Pluggable execution backends. The dispatcher owns a [`BackendRegistry`]
+//! of trait objects; every group the batcher flushes is routed at
+//! *planning* time ([`Backend::plan_hint`]) and executed through
+//! [`Backend::execute_group`]. New engines (GPU PJRT, remote shards, ...)
+//! register uniformly instead of growing a match in the dispatch loop; the
+//! native batched engine registers last and accepts everything, so routing
+//! and fail-soft degradation always terminate.
+
+use crate::expm::batch::{run_group, Schedule};
+use crate::expm::eval::{eval_sastre, Powers};
+use crate::expm::scaling::repeated_square;
+use crate::expm::{coeffs, ExpmOptions, ExpmStats, Method};
+use crate::linalg::{Matrix, SMALL_N};
+use crate::runtime::Executor;
+use crate::util::threads::parallel_map;
+
+/// Execution shape of one batch group — what the batcher keys on
+/// (together with the routed backend) and what backends plan against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GroupShape {
+    /// Matrix order.
+    pub n: usize,
+    /// The expm pipeline every matrix of the group runs.
+    pub method: Method,
+    /// Polynomial order (0 = zero matrix, or execution-time selection).
+    pub m: usize,
+    /// Squarings.
+    pub s: u32,
+}
+
+/// A compute engine that can execute pre-bucketed groups of matrices
+/// sharing one [`GroupShape`].
+pub trait Backend {
+    /// Stable name, reported per result (e.g. "native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Planning-time routing hint: can this backend execute a group of
+    /// this shape? The dispatcher asks registered backends in order and
+    /// routes each matrix to the first that accepts.
+    fn plan_hint(&self, shape: &GroupShape) -> bool;
+
+    /// Execute one group. `tols[i]` is matrix i's tolerance (only
+    /// relevant to methods that select at execution time); `powers[i]`
+    /// holds the selector's cached powers — a backend that uses them
+    /// `take()`s them out, one that doesn't leaves them for the fallback.
+    /// An `Err` makes the registry degrade to the next accepting backend.
+    fn execute_group(
+        &self,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String>;
+}
+
+/// Execute e^W with a fixed plan on the native engine (no batching —
+/// the single-matrix reference the group paths are tested against).
+pub fn native_expm_planned(w: &Matrix, m: usize, s: u32) -> (Matrix, ExpmStats) {
+    if m == 0 {
+        return (
+            Matrix::identity(w.order()),
+            ExpmStats { m: 0, s: 0, matrix_products: 0 },
+        );
+    }
+    let scaled = w.scaled((2.0f64).powi(-(s as i32)));
+    let mut powers = Powers::new(scaled);
+    let out = eval_sastre(&mut powers, m);
+    let mut value = out.value;
+    let squarings = repeated_square(&mut value, s);
+    (
+        value,
+        ExpmStats {
+            m,
+            s,
+            matrix_products: powers.products + squarings,
+        },
+    )
+}
+
+/// The native f64 engine: any shape, thread-parallel, infallible. Dynamic
+/// methods run through the batched engine (`expm::batch`) with one shared
+/// evaluation schedule and per-worker workspaces; Baseline/Padé groups
+/// run the serial pipeline per matrix under each matrix's own tolerance.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn plan_hint(&self, _shape: &GroupShape) -> bool {
+        true
+    }
+
+    fn execute_group(
+        &self,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+        match shape.method {
+            Method::Sastre | Method::PatersonStockmeyer => {
+                // Groups arrive pre-bucketed on the plan key, so the whole
+                // group is one bucket sharing one schedule. When the
+                // selector's cached powers are supplied, evaluation starts
+                // from them (the A^2 product is reused); the engine
+                // rescales W (and any cached powers) by 2^-s itself, so
+                // fresh Powers carry the *unscaled* matrix.
+                let sched = Schedule::new(shape.method, shape.m, shape.s);
+                let jobs: Vec<(usize, Powers)> = powers
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        (
+                            i,
+                            p.take().unwrap_or_else(|| {
+                                Powers::new(mats[i].clone())
+                            }),
+                        )
+                    })
+                    .collect();
+                Ok(run_group(shape.n, &sched, jobs)
+                    .into_iter()
+                    .map(|r| (r.value, r.stats))
+                    .collect())
+            }
+            _ => {
+                // Baseline/Padé select at execution time; batch-parallel
+                // below the GEMM threshold, serial above it (the inner
+                // GEMM already takes the cores there).
+                let run = |i: usize| {
+                    let r = crate::expm::expm_serial(
+                        &mats[i],
+                        &ExpmOptions { method: shape.method, tol: tols[i] },
+                    );
+                    (r.value, r.stats)
+                };
+                Ok(if shape.n < SMALL_N {
+                    parallel_map(mats.len(), run)
+                } else {
+                    (0..mats.len()).map(run).collect()
+                })
+            }
+        }
+    }
+}
+
+/// The PJRT artifact engine: grid shapes only, Sastre polynomials only
+/// (the lowered kernels implement formulas (10)–(17)). Product accounting
+/// uses the paper's cost model (the kernels perform exactly those dots in
+/// VMEM).
+pub struct PjrtBackend {
+    exec: Executor,
+}
+
+impl PjrtBackend {
+    pub fn new(exec: Executor) -> PjrtBackend {
+        PjrtBackend { exec }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn plan_hint(&self, shape: &GroupShape) -> bool {
+        self.exec.supports_group(shape.n, shape.method, shape.m)
+    }
+
+    fn execute_group(
+        &self,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        _tols: &[f64],
+        _powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+        let values = self
+            .exec
+            .expm_batch(mats, shape.m, shape.s)
+            .map_err(|e| e.to_string())?;
+        let per = ExpmStats {
+            m: shape.m,
+            s: shape.s,
+            matrix_products: coeffs::sastre_eval_cost(shape.m)
+                + shape.s as usize,
+        };
+        Ok(values.into_iter().map(|v| (v, per)).collect())
+    }
+}
+
+/// Ordered collection of backends. Registration order is routing priority;
+/// the native engine must be registered last so every shape has a home.
+pub struct BackendRegistry {
+    backends: Vec<Box<dyn Backend>>,
+}
+
+impl BackendRegistry {
+    pub fn new() -> BackendRegistry {
+        BackendRegistry { backends: Vec::new() }
+    }
+
+    pub fn register(&mut self, backend: Box<dyn Backend>) {
+        self.backends.push(backend);
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    pub fn name(&self, idx: usize) -> &'static str {
+        self.backends[idx].name()
+    }
+
+    /// Index of the first backend accepting the shape; falls back to the
+    /// last (native) backend, which accepts everything.
+    pub fn route(&self, shape: &GroupShape) -> usize {
+        assert!(!self.backends.is_empty(), "no backends registered");
+        self.backends
+            .iter()
+            .position(|b| b.plan_hint(shape))
+            .unwrap_or(self.backends.len() - 1)
+    }
+
+    /// Execute a group on the routed backend, degrading down the
+    /// registration order on failure (PJRT issues fail soft to native).
+    pub fn execute(
+        &self,
+        routed: usize,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        powers: &mut [Option<Powers>],
+    ) -> Result<(Vec<(Matrix, ExpmStats)>, &'static str), String> {
+        assert!(!self.backends.is_empty(), "no backends registered");
+        let first = routed.min(self.backends.len() - 1);
+        let mut order = vec![first];
+        for j in first + 1..self.backends.len() {
+            if self.backends[j].plan_hint(shape) {
+                order.push(j);
+            }
+        }
+        let last = self.backends.len() - 1;
+        if *order.last().unwrap() != last {
+            order.push(last);
+        }
+        let mut err = String::new();
+        for &j in &order {
+            match self.backends[j].execute_group(shape, mats, tols, powers) {
+                Ok(v) => return Ok((v, self.backends[j].name())),
+                Err(e) => {
+                    eprintln!(
+                        "backend {} failed ({e}); degrading",
+                        self.backends[j].name()
+                    );
+                    err = e;
+                }
+            }
+        }
+        Err(err)
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        BackendRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expm::pade::expm_pade13;
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+
+    fn randm(n: usize, target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let nn = norm1(&a);
+        a.scaled(target / nn)
+    }
+
+    fn native_registry() -> BackendRegistry {
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(NativeBackend));
+        reg
+    }
+
+    fn sastre_shape(n: usize, m: usize, s: u32) -> GroupShape {
+        GroupShape { n, method: Method::Sastre, m, s }
+    }
+
+    #[test]
+    fn native_planned_matches_oracle() {
+        let a = randm(10, 1.0, 1);
+        let (v, st) = native_expm_planned(&a, 8, 2);
+        let want = expm_pade13(&a);
+        let err = (&v - &want).max_abs() / want.max_abs();
+        assert!(err < 1e-9, "{err}");
+        assert_eq!(st.matrix_products, 3 + 2);
+    }
+
+    #[test]
+    fn native_group_parallel_matches_serial() {
+        let mats: Vec<Matrix> =
+            (0..7).map(|i| randm(8, 0.8, 100 + i)).collect();
+        let mut powers = vec![None; mats.len()];
+        let tols = vec![1e-8; mats.len()];
+        let shape = sastre_shape(8, 8, 1);
+        let group = NativeBackend
+            .execute_group(&shape, &mats, &tols, &mut powers)
+            .unwrap();
+        for (i, (v, _)) in group.iter().enumerate() {
+            let (want, _) = native_expm_planned(&mats[i], 8, 1);
+            assert_eq!(v, &want);
+        }
+    }
+
+    #[test]
+    fn zero_order_plan_yields_identity() {
+        let (v, st) = native_expm_planned(&Matrix::zeros(5, 5), 0, 0);
+        assert_eq!(v, Matrix::identity(5));
+        assert_eq!(st.matrix_products, 0);
+        // The group path agrees.
+        let mats = vec![Matrix::zeros(5, 5)];
+        let group = NativeBackend
+            .execute_group(
+                &sastre_shape(5, 0, 0),
+                &mats,
+                &[1e-8],
+                &mut [None],
+            )
+            .unwrap();
+        assert_eq!(group[0].0, Matrix::identity(5));
+        assert_eq!(group[0].1.matrix_products, 0);
+    }
+
+    #[test]
+    fn baseline_group_matches_serial_pipeline() {
+        use crate::expm::{expm, ExpmOptions};
+        let mats: Vec<Matrix> =
+            (0..4).map(|i| randm(6, 1.2, 200 + i)).collect();
+        let tols = vec![1e-8, 1e-6, 1e-10, 1e-8];
+        let shape = GroupShape { n: 6, method: Method::Baseline, m: 0, s: 0 };
+        let group = NativeBackend
+            .execute_group(&shape, &mats, &tols, &mut vec![None; 4])
+            .unwrap();
+        for (i, (v, st)) in group.iter().enumerate() {
+            let want = expm(
+                &mats[i],
+                &ExpmOptions { method: Method::Baseline, tol: tols[i] },
+            );
+            assert_eq!(v, &want.value, "matrix {i}");
+            assert_eq!(st.matrix_products, want.stats.matrix_products);
+        }
+    }
+
+    #[test]
+    fn registry_routes_to_native_without_pjrt() {
+        let reg = native_registry();
+        let shape = sastre_shape(6, 4, 0);
+        assert_eq!(reg.route(&shape), 0);
+        let mats = vec![randm(6, 0.5, 9)];
+        let (res, name) = reg
+            .execute(0, &shape, &mats, &[1e-8], &mut vec![None])
+            .unwrap();
+        assert_eq!(name, "native");
+        assert_eq!(res.len(), 1);
+    }
+
+    #[test]
+    fn registry_degrades_past_failing_backend() {
+        struct Flaky;
+        impl Backend for Flaky {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn plan_hint(&self, _s: &GroupShape) -> bool {
+                true
+            }
+            fn execute_group(
+                &self,
+                _shape: &GroupShape,
+                _mats: &[Matrix],
+                _tols: &[f64],
+                _powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                Err("injected".into())
+            }
+        }
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(Flaky));
+        reg.register(Box::new(NativeBackend));
+        let shape = sastre_shape(5, 4, 0);
+        assert_eq!(reg.route(&shape), 0, "flaky accepts, so it routes");
+        let mats = vec![randm(5, 0.5, 11)];
+        let (res, name) = reg
+            .execute(0, &shape, &mats, &[1e-8], &mut vec![None])
+            .unwrap();
+        assert_eq!(name, "native", "must degrade to native");
+        assert_eq!(res.len(), 1);
+    }
+}

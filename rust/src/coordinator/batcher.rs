@@ -1,6 +1,6 @@
 //! Dynamic batcher: accumulates planned matrices and flushes groups that
-//! share an execution shape (n, m, s) when either the group reaches
-//! `max_batch` or the oldest item exceeds `max_wait` — the same
+//! share an execution key (backend, method, n, m, s) when either the group
+//! reaches `max_batch` or the oldest item exceeds `max_wait` — the same
 //! size-or-deadline policy production inference routers use.
 
 use std::collections::HashMap;
@@ -8,8 +8,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::request::Collector;
-use super::selector::Plan;
+use super::selector::{Plan, PlanKey};
 use crate::linalg::Matrix;
+
+/// Full group key: the routed backend index plus the plan's shape key.
+/// Matrices only share a group when the *same engine* will run them with
+/// the *same schedule*.
+pub type GroupKey = (usize, PlanKey);
 
 /// One matrix waiting for execution.
 pub struct Item {
@@ -19,10 +24,22 @@ pub struct Item {
     /// Powers (W, W^2) cached by the selector; the native backend
     /// evaluates from these so the selection-time A^2 is reused.
     pub powers: Option<crate::expm::eval::Powers>,
-    /// Where to deliver, and at which slot index of the request.
+    /// Index into the dispatcher's backend registry, fixed at plan time.
+    pub backend: usize,
+    /// Job-level priority: higher flushes first within a wave.
+    pub priority: i32,
+    /// Absolute deadline (submission + the job's deadline), if any.
+    pub deadline: Option<Instant>,
+    /// Where to deliver, and at which slot index of the job.
     pub collector: Arc<Collector>,
     pub slot: usize,
     pub enqueued: Instant,
+}
+
+impl Item {
+    pub fn key(&self) -> GroupKey {
+        (self.backend, self.plan.key())
+    }
 }
 
 /// Flush policy knobs.
@@ -46,7 +63,7 @@ impl Default for BatchPolicy {
 /// Grouped pending work.
 #[derive(Default)]
 pub struct Batcher {
-    groups: HashMap<(usize, usize, u32), Vec<Item>>,
+    groups: HashMap<GroupKey, Vec<Item>>,
     len: usize,
 }
 
@@ -65,7 +82,7 @@ impl Batcher {
 
     pub fn push(&mut self, item: Item) {
         self.len += 1;
-        self.groups.entry(item.plan.key()).or_default().push(item);
+        self.groups.entry(item.key()).or_default().push(item);
     }
 
     /// Groups that hit the size threshold.
@@ -124,17 +141,31 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::expm::Method;
     use std::sync::mpsc::channel;
 
     fn item(n: usize, m: usize, s: u32) -> Item {
+        item_on(0, Method::Sastre, n, m, s)
+    }
+
+    fn item_on(
+        backend: usize,
+        method: Method,
+        n: usize,
+        m: usize,
+        s: u32,
+    ) -> Item {
         let (tx, _rx) = channel();
         // Leak the receiver side: these tests never deliver.
         std::mem::forget(_rx);
         Item {
             matrix: Matrix::identity(n),
-            plan: Plan { n, m, s },
+            plan: Plan { n, method, m, s },
             tol: 1e-8,
             powers: None,
+            backend,
+            priority: 0,
+            deadline: None,
             collector: Collector::new(0, 1, tx),
             slot: 0,
             enqueued: Instant::now(),
@@ -153,6 +184,20 @@ mod tests {
         assert_eq!(full.len(), 1);
         assert_eq!(full[0].len(), 2);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn method_and_backend_split_groups() {
+        // Same (n, m, s) but a different method or routed backend must
+        // never share a group.
+        let mut b = Batcher::new();
+        b.push(item_on(0, Method::Sastre, 8, 8, 0));
+        b.push(item_on(0, Method::PatersonStockmeyer, 8, 8, 0));
+        b.push(item_on(1, Method::Sastre, 8, 8, 0));
+        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::ZERO };
+        let full = b.take_full(&policy);
+        assert_eq!(full.len(), 3, "three singleton groups");
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! The job-spec surface of the expm service: a typed [`JobSpec`] builder
+//! (per-matrix `Method` and tolerance, optional deadline/priority) and the
+//! streaming [`Ticket`] handle its submission returns.
+//!
+//! The v1 API flattened the paper's per-problem contract into one `tol`
+//! per request and blocked until every matrix finished; a job spec keeps
+//! the contract per matrix and the ticket streams [`JobUpdate`]s as batch
+//! groups complete, so a caller can consume early results while stragglers
+//! (bigger n, deeper schedules) are still executing.
+
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::time::Duration;
+
+use crate::expm::Method;
+use crate::linalg::Matrix;
+
+use super::request::MatrixResult;
+
+/// One matrix with its own execution contract.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub matrix: Matrix,
+    pub method: Method,
+    pub tol: f64,
+}
+
+/// A typed service request: matrices with per-matrix `(method, tol)`,
+/// plus job-level deadline and priority knobs.
+///
+/// ```
+/// use expmflow::coordinator::JobSpec;
+/// use expmflow::expm::Method;
+/// use expmflow::linalg::Matrix;
+///
+/// let job = JobSpec::new()
+///     .tol(1e-10)
+///     .push(Matrix::identity(4)) // Sastre @ 1e-10 (current defaults)
+///     .push_with(Matrix::identity(8), Method::PatersonStockmeyer, 1e-6);
+/// assert_eq!(job.len(), 2);
+/// ```
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    specs: Vec<MatrixSpec>,
+    default_method: Method,
+    default_tol: f64,
+    deadline: Option<Duration>,
+    priority: i32,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec::new()
+    }
+}
+
+impl JobSpec {
+    pub fn new() -> JobSpec {
+        JobSpec {
+            specs: Vec::new(),
+            default_method: Method::Sastre,
+            default_tol: 1e-8,
+            deadline: None,
+            priority: 0,
+        }
+    }
+
+    /// The v1 shape: every matrix under one tolerance, Sastre method.
+    pub fn uniform(matrices: Vec<Matrix>, tol: f64) -> JobSpec {
+        let mut job = JobSpec::new().tol(tol);
+        for m in matrices {
+            job = job.push(m);
+        }
+        job
+    }
+
+    /// Default method for matrices pushed *after* this call.
+    pub fn method(mut self, method: Method) -> JobSpec {
+        self.default_method = method;
+        self
+    }
+
+    /// Default tolerance for matrices pushed *after* this call.
+    pub fn tol(mut self, tol: f64) -> JobSpec {
+        self.default_tol = tol;
+        self
+    }
+
+    /// Fail the whole job if it has not *started executing* within `d` of
+    /// submission (checked when its batch groups flush). A `d` too large
+    /// to represent as an absolute instant means "no deadline".
+    pub fn deadline(mut self, d: Duration) -> JobSpec {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Higher-priority jobs' groups execute first within a flush wave.
+    pub fn priority(mut self, p: i32) -> JobSpec {
+        self.priority = p;
+        self
+    }
+
+    /// Add a matrix under the current default `(method, tol)`.
+    pub fn push(mut self, matrix: Matrix) -> JobSpec {
+        self.specs.push(MatrixSpec {
+            matrix,
+            method: self.default_method,
+            tol: self.default_tol,
+        });
+        self
+    }
+
+    /// Add a matrix with an explicit per-matrix contract.
+    pub fn push_with(
+        mut self,
+        matrix: Matrix,
+        method: Method,
+        tol: f64,
+    ) -> JobSpec {
+        self.specs.push(MatrixSpec { matrix, method, tol });
+        self
+    }
+
+    /// Add a pre-built spec (wire-protocol path).
+    pub fn push_spec(mut self, spec: MatrixSpec) -> JobSpec {
+        self.specs.push(spec);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[MatrixSpec] {
+        &self.specs
+    }
+
+    pub fn get_deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    pub fn get_priority(&self) -> i32 {
+        self.priority
+    }
+
+    pub(crate) fn into_specs(self) -> Vec<MatrixSpec> {
+        self.specs
+    }
+
+    /// Validation errors surfaced to the client instead of panicking.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.specs.is_empty() {
+            return Err("job has no matrices".into());
+        }
+        for (i, spec) in self.specs.iter().enumerate() {
+            if !(spec.tol.is_finite() && spec.tol > 0.0) {
+                return Err(format!(
+                    "matrix {i}: invalid tolerance {}",
+                    spec.tol
+                ));
+            }
+            let m = &spec.matrix;
+            if !m.is_square() {
+                return Err(format!(
+                    "matrix {i} is {}x{}, not square",
+                    m.rows(),
+                    m.cols()
+                ));
+            }
+            if m.order() == 0 {
+                return Err(format!("matrix {i} is empty"));
+            }
+            if !m.is_finite() {
+                return Err(format!("matrix {i} has non-finite entries"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One streamed event on a [`Ticket`].
+#[derive(Debug)]
+pub enum JobUpdate {
+    /// Matrix `index` of the job finished (its batch group completed).
+    Result { index: usize, result: MatrixResult },
+    /// Every matrix delivered; the job is complete.
+    Done { latency_s: f64 },
+    /// The job failed as a whole (validation, deadline, backend failure).
+    Error { message: String },
+}
+
+/// Submission failed because the service's dispatcher has stopped; the
+/// closed-ticket error callers handle instead of the old panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServiceClosed;
+
+impl std::fmt::Display for ServiceClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "expm service is closed (dispatcher stopped)")
+    }
+}
+
+impl std::error::Error for ServiceClosed {}
+
+/// Aggregated outcome of a completed job (the blocking view).
+#[derive(Debug)]
+pub struct JobResponse {
+    pub id: u64,
+    /// Per-matrix results in submission order.
+    pub results: Vec<MatrixResult>,
+    pub latency_s: f64,
+}
+
+/// Handle to an in-flight job: stream [`JobUpdate`]s with [`Ticket::recv`]
+/// as batch groups finish, or block for the whole job with
+/// [`Ticket::wait`].
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    count: usize,
+    rx: Receiver<JobUpdate>,
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        id: u64,
+        count: usize,
+        rx: Receiver<JobUpdate>,
+    ) -> Ticket {
+        Ticket { id, count, rx }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// How many matrices the job contains (= `Result` updates expected).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Block for the next update. `None` once the terminal update
+    /// (`Done`/`Error`) has been taken or the service dropped the job.
+    pub fn recv(&self) -> Option<JobUpdate> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking variant of [`Ticket::recv`]; `Ok(None)` means no
+    /// update is ready yet.
+    pub fn try_recv(&self) -> Result<Option<JobUpdate>, ServiceClosed> {
+        match self.rx.try_recv() {
+            Ok(u) => Ok(Some(u)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(ServiceClosed),
+        }
+    }
+
+    /// Drain the stream and assemble the full response in submission
+    /// order (the v1 blocking behaviour).
+    pub fn wait(self) -> Result<JobResponse, String> {
+        let mut results: Vec<Option<MatrixResult>> =
+            (0..self.count).map(|_| None).collect();
+        let mut latency_s = None;
+        while let Some(update) = self.recv() {
+            match update {
+                JobUpdate::Result { index, result } => {
+                    if index < results.len() {
+                        results[index] = Some(result);
+                    }
+                }
+                JobUpdate::Done { latency_s: l } => {
+                    latency_s = Some(l);
+                    break;
+                }
+                JobUpdate::Error { message } => return Err(message),
+            }
+        }
+        let Some(latency_s) = latency_s else {
+            return Err("service stopped before the job completed".into());
+        };
+        let mut out = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Some(r) => out.push(r),
+                None => return Err(format!("matrix {i} never completed")),
+            }
+        }
+        Ok(JobResponse { id: self.id, results: out, latency_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_tracks_defaults_per_push() {
+        let job = JobSpec::new()
+            .tol(1e-6)
+            .push(Matrix::identity(3))
+            .method(Method::Baseline)
+            .tol(1e-4)
+            .push(Matrix::identity(4))
+            .push_with(Matrix::identity(5), Method::Pade, 1e-2);
+        let specs = job.specs();
+        assert_eq!(specs.len(), 3);
+        assert_eq!((specs[0].method, specs[0].tol), (Method::Sastre, 1e-6));
+        assert_eq!((specs[1].method, specs[1].tol), (Method::Baseline, 1e-4));
+        assert_eq!((specs[2].method, specs[2].tol), (Method::Pade, 1e-2));
+    }
+
+    #[test]
+    fn uniform_matches_v1_shape() {
+        let job = JobSpec::uniform(
+            vec![Matrix::identity(2), Matrix::identity(3)],
+            1e-9,
+        );
+        assert_eq!(job.len(), 2);
+        assert!(job
+            .specs()
+            .iter()
+            .all(|s| s.method == Method::Sastre && s.tol == 1e-9));
+        assert!(job.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_jobs() {
+        assert!(JobSpec::new().validate().is_err(), "empty job");
+        let bad_tol = JobSpec::new()
+            .push_with(Matrix::identity(3), Method::Sastre, f64::NAN);
+        assert!(bad_tol.validate().is_err());
+        let rect = JobSpec::new().push(Matrix::zeros(2, 3));
+        assert!(rect.validate().is_err());
+        let mut nan = Matrix::identity(2);
+        nan[(0, 0)] = f64::INFINITY;
+        assert!(JobSpec::new().push(nan).validate().is_err());
+        let ok = JobSpec::new().push(Matrix::identity(3));
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn ticket_wait_orders_results() {
+        use super::super::request::Collector;
+        use crate::expm::ExpmStats;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let c = Collector::new(7, 2, tx);
+        let ticket = Ticket::new(7, 2, rx);
+        let mk = |v: f64| MatrixResult {
+            value: Matrix::identity(1).scaled(v),
+            stats: ExpmStats::default(),
+            method: Method::Sastre,
+            backend: "native",
+        };
+        c.fulfill(1, mk(2.0));
+        c.fulfill(0, mk(1.0));
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.results.len(), 2);
+        assert_eq!(resp.results[0].value[(0, 0)], 1.0);
+        assert_eq!(resp.results[1].value[(0, 0)], 2.0);
+    }
+}

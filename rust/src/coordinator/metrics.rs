@@ -20,6 +20,7 @@ struct Inner {
     matrix_products: u64,
     degree_hist: BTreeMap<usize, u64>,
     scaling_hist: BTreeMap<u32, u64>,
+    backend_hist: BTreeMap<&'static str, u64>,
     batch_fill: Vec<f64>,
     latencies_s: Vec<f64>,
 }
@@ -34,6 +35,8 @@ pub struct Snapshot {
     pub matrix_products: u64,
     pub degree_hist: BTreeMap<usize, u64>,
     pub scaling_hist: BTreeMap<u32, u64>,
+    /// Groups executed per backend name.
+    pub backend_hist: BTreeMap<&'static str, u64>,
     pub mean_batch_fill: f64,
     pub mean_latency_s: f64,
     pub p99_latency_s: f64,
@@ -67,6 +70,12 @@ impl Metrics {
         g.matrix_products += products as u64;
     }
 
+    /// One batch group executed on the named backend.
+    pub fn record_backend(&self, name: &'static str) {
+        let mut g = self.inner.lock().unwrap();
+        *g.backend_hist.entry(name).or_default() += 1;
+    }
+
     pub fn record_latency(&self, d: Duration) {
         self.inner.lock().unwrap().latencies_s.push(d.as_secs_f64());
     }
@@ -93,6 +102,7 @@ impl Metrics {
             matrix_products: g.matrix_products,
             degree_hist: g.degree_hist,
             scaling_hist: g.scaling_hist,
+            backend_hist: g.backend_hist,
             mean_batch_fill: mean(&g.batch_fill),
             mean_latency_s: mean(&g.latencies_s),
             p99_latency_s: p99,
@@ -125,6 +135,10 @@ impl Snapshot {
         s.push_str("\nscaling histogram:");
         for (sc, c) in &self.scaling_hist {
             s.push_str(&format!(" s={sc}:{c}"));
+        }
+        s.push_str("\nbackend groups:");
+        for (name, c) in &self.backend_hist {
+            s.push_str(&format!(" {name}:{c}"));
         }
         s.push('\n');
         s
@@ -168,8 +182,14 @@ mod tests {
     fn render_contains_histograms() {
         let m = Metrics::new();
         m.record_matrix(15, 3, 7);
+        m.record_backend("native");
+        m.record_backend("native");
+        m.record_backend("pjrt");
         let out = m.snapshot().render();
         assert!(out.contains("m=15:1"));
         assert!(out.contains("s=3:1"));
+        assert!(out.contains("native:2"));
+        assert!(out.contains("pjrt:1"));
+        assert_eq!(m.snapshot().backend_hist[&"native"], 2);
     }
 }

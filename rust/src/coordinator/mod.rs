@@ -1,14 +1,20 @@
 //! L3 coordinator — the expm *service*. This is the paper's system-side
 //! contribution made production-shaped: a router in the vLLM mold that
 //!
-//! 1. validates incoming [`ExpmRequest`]s,
-//! 2. plans each matrix with the paper's Algorithm 4 ([`selector`]),
-//! 3. dynamically batches matrices that share an execution shape
-//!    (n, m, s) ([`batcher`]),
-//! 4. dispatches groups to the PJRT artifacts or the native *batched*
-//!    engine (`expm::batch` via [`dispatch`]) — each group shares one
-//!    evaluation schedule and per-worker workspaces, and
-//! 5. accounts products/degrees/scalings/latencies ([`metrics`]).
+//! 1. validates incoming [`JobSpec`]s (per-matrix `(method, tol)`
+//!    contracts, optional deadline/priority — [`job`]),
+//! 2. plans each matrix with the paper's selection algorithms
+//!    ([`selector`]), routing it to the first registered
+//!    [`backend::Backend`] whose `plan_hint` accepts the shape,
+//! 3. dynamically batches matrices that share an execution key
+//!    (backend, method, n, m, s) ([`batcher`]),
+//! 4. dispatches groups through the [`BackendRegistry`] — the PJRT
+//!    artifact engine when registered, the native *batched* engine
+//!    (`expm::batch`) always, failing soft down the registration order
+//!    ([`backend`]), and
+//! 5. streams per-matrix results back through each job's [`Ticket`] as
+//!    its groups finish, while accounting
+//!    products/degrees/scalings/latencies ([`metrics`]).
 //!
 //! Threading: clients talk to the service over an mpsc channel; a single
 //! dispatcher thread owns the (non-Sync) PJRT executor and drives the
@@ -16,8 +22,9 @@
 //! (tokio is not in the offline vendor set — std threads + channels carry
 //! the same architecture.)
 
+pub mod backend;
 pub mod batcher;
-pub mod dispatch;
+pub mod job;
 pub mod metrics;
 pub mod request;
 pub mod selector;
@@ -28,14 +35,17 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
-
 use crate::linalg::Matrix;
 use crate::runtime::Executor;
+use backend::{BackendRegistry, NativeBackend, PjrtBackend};
 use batcher::{BatchPolicy, Batcher, Item};
-use dispatch::{execute_group, BackendKind};
 use metrics::Metrics;
-use request::{validate, Collector, ExpmRequest, ExpmResponse, MatrixResult};
+use request::Collector;
+
+pub use job::{
+    JobResponse, JobSpec, JobUpdate, MatrixSpec, ServiceClosed, Ticket,
+};
+pub use request::MatrixResult;
 pub use selector::Plan;
 
 /// Service configuration.
@@ -56,8 +66,18 @@ impl Default for ServiceConfig {
 }
 
 enum Msg {
-    Request(ExpmRequest, Sender<ExpmResponse>),
+    Job(JobEnvelope),
     Shutdown,
+}
+
+/// An accepted job on its way to the dispatcher.
+struct JobEnvelope {
+    id: u64,
+    spec: JobSpec,
+    tx: Sender<JobUpdate>,
+    /// When `submit` accepted the job — the deadline clock starts here,
+    /// not at dispatcher dequeue, so queueing time counts against it.
+    submitted: Instant,
 }
 
 /// Handle to a running expm service.
@@ -87,35 +107,43 @@ impl ExpmService {
         }
     }
 
-    /// Submit asynchronously; the returned receiver yields the response.
-    pub fn submit(
+    /// Submit a job; the [`Ticket`] streams per-matrix results as batch
+    /// groups finish. Returns [`ServiceClosed`] (instead of panicking)
+    /// when the dispatcher has stopped.
+    pub fn submit(&self, spec: JobSpec) -> Result<Ticket, ServiceClosed> {
+        let count = spec.len();
+        let (jtx, jrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Job(JobEnvelope {
+                id,
+                spec,
+                tx: jtx,
+                submitted: Instant::now(),
+            }))
+            .map_err(|_| ServiceClosed)?;
+        Ok(Ticket::new(id, count, jrx))
+    }
+
+    /// v1-shaped convenience: every matrix under one tolerance (Sastre).
+    pub fn submit_batch(
         &self,
         matrices: Vec<Matrix>,
         tol: f64,
-    ) -> Receiver<ExpmResponse> {
-        let (rtx, rrx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = ExpmRequest { id, matrices, tol };
-        self.tx
-            .send(Msg::Request(req, rtx))
-            .expect("service thread alive");
-        rrx
+    ) -> Result<Ticket, ServiceClosed> {
+        self.submit(JobSpec::uniform(matrices, tol))
     }
 
-    /// Blocking convenience wrapper.
+    /// Blocking convenience wrapper (v1 behaviour).
     pub fn compute(
         &self,
         matrices: Vec<Matrix>,
         tol: f64,
     ) -> Result<Vec<MatrixResult>, String> {
-        let resp = self
-            .submit(matrices, tol)
-            .recv()
-            .map_err(|_| "service stopped".to_string())?;
-        match resp.error {
-            Some(e) => Err(e),
-            None => Ok(resp.results),
-        }
+        let ticket = self
+            .submit_batch(matrices, tol)
+            .map_err(|e| e.to_string())?;
+        ticket.wait().map(|resp| resp.results)
     }
 }
 
@@ -131,19 +159,19 @@ impl Drop for ExpmService {
 /// The dispatch loop: receive with a deadline equal to the batch window,
 /// plan + enqueue, flush full groups eagerly and stale groups on timeout.
 fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
-    let executor: Option<Executor> = match &config.artifact_dir {
-        Some(dir) => match Executor::new(dir) {
-            Ok(e) => Some(e),
-            Err(err) => {
-                eprintln!(
-                    "expm-service: PJRT backend unavailable ({err}); \
-                     running native-only"
-                );
-                None
-            }
-        },
-        None => None,
-    };
+    let mut registry = BackendRegistry::new();
+    if let Some(dir) = &config.artifact_dir {
+        match Executor::new(dir) {
+            Ok(e) => registry.register(Box::new(PjrtBackend::new(e))),
+            Err(err) => eprintln!(
+                "expm-service: PJRT backend unavailable ({err}); \
+                 running native-only"
+            ),
+        }
+    }
+    // The native engine registers last: it accepts every shape, so routing
+    // and fail-soft degradation always terminate there.
+    registry.register(Box::new(NativeBackend));
     let mut batcher = Batcher::new();
     loop {
         let msg = if batcher.is_empty() {
@@ -162,36 +190,49 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
             Some(Msg::Shutdown) => {
                 flush(
                     batcher.drain_all(),
-                    executor.as_ref(),
+                    &registry,
                     &metrics,
                     &config.policy,
                 );
                 break;
             }
-            Some(Msg::Request(req, reply)) => {
-                metrics.record_request(req.matrices.len());
-                if let Err(e) = validate(&req) {
+            Some(Msg::Job(envelope)) => {
+                metrics.record_request(envelope.spec.len());
+                if let Err(e) = envelope.spec.validate() {
                     metrics.record_error();
-                    let _ = reply.send(ExpmResponse {
-                        id: req.id,
-                        results: Vec::new(),
-                        latency_s: 0.0,
-                        error: Some(e),
-                    });
+                    Collector::new(envelope.id, 0, envelope.tx).fail(e);
                     continue;
                 }
-                let collector =
-                    Collector::new(req.id, req.matrices.len(), reply);
-                let plans =
-                    selector::plan_all_with_powers(&req.matrices, req.tol);
-                for (slot, (matrix, (plan, powers))) in
-                    req.matrices.into_iter().zip(plans).enumerate()
+                let collector = Collector::new(
+                    envelope.id,
+                    envelope.spec.len(),
+                    envelope.tx,
+                );
+                // checked_add: an unrepresentable deadline (e.g. a
+                // Duration::MAX "no deadline" sentinel) degrades to no
+                // deadline instead of panicking the dispatcher.
+                let deadline = envelope
+                    .spec
+                    .get_deadline()
+                    .and_then(|d| envelope.submitted.checked_add(d));
+                let priority = envelope.spec.get_priority();
+                for (slot, spec) in
+                    envelope.spec.into_specs().into_iter().enumerate()
                 {
+                    let (plan, powers) = selector::plan_spec(
+                        &spec.matrix,
+                        spec.method,
+                        spec.tol,
+                    );
+                    let routed = registry.route(&plan.shape());
                     batcher.push(Item {
-                        matrix,
+                        matrix: spec.matrix,
                         plan,
-                        tol: req.tol,
-                        powers: Some(powers),
+                        tol: spec.tol,
+                        powers,
+                        backend: routed,
+                        priority,
+                        deadline,
                         collector: collector.clone(),
                         slot,
                         enqueued: Instant::now(),
@@ -199,7 +240,7 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
                 }
                 flush(
                     batcher.take_full(&config.policy),
-                    executor.as_ref(),
+                    &registry,
                     &metrics,
                     &config.policy,
                 );
@@ -208,7 +249,7 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
                 // Batch window elapsed: drain stale groups.
                 flush(
                     batcher.take_expired(&config.policy),
-                    executor.as_ref(),
+                    &registry,
                     &metrics,
                     &config.policy,
                 );
@@ -218,36 +259,91 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
 }
 
 fn flush(
-    groups: Vec<Vec<Item>>,
-    executor: Option<&Executor>,
+    mut groups: Vec<Vec<Item>>,
+    registry: &BackendRegistry,
     metrics: &Metrics,
     policy: &BatchPolicy,
 ) {
+    // Higher-priority jobs' groups execute first within this wave.
+    groups.sort_by_key(|g| {
+        std::cmp::Reverse(g.iter().map(|i| i.priority).max().unwrap_or(0))
+    });
     for mut group in groups {
+        // Jobs whose deadline passed before their group reached a backend
+        // fail as a whole; surviving items still execute.
+        let now = Instant::now();
+        group.retain(|item| match item.deadline {
+            Some(d) if now > d => {
+                // fail() transitions once per job, so the error metric
+                // counts failed jobs, not expired items.
+                if item
+                    .collector
+                    .fail("job deadline exceeded before execution".into())
+                {
+                    metrics.record_error();
+                }
+                false
+            }
+            _ => true,
+        });
         if group.is_empty() {
             continue;
         }
         let started = Instant::now();
-        let plan = group[0].plan;
+        let shape = group[0].plan.shape();
         metrics.record_batch(group.len(), policy.max_batch);
-        let mats: Vec<Matrix> =
-            group.iter().map(|i| i.matrix.clone()).collect();
-        let powers: Vec<_> =
-            group.iter_mut().map(|i| i.powers.take()).collect();
-        let (results, kind) =
-            execute_group(executor, &mats, powers, plan.m, plan.s);
-        let backend = match kind {
-            BackendKind::Native => "native",
-            BackendKind::Pjrt => "pjrt",
-        };
-        for (item, (value, stats)) in group.iter().zip(results) {
-            metrics.record_matrix(stats.m, stats.s, stats.matrix_products);
-            item.collector.fulfill(
-                item.slot,
-                MatrixResult { value, stats, backend },
-            );
+        // The items are owned and their matrices are not needed after
+        // execution, so move them out instead of cloning O(n^2) data on
+        // the dispatcher hot path (powers already move the same way).
+        let mut mats = Vec::with_capacity(group.len());
+        let mut tols = Vec::with_capacity(group.len());
+        let mut powers = Vec::with_capacity(group.len());
+        for item in group.iter_mut() {
+            mats.push(std::mem::replace(&mut item.matrix, Matrix::zeros(0, 0)));
+            tols.push(item.tol);
+            powers.push(item.powers.take());
         }
-        metrics.record_latency(started.elapsed());
+        match registry.execute(
+            group[0].backend,
+            &shape,
+            &mats,
+            &tols,
+            &mut powers,
+        ) {
+            Ok((results, backend_name)) => {
+                metrics.record_backend(backend_name);
+                for (item, (value, stats)) in group.iter().zip(results) {
+                    metrics.record_matrix(
+                        stats.m,
+                        stats.s,
+                        stats.matrix_products,
+                    );
+                    item.collector.fulfill(
+                        item.slot,
+                        MatrixResult {
+                            value,
+                            stats,
+                            method: shape.method,
+                            backend: backend_name,
+                        },
+                    );
+                }
+                metrics.record_latency(started.elapsed());
+            }
+            Err(e) => {
+                // Every backend (including native) refused — fail the
+                // affected jobs instead of dropping their tickets (one
+                // error count per job, not per item).
+                for item in &group {
+                    if item
+                        .collector
+                        .fail(format!("group execution failed: {e}"))
+                    {
+                        metrics.record_error();
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -255,6 +351,7 @@ fn flush(
 mod tests {
     use super::*;
     use crate::expm::pade::expm_pade13;
+    use crate::expm::{expm, ExpmOptions, Method};
     use crate::linalg::norm1;
     use crate::util::rng::Rng;
 
@@ -287,6 +384,7 @@ mod tests {
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.matrices, 5);
         assert!(snap.matrix_products > 0);
+        assert!(snap.backend_hist[&"native"] > 0);
     }
 
     #[test]
@@ -307,6 +405,94 @@ mod tests {
         for (r, a) in results.iter().zip(&mats) {
             assert_eq!(r.value.order(), a.order());
         }
+    }
+
+    #[test]
+    fn mixed_methods_and_tols_one_job() {
+        // The tentpole contract: one job, per-matrix (method, tol), every
+        // result exactly what the library computes for that contract.
+        let svc = native_service();
+        let mats: Vec<Matrix> =
+            (0..6).map(|i| randm(6 + i % 3, 1.5, 50 + i as u64)).collect();
+        let contracts = [
+            (Method::Sastre, 1e-10),
+            (Method::PatersonStockmeyer, 1e-6),
+            (Method::Baseline, 1e-8),
+            (Method::Sastre, 1e-4),
+            (Method::Pade, 1e-8),
+            (Method::PatersonStockmeyer, 1e-12),
+        ];
+        let mut job = JobSpec::new();
+        for (a, (method, tol)) in mats.iter().zip(contracts) {
+            job = job.push_with(a.clone(), method, tol);
+        }
+        let resp = svc.submit(job).unwrap().wait().unwrap();
+        assert_eq!(resp.results.len(), 6);
+        for (i, r) in resp.results.iter().enumerate() {
+            let (method, tol) = contracts[i];
+            let want = expm(&mats[i], &ExpmOptions { method, tol });
+            assert_eq!(r.value, want.value, "matrix {i}");
+            assert_eq!(
+                r.stats.matrix_products,
+                want.stats.matrix_products,
+                "matrix {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn ticket_streams_partials_before_done() {
+        let svc = native_service();
+        let mats: Vec<Matrix> = (0..4).map(|i| randm(8, 1.0, 80 + i)).collect();
+        let ticket = svc.submit_batch(mats, 1e-8).unwrap();
+        assert_eq!(ticket.count(), 4);
+        let mut seen = vec![false; 4];
+        let mut done = false;
+        while let Some(update) = ticket.recv() {
+            match update {
+                JobUpdate::Result { index, result } => {
+                    assert!(!done, "no Result may trail Done");
+                    assert!(!seen[index], "duplicate index {index}");
+                    seen[index] = true;
+                    assert!(result.value.is_finite());
+                }
+                JobUpdate::Done { latency_s } => {
+                    assert!(latency_s >= 0.0);
+                    done = true;
+                }
+                JobUpdate::Error { message } => panic!("{message}"),
+            }
+        }
+        assert!(done, "terminal Done update");
+        assert!(seen.iter().all(|&s| s), "every index streamed");
+    }
+
+    #[test]
+    fn submit_after_shutdown_returns_closed() {
+        let mut svc = native_service();
+        // Stop the dispatcher out from under the handle.
+        svc.tx.send(Msg::Shutdown).unwrap();
+        if let Some(w) = svc.worker.take() {
+            w.join().unwrap();
+        }
+        let err = svc
+            .submit(JobSpec::new().push(Matrix::identity(3)))
+            .unwrap_err();
+        assert_eq!(err, ServiceClosed);
+        assert!(svc
+            .compute(vec![Matrix::identity(3)], 1e-8)
+            .unwrap_err()
+            .contains("closed"));
+    }
+
+    #[test]
+    fn deadline_already_expired_fails_job() {
+        let svc = native_service();
+        let job = JobSpec::new()
+            .deadline(std::time::Duration::ZERO)
+            .push(randm(8, 1.0, 7));
+        let err = svc.submit(job).unwrap().wait().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
     }
 
     #[test]

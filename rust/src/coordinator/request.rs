@@ -1,135 +1,104 @@
-//! Request/response types for the expm service.
+//! Result delivery for the expm service: the per-matrix [`MatrixResult`]
+//! and the [`Collector`] that streams them back to a job's
+//! [`super::job::Ticket`] as batch groups finish.
+//!
+//! (The request *input* types live in [`super::job`]: the v1
+//! `ExpmRequest { matrices, tol }` shape was replaced by the
+//! [`super::job::JobSpec`] builder with per-matrix contracts.)
 
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::expm::ExpmStats;
+use crate::expm::{ExpmStats, Method};
 use crate::linalg::Matrix;
 
-/// A client request: one or more square matrices to exponentiate under a
-/// shared tolerance. Matrices may have different orders; the batcher
-/// regroups them.
-#[derive(Clone, Debug)]
-pub struct ExpmRequest {
-    pub id: u64,
-    pub matrices: Vec<Matrix>,
-    pub tol: f64,
-}
+use super::job::JobUpdate;
 
 /// Per-matrix outcome.
 #[derive(Clone, Debug)]
 pub struct MatrixResult {
     pub value: Matrix,
     pub stats: ExpmStats,
-    /// Which backend produced it ("native" | "pjrt").
+    /// Which expm pipeline ran this matrix (jobs can mix methods).
+    pub method: Method,
+    /// Which backend produced it (a [`super::backend::Backend::name`],
+    /// e.g. "native" | "pjrt").
     pub backend: &'static str,
 }
 
-/// Full response, delivered once every matrix of the request completes.
-#[derive(Debug)]
-pub struct ExpmResponse {
-    pub id: u64,
-    pub results: Vec<MatrixResult>,
-    pub latency_s: f64,
-    pub error: Option<String>,
-}
-
-/// Validation errors surfaced to the client instead of panicking.
-pub fn validate(req: &ExpmRequest) -> Result<(), String> {
-    if req.matrices.is_empty() {
-        return Err("request has no matrices".into());
-    }
-    if !(req.tol.is_finite() && req.tol > 0.0) {
-        return Err(format!("invalid tolerance {}", req.tol));
-    }
-    for (i, m) in req.matrices.iter().enumerate() {
-        if !m.is_square() {
-            return Err(format!(
-                "matrix {i} is {}x{}, not square",
-                m.rows(),
-                m.cols()
-            ));
-        }
-        if m.order() == 0 {
-            return Err(format!("matrix {i} is empty"));
-        }
-        if !m.is_finite() {
-            return Err(format!("matrix {i} has non-finite entries"));
-        }
-    }
-    Ok(())
-}
-
-/// Gathers per-matrix results for one request and fires the reply channel
-/// when the last slot fills. Shared by all batch groups the request was
-/// split across.
+/// Streams a job's per-matrix results to its ticket and fires the terminal
+/// update when the last slot fills. Shared by all batch groups the job was
+/// split across; a failure (deadline, backend collapse) short-circuits the
+/// whole job.
 pub struct Collector {
     id: u64,
     started: Instant,
-    slots: Mutex<CollectorState>,
-    reply: Sender<ExpmResponse>,
+    state: Mutex<CollectorState>,
+    tx: Sender<JobUpdate>,
 }
 
 struct CollectorState {
-    results: Vec<Option<MatrixResult>>,
+    filled: Vec<bool>,
     remaining: usize,
-    error: Option<String>,
+    /// A terminal update (`Done` or `Error`) has been sent; nothing may
+    /// stream after it.
+    terminal: bool,
 }
 
 impl Collector {
     pub fn new(
         id: u64,
         count: usize,
-        reply: Sender<ExpmResponse>,
+        tx: Sender<JobUpdate>,
     ) -> Arc<Collector> {
         Arc::new(Collector {
             id,
             started: Instant::now(),
-            slots: Mutex::new(CollectorState {
-                results: (0..count).map(|_| None).collect(),
+            state: Mutex::new(CollectorState {
+                filled: vec![false; count],
                 remaining: count,
-                error: None,
+                terminal: false,
             }),
-            reply,
+            tx,
         })
     }
 
-    /// Install result `idx`; sends the response when complete.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Stream result `idx` immediately; emits `Done` when it is the last.
+    /// Updates are sent under the state lock so a `Result` can never trail
+    /// the terminal `Done` on the ticket.
     pub fn fulfill(&self, idx: usize, result: MatrixResult) {
-        let mut st = self.slots.lock().unwrap();
-        if st.remaining == 0 {
-            return; // already failed or completed
+        let mut st = self.state.lock().unwrap();
+        if st.terminal || st.filled[idx] {
+            return; // already failed/completed, or a duplicate
         }
-        if st.results[idx].is_none() {
-            st.results[idx] = Some(result);
-            st.remaining -= 1;
-        }
+        st.filled[idx] = true;
+        st.remaining -= 1;
+        let _ = self.tx.send(JobUpdate::Result { index: idx, result });
         if st.remaining == 0 {
-            let results =
-                st.results.drain(..).map(Option::unwrap).collect();
-            let _ = self.reply.send(ExpmResponse {
-                id: self.id,
-                results,
+            st.terminal = true;
+            let _ = self.tx.send(JobUpdate::Done {
                 latency_s: self.started.elapsed().as_secs_f64(),
-                error: st.error.take(),
             });
         }
     }
 
-    /// Abort: report an error for the whole request immediately.
-    pub fn fail(&self, msg: String) {
-        let mut st = self.slots.lock().unwrap();
-        if st.remaining == 0 {
-            return;
+    /// Abort: stream an error for the whole job immediately; later
+    /// fulfills are ignored. Returns `true` only on the transition to the
+    /// failed state (so per-job accounting stays one count per job even
+    /// when a job's items fail across several groups).
+    pub fn fail(&self, message: String) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.terminal {
+            return false;
         }
-        st.remaining = 0;
-        let _ = self.reply.send(ExpmResponse {
-            id: self.id,
-            results: Vec::new(),
-            latency_s: self.started.elapsed().as_secs_f64(),
-            error: Some(msg),
-        });
+        st.terminal = true;
+        let _ = self.tx.send(JobUpdate::Error { message });
+        true
     }
 }
 
@@ -142,50 +111,32 @@ mod tests {
         MatrixResult {
             value: Matrix::identity(2),
             stats: Default::default(),
+            method: Method::Sastre,
             backend: "native",
         }
     }
 
-    #[test]
-    fn validate_rejects_bad_requests() {
-        let ok = ExpmRequest {
-            id: 1,
-            matrices: vec![Matrix::identity(3)],
-            tol: 1e-8,
-        };
-        assert!(validate(&ok).is_ok());
-        let empty = ExpmRequest { id: 1, matrices: vec![], tol: 1e-8 };
-        assert!(validate(&empty).is_err());
-        let bad_tol = ExpmRequest {
-            id: 1,
-            matrices: vec![Matrix::identity(3)],
-            tol: f64::NAN,
-        };
-        assert!(validate(&bad_tol).is_err());
-        let rect = ExpmRequest {
-            id: 1,
-            matrices: vec![Matrix::zeros(2, 3)],
-            tol: 1e-8,
-        };
-        assert!(validate(&rect).is_err());
-        let mut nan = Matrix::identity(2);
-        nan[(0, 0)] = f64::INFINITY;
-        let inf = ExpmRequest { id: 1, matrices: vec![nan], tol: 1e-8 };
-        assert!(validate(&inf).is_err());
+    fn is_result(u: &JobUpdate, want_idx: usize) -> bool {
+        matches!(u, JobUpdate::Result { index, .. } if *index == want_idx)
     }
 
     #[test]
-    fn collector_fires_once_complete() {
+    fn collector_streams_then_completes() {
         let (tx, rx) = channel();
         let c = Collector::new(9, 3, tx);
         c.fulfill(1, dummy_result());
-        assert!(rx.try_recv().is_err());
+        // The partial result is visible before the job completes.
+        assert!(is_result(&rx.try_recv().unwrap(), 1));
+        assert!(rx.try_recv().is_err(), "no Done yet");
         c.fulfill(0, dummy_result());
         c.fulfill(2, dummy_result());
-        let resp = rx.try_recv().unwrap();
-        assert_eq!(resp.id, 9);
-        assert_eq!(resp.results.len(), 3);
-        assert!(resp.error.is_none());
+        assert!(is_result(&rx.try_recv().unwrap(), 0));
+        assert!(is_result(&rx.try_recv().unwrap(), 2));
+        assert!(matches!(
+            rx.try_recv().unwrap(),
+            JobUpdate::Done { .. }
+        ));
+        assert!(rx.try_recv().is_err(), "terminal update fires once");
     }
 
     #[test]
@@ -194,9 +145,11 @@ mod tests {
         let c = Collector::new(1, 2, tx);
         c.fulfill(0, dummy_result());
         c.fulfill(0, dummy_result());
-        assert!(rx.try_recv().is_err());
+        assert!(is_result(&rx.try_recv().unwrap(), 0));
+        assert!(rx.try_recv().is_err(), "duplicate result suppressed");
         c.fulfill(1, dummy_result());
-        assert!(rx.try_recv().is_ok());
+        assert!(is_result(&rx.try_recv().unwrap(), 1));
+        assert!(matches!(rx.try_recv().unwrap(), JobUpdate::Done { .. }));
     }
 
     #[test]
@@ -204,9 +157,11 @@ mod tests {
         let (tx, rx) = channel();
         let c = Collector::new(2, 5, tx);
         c.fail("boom".into());
-        let resp = rx.try_recv().unwrap();
-        assert_eq!(resp.error.as_deref(), Some("boom"));
-        // Later fulfills must not fire a second response.
+        assert!(matches!(
+            rx.try_recv().unwrap(),
+            JobUpdate::Error { message } if message == "boom"
+        ));
+        // Later fulfills must not stream anything further.
         c.fulfill(0, dummy_result());
         assert!(rx.try_recv().is_err());
     }

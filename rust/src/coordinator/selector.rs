@@ -1,60 +1,85 @@
-//! Per-request planning: run the paper's Algorithm 4 on each matrix to fix
-//! (m, s) *before* dispatch, so the batcher can group matrices that share
-//! an execution shape. Norm work is O(n^2) per matrix plus one n×n product
-//! for ||W^2|| — that product's result is thrown away here (the PJRT poly
-//! kernels recompute A^2 in VMEM); the native backend keeps it. The
-//! accounting below follows the paper's convention of charging the
-//! evaluation-formula totals of Section 3.1.
+//! Per-request planning: run the paper's selection algorithms on each
+//! matrix to fix (method, m, s) *before* dispatch, so the batcher can
+//! group matrices that share an execution shape. Norm work is O(n^2) per
+//! matrix plus one n×n product for ||W^2|| — that product's result is
+//! thrown away here (the PJRT poly kernels recompute A^2 in VMEM); the
+//! native backend keeps it. The accounting below follows the paper's
+//! convention of charging the evaluation-formula totals of Section 3.1.
+//!
+//! Baseline/Padé matrices carry no pre-computed (m, s): their selection
+//! happens inside the serial pipeline at execution time, so they plan as
+//! `(method, 0, 0)` and group only by `(backend, n, method)`.
 
 use crate::expm::eval::Powers;
-use crate::expm::selection::{select_sastre, SelectOptions, Selection};
+use crate::expm::selection::select_dynamic;
+use crate::expm::Method;
 use crate::linalg::Matrix;
+
+use super::backend::GroupShape;
 
 /// Execution plan for one matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Plan {
     /// Matrix order n.
     pub n: usize,
-    /// Polynomial order (Algorithm 4 ladder; 0 = zero matrix).
+    /// Which expm pipeline runs this matrix.
+    pub method: Method,
+    /// Polynomial order (selection ladder; 0 = zero matrix, and also the
+    /// placeholder for methods that select at execution time).
     pub m: usize,
     /// Squarings.
     pub s: u32,
 }
 
+/// The batcher's group key: matrices with equal keys share one execution.
+pub type PlanKey = (Method, usize, usize, u32);
+
 impl Plan {
-    /// Batch-group key: matrices with equal keys run in one PJRT call.
-    pub fn key(&self) -> (usize, usize, u32) {
-        (self.n, self.m, self.s)
+    /// Batch-group key: matrices with equal keys run in one backend call.
+    pub fn key(&self) -> PlanKey {
+        (self.method, self.n, self.m, self.s)
+    }
+
+    /// The shape handed to [`super::backend::Backend`] implementations.
+    pub fn shape(&self) -> GroupShape {
+        GroupShape { n: self.n, method: self.method, m: self.m, s: self.s }
     }
 }
 
-/// Plan a single matrix under tolerance `tol`.
+/// Plan one matrix under its own `(method, tol)` contract, retaining the
+/// powers (W, W^2, ...) the norm bounds computed — the native backend
+/// evaluates straight from them, so the A^2 product paid during selection
+/// is never repeated (§Perf L3; the PJRT kernels recompute A^2 in VMEM by
+/// design, so the PJRT path ignores them). Baseline/Padé plans carry no
+/// powers: their pipelines select and evaluate in one pass at execution.
+pub fn plan_spec(
+    w: &Matrix,
+    method: Method,
+    tol: f64,
+) -> (Plan, Option<Powers>) {
+    match method {
+        Method::Sastre | Method::PatersonStockmeyer => {
+            // One shared planning routine with the batch engine — the
+            // service/library bitwise-parity contract depends on it.
+            let (sel, powers) = select_dynamic(w, method, tol);
+            (
+                Plan { n: w.order(), method, m: sel.m, s: sel.s },
+                Some(powers),
+            )
+        }
+        _ => (Plan { n: w.order(), method, m: 0, s: 0 }, None),
+    }
+}
+
+/// Plan a single matrix under tolerance `tol` with the default (Sastre)
+/// method — the v1 surface, kept for benches and tests.
 pub fn plan_matrix(w: &Matrix, tol: f64) -> Plan {
-    plan_matrix_with_powers(w, tol).0
+    plan_spec(w, Method::Sastre, tol).0
 }
 
-/// Plan a matrix AND keep the powers (W, W^2) the bounds computed — the
-/// native backend evaluates straight from them, so the A^2 product paid
-/// during selection is never repeated (§Perf L3; the PJRT kernels
-/// recompute A^2 in VMEM by design, so the PJRT path ignores them).
-pub fn plan_matrix_with_powers(w: &Matrix, tol: f64) -> (Plan, Powers) {
-    let mut powers = Powers::new(w.clone());
-    let opts = SelectOptions { tol, power_est: false };
-    let sel: Selection = select_sastre(&mut powers, &opts);
-    (Plan { n: w.order(), m: sel.m, s: sel.s }, powers)
-}
-
-/// Plan every matrix of a request.
+/// Plan every matrix of a uniform-tolerance request (Sastre).
 pub fn plan_all(mats: &[Matrix], tol: f64) -> Vec<Plan> {
     mats.iter().map(|m| plan_matrix(m, tol)).collect()
-}
-
-/// Plan every matrix, retaining powers for the native fast path.
-pub fn plan_all_with_powers(
-    mats: &[Matrix],
-    tol: f64,
-) -> Vec<(Plan, Powers)> {
-    mats.iter().map(|m| plan_matrix_with_powers(m, tol)).collect()
 }
 
 #[cfg(test)]
@@ -81,12 +106,16 @@ mod tests {
         let c = mk(16, 500.0, &mut rng);
         let pc = plan_matrix(&c, 1e-8);
         assert_ne!(pa.key(), pc.key());
+        // The same matrix under a different method never shares a key.
+        let (pd, _) = plan_spec(&a, Method::PatersonStockmeyer, 1e-8);
+        assert_ne!(pa.key(), pd.key());
     }
 
     #[test]
     fn zero_matrix_plan() {
         let p = plan_matrix(&Matrix::zeros(8, 8), 1e-8);
         assert_eq!((p.m, p.s), (0, 0));
+        assert_eq!(p.method, Method::Sastre);
     }
 
     #[test]
@@ -100,5 +129,19 @@ mod tests {
             assert!([0usize, 1, 2, 4, 8, 15].contains(&p.m), "{p:?}");
             assert!(p.s <= 20);
         }
+    }
+
+    #[test]
+    fn baseline_plans_are_execution_selected() {
+        let a = Matrix::identity(6);
+        let (p, powers) = plan_spec(&a, Method::Baseline, 1e-8);
+        assert_eq!((p.m, p.s), (0, 0));
+        assert!(powers.is_none());
+        let (p, powers) = plan_spec(&a, Method::Pade, 1e-8);
+        assert_eq!((p.m, p.s), (0, 0));
+        assert!(powers.is_none());
+        // Dynamic methods keep their selection powers.
+        let (_, powers) = plan_spec(&a, Method::Sastre, 1e-8);
+        assert!(powers.is_some());
     }
 }

@@ -2,25 +2,109 @@
 //! expm service deployable as a standalone daemon (the "launcher" role of
 //! the production stack; std-only since tokio isn't vendored).
 //!
-//! Protocol (one JSON object per line):
+//! ## Protocol v2 (one JSON object per line, `"v": 2`)
+//!
+//! Request fields: `matrices` + `orders` as in v1, plus per-matrix
+//! contracts — `method` and `tol` each accept a single value (applied to
+//! every matrix) or an array of per-matrix values — and `stream`:
+//!
+//!   -> {"v": 2, "id": 7, "orders": [2, 3], "matrices": [[...], [...]],
+//!       "method": ["sastre", "ps"], "tol": [1e-8, 1e-6], "stream": true}
+//!
+//! With `"stream": false` (default) one aggregate frame answers:
+//!
+//!   <- {"v": 2, "id": 7, "ok": true, "results": [[...], ...],
+//!       "stats": [{"m": 8, "s": 1, "products": 4, "backend": "native",
+//!                  "method": "expm_flow_sastre"}, ...]}
+//!
+//! With `"stream": true` each matrix answers as its batch group finishes
+//! (indices arrive in completion order, not submission order), then a
+//! terminal frame:
+//!
+//!   <- {"v": 2, "id": 7, "ok": true, "partial": true, "index": 1,
+//!       "result": [...], "stats": {...}}
+//!   <- {"v": 2, "id": 7, "ok": true, "done": true, "count": 2,
+//!       "latency_s": 0.003}
+//!
+//! ## Protocol v1 (no `"v"` field) — still accepted
 //!
 //!   -> {"id": 7, "tol": 1e-8, "matrices": [[...row-major...], ...],
 //!       "orders": [n1, n2, ...]}
 //!   <- {"id": 7, "ok": true, "results": [[...], ...],
-//!       "stats": [{"m": 8, "s": 1, "products": 4}, ...]}
+//!       "stats": [{"m": 8, "s": 1, "products": 4, ...}, ...]}
 //!   <- {"id": 7, "ok": false, "error": "..."}
 //!
 //! A request with `"cmd": "stats"` returns the metrics snapshot; with
 //! `"cmd": "shutdown"` it stops the listener (used by tests).
+//!
+//! Connection handling is bounded: at most [`MAX_CONNS`] concurrent
+//! per-connection threads; a burst beyond that waits in the accept loop
+//! instead of spawning unboundedly.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-use crate::coordinator::ExpmService;
+use crate::coordinator::{
+    ExpmService, JobSpec, JobUpdate, MatrixResult, Ticket,
+};
+use crate::expm::Method;
 use crate::linalg::Matrix;
 use crate::util::json::{self, Json};
+
+/// Cap on concurrent per-connection threads (the accept semaphore).
+pub const MAX_CONNS: usize = 64;
+
+/// Largest matrix order accepted over the wire. Keeps `n * n` far from
+/// usize overflow and bounds the allocation a single frame can demand.
+pub const MAX_WIRE_ORDER: usize = 4096;
+
+/// Counting semaphore for the accept loop: `acquire` blocks while
+/// [`MAX_CONNS`] connections are live, re-checking the stop flag so
+/// shutdown never deadlocks behind a full house.
+struct Gate {
+    max: usize,
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(max: usize) -> Gate {
+        Gate { max, count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Take a slot; `false` means the server is stopping.
+    fn acquire(&self, stop: &AtomicBool) -> bool {
+        let mut n = self.count.lock().unwrap();
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return false;
+            }
+            if *n < self.max {
+                *n += 1;
+                return true;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(n, Duration::from_millis(50))
+                .unwrap();
+            n = guard;
+        }
+    }
+
+    fn release(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n = n.saturating_sub(1);
+        self.cv.notify_one();
+    }
+
+    #[cfg(test)]
+    fn live(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+}
 
 /// Running server handle.
 pub struct Server {
@@ -45,16 +129,31 @@ impl Server {
                 listener
                     .set_nonblocking(false)
                     .expect("blocking listener");
-                // Accept loop; each connection gets a thread.
+                let gate = Arc::new(Gate::new(MAX_CONNS));
+                // Accept loop; each connection gets a thread, bounded by
+                // the gate.
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
                     match conn {
                         Ok(stream) => {
+                            if !gate.acquire(&stop2) {
+                                break;
+                            }
                             let svc = svc.clone();
                             let stop3 = stop2.clone();
+                            let gate2 = gate.clone();
                             std::thread::spawn(move || {
+                                // RAII so a panicking handler still
+                                // returns its slot to the gate.
+                                struct Slot(Arc<Gate>);
+                                impl Drop for Slot {
+                                    fn drop(&mut self) {
+                                        self.0.release();
+                                    }
+                                }
+                                let _slot = Slot(gate2);
                                 let _ = handle_conn(stream, svc, stop3);
                             });
                         }
@@ -105,12 +204,16 @@ fn error_reply(id: f64, msg: &str) -> String {
     ]))
 }
 
+fn write_frame(writer: &mut TcpStream, frame: &str) -> std::io::Result<()> {
+    writer.write_all(frame.as_bytes())?;
+    writer.write_all(b"\n")
+}
+
 fn handle_conn(
     stream: TcpStream,
     svc: Arc<ExpmService>,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
-    let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -118,51 +221,16 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match handle_line(&line, &svc, &stop) {
-            Ok(r) => r,
-            Err(msg) => error_reply(-1.0, &msg),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+        handle_line(&line, &svc, &stop, &mut writer)?;
         if stop.load(Ordering::SeqCst) {
             break;
         }
     }
-    let _ = peer;
     Ok(())
 }
 
-fn handle_line(
-    line: &str,
-    svc: &ExpmService,
-    stop: &AtomicBool,
-) -> Result<String, String> {
-    let req = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
-    let id = req.get("id").and_then(Json::as_f64).unwrap_or(-1.0);
-    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            "stats" => {
-                let snap = svc.metrics.snapshot();
-                Ok(json::to_string(&obj(vec![
-                    ("id", Json::Num(id)),
-                    ("ok", Json::Bool(true)),
-                    ("requests", Json::Num(snap.requests as f64)),
-                    ("matrices", Json::Num(snap.matrices as f64)),
-                    ("products", Json::Num(snap.matrix_products as f64)),
-                    ("errors", Json::Num(snap.errors as f64)),
-                ])))
-            }
-            "shutdown" => {
-                stop.store(true, Ordering::SeqCst);
-                Ok(json::to_string(&obj(vec![
-                    ("id", Json::Num(id)),
-                    ("ok", Json::Bool(true)),
-                ])))
-            }
-            other => Err(format!("unknown cmd {other:?}")),
-        };
-    }
-    let tol = req.get("tol").and_then(Json::as_f64).unwrap_or(1e-8);
+/// Decode the shared `orders` + `matrices` payload (v1 and v2).
+fn parse_matrix_payload(req: &Json) -> Result<Vec<Matrix>, String> {
     let orders = req
         .get("orders")
         .and_then(Json::as_arr)
@@ -177,6 +245,11 @@ fn handle_line(
     let mut mats = Vec::with_capacity(data.len());
     for (o, d) in orders.iter().zip(data) {
         let n = o.as_usize().ok_or("bad order")?;
+        if n == 0 || n > MAX_WIRE_ORDER {
+            return Err(format!(
+                "order {n} out of range (1..={MAX_WIRE_ORDER})"
+            ));
+        }
         let vals = d.as_arr().ok_or("matrix must be an array")?;
         if vals.len() != n * n {
             return Err(format!(
@@ -192,30 +265,158 @@ fn handle_line(
         }
         mats.push(Matrix::from_vec(n, n, flat));
     }
+    Ok(mats)
+}
+
+/// Per-matrix methods: a single name applies to all, an array is
+/// positional. Defaults to Sastre.
+fn parse_methods(req: &Json, count: usize) -> Result<Vec<Method>, String> {
+    match req.get("method") {
+        None => Ok(vec![Method::Sastre; count]),
+        Some(Json::Str(name)) => {
+            let m = Method::parse(name)
+                .ok_or_else(|| format!("unknown method {name:?}"))?;
+            Ok(vec![m; count])
+        }
+        Some(Json::Arr(entries)) => {
+            if entries.len() != count {
+                return Err("method/matrices length mismatch".into());
+            }
+            entries
+                .iter()
+                .map(|e| {
+                    let name = e
+                        .as_str()
+                        .ok_or("method entries must be strings")?;
+                    Method::parse(name)
+                        .ok_or_else(|| format!("unknown method {name:?}"))
+                })
+                .collect()
+        }
+        Some(_) => Err("'method' must be a string or an array".into()),
+    }
+}
+
+/// Per-matrix tolerances: a single number applies to all, an array is
+/// positional. Defaults to 1e-8.
+fn parse_tols(req: &Json, count: usize) -> Result<Vec<f64>, String> {
+    match req.get("tol") {
+        None => Ok(vec![1e-8; count]),
+        Some(Json::Num(tol)) => Ok(vec![*tol; count]),
+        Some(Json::Arr(entries)) => {
+            if entries.len() != count {
+                return Err("tol/matrices length mismatch".into());
+            }
+            entries
+                .iter()
+                .map(|e| {
+                    e.as_f64().ok_or_else(|| {
+                        "tol entries must be numbers".to_string()
+                    })
+                })
+                .collect()
+        }
+        Some(_) => Err("'tol' must be a number or an array".into()),
+    }
+}
+
+fn value_json(r: &MatrixResult) -> Json {
+    Json::Arr(r.value.data().iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn stats_json(r: &MatrixResult) -> Json {
+    obj(vec![
+        ("m", Json::Num(r.stats.m as f64)),
+        ("s", Json::Num(r.stats.s as f64)),
+        ("products", Json::Num(r.stats.matrix_products as f64)),
+        ("backend", Json::Str(r.backend.into())),
+        ("method", Json::Str(r.method.name().into())),
+    ])
+}
+
+fn handle_line(
+    line: &str,
+    svc: &ExpmService,
+    stop: &AtomicBool,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let req = match json::parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return write_frame(
+                writer,
+                &error_reply(-1.0, &format!("bad json: {e}")),
+            )
+        }
+    };
+    let id = req.get("id").and_then(Json::as_f64).unwrap_or(-1.0);
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        let frame = match cmd {
+            "stats" => {
+                let snap = svc.metrics.snapshot();
+                json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("ok", Json::Bool(true)),
+                    ("requests", Json::Num(snap.requests as f64)),
+                    ("matrices", Json::Num(snap.matrices as f64)),
+                    ("products", Json::Num(snap.matrix_products as f64)),
+                    ("errors", Json::Num(snap.errors as f64)),
+                ]))
+            }
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("ok", Json::Bool(true)),
+                ]))
+            }
+            other => error_reply(id, &format!("unknown cmd {other:?}")),
+        };
+        return write_frame(writer, &frame);
+    }
+    // No "v" field is the v1 protocol by definition; a present but
+    // non-numeric "v" is rejected rather than silently served as v1
+    // (which would drop the caller's per-matrix contracts).
+    let version = match req.get("v") {
+        None => 1,
+        Some(v) => match v.as_f64() {
+            Some(x) if x.fract() == 0.0 && x >= 0.0 => x as u32,
+            _ => {
+                return write_frame(
+                    writer,
+                    &error_reply(id, "'v' must be a non-negative integer"),
+                )
+            }
+        },
+    };
+    match version {
+        1 => {
+            let frame = match handle_v1(&req, id, svc) {
+                Ok(f) => f,
+                Err(msg) => error_reply(id, &msg),
+            };
+            write_frame(writer, &frame)
+        }
+        2 => handle_v2(&req, id, svc, writer),
+        other => write_frame(
+            writer,
+            &error_reply(id, &format!("unsupported protocol version {other}")),
+        ),
+    }
+}
+
+/// v1: one uniform tolerance, one aggregate (blocking) reply.
+fn handle_v1(
+    req: &Json,
+    id: f64,
+    svc: &ExpmService,
+) -> Result<String, String> {
+    let tol = req.get("tol").and_then(Json::as_f64).unwrap_or(1e-8);
+    let mats = parse_matrix_payload(req)?;
     match svc.compute(mats, tol) {
         Ok(results) => {
-            let vals: Vec<Json> = results
-                .iter()
-                .map(|r| {
-                    Json::Arr(
-                        r.value.data().iter().map(|&x| Json::Num(x)).collect(),
-                    )
-                })
-                .collect();
-            let stats: Vec<Json> = results
-                .iter()
-                .map(|r| {
-                    obj(vec![
-                        ("m", Json::Num(r.stats.m as f64)),
-                        ("s", Json::Num(r.stats.s as f64)),
-                        (
-                            "products",
-                            Json::Num(r.stats.matrix_products as f64),
-                        ),
-                        ("backend", Json::Str(r.backend.into())),
-                    ])
-                })
-                .collect();
+            let vals: Vec<Json> = results.iter().map(value_json).collect();
+            let stats: Vec<Json> = results.iter().map(stats_json).collect();
             Ok(json::to_string(&obj(vec![
                 ("id", Json::Num(id)),
                 ("ok", Json::Bool(true)),
@@ -225,6 +426,119 @@ fn handle_line(
         }
         Err(e) => Ok(error_reply(id, &e)),
     }
+}
+
+/// v2: per-matrix `(method, tol)`, optional streaming partials.
+fn handle_v2(
+    req: &Json,
+    id: f64,
+    svc: &ExpmService,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let job = (|| -> Result<JobSpec, String> {
+        let mats = parse_matrix_payload(req)?;
+        let methods = parse_methods(req, mats.len())?;
+        let tols = parse_tols(req, mats.len())?;
+        let mut job = JobSpec::new();
+        for ((matrix, method), tol) in
+            mats.into_iter().zip(methods).zip(tols)
+        {
+            job = job.push_with(matrix, method, tol);
+        }
+        Ok(job)
+    })();
+    let job = match job {
+        Ok(j) => j,
+        Err(msg) => return write_frame(writer, &error_reply(id, &msg)),
+    };
+    // Like "v": a present-but-mistyped "stream" is rejected, not silently
+    // degraded to the aggregate reply (a client expecting partial frames
+    // would hang waiting for a "done" frame that never comes).
+    let stream = match req.get("stream") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => {
+            return write_frame(
+                writer,
+                &error_reply(id, "'stream' must be a boolean"),
+            )
+        }
+    };
+    let ticket = match svc.submit(job) {
+        Ok(t) => t,
+        Err(e) => {
+            return write_frame(writer, &error_reply(id, &e.to_string()))
+        }
+    };
+    if stream {
+        stream_updates(ticket, id, writer)
+    } else {
+        let frame = match ticket.wait() {
+            Ok(resp) => {
+                let vals: Vec<Json> =
+                    resp.results.iter().map(value_json).collect();
+                let stats: Vec<Json> =
+                    resp.results.iter().map(stats_json).collect();
+                json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("v", Json::Num(2.0)),
+                    ("ok", Json::Bool(true)),
+                    ("results", Json::Arr(vals)),
+                    ("stats", Json::Arr(stats)),
+                ]))
+            }
+            Err(e) => error_reply(id, &e),
+        };
+        write_frame(writer, &frame)
+    }
+}
+
+/// Forward a ticket's updates as wire frames until the terminal one.
+fn stream_updates(
+    ticket: Ticket,
+    id: f64,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let count = ticket.count();
+    let mut terminal = false;
+    while let Some(update) = ticket.recv() {
+        match update {
+            JobUpdate::Result { index, result } => {
+                let frame = json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("v", Json::Num(2.0)),
+                    ("ok", Json::Bool(true)),
+                    ("partial", Json::Bool(true)),
+                    ("index", Json::Num(index as f64)),
+                    ("result", value_json(&result)),
+                    ("stats", stats_json(&result)),
+                ]));
+                write_frame(writer, &frame)?;
+            }
+            JobUpdate::Done { latency_s } => {
+                let frame = json::to_string(&obj(vec![
+                    ("id", Json::Num(id)),
+                    ("v", Json::Num(2.0)),
+                    ("ok", Json::Bool(true)),
+                    ("done", Json::Bool(true)),
+                    ("count", Json::Num(count as f64)),
+                    ("latency_s", Json::Num(latency_s)),
+                ]));
+                write_frame(writer, &frame)?;
+                terminal = true;
+                break;
+            }
+            JobUpdate::Error { message } => {
+                write_frame(writer, &error_reply(id, &message))?;
+                terminal = true;
+                break;
+            }
+        }
+    }
+    if !terminal {
+        write_frame(writer, &error_reply(id, "service stopped mid-job"))?;
+    }
+    Ok(())
 }
 
 /// Minimal blocking client (used by tests, examples and the CLI).
@@ -240,15 +554,25 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
-    pub fn roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+    /// Send one request line (without trailing newline).
+    pub fn send_line(&mut self, line: &str) -> std::io::Result<()> {
         self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        self.writer.write_all(b"\n")
+    }
+
+    /// Read the next reply frame (streaming protocols send several).
+    pub fn recv_line(&mut self) -> std::io::Result<String> {
         let mut out = String::new();
         self.reader.read_line(&mut out)?;
         Ok(out)
     }
 
-    /// Convenience: exponentiate one matrix remotely.
+    pub fn roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+        self.send_line(line)?;
+        self.recv_line()
+    }
+
+    /// Convenience: exponentiate one matrix remotely (v1 frame).
     pub fn expm(
         &mut self,
         a: &Matrix,
@@ -280,6 +604,38 @@ impl Client {
         let flat = flat.ok_or("non-numeric results")?;
         Ok(Matrix::from_vec(a.order(), a.order(), flat))
     }
+
+    /// Build a v2 request line for mixed per-matrix contracts.
+    pub fn v2_request_line(
+        id: u64,
+        jobs: &[(&Matrix, Method, f64)],
+        stream: bool,
+    ) -> String {
+        let orders: Vec<String> =
+            jobs.iter().map(|(a, _, _)| a.order().to_string()).collect();
+        let mats: Vec<String> = jobs
+            .iter()
+            .map(|(a, _, _)| {
+                let entries: Vec<String> =
+                    a.data().iter().map(|x| format!("{x}")).collect();
+                format!("[{}]", entries.join(","))
+            })
+            .collect();
+        let methods: Vec<String> = jobs
+            .iter()
+            .map(|(_, m, _)| format!("{:?}", m.name()))
+            .collect();
+        let tols: Vec<String> =
+            jobs.iter().map(|(_, _, t)| format!("{t}")).collect();
+        format!(
+            "{{\"v\": 2, \"id\": {id}, \"orders\": [{}], \"matrices\": [{}], \
+             \"method\": [{}], \"tol\": [{}], \"stream\": {stream}}}",
+            orders.join(","),
+            mats.join(","),
+            methods.join(","),
+            tols.join(",")
+        )
+    }
 }
 
 #[cfg(test)]
@@ -296,6 +652,23 @@ mod tests {
         }));
         let server = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
         (server, svc)
+    }
+
+    #[test]
+    fn gate_bounds_and_releases() {
+        let gate = Gate::new(2);
+        let stop = AtomicBool::new(false);
+        assert!(gate.acquire(&stop));
+        assert!(gate.acquire(&stop));
+        assert_eq!(gate.live(), 2);
+        // A full gate with the stop flag raised refuses instead of
+        // blocking forever.
+        stop.store(true, Ordering::SeqCst);
+        assert!(!gate.acquire(&stop));
+        stop.store(false, Ordering::SeqCst);
+        gate.release();
+        assert_eq!(gate.live(), 1);
+        assert!(gate.acquire(&stop));
     }
 
     #[test]

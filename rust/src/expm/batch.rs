@@ -3,7 +3,9 @@
 //! The paper's workload (generative-flow training/sampling) arrives as
 //! *batches* of small-to-medium matrices, and once the product count is
 //! minimized (Algorithm 4), throughput is decided by how those products
-//! are executed. [`expm_batch`] turns a batch into three phases:
+//! are executed. [`expm_multi`] — the job-spec core under [`expm_batch`]
+//! and the single-matrix wrapper — turns a batch (each matrix carrying
+//! its own `(method, tol)`) into three phases:
 //!
 //! 1. **Plan** — run the dynamic (m, s) selection on every matrix in
 //!    parallel, retaining the powers the norm bounds computed (the A^2
@@ -33,8 +35,8 @@ use std::sync::Mutex;
 
 use super::coeffs::{self, C15, C8};
 use super::eval::Powers;
-use super::selection::{self, SelectOptions, Selection};
-use super::{ExpmOptions, ExpmResult, ExpmStats, Method, UNIT_ROUNDOFF};
+use super::selection::{self, Selection};
+use super::{ExpmOptions, ExpmResult, ExpmStats, Method};
 use crate::linalg::{matmul_into, Matrix, SMALL_N};
 use crate::util::threads::{parallel_for_chunks, parallel_map};
 
@@ -321,69 +323,107 @@ pub fn run_bucket_into(
     });
 }
 
-/// Compute e^{W_i} for a whole batch. Matches looping [`super::expm`] over
+/// Execute one contiguous same-shape group — `jobs` carries slots
+/// `0..jobs.len()` — and return results in slot order. This is the
+/// execution half the coordinator's native backend shares with
+/// [`expm_multi`]: both drive [`run_bucket_into`], so a group dispatched
+/// by the service runs the exact float-op sequence the library runs.
+pub fn run_group(
+    n: usize,
+    sched: &Schedule,
+    jobs: Vec<(usize, Powers)>,
+) -> Vec<ExpmResult> {
+    let out: Vec<Mutex<Option<ExpmResult>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    run_bucket_into(n, sched, jobs, &out);
+    out.into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("group slot filled"))
+        .collect()
+}
+
+/// Compute e^{W_i} for a whole batch under one shared [`ExpmOptions`].
+/// Thin wrapper over [`expm_multi`] — matches looping [`super::expm`] over
 /// the same matrices bitwise (values *and* stats); the difference is
 /// throughput — shared schedules, reused workspaces and batch-level
 /// parallelism (see the module docs for the full pipeline).
 pub fn expm_batch(mats: &[Matrix], opts: &ExpmOptions) -> Vec<ExpmResult> {
-    for w in mats {
-        assert!(w.is_square(), "expm_batch needs square matrices");
+    let jobs: Vec<(&Matrix, ExpmOptions)> =
+        mats.iter().map(|w| (w, *opts)).collect();
+    expm_multi(&jobs)
+}
+
+/// A planning outcome: dynamic-method matrices wait for bucketed
+/// execution; Baseline/Padé run the serial pipeline during the sweep.
+enum Planned {
+    Dynamic(Selection, Powers),
+    Direct(ExpmResult),
+}
+
+/// Compute e^{W_i} for a heterogeneous batch: every matrix carries its own
+/// `(method, tol)` contract. This is the job-spec core the public wrappers
+/// ([`super::expm`], [`expm_batch`]) and the coordinator's native backend
+/// all route through.
+///
+/// Dynamic-method jobs (Sastre, Paterson–Stockmeyer) are planned in
+/// parallel, bucketed by execution shape `(n, method, m, s)` and executed
+/// through shared schedules and per-worker workspaces; Baseline/Padé jobs
+/// have no planned-evaluation structure to share and run the serial
+/// pipeline per matrix (inside the same parallel sweep). A uniform batch
+/// is bitwise identical to the historical `expm_batch` path —
+/// `tests/prop_batch.rs` pins that contract.
+pub fn expm_multi(jobs: &[(&Matrix, ExpmOptions)]) -> Vec<ExpmResult> {
+    for (w, _) in jobs {
+        assert!(w.is_square(), "expm_multi needs square matrices");
     }
-    match mats.len() {
+    match jobs.len() {
         0 => return Vec::new(),
-        // Single matrix: the serial pipeline, no engine overhead.
-        1 => return vec![super::expm_serial(&mats[0], opts)],
+        // Single job: the serial pipeline, no engine overhead.
+        1 => return vec![super::expm_serial(jobs[0].0, &jobs[0].1)],
         _ => {}
     }
-    let method = opts.method;
     // Same policy as the execute phase: fan out across the batch only
     // when the per-matrix GEMMs are serial; above SMALL_N the inner GEMM
     // already takes the cores, and nesting both oversubscribes.
-    let outer_parallel = mats.iter().all(|w| w.order() < SMALL_N);
-    if !matches!(method, Method::Sastre | Method::PatersonStockmeyer) {
-        // Baseline/Padé have no planned-evaluation structure to share;
-        // they still get batch-level parallelism where it pays.
-        return if outer_parallel {
-            parallel_map(mats.len(), |i| super::expm_serial(&mats[i], opts))
-        } else {
-            mats.iter().map(|w| super::expm_serial(w, opts)).collect()
-        };
-    }
-    let tol = opts.tol.max(UNIT_ROUNDOFF);
-    let sel_opts = SelectOptions { tol, power_est: false };
-    // Phase 1: plan every matrix, keeping the powers the norm bounds
-    // computed so the A^2 product is never repeated.
-    let plan_one = |i: usize| {
-        let mut powers = Powers::new(mats[i].clone());
-        let sel = match method {
-            Method::Sastre => selection::select_sastre(&mut powers, &sel_opts),
-            Method::PatersonStockmeyer => {
-                selection::select_ps(&mut powers, &sel_opts)
+    let outer_parallel = jobs.iter().all(|(w, _)| w.order() < SMALL_N);
+    // Phase 1: plan every dynamic job, keeping the powers the norm bounds
+    // computed so the A^2 product is never repeated; run Baseline/Padé
+    // jobs to completion on the spot.
+    let plan_one = |i: usize| -> Planned {
+        let (w, opts) = jobs[i];
+        match opts.method {
+            Method::Sastre | Method::PatersonStockmeyer => {
+                let (sel, powers) =
+                    selection::select_dynamic(w, opts.method, opts.tol);
+                Planned::Dynamic(sel, powers)
             }
-            _ => unreachable!("dynamic methods only"),
-        };
-        (sel, powers)
+            _ => Planned::Direct(super::expm_serial(w, &opts)),
+        }
     };
-    let planned: Vec<(Selection, Powers)> = if outer_parallel {
-        parallel_map(mats.len(), plan_one)
+    let planned: Vec<Planned> = if outer_parallel {
+        parallel_map(jobs.len(), plan_one)
     } else {
-        (0..mats.len()).map(plan_one).collect()
+        (0..jobs.len()).map(plan_one).collect()
     };
-    // Phase 2: bucket by execution shape.
-    let mut buckets: BTreeMap<(usize, usize, u32), Vec<(usize, Powers)>> =
-        BTreeMap::new();
-    for (i, (sel, powers)) in planned.into_iter().enumerate() {
-        buckets
-            .entry((mats[i].order(), sel.m, sel.s))
-            .or_default()
-            .push((i, powers));
+    // Phase 2: bucket dynamic jobs by execution shape.
+    let out: Vec<Mutex<Option<ExpmResult>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    let mut buckets: BTreeMap<
+        (usize, Method, usize, u32),
+        Vec<(usize, Powers)>,
+    > = BTreeMap::new();
+    for (i, p) in planned.into_iter().enumerate() {
+        match p {
+            Planned::Direct(r) => *out[i].lock().unwrap() = Some(r),
+            Planned::Dynamic(sel, powers) => buckets
+                .entry((jobs[i].0.order(), jobs[i].1.method, sel.m, sel.s))
+                .or_default()
+                .push((i, powers)),
+        }
     }
     // Phase 3: one schedule per bucket, workspace-driven execution.
-    let out: Vec<Mutex<Option<ExpmResult>>> =
-        (0..mats.len()).map(|_| Mutex::new(None)).collect();
-    for ((n, m, s), jobs) in buckets {
+    for ((n, method, m, s), bucket) in buckets {
         let sched = Schedule::new(method, m, s);
-        run_bucket_into(n, &sched, jobs, &out);
+        run_bucket_into(n, &sched, bucket, &out);
     }
     out.into_iter()
         .map(|slot| slot.into_inner().unwrap().expect("slot filled"))
@@ -466,6 +506,62 @@ mod tests {
             let single = expm(&mats[i], &opts);
             assert_eq!(r.value, single.value);
             assert_eq!(r.stats.matrix_products, single.stats.matrix_products);
+        }
+    }
+
+    #[test]
+    fn multi_mixed_methods_match_serial() {
+        // One heterogeneous batch: every (method, tol) pair must come back
+        // exactly as the serial pipeline computes it.
+        let mats: Vec<Matrix> = (0..8)
+            .map(|i| randm_norm(5 + i % 4, [0.2, 1.5, 30.0][i % 3], 90 + i as u64))
+            .collect();
+        let methods = [
+            Method::Sastre,
+            Method::PatersonStockmeyer,
+            Method::Baseline,
+            Method::Pade,
+        ];
+        let jobs: Vec<(&Matrix, ExpmOptions)> = mats
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                (
+                    w,
+                    ExpmOptions {
+                        method: methods[i % 4],
+                        tol: [1e-6, 1e-10][i % 2],
+                    },
+                )
+            })
+            .collect();
+        let multi = expm_multi(&jobs);
+        assert_eq!(multi.len(), jobs.len());
+        for (i, r) in multi.iter().enumerate() {
+            let single = expm(jobs[i].0, &jobs[i].1);
+            assert_eq!(r.value, single.value, "job {i}");
+            assert_eq!(
+                r.stats.matrix_products,
+                single.stats.matrix_products,
+                "job {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_uniform_equals_expm_batch() {
+        // The wrapper contract: a uniform job list is the same computation
+        // as expm_batch, bitwise.
+        let mats: Vec<Matrix> =
+            (0..6).map(|i| randm_norm(7, 2.0, 700 + i)).collect();
+        let opts = ExpmOptions { method: Method::Sastre, tol: 1e-8 };
+        let jobs: Vec<(&Matrix, ExpmOptions)> =
+            mats.iter().map(|w| (w, opts)).collect();
+        let multi = expm_multi(&jobs);
+        let batch = expm_batch(&mats, &opts);
+        for (a, b) in multi.iter().zip(&batch) {
+            assert_eq!(a.value, b.value);
+            assert_eq!(a.stats.matrix_products, b.stats.matrix_products);
         }
     }
 

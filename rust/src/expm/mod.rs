@@ -26,10 +26,13 @@ use crate::linalg::Matrix;
 use eval::Powers;
 use selection::{SelectOptions, Selection};
 
-pub use batch::expm_batch;
+pub use batch::{expm_batch, expm_multi};
 
 /// Which expm pipeline to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+///
+/// `Ord` follows declaration order; it only fixes a deterministic bucket
+/// ordering inside [`expm_multi`] and carries no semantic ranking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Method {
     /// Algorithm 2 + Algorithm 4 + evaluation formulas (10)-(17).
     Sastre,
@@ -53,6 +56,21 @@ impl Method {
 
     pub fn all_dynamic() -> [Method; 3] {
         [Method::Sastre, Method::PatersonStockmeyer, Method::Baseline]
+    }
+
+    /// Parse a wire/CLI method name. Accepts both the short spellings used
+    /// by the v2 TCP protocol ("sastre", "ps", "baseline", "pade") and the
+    /// paper names returned by [`Method::name`].
+    pub fn parse(name: &str) -> Option<Method> {
+        match name {
+            "sastre" | "expm_flow_sastre" => Some(Method::Sastre),
+            "ps" | "paterson_stockmeyer" | "expm_flow_ps" => {
+                Some(Method::PatersonStockmeyer)
+            }
+            "baseline" | "taylor" | "expm_flow" => Some(Method::Baseline),
+            "pade" | "expm_pade" => Some(Method::Pade),
+            _ => None,
+        }
     }
 }
 

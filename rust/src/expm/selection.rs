@@ -13,7 +13,9 @@
 
 use super::coeffs::{b16, inv_factorial};
 use super::eval::Powers;
+use super::{Method, UNIT_ROUNDOFF};
 use crate::linalg::norms::{norm1, norm1_power_est};
+use crate::linalg::Matrix;
 
 /// Overscaling cap (Algorithms 3/4, last lines).
 pub const MAX_S: u32 = 20;
@@ -73,6 +75,32 @@ fn refine(powers: &Powers, k: usize, bound: f64, opts: &SelectOptions) -> f64 {
     // factor before trusting it as an a_k (Theorem 2 needs upper bounds).
     let guarded = est * 3.0;
     bound.min(guarded.max(f64::MIN_POSITIVE))
+}
+
+/// The one per-matrix planning routine for the dynamic methods: clamp the
+/// tolerance at unit roundoff (eq. (32)), run the method's ladder on fresh
+/// powers of the *unscaled* W, and hand back the powers so evaluation
+/// reuses the A^2 product. Both the batch engine (`expm::batch`) and the
+/// service selector (`coordinator::selector`) call exactly this — their
+/// bitwise-parity contract depends on neither re-implementing it.
+///
+/// Panics on non-dynamic methods (Baseline/Padé select at execution time).
+pub fn select_dynamic(
+    w: &Matrix,
+    method: Method,
+    tol: f64,
+) -> (Selection, Powers) {
+    let opts = SelectOptions {
+        tol: tol.max(UNIT_ROUNDOFF),
+        power_est: false,
+    };
+    let mut powers = Powers::new(w.clone());
+    let sel = match method {
+        Method::Sastre => select_sastre(&mut powers, &opts),
+        Method::PatersonStockmeyer => select_ps(&mut powers, &opts),
+        other => panic!("select_dynamic needs a dynamic method, got {other:?}"),
+    };
+    (sel, powers)
 }
 
 /// Algorithm 4: degree ladder for the Sastre evaluation formulas.
@@ -329,6 +357,28 @@ mod tests {
         let mut p = Powers::new(a);
         let sel = select_ps(&mut p, &opts(1e-8));
         assert!(sel.s <= MAX_S);
+    }
+
+    #[test]
+    fn select_dynamic_matches_manual_path() {
+        let a = scaled_randn(8, 2.0, 77);
+        let (sel, powers) = select_dynamic(&a, Method::Sastre, 1e-8);
+        let mut p = Powers::new(a.clone());
+        let manual = select_sastre(&mut p, &opts(1e-8));
+        assert_eq!((sel.m, sel.s), (manual.m, manual.s));
+        assert_eq!(powers.products, p.products);
+        let (sel_ps, _) =
+            select_dynamic(&a, Method::PatersonStockmeyer, 1e-8);
+        let mut p = Powers::new(a);
+        let manual_ps = select_ps(&mut p, &opts(1e-8));
+        assert_eq!((sel_ps.m, sel_ps.s), (manual_ps.m, manual_ps.s));
+    }
+
+    #[test]
+    #[should_panic(expected = "dynamic method")]
+    fn select_dynamic_rejects_execution_time_methods() {
+        let a = Matrix::identity(3);
+        let _ = select_dynamic(&a, Method::Pade, 1e-8);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! artifacts (integration tests assert loss agreement) and as the
 //! artifact-free fallback for the examples.
 
-use crate::expm::{expm_batch, ExpmOptions, Method};
+use crate::expm::{expm_multi, ExpmOptions, Method};
 use crate::linalg::Matrix;
 
 pub const ALPHA: f64 = 0.5;
@@ -38,9 +38,12 @@ pub fn phi_inverse(y: f64) -> f64 {
     u
 }
 
-/// e^{±A_k} for every block in one [`expm_batch`] call — the flow's K
+/// e^{±A_k} for every block in one [`expm_multi`] call — the flow's K
 /// exponentials share the batched engine's selection bucketing and
 /// workspace reuse instead of going through K independent expm calls.
+/// (The flow uses one uniform `(method, tol)` contract today; routing
+/// through the job-spec core keeps it on the same path the service
+/// dispatches, and leaves per-block contracts one signature away.)
 pub fn block_exponentials(
     blocks: &[Block],
     negate: bool,
@@ -51,10 +54,10 @@ pub fn block_exponentials(
         .iter()
         .map(|b| if negate { -&b.a } else { b.a.clone() })
         .collect();
-    expm_batch(&mats, &ExpmOptions { method, tol })
-        .into_iter()
-        .map(|r| r.value)
-        .collect()
+    let opts = ExpmOptions { method, tol };
+    let jobs: Vec<(&Matrix, ExpmOptions)> =
+        mats.iter().map(|m| (m, opts)).collect();
+    expm_multi(&jobs).into_iter().map(|r| r.value).collect()
 }
 
 /// z = f(x) for a batch (rows of `x`); returns (z, per-sample logdet).

@@ -2,7 +2,7 @@
 //! either via the `flow_sample_{method}_b{B}` artifacts (the Table-5
 //! engine) or natively through the batched expm engine
 //! ([`sample_native`]), which needs no artifacts and routes every
-//! per-block exponential through one `expm_batch` call.
+//! per-block exponential through one `expm_multi` job-spec call.
 
 use std::time::Instant;
 
@@ -70,7 +70,7 @@ pub fn state_blocks(state: &TrainState) -> Vec<Block> {
 
 /// Generate `batch` samples natively (no artifacts): z ~ N(0, I) pulled
 /// through the inverse flow, with all K per-block exponentials e^{-A_k}
-/// computed by a single `expm_batch` call inside
+/// computed by a single `expm_multi` call inside
 /// [`native::inverse`] — the flow sampler's route into the batched
 /// engine. Returns row-major `batch × dim` samples.
 pub fn sample_native(

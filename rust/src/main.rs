@@ -101,16 +101,17 @@ fn cmd_serve(args: &Args) -> i32 {
                 a.scaled(target / nn)
             })
             .collect();
-        pending.push(svc.submit(mats, tol));
+        match svc.submit_batch(mats, tol) {
+            Ok(ticket) => pending.push(ticket),
+            Err(e) => eprintln!("submit failed: {e}"),
+        }
     }
     let mut ok = 0usize;
-    for rx in pending {
-        match rx.recv() {
-            Ok(resp) if resp.error.is_none() => ok += 1,
-            Ok(resp) => {
-                eprintln!("request {} failed: {:?}", resp.id, resp.error)
-            }
-            Err(_) => eprintln!("service dropped a response"),
+    for ticket in pending {
+        let id = ticket.id();
+        match ticket.wait() {
+            Ok(_) => ok += 1,
+            Err(e) => eprintln!("request {id} failed: {e}"),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -294,7 +295,7 @@ fn cmd_daemon(args: &Args) -> i32 {
     match Server::spawn(&addr, svc) {
         Ok(mut server) => {
             println!(
-                "expm daemon listening on {} (JSON lines; \
+                "expm daemon listening on {} (JSON lines, protocol v1+v2; \
                  {{\"cmd\":\"shutdown\"}} to stop)",
                 server.addr
             );

@@ -7,8 +7,8 @@
 //! decomposed tuples.
 //!
 //! PJRT objects wrap raw C pointers without Sync guarantees, so the
-//! executor is deliberately `!Sync`-shaped: the coordinator owns one on its
-//! dispatch thread (see `coordinator::dispatch`).
+//! executor is deliberately `!Sync`-shaped: the coordinator's dispatcher
+//! thread owns one inside its `PjrtBackend` (see `coordinator::backend`).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -18,6 +18,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, Result};
 
 use super::artifact::{plan_batches, Manifest};
+use crate::expm::Method;
 use crate::linalg::Matrix;
 
 /// Compiled-executable cache keyed by artifact name.
@@ -132,6 +133,14 @@ impl Executor {
             .map_err(|e| anyhow!("{name}: fetch result: {e}"))?;
         // return_tuple=True: decompose (1-tuples included).
         lit.to_tuple().map_err(|e| anyhow!("{name}: tuple: {e}"))
+    }
+
+    /// Whether the artifact grid can execute a batch group of this shape.
+    /// Only the Sastre polynomial kernels (formulas (10)–(17)) are
+    /// lowered, and m = 0 groups (zero matrices) are identity — not worth
+    /// a device round-trip. This is the PJRT backend's `plan_hint`.
+    pub fn supports_group(&self, n: usize, method: Method, m: usize) -> bool {
+        method == Method::Sastre && m != 0 && self.manifest.supports_order(n)
     }
 
     /// Warm the compile cache for the given artifact names.

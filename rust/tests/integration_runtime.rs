@@ -6,7 +6,7 @@
 mod common;
 
 use common::{randm_norm, rel_err, skip_no_artifacts};
-use expmflow::coordinator::dispatch::native_expm_planned;
+use expmflow::coordinator::backend::native_expm_planned;
 use expmflow::expm::pade::expm_pade13;
 use expmflow::linalg::Matrix;
 use expmflow::runtime::{matrices_to_literal, Executor};

@@ -1,14 +1,20 @@
 //! Integration: the expm service end-to-end, including the PJRT backend
 //! when artifacts are present (grid orders route to PJRT, off-grid orders
-//! fall back to native, both give oracle-grade answers through one API).
+//! fall back to native, both give oracle-grade answers through one API),
+//! plus the v2 wire protocol (per-matrix contracts, streaming partials,
+//! v1 backward compatibility).
 
 mod common;
 
 use common::{artifact_dir, artifacts_available, randm_norm, rel_err};
 use expmflow::coordinator::batcher::BatchPolicy;
+use expmflow::coordinator::server::{Client, Server};
 use expmflow::coordinator::{ExpmService, ServiceConfig};
 use expmflow::expm::pade::expm_pade13;
+use expmflow::expm::{expm, ExpmOptions, Method};
 use expmflow::linalg::Matrix;
+use expmflow::util::json::{self, Json};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn pjrt_service() -> ExpmService {
@@ -88,11 +94,10 @@ fn throughput_metrics_accumulate() {
     for k in 0..10u64 {
         let mats: Vec<Matrix> =
             (0..8).map(|i| randm_norm(32, 1.5, k * 100 + i)).collect();
-        pending.push(svc.submit(mats, 1e-8));
+        pending.push(svc.submit_batch(mats, 1e-8).unwrap());
     }
-    for rx in pending {
-        let resp = rx.recv().unwrap();
-        assert!(resp.error.is_none());
+    for ticket in pending {
+        let resp = ticket.wait().unwrap();
         assert!(resp.latency_s < 30.0);
     }
     let snap = svc.metrics.snapshot();
@@ -129,4 +134,177 @@ fn paper_norm_range_workload() {
     let degrees: Vec<usize> = snap.degree_hist.keys().cloned().collect();
     assert!(degrees.len() >= 3, "degree spread {degrees:?}");
     assert!(degrees.iter().all(|d| [0, 1, 2, 4, 8, 15].contains(d)));
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol v2
+// ---------------------------------------------------------------------------
+
+fn native_server() -> (Server, Arc<ExpmService>) {
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        ..Default::default()
+    }));
+    let server = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    (server, svc)
+}
+
+fn wire_matrix(entry: &Json, n: usize) -> Matrix {
+    let arr = entry.as_arr().expect("result entry is an array");
+    let flat: Vec<f64> = arr.iter().map(|x| x.as_f64().unwrap()).collect();
+    Matrix::from_vec(n, n, flat)
+}
+
+#[test]
+fn wire_v2_mixed_contracts_roundtrip() {
+    // One v2 frame mixing three methods and two tolerances; every result
+    // must equal the library's answer for that exact contract (the JSON
+    // codec is shortest-roundtrip, so equality is bitwise).
+    let (server, _svc) = native_server();
+    let mut client = Client::connect(server.addr).unwrap();
+    let mats: Vec<Matrix> =
+        (0..3).map(|i| randm_norm(4 + i, 1.0, 300 + i as u64)).collect();
+    let contracts = [
+        (Method::Sastre, 1e-8),
+        (Method::PatersonStockmeyer, 1e-6),
+        (Method::Baseline, 1e-8),
+    ];
+    let jobs: Vec<(&Matrix, Method, f64)> = mats
+        .iter()
+        .zip(contracts)
+        .map(|(a, (m, t))| (a, m, t))
+        .collect();
+    let line = Client::v2_request_line(4, &jobs, false);
+    let reply = client.roundtrip(&line).unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(v.get("v").and_then(Json::as_f64), Some(2.0));
+    let results = v.get("results").and_then(Json::as_arr).unwrap();
+    let stats = v.get("stats").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), 3);
+    for (i, (method, tol)) in contracts.into_iter().enumerate() {
+        let got = wire_matrix(&results[i], mats[i].order());
+        let want = expm(&mats[i], &ExpmOptions { method, tol });
+        assert_eq!(got, want.value, "matrix {i} diverged over the wire");
+        assert_eq!(
+            stats[i].get("method").and_then(Json::as_str),
+            Some(method.name()),
+            "matrix {i} method tag"
+        );
+        assert_eq!(
+            stats[i].get("products").and_then(Json::as_f64),
+            Some(want.stats.matrix_products as f64)
+        );
+    }
+}
+
+#[test]
+fn wire_v2_malformed_frames_error() {
+    let (server, _svc) = native_server();
+    let mut client = Client::connect(server.addr).unwrap();
+    let cases = [
+        // method array length mismatch
+        r#"{"v": 2, "id": 1, "orders": [2], "matrices": [[1,0,0,1]], "method": ["sastre", "ps"]}"#,
+        // unknown method name
+        r#"{"v": 2, "id": 2, "orders": [2], "matrices": [[1,0,0,1]], "method": "chebyshev"}"#,
+        // tol array length mismatch
+        r#"{"v": 2, "id": 3, "orders": [2], "matrices": [[1,0,0,1]], "tol": [1e-8, 1e-6]}"#,
+        // tol wrong type
+        r#"{"v": 2, "id": 4, "orders": [2], "matrices": [[1,0,0,1]], "tol": "tight"}"#,
+        // method wrong type
+        r#"{"v": 2, "id": 5, "orders": [2], "matrices": [[1,0,0,1]], "method": 7}"#,
+        // unsupported version
+        r#"{"v": 3, "id": 6, "orders": [2], "matrices": [[1,0,0,1]]}"#,
+        // v2 still validates the shared payload
+        r#"{"v": 2, "id": 7, "orders": [3], "matrices": [[1,0,0,1]]}"#,
+        // non-boolean stream flag rejected (not silently non-streamed)
+        r#"{"v": 2, "id": 8, "orders": [2], "matrices": [[1,0,0,1]], "stream": 1}"#,
+        // non-numeric protocol version rejected (not silently served v1)
+        r#"{"v": "2", "id": 9, "orders": [2], "matrices": [[1,0,0,1]]}"#,
+        // absurd order rejected before any allocation
+        r#"{"v": 2, "id": 10, "orders": [4294967296], "matrices": [[]]}"#,
+    ];
+    for line in cases {
+        let reply = client.roundtrip(line).unwrap();
+        assert!(reply.contains("\"ok\":false"), "{line} -> {reply}");
+    }
+    // The connection is still healthy after the error storm.
+    let a = randm_norm(4, 0.5, 9);
+    let got = client.expm(&a, 1e-8).unwrap();
+    assert!(rel_err(&got, &expm_pade13(&a)) < 1e-7);
+}
+
+#[test]
+fn wire_v1_frames_still_accepted() {
+    // A frame with no "v" field behaves exactly as the v1 protocol:
+    // one aggregate reply, no "partial"/"done" framing.
+    let (server, _svc) = native_server();
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client
+        .roundtrip(
+            r#"{"id": 11, "tol": 1e-8, "orders": [2], "matrices": [[0,1,-1,0]]}"#,
+        )
+        .unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert!(v.get("partial").is_none());
+    assert!(v.get("done").is_none());
+    let results = v.get("results").and_then(Json::as_arr).unwrap();
+    let got = wire_matrix(&results[0], 2);
+    // e^{[[0,1],[-1,0]]} is a rotation by 1 radian.
+    assert!((got[(0, 0)] - 1f64.cos()).abs() < 1e-8);
+    // And the v1 convenience client still round-trips.
+    let a = randm_norm(5, 1.0, 21);
+    let got = client.expm(&a, 1e-8).unwrap();
+    assert!(rel_err(&got, &expm_pade13(&a)) < 1e-7);
+}
+
+#[test]
+fn wire_v2_streaming_partials_order() {
+    // stream: true answers one partial frame per matrix (each index
+    // exactly once, every partial before the terminal frame) then a done
+    // frame carrying the count.
+    let (server, _svc) = native_server();
+    let mut client = Client::connect(server.addr).unwrap();
+    let mats: Vec<Matrix> =
+        (0..4).map(|i| randm_norm(4 + i, 1.0, 400 + i as u64)).collect();
+    let jobs: Vec<(&Matrix, Method, f64)> =
+        mats.iter().map(|a| (a, Method::Sastre, 1e-8)).collect();
+    let line = Client::v2_request_line(12, &jobs, true);
+    client.send_line(&line).unwrap();
+    let mut seen = vec![false; mats.len()];
+    let mut done = false;
+    while !done {
+        let frame = client.recv_line().unwrap();
+        let v = json::parse(&frame).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{frame}");
+        if v.get("done") == Some(&Json::Bool(true)) {
+            assert_eq!(
+                v.get("count").and_then(Json::as_f64),
+                Some(mats.len() as f64)
+            );
+            done = true;
+        } else {
+            assert_eq!(v.get("partial"), Some(&Json::Bool(true)), "{frame}");
+            let idx =
+                v.get("index").and_then(Json::as_f64).unwrap() as usize;
+            assert!(idx < mats.len(), "index {idx} out of range");
+            assert!(!seen[idx], "index {idx} streamed twice");
+            seen[idx] = true;
+            let got = wire_matrix(
+                v.get("result").unwrap(),
+                mats[idx].order(),
+            );
+            let want = expm(
+                &mats[idx],
+                &ExpmOptions { method: Method::Sastre, tol: 1e-8 },
+            );
+            assert_eq!(got, want.value, "streamed matrix {idx}");
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "every index streamed: {seen:?}");
+    // The connection still serves after a streamed job.
+    let a = randm_norm(4, 0.5, 23);
+    let got = client.expm(&a, 1e-8).unwrap();
+    assert!(rel_err(&got, &expm_pade13(&a)) < 1e-7);
 }

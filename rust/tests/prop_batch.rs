@@ -8,7 +8,7 @@
 mod common;
 
 use common::{randm_norm, rel_err};
-use expmflow::expm::{expm, expm_batch, ExpmOptions, Method};
+use expmflow::expm::{expm, expm_batch, expm_multi, ExpmOptions, Method};
 use expmflow::linalg::Matrix;
 use expmflow::util::rng::Rng;
 
@@ -116,6 +116,83 @@ fn prop_batch_identical_matrices_identical_results() {
             assert_eq!(
                 r.stats.matrix_products,
                 batch[0].stats.matrix_products
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_multi_uniform_bitwise_equals_batch() {
+    // The wrapper contract behind the job-spec redesign: expm_multi over
+    // a uniform job list IS the expm_batch computation, bitwise, for
+    // every method.
+    for method in [Method::Sastre, Method::PatersonStockmeyer, Method::Baseline]
+    {
+        for seed in 0..CASES {
+            let mut rng = Rng::new(81_000 + seed);
+            let mats = random_batch(&mut rng);
+            let tol = [1e-6, 1e-8, 1e-11][(seed % 3) as usize];
+            let opts = ExpmOptions { method, tol };
+            let jobs: Vec<(&Matrix, ExpmOptions)> =
+                mats.iter().map(|w| (w, opts)).collect();
+            let multi = expm_multi(&jobs);
+            let batch = expm_batch(&mats, &opts);
+            assert_eq!(multi.len(), batch.len());
+            for (i, (a, b)) in multi.iter().zip(&batch).enumerate() {
+                assert_eq!(
+                    a.value, b.value,
+                    "{} seed {seed} matrix {i}",
+                    method.name()
+                );
+                assert_eq!(
+                    (a.stats.m, a.stats.s, a.stats.matrix_products),
+                    (b.stats.m, b.stats.s, b.stats.matrix_products),
+                    "{} seed {seed} matrix {i}: stats diverged",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_multi_mixed_contracts_match_loop() {
+    // Heterogeneous job lists: each matrix under a random (method, tol)
+    // must come back exactly as its solo expm run, independent of its
+    // batch-mates' contracts.
+    let methods = [
+        Method::Sastre,
+        Method::PatersonStockmeyer,
+        Method::Baseline,
+        Method::Pade,
+    ];
+    for seed in 0..CASES {
+        let mut rng = Rng::new(91_000 + seed);
+        let mats = random_batch(&mut rng);
+        let opts: Vec<ExpmOptions> = (0..mats.len())
+            .map(|_| ExpmOptions {
+                method: methods[rng.below(4)],
+                tol: [1e-5, 1e-8, 1e-12][rng.below(3)],
+            })
+            .collect();
+        let jobs: Vec<(&Matrix, ExpmOptions)> =
+            mats.iter().zip(&opts).map(|(w, o)| (w, *o)).collect();
+        let multi = expm_multi(&jobs);
+        for (i, r) in multi.iter().enumerate() {
+            let single = expm(&mats[i], &opts[i]);
+            assert_eq!(
+                r.value, single.value,
+                "seed {seed} matrix {i} ({})",
+                opts[i].method.name()
+            );
+            assert_eq!(
+                (r.stats.m, r.stats.s, r.stats.matrix_products),
+                (
+                    single.stats.m,
+                    single.stats.s,
+                    single.stats.matrix_products
+                ),
+                "seed {seed} matrix {i}: stats diverged"
             );
         }
     }

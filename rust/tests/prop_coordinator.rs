@@ -1,6 +1,9 @@
 //! Property tests on the coordinator: routing, batching and state
 //! invariants under randomized request mixes (the L3 analogue of the
-//! paper's "no request is lost, no result is reordered" contract).
+//! paper's "no request is lost, no result is reordered" contract), plus
+//! the job-spec parity contracts: a uniform-Sastre job is bitwise
+//! identical to the library's `expm_batch` path, and mixed per-matrix
+//! contracts each match their solo `expm` run.
 
 mod common;
 
@@ -11,9 +14,10 @@ use std::time::Duration;
 use common::randm_norm;
 use expmflow::coordinator::batcher::{BatchPolicy, Batcher, Item};
 use expmflow::coordinator::request::Collector;
-use expmflow::coordinator::selector::{plan_all, plan_matrix, Plan};
-use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::coordinator::selector::{plan_all, plan_matrix, Plan, PlanKey};
+use expmflow::coordinator::{ExpmService, JobSpec, ServiceConfig};
 use expmflow::expm::pade::expm_pade13;
+use expmflow::expm::{expm, expm_batch, ExpmOptions, Method};
 use expmflow::linalg::Matrix;
 use expmflow::util::rng::Rng;
 
@@ -55,6 +59,86 @@ fn prop_every_request_answered_in_order() {
 }
 
 #[test]
+fn prop_uniform_sastre_job_bitwise_matches_expm_batch() {
+    // The batch-parity acceptance contract: job-spec results for a
+    // uniform-Sastre job are bitwise equal (values AND stats) to the
+    // library's expm_batch over the same matrices.
+    let svc = native_service();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let count = 1 + rng.below(8);
+        let mats: Vec<Matrix> = (0..count)
+            .map(|i| {
+                let n = [4usize, 6, 8][rng.below(3)];
+                randm_norm(
+                    n,
+                    rng.log_uniform(1e-4, 20.0),
+                    9000 + seed * 100 + i as u64,
+                )
+            })
+            .collect();
+        let tol = [1e-6, 1e-8, 1e-11][(seed % 3) as usize];
+        let results = svc.compute(mats.clone(), tol).unwrap();
+        let batch = expm_batch(
+            &mats,
+            &ExpmOptions { method: Method::Sastre, tol },
+        );
+        for (i, (r, b)) in results.iter().zip(&batch).enumerate() {
+            assert_eq!(r.value, b.value, "seed {seed} matrix {i}");
+            assert_eq!(
+                (r.stats.m, r.stats.s, r.stats.matrix_products),
+                (b.stats.m, b.stats.s, b.stats.matrix_products),
+                "seed {seed} matrix {i}: stats diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_contract_jobs_match_library() {
+    // Random per-matrix (method, tol) contracts in one job: every result
+    // equals its solo library run, and the reported method matches.
+    let svc = native_service();
+    let methods = [
+        Method::Sastre,
+        Method::PatersonStockmeyer,
+        Method::Baseline,
+        Method::Pade,
+    ];
+    for seed in 0..CASES {
+        let mut rng = Rng::new(20_000 + seed);
+        let count = 1 + rng.below(7);
+        let mut job = JobSpec::new();
+        let mut contracts = Vec::new();
+        for i in 0..count {
+            let n = [3usize, 5, 8][rng.below(3)];
+            let a = randm_norm(
+                n,
+                rng.log_uniform(1e-4, 15.0),
+                21_000 + seed * 100 + i as u64,
+            );
+            let method = methods[rng.below(4)];
+            let tol = [1e-5, 1e-8, 1e-10][rng.below(3)];
+            contracts.push((a.clone(), method, tol));
+            job = job.push_with(a, method, tol);
+        }
+        let resp = svc.submit(job).unwrap().wait().unwrap();
+        assert_eq!(resp.results.len(), count, "seed {seed}");
+        for (i, r) in resp.results.iter().enumerate() {
+            let (a, method, tol) = &contracts[i];
+            assert_eq!(r.method, *method, "seed {seed} matrix {i}");
+            let want = expm(a, &ExpmOptions { method: *method, tol: *tol });
+            assert_eq!(r.value, want.value, "seed {seed} matrix {i}");
+            assert_eq!(
+                r.stats.matrix_products,
+                want.stats.matrix_products,
+                "seed {seed} matrix {i}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_batcher_conserves_items() {
     // Push random items, flush with random policies: nothing lost, nothing
     // duplicated, every flushed group is key-homogeneous and within size.
@@ -67,6 +151,8 @@ fn prop_batcher_conserves_items() {
         for slot in 0..total {
             let plan = Plan {
                 n: [4usize, 8][rng.below(2)],
+                method: [Method::Sastre, Method::PatersonStockmeyer]
+                    [rng.below(2)],
                 m: [2usize, 8, 15][rng.below(3)],
                 s: rng.below(3) as u32,
             };
@@ -75,6 +161,9 @@ fn prop_batcher_conserves_items() {
                 plan,
                 tol: 1e-8,
                 powers: None,
+                backend: rng.below(2),
+                priority: 0,
+                deadline: None,
                 collector: collector.clone(),
                 slot,
                 enqueued: std::time::Instant::now(),
@@ -87,14 +176,14 @@ fn prop_batcher_conserves_items() {
         let full = batcher.take_full(&policy);
         for group in &full {
             assert!(group.len() <= max_batch, "seed {seed}");
-            let key = group[0].plan.key();
-            assert!(group.iter().all(|i| i.plan.key() == key), "seed {seed}");
+            let key = group[0].key();
+            assert!(group.iter().all(|i| i.key() == key), "seed {seed}");
             seen += group.len();
         }
         let rest = batcher.drain_all();
         for group in &rest {
-            let key = group[0].plan.key();
-            assert!(group.iter().all(|i| i.plan.key() == key), "seed {seed}");
+            let key = group[0].key();
+            assert!(group.iter().all(|i| i.key() == key), "seed {seed}");
             seen += group.len();
         }
         assert_eq!(seen, total, "seed {seed}: lost/duplicated items");
@@ -134,8 +223,7 @@ fn prop_group_keys_partition_requests() {
             .collect();
         let plans = plan_all(&mats, 1e-8);
         assert_eq!(plans.len(), mats.len());
-        let mut by_key: HashMap<(usize, usize, u32), Vec<usize>> =
-            HashMap::new();
+        let mut by_key: HashMap<PlanKey, Vec<usize>> = HashMap::new();
         for (i, p) in plans.iter().enumerate() {
             assert_eq!(p.n, mats[i].order(), "seed {seed}");
             by_key.entry(p.key()).or_default().push(i);
