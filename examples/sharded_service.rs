@@ -1,0 +1,105 @@
+//! Sharded deployment in one process: two worker shards on loopback
+//! ports, a coordinator routing batch groups to them over the TCP v2
+//! protocol, and the fail-soft path when the fleet dies mid-traffic.
+//!
+//! Run with: `cargo run --release --example sharded_service`
+//!
+//! In production the workers are separate hosts started with
+//! `expmflow worker --addr 0.0.0.0:7789` and the coordinator is
+//! `expmflow daemon --shards hostA:7789,hostB:7789`; see
+//! `docs/architecture.md` for the topology and failure semantics.
+
+use std::sync::Arc;
+
+use expmflow::coordinator::server::Server;
+use expmflow::coordinator::{
+    ExpmService, JobSpec, RemoteConfig, ServiceConfig,
+};
+use expmflow::expm::Method;
+use expmflow::linalg::{norm1, Matrix};
+use expmflow::util::rng::Rng;
+
+fn randm(n: usize, target: f64, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let nn = norm1(&a);
+    a.scaled(target / nn)
+}
+
+fn native_worker() -> (Server, Arc<ExpmService>) {
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        ..Default::default()
+    }));
+    let server = Server::spawn("127.0.0.1:0", svc.clone())
+        .expect("bind worker on an ephemeral port");
+    (server, svc)
+}
+
+fn main() {
+    // Two worker shards (thread-hosted here; separate hosts in prod).
+    let (worker_a, svc_a) = native_worker();
+    let (worker_b, svc_b) = native_worker();
+    println!("workers listening on {} and {}", worker_a.addr, worker_b.addr);
+
+    // The coordinator routes whole batch groups across the fleet,
+    // consistently by group shape (method, n, m, s).
+    let coordinator = ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        remote: Some(RemoteConfig::new([
+            worker_a.addr.to_string(),
+            worker_b.addr.to_string(),
+        ])),
+        ..Default::default()
+    });
+
+    // Mixed job: several orders and methods -> several batch groups,
+    // spread over the shards by the group-shape hash.
+    let mut job = JobSpec::new();
+    for i in 0..4u64 {
+        job = job.push(randm(8, 1.0, i));
+    }
+    for i in 0..4u64 {
+        job = job.push_with(randm(16, 2.0, 10 + i), Method::Sastre, 1e-10);
+    }
+    job = job.push_with(randm(12, 0.3, 20), Method::PatersonStockmeyer, 1e-6);
+    let resp = coordinator
+        .submit(job)
+        .expect("service running")
+        .wait()
+        .expect("job completes");
+    for (i, r) in resp.results.iter().enumerate() {
+        println!(
+            "matrix {i}: n={} backend={} m={} s={} products={}",
+            r.value.order(),
+            r.backend,
+            r.stats.m,
+            r.stats.s,
+            r.stats.matrix_products
+        );
+    }
+    println!(
+        "worker A served {} matrices, worker B served {}",
+        svc_a.metrics.snapshot().matrices,
+        svc_b.metrics.snapshot().matrices
+    );
+
+    // Kill the whole fleet: jobs keep completing — pooled connections
+    // may serve briefly until the workers drain, then groups degrade to
+    // the native backend and the fallback counter records it.
+    drop(worker_a);
+    drop(worker_b);
+    let mut backend = "";
+    for i in 0..50u64 {
+        let resp = coordinator
+            .compute(vec![randm(8, 1.0, 99 + i)], 1e-8)
+            .expect("degraded fleet still serves");
+        backend = resp[0].backend;
+        if backend == "native" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("after killing the fleet: backend={backend} (fail-soft)");
+    print!("{}", coordinator.metrics.snapshot().render());
+}

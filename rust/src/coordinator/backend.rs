@@ -155,6 +155,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap a loaded artifact executor.
     pub fn new(exec: Executor) -> PjrtBackend {
         PjrtBackend { exec }
     }
@@ -197,22 +198,28 @@ pub struct BackendRegistry {
 }
 
 impl BackendRegistry {
+    /// Empty registry; register backends in priority order.
     pub fn new() -> BackendRegistry {
         BackendRegistry { backends: Vec::new() }
     }
 
+    /// Append a backend (registration order is routing priority; the
+    /// native engine must come last).
     pub fn register(&mut self, backend: Box<dyn Backend>) {
         self.backends.push(backend);
     }
 
+    /// Number of registered backends.
     pub fn len(&self) -> usize {
         self.backends.len()
     }
 
+    /// Whether no backend is registered.
     pub fn is_empty(&self) -> bool {
         self.backends.is_empty()
     }
 
+    /// Name of the backend at registry index `idx`.
     pub fn name(&self, idx: usize) -> &'static str {
         self.backends[idx].name()
     }

@@ -18,8 +18,11 @@ pub type GroupKey = (usize, PlanKey);
 
 /// One matrix waiting for execution.
 pub struct Item {
+    /// The matrix to exponentiate.
     pub matrix: Matrix,
+    /// Its pre-computed execution plan.
     pub plan: Plan,
+    /// Its tolerance contract.
     pub tol: f64,
     /// Powers (W, W^2) cached by the selector; the native backend
     /// evaluates from these so the selection-time A^2 is reused.
@@ -32,11 +35,14 @@ pub struct Item {
     pub deadline: Option<Instant>,
     /// Where to deliver, and at which slot index of the job.
     pub collector: Arc<Collector>,
+    /// Index of this matrix within its job.
     pub slot: usize,
+    /// When the item entered the batcher (drives `max_wait`).
     pub enqueued: Instant,
 }
 
 impl Item {
+    /// The item's full group key (routed backend + plan shape).
     pub fn key(&self) -> GroupKey {
         (self.backend, self.plan.key())
     }
@@ -68,18 +74,22 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty batcher.
     pub fn new() -> Batcher {
         Batcher::default()
     }
 
+    /// Total queued items across all groups.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Enqueue one planned matrix into its shape group.
     pub fn push(&mut self, item: Item) {
         self.len += 1;
         self.groups.entry(item.key()).or_default().push(item);

@@ -19,8 +19,11 @@ use super::request::MatrixResult;
 /// One matrix with its own execution contract.
 #[derive(Clone, Debug)]
 pub struct MatrixSpec {
+    /// The matrix to exponentiate.
     pub matrix: Matrix,
+    /// Which expm pipeline runs it.
     pub method: Method,
+    /// Its error tolerance.
     pub tol: f64,
 }
 
@@ -54,6 +57,7 @@ impl Default for JobSpec {
 }
 
 impl JobSpec {
+    /// Empty job with the default contract (Sastre @ 1e-8).
     pub fn new() -> JobSpec {
         JobSpec {
             specs: Vec::new(),
@@ -126,22 +130,27 @@ impl JobSpec {
         self
     }
 
+    /// Number of matrices in the job.
     pub fn len(&self) -> usize {
         self.specs.len()
     }
 
+    /// Whether the job holds no matrices.
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
 
+    /// The per-matrix specs, in submission order.
     pub fn specs(&self) -> &[MatrixSpec] {
         &self.specs
     }
 
+    /// The job-level deadline, if one was set.
     pub fn get_deadline(&self) -> Option<Duration> {
         self.deadline
     }
 
+    /// The job-level priority (0 unless set).
     pub fn get_priority(&self) -> i32 {
         self.priority
     }
@@ -208,9 +217,11 @@ impl std::error::Error for ServiceClosed {}
 /// Aggregated outcome of a completed job (the blocking view).
 #[derive(Debug)]
 pub struct JobResponse {
+    /// The job's service-assigned id.
     pub id: u64,
     /// Per-matrix results in submission order.
     pub results: Vec<MatrixResult>,
+    /// Submission-to-completion latency in seconds.
     pub latency_s: f64,
 }
 
@@ -233,6 +244,7 @@ impl Ticket {
         Ticket { id, count, rx }
     }
 
+    /// The job's service-assigned id.
     pub fn id(&self) -> u64 {
         self.id
     }

@@ -18,51 +18,103 @@ struct Inner {
     errors: u64,
     batches: u64,
     matrix_products: u64,
+    rejected_frames: u64,
+    remote_fallbacks: u64,
     degree_hist: BTreeMap<usize, u64>,
     scaling_hist: BTreeMap<u32, u64>,
     backend_hist: BTreeMap<&'static str, u64>,
+    shard_stats: BTreeMap<String, ShardStat>,
     batch_fill: Vec<f64>,
     latencies_s: Vec<f64>,
+}
+
+/// Per-shard accounting for the remote backend: how many batch groups a
+/// worker shard executed, how many round-trips against it failed, and the
+/// summed round-trip latency (divide by `groups` for the mean).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStat {
+    /// Batch groups the shard executed successfully.
+    pub groups: u64,
+    /// Failed round-trips (connect, I/O, or malformed reply) — each one
+    /// also counts toward [`Snapshot::remote_fallbacks`].
+    pub errors: u64,
+    /// Total round-trip latency over all successful groups, in seconds.
+    pub total_latency_s: f64,
+}
+
+impl ShardStat {
+    /// Mean round-trip latency per successful group, in seconds.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.total_latency_s / self.groups as f64
+        }
+    }
 }
 
 /// A point-in-time copy for reporting.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
+    /// Jobs accepted.
     pub requests: u64,
+    /// Matrices accepted across all jobs.
     pub matrices: u64,
+    /// Jobs that failed (validation, deadline, backend collapse).
     pub errors: u64,
+    /// Batch groups executed.
     pub batches: u64,
+    /// n x n matrix products charged (paper accounting).
     pub matrix_products: u64,
+    /// Wire frames the server rejected before compute (malformed JSON,
+    /// mistyped fields, unsupported protocol versions).
+    pub rejected_frames: u64,
+    /// Remote groups that degraded to a lower-priority backend because
+    /// their shard was down or a round-trip failed.
+    pub remote_fallbacks: u64,
+    /// Matrices per selected polynomial order m.
     pub degree_hist: BTreeMap<usize, u64>,
+    /// Matrices per squaring count s.
     pub scaling_hist: BTreeMap<u32, u64>,
     /// Groups executed per backend name.
     pub backend_hist: BTreeMap<&'static str, u64>,
+    /// Per-shard groups/errors/latency for the remote backend, keyed by
+    /// shard address.
+    pub shard_stats: BTreeMap<String, ShardStat>,
+    /// Mean group size as a fraction of `max_batch`.
     pub mean_batch_fill: f64,
+    /// Mean group execution latency, seconds.
     pub mean_latency_s: f64,
+    /// 99th-percentile group execution latency, seconds.
     pub p99_latency_s: f64,
 }
 
 impl Metrics {
+    /// Fresh zeroed counters.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// One accepted job of `matrices` matrices.
     pub fn record_request(&self, matrices: usize) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
         g.matrices += matrices as u64;
     }
 
+    /// One failed job.
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// One flushed group of `size` matrices under a `capacity` policy.
     pub fn record_batch(&self, size: usize, capacity: usize) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batch_fill.push(size as f64 / capacity.max(1) as f64);
     }
 
+    /// One executed matrix: selected order, squarings, products.
     pub fn record_matrix(&self, m: usize, s: u32, products: usize) {
         let mut g = self.inner.lock().unwrap();
         *g.degree_hist.entry(m).or_default() += 1;
@@ -76,10 +128,40 @@ impl Metrics {
         *g.backend_hist.entry(name).or_default() += 1;
     }
 
+    /// One wire frame rejected before compute (bad JSON, mistyped or
+    /// missing fields, unsupported version). Counted server-side so the
+    /// diagnostic survives beyond the client that triggered it.
+    pub fn record_rejected_frame(&self) {
+        self.inner.lock().unwrap().rejected_frames += 1;
+    }
+
+    /// One remote group degraded toward the native backend because its
+    /// shard was down or its round-trip failed.
+    pub fn record_remote_fallback(&self) {
+        self.inner.lock().unwrap().remote_fallbacks += 1;
+    }
+
+    /// One batch group executed successfully on shard `addr` with the
+    /// given round-trip latency.
+    pub fn record_shard_ok(&self, addr: &str, latency: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        let st = g.shard_stats.entry(addr.to_string()).or_default();
+        st.groups += 1;
+        st.total_latency_s += latency.as_secs_f64();
+    }
+
+    /// One failed round-trip against shard `addr`.
+    pub fn record_shard_error(&self, addr: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.shard_stats.entry(addr.to_string()).or_default().errors += 1;
+    }
+
+    /// One group execution latency.
     pub fn record_latency(&self, d: Duration) {
         self.inner.lock().unwrap().latencies_s.push(d.as_secs_f64());
     }
 
+    /// Point-in-time copy of every counter.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap().clone();
         let mean = |xs: &[f64]| {
@@ -100,9 +182,12 @@ impl Metrics {
             errors: g.errors,
             batches: g.batches,
             matrix_products: g.matrix_products,
+            rejected_frames: g.rejected_frames,
+            remote_fallbacks: g.remote_fallbacks,
             degree_hist: g.degree_hist,
             scaling_hist: g.scaling_hist,
             backend_hist: g.backend_hist,
+            shard_stats: g.shard_stats,
             mean_batch_fill: mean(&g.batch_fill),
             mean_latency_s: mean(&g.latencies_s),
             p99_latency_s: p99,
@@ -141,6 +226,22 @@ impl Snapshot {
             s.push_str(&format!(" {name}:{c}"));
         }
         s.push('\n');
+        s.push_str(&format!(
+            "rejected_frames={} remote_fallbacks={}\n",
+            self.rejected_frames, self.remote_fallbacks
+        ));
+        if !self.shard_stats.is_empty() {
+            s.push_str("shards:");
+            for (addr, st) in &self.shard_stats {
+                s.push_str(&format!(
+                    " {addr}:groups={},errors={},mean={:.3}ms",
+                    st.groups,
+                    st.errors,
+                    st.mean_latency_s() * 1e3
+                ));
+            }
+            s.push('\n');
+        }
         s
     }
 }
@@ -176,6 +277,29 @@ mod tests {
         assert_eq!(s.mean_latency_s, 0.0);
         assert_eq!(s.p99_latency_s, 0.0);
         assert!(s.render().contains("requests=0"));
+    }
+
+    #[test]
+    fn shard_and_frame_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_rejected_frame();
+        m.record_rejected_frame();
+        m.record_remote_fallback();
+        m.record_shard_ok("127.0.0.1:9000", Duration::from_millis(4));
+        m.record_shard_ok("127.0.0.1:9000", Duration::from_millis(2));
+        m.record_shard_error("127.0.0.1:9001");
+        let s = m.snapshot();
+        assert_eq!(s.rejected_frames, 2);
+        assert_eq!(s.remote_fallbacks, 1);
+        let st = &s.shard_stats["127.0.0.1:9000"];
+        assert_eq!(st.groups, 2);
+        assert_eq!(st.errors, 0);
+        assert!(st.mean_latency_s() > 0.001 && st.mean_latency_s() < 0.1);
+        assert_eq!(s.shard_stats["127.0.0.1:9001"].errors, 1);
+        let out = s.render();
+        assert!(out.contains("rejected_frames=2"));
+        assert!(out.contains("remote_fallbacks=1"));
+        assert!(out.contains("127.0.0.1:9000:groups=2"));
     }
 
     #[test]

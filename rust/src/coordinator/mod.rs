@@ -8,7 +8,8 @@
 //!    [`backend::Backend`] whose `plan_hint` accepts the shape,
 //! 3. dynamically batches matrices that share an execution key
 //!    (backend, method, n, m, s) ([`batcher`]),
-//! 4. dispatches groups through the [`BackendRegistry`] — the PJRT
+//! 4. dispatches groups through the [`BackendRegistry`] — the sharded
+//!    [`remote`] backend when a worker fleet is configured, the PJRT
 //!    artifact engine when registered, the native *batched* engine
 //!    (`expm::batch`) always, failing soft down the registration order
 //!    ([`backend`]), and
@@ -26,6 +27,7 @@ pub mod backend;
 pub mod batcher;
 pub mod job;
 pub mod metrics;
+pub mod remote;
 pub mod request;
 pub mod selector;
 pub mod server;
@@ -45,15 +47,21 @@ use request::Collector;
 pub use job::{
     JobResponse, JobSpec, JobUpdate, MatrixSpec, ServiceClosed, Ticket,
 };
+pub use remote::{RemoteBackend, RemoteConfig};
 pub use request::MatrixResult;
 pub use selector::Plan;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
+    /// Dynamic-batching flush policy (group size / wait window).
     pub policy: BatchPolicy,
     /// Artifact directory; `None` disables the PJRT backend entirely.
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// Worker shard fleet; `Some` registers the sharded
+    /// [`remote::RemoteBackend`] ahead of every local backend (see
+    /// `docs/architecture.md` for the deployment topology).
+    pub remote: Option<RemoteConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -61,6 +69,7 @@ impl Default for ServiceConfig {
         ServiceConfig {
             policy: BatchPolicy::default(),
             artifact_dir: Some(crate::runtime::default_artifact_dir()),
+            remote: None,
         }
     }
 }
@@ -84,6 +93,7 @@ struct JobEnvelope {
 pub struct ExpmService {
     tx: Sender<Msg>,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// Service-wide counters, shared with the server front-end.
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
@@ -160,6 +170,23 @@ impl Drop for ExpmService {
 /// plan + enqueue, flush full groups eagerly and stale groups on timeout.
 fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
     let mut registry = BackendRegistry::new();
+    // Registration order is routing priority. A configured shard fleet
+    // registers first — shards exist to take load off this host — then
+    // the local PJRT engine, then native last (accepts everything, so
+    // routing and fail-soft degradation always terminate).
+    if let Some(rc) = &config.remote {
+        if rc.shards.is_empty() {
+            eprintln!(
+                "expm-service: remote backend configured with no shards; \
+                 ignoring"
+            );
+        } else {
+            registry.register(Box::new(RemoteBackend::new(
+                rc.clone(),
+                metrics.clone(),
+            )));
+        }
+    }
     if let Some(dir) = &config.artifact_dir {
         match Executor::new(dir) {
             Ok(e) => registry.register(Box::new(PjrtBackend::new(e))),
@@ -359,6 +386,7 @@ mod tests {
         ExpmService::start(ServiceConfig {
             policy: BatchPolicy::default(),
             artifact_dir: None,
+            remote: None,
         })
     }
 

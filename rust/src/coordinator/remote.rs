@@ -1,0 +1,743 @@
+//! Sharded remote backend: forwards whole batch groups to worker
+//! instances over the TCP v2 frame protocol (see `docs/wire-protocol.md`).
+//!
+//! A worker is just another `expmflow` process running the same server
+//! (`expmflow worker --addr ...`); the v2 frame already carries per-matrix
+//! `method`/`tol`, so a group round-trips with **no protocol changes** —
+//! the coordinator serializes the group as one aggregate (non-streaming)
+//! v2 request and decodes the reply into `(Matrix, ExpmStats)` pairs.
+//! Because both sides run the identical planning and evaluation code and
+//! the JSON codec is shortest-roundtrip for `f64`, a remotely executed
+//! group is bitwise-equal to native execution of the same plan
+//! (`rust/tests/integration_service.rs` pins this).
+//!
+//! ## Routing
+//!
+//! Groups are assigned to shards by an FNV-1a hash of the batch group's
+//! execution shape `(method, n, m, s)` — the same key the batcher groups
+//! on — so a given shape consistently lands on the same worker and its
+//! compile/workspace caches stay warm. Sastre et al. (arXiv:2512.20777)
+//! make batch-level throughput the optimization target; routing whole
+//! groups (never splitting one) keeps each worker's batched engine at
+//! full group width.
+//!
+//! ## Failure semantics (fail-soft)
+//!
+//! Every failure path degrades instead of losing work:
+//!
+//! - A failed round-trip (connect, I/O timeout, malformed reply) returns
+//!   `Err` from [`RemoteBackend::execute_group`]; the dispatcher's
+//!   `BackendRegistry` then re-executes the *same group* on the next
+//!   accepting backend (ultimately native, which accepts everything).
+//!   The untouched `powers` cache is deliberately left for that fallback.
+//! - Transport failures open an exponential backoff window on the shard
+//!   ([`RemoteConfig::backoff_base`] doubling up to
+//!   [`RemoteConfig::backoff_max`]); while it is down,
+//!   [`RemoteBackend::plan_hint`] refuses its groups so they route
+//!   straight to native without paying a connect timeout.
+//! - A dead pooled connection (worker restarted, idle reset) is retried
+//!   once on a fresh connection — but **only** when the request provably
+//!   never got through (send failure or EOF before any reply byte). An
+//!   error after delivery, e.g. a recv timeout on a slow group, is never
+//!   retried: the worker may still be computing, and a re-send would
+//!   double its load.
+//! - A *responsive* shard whose reply is unusable for one group — an
+//!   explicit rejection, or non-finite result entries (serialized as
+//!   `null` on the wire) — makes only that group fall back; the shard
+//!   stays in rotation with no backoff and no error count.
+//!
+//! Per-shard groups/errors/latency and the fallback count are surfaced in
+//! [`super::metrics::Metrics`] (`shards:` / `remote_fallbacks=` lines of
+//! the stats render).
+//!
+//! ## Current limitation
+//!
+//! Round-trips execute on the single dispatcher thread, one group at a
+//! time (the `Backend` trait is synchronous), so fleet throughput is one
+//! in-flight group and a slow shard delays groups bound elsewhere for up
+//! to [`RemoteConfig::io_timeout`]. Per-shard dispatch threads that
+//! overlap round-trips are the next scaling step (see ROADMAP).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::expm::eval::Powers;
+use crate::expm::{ExpmStats, Method};
+use crate::linalg::Matrix;
+use crate::util::json::{self, Json};
+
+use super::backend::{Backend, GroupShape};
+use super::metrics::Metrics;
+use super::server::{Client, MAX_WIRE_ORDER};
+
+/// Configuration of the sharded remote backend.
+#[derive(Clone, Debug)]
+pub struct RemoteConfig {
+    /// Worker shard addresses (`host:port`). Order matters: the shard
+    /// router hashes group shapes onto this list, so all coordinators of
+    /// a fleet must configure the same order.
+    pub shards: Vec<String>,
+    /// Max idle connections kept per shard (the bounded pool).
+    pub pool_per_shard: usize,
+    /// TCP connect timeout per attempt.
+    pub connect_timeout: Duration,
+    /// Read/write timeout on a group round-trip. Generous by default:
+    /// a worker executes the whole group before answering.
+    pub io_timeout: Duration,
+    /// First backoff after a shard failure; doubles per consecutive
+    /// failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+}
+
+impl RemoteConfig {
+    /// Config with default pool/timeout/backoff knobs for `shards`.
+    pub fn new<I>(shards: I) -> RemoteConfig
+    where
+        I: IntoIterator,
+        I::Item: Into<String>,
+    {
+        RemoteConfig {
+            shards: shards.into_iter().map(Into::into).collect(),
+            pool_per_shard: 4,
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(60),
+            backoff_base: Duration::from_millis(250),
+            backoff_max: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One pooled connection to a worker (blocking line protocol).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: &str, cfg: &RemoteConfig) -> Result<Conn, String> {
+        let addrs: Vec<_> = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolve {addr}: {e}"))?
+            .collect();
+        let mut last = format!("no addresses resolved for {addr}");
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, cfg.connect_timeout) {
+                Ok(stream) => {
+                    stream
+                        .set_read_timeout(Some(cfg.io_timeout))
+                        .map_err(|e| e.to_string())?;
+                    stream
+                        .set_write_timeout(Some(cfg.io_timeout))
+                        .map_err(|e| e.to_string())?;
+                    let _ = stream.set_nodelay(true);
+                    let writer =
+                        stream.try_clone().map_err(|e| e.to_string())?;
+                    return Ok(Conn {
+                        reader: BufReader::new(stream),
+                        writer,
+                    });
+                }
+                Err(e) => last = format!("connect {sa}: {e}"),
+            }
+        }
+        Err(last)
+    }
+
+    /// One frame out, one frame back.
+    ///
+    /// A send failure or an EOF before any reply byte means the (likely
+    /// pooled) connection was already dead — the request was not
+    /// processed, so a retry cannot duplicate work ([`RtError::Stale`]).
+    /// An error *after* delivery (recv timeout, reset mid-reply) must
+    /// NOT be retried: the worker may be executing the group right now,
+    /// and re-sending would double its load ([`RtError::Shard`]).
+    fn roundtrip(&mut self, line: &str) -> Result<String, RtError> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .map_err(|e| RtError::Stale(format!("send: {e}")))?;
+        let mut out = String::new();
+        match self.reader.read_line(&mut out) {
+            Ok(0) => {
+                Err(RtError::Stale("connection closed by shard".into()))
+            }
+            Ok(_) => Ok(out),
+            Err(e) => Err(RtError::Shard(format!("recv: {e}"))),
+        }
+    }
+}
+
+/// Why a group round-trip failed, and what it implies.
+#[derive(Debug)]
+enum RtError {
+    /// The connection was dead before the request was delivered: safe
+    /// to retry once on a fresh connection, no health impact yet.
+    Stale(String),
+    /// Transport failure or nonsense reply: counts against the shard's
+    /// health (backoff window opens).
+    Shard(String),
+    /// The shard answered with a well-formed frame, but *this group's*
+    /// reply is unusable (an explicit rejection, or non-finite result
+    /// entries — encoded as `null` on the wire). The group falls back
+    /// to the next backend without punishing a responsive shard.
+    Group(String),
+}
+
+impl RtError {
+    /// Collapse `Stale` into `Shard` — used on fresh connections, where
+    /// "the connection was dead" *is* a shard failure.
+    fn into_shard(self) -> RtError {
+        match self {
+            RtError::Stale(e) => RtError::Shard(e),
+            other => other,
+        }
+    }
+}
+
+/// Passive circuit breaker: consecutive failures push `down_until`
+/// forward exponentially; any success resets it.
+#[derive(Default)]
+struct Health {
+    failures: u32,
+    down_until: Option<Instant>,
+}
+
+/// One worker shard: its address, idle-connection pool and health state.
+struct Shard {
+    addr: String,
+    pool: Mutex<Vec<Conn>>,
+    health: Mutex<Health>,
+}
+
+impl Shard {
+    fn new(addr: String) -> Shard {
+        Shard {
+            addr,
+            pool: Mutex::new(Vec::new()),
+            health: Mutex::new(Health::default()),
+        }
+    }
+
+    /// Not inside a backoff window (a shard past its window is retried —
+    /// the next group is the health probe).
+    fn usable_now(&self) -> bool {
+        match self.health.lock().unwrap().down_until {
+            Some(t) => Instant::now() >= t,
+            None => true,
+        }
+    }
+
+    fn mark_ok(&self) {
+        let mut h = self.health.lock().unwrap();
+        h.failures = 0;
+        h.down_until = None;
+    }
+
+    /// Record a failure, grow the backoff window, and drop pooled
+    /// connections (they are likely broken too). Returns the window.
+    fn mark_failed(&self, cfg: &RemoteConfig) -> Duration {
+        let mut h = self.health.lock().unwrap();
+        h.failures = h.failures.saturating_add(1);
+        let exp = h.failures.saturating_sub(1).min(16);
+        let backoff = cfg
+            .backoff_base
+            .saturating_mul(1u32 << exp)
+            .min(cfg.backoff_max);
+        h.down_until = Some(Instant::now() + backoff);
+        drop(h);
+        self.pool.lock().unwrap().clear();
+        backoff
+    }
+
+    fn take_pooled(&self) -> Option<Conn> {
+        self.pool.lock().unwrap().pop()
+    }
+
+    fn give_back(&self, conn: Conn, cap: usize) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < cap {
+            pool.push(conn);
+        }
+    }
+}
+
+/// [`Backend`] that executes batch groups on a fleet of worker shards
+/// over the TCP v2 protocol. Register it ahead of the native backend;
+/// any group it cannot serve (shard down, round-trip failure, order
+/// beyond the wire limit) fails soft to the backends after it.
+pub struct RemoteBackend {
+    cfg: RemoteConfig,
+    shards: Vec<Shard>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+/// FNV-1a over the group shape — deterministic across runs and hosts, so
+/// every coordinator of a fleet routes a shape to the same shard.
+fn group_hash(shape: &GroupShape) -> u64 {
+    const PRIME: u64 = 0x0100_0000_01b3;
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(shape.method.name().as_bytes());
+    bytes.extend_from_slice(&(shape.n as u64).to_le_bytes());
+    bytes.extend_from_slice(&(shape.m as u64).to_le_bytes());
+    bytes.extend_from_slice(&shape.s.to_le_bytes());
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+impl RemoteBackend {
+    /// Build the backend for `cfg.shards`; per-shard counters land in
+    /// `metrics`. An empty shard list yields a backend that accepts
+    /// nothing (the dispatcher skips registering it).
+    pub fn new(cfg: RemoteConfig, metrics: Arc<Metrics>) -> RemoteBackend {
+        let shards =
+            cfg.shards.iter().cloned().map(Shard::new).collect();
+        RemoteBackend { cfg, shards, metrics, next_id: AtomicU64::new(1) }
+    }
+
+    /// Consistent shard assignment for a group shape.
+    fn shard_of(&self, shape: &GroupShape) -> usize {
+        (group_hash(shape) % self.shards.len() as u64) as usize
+    }
+
+    /// One group round-trip against `shard`, reusing a pooled connection
+    /// when available (with a single fresh-connection retry if the pooled
+    /// one turned out stale).
+    fn try_shard(
+        &self,
+        shard: &Shard,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, RtError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let jobs: Vec<(&Matrix, Method, f64)> = mats
+            .iter()
+            .zip(tols)
+            .map(|(m, &tol)| (m, shape.method, tol))
+            .collect();
+        let line = Client::v2_request_line(id, &jobs, false);
+        let open = || {
+            Conn::open(&shard.addr, &self.cfg).map_err(RtError::Shard)
+        };
+        let (reply, conn) = match shard.take_pooled() {
+            Some(mut pooled) => match pooled.roundtrip(&line) {
+                Ok(reply) => (reply, pooled),
+                Err(RtError::Stale(_)) => {
+                    // Dead pooled connection (worker restarted, idle
+                    // reset) and the request never got through: one
+                    // retry on a fresh connection before the shard is
+                    // declared failing.
+                    let mut fresh = open()?;
+                    let reply =
+                        fresh.roundtrip(&line).map_err(RtError::into_shard)?;
+                    (reply, fresh)
+                }
+                Err(e) => return Err(e),
+            },
+            None => {
+                let mut fresh = open()?;
+                let reply =
+                    fresh.roundtrip(&line).map_err(RtError::into_shard)?;
+                (reply, fresh)
+            }
+        };
+        // One request, one reply — the exchange completed, so the
+        // connection is in sync and reusable unless the reply itself was
+        // shard-level garbage. Group-classified problems (rejection,
+        // non-finite results) keep the connection pooled: the shard is
+        // healthy and the next group shouldn't pay a fresh connect.
+        match parse_group_reply(&reply, shape, mats.len()) {
+            Ok(out) => {
+                shard.give_back(conn, self.cfg.pool_per_shard);
+                Ok(out)
+            }
+            Err(e @ RtError::Group(_)) => {
+                shard.give_back(conn, self.cfg.pool_per_shard);
+                Err(e)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Decode one aggregate v2 reply into per-matrix `(value, stats)` pairs,
+/// validating shape and length so a confused worker degrades to fallback
+/// instead of corrupting results. Error classification: garbage frames
+/// count against the shard; a well-formed rejection or non-numeric
+/// result entries (a non-finite result serializes as `null`) are
+/// [`RtError::Group`] — the shard is responsive, only this group falls
+/// back.
+fn parse_group_reply(
+    reply: &str,
+    shape: &GroupShape,
+    count: usize,
+) -> Result<Vec<(Matrix, ExpmStats)>, RtError> {
+    let v = json::parse(reply)
+        .map_err(|e| RtError::Shard(format!("bad reply json: {e}")))?;
+    if v.get("ok") != Some(&Json::Bool(true)) {
+        return Err(RtError::Group(
+            v.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("shard rejected the group")
+                .to_string(),
+        ));
+    }
+    let results = v
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| RtError::Shard("reply missing 'results'".into()))?;
+    let stats = v
+        .get("stats")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| RtError::Shard("reply missing 'stats'".into()))?;
+    if results.len() != count || stats.len() != count {
+        return Err(RtError::Shard(format!(
+            "reply length mismatch: {} results / {} stats for {count} \
+             matrices",
+            results.len(),
+            stats.len()
+        )));
+    }
+    let n = shape.n;
+    let mut out = Vec::with_capacity(count);
+    for (r, st) in results.iter().zip(stats) {
+        let flat = r.as_arr().ok_or_else(|| {
+            RtError::Shard("result entry must be an array".into())
+        })?;
+        let vals: Option<Vec<f64>> = flat.iter().map(Json::as_f64).collect();
+        let vals = vals.ok_or_else(|| {
+            RtError::Group(
+                "non-numeric result entries (non-finite result?)".into(),
+            )
+        })?;
+        if vals.len() != n * n {
+            return Err(RtError::Shard(format!(
+                "result length {} != {n}x{n}",
+                vals.len()
+            )));
+        }
+        let stat = ExpmStats {
+            m: st.get("m").and_then(Json::as_usize).unwrap_or(shape.m),
+            s: st
+                .get("s")
+                .and_then(Json::as_f64)
+                .map(|x| x as u32)
+                .unwrap_or(shape.s),
+            matrix_products: st
+                .get("products")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        };
+        out.push((Matrix::from_vec(n, n, vals), stat));
+    }
+    Ok(out)
+}
+
+impl Backend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    /// Accepts a shape when its assigned shard exists, is not backing
+    /// off, and the order fits the wire limit. A declined shape routes
+    /// straight to the next backend without paying a connect timeout.
+    fn plan_hint(&self, shape: &GroupShape) -> bool {
+        !self.shards.is_empty()
+            && shape.n <= MAX_WIRE_ORDER
+            && self.shards[self.shard_of(shape)].usable_now()
+    }
+
+    fn execute_group(
+        &self,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        _powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+        if self.shards.is_empty() {
+            return Err("no shards configured".into());
+        }
+        if shape.n > MAX_WIRE_ORDER {
+            return Err(format!(
+                "order {} beyond wire limit {MAX_WIRE_ORDER}",
+                shape.n
+            ));
+        }
+        let shard = &self.shards[self.shard_of(shape)];
+        // Re-checked here (not just in plan_hint): the shard may have
+        // gone down between routing and execution.
+        if !shard.usable_now() {
+            self.metrics.record_remote_fallback();
+            return Err(format!(
+                "shard {} is down (backing off)",
+                shard.addr
+            ));
+        }
+        let started = Instant::now();
+        match self.try_shard(shard, shape, mats, tols) {
+            Ok(results) => {
+                shard.mark_ok();
+                self.metrics
+                    .record_shard_ok(&shard.addr, started.elapsed());
+                Ok(results)
+            }
+            Err(RtError::Group(e)) => {
+                // The shard answered; only this group's reply is
+                // unusable (explicit rejection, non-finite results).
+                // Fall back without opening a backoff window — the
+                // shard stays in rotation for other groups.
+                shard.mark_ok();
+                self.metrics.record_remote_fallback();
+                Err(format!(
+                    "shard {}: {e} (group falls back, shard healthy)",
+                    shard.addr
+                ))
+            }
+            Err(RtError::Stale(e)) | Err(RtError::Shard(e)) => {
+                let backoff = shard.mark_failed(&self.cfg);
+                self.metrics.record_shard_error(&shard.addr);
+                self.metrics.record_remote_fallback();
+                Err(format!(
+                    "shard {}: {e} (backing off {backoff:?})",
+                    shard.addr
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::server::Server;
+    use crate::coordinator::{ExpmService, ServiceConfig};
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+
+    fn randm(n: usize, target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let nn = norm1(&a);
+        a.scaled(target / nn)
+    }
+
+    fn shape(n: usize, m: usize, s: u32) -> GroupShape {
+        GroupShape { n, method: Method::Sastre, m, s }
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_key_sensitive() {
+        let a = shape(8, 8, 1);
+        assert_eq!(group_hash(&a), group_hash(&shape(8, 8, 1)));
+        assert_ne!(group_hash(&a), group_hash(&shape(8, 8, 2)));
+        assert_ne!(group_hash(&a), group_hash(&shape(8, 4, 1)));
+        assert_ne!(group_hash(&a), group_hash(&shape(9, 8, 1)));
+        let ps = GroupShape {
+            n: 8,
+            method: Method::PatersonStockmeyer,
+            m: 8,
+            s: 1,
+        };
+        assert_ne!(group_hash(&a), group_hash(&ps));
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let cfg = RemoteConfig::new(["127.0.0.1:1"]);
+        let shard = Shard::new("127.0.0.1:1".into());
+        let b1 = shard.mark_failed(&cfg);
+        let b2 = shard.mark_failed(&cfg);
+        let b3 = shard.mark_failed(&cfg);
+        assert_eq!(b1, cfg.backoff_base);
+        assert_eq!(b2, cfg.backoff_base * 2);
+        assert_eq!(b3, cfg.backoff_base * 4);
+        assert!(!shard.usable_now(), "inside the backoff window");
+        for _ in 0..40 {
+            shard.mark_failed(&cfg);
+        }
+        assert!(
+            shard.mark_failed(&cfg) <= cfg.backoff_max,
+            "backoff must cap"
+        );
+        shard.mark_ok();
+        assert!(shard.usable_now(), "success clears the window");
+    }
+
+    #[test]
+    fn reply_parser_rejects_malformed() {
+        let sh = shape(2, 4, 0);
+        // Garbage frames count against the shard.
+        assert!(matches!(
+            parse_group_reply("not json", &sh, 1),
+            Err(RtError::Shard(_))
+        ));
+        // An explicit rejection is a *group* error: the shard answered.
+        assert!(matches!(
+            parse_group_reply(r#"{"ok": false, "error": "boom"}"#, &sh, 1),
+            Err(RtError::Group(e)) if e.contains("boom")
+        ));
+        // Length mismatch: shard-level confusion.
+        assert!(matches!(
+            parse_group_reply(
+                r#"{"ok": true, "results": [[1,0,0,1]], "stats": [{}, {}]}"#,
+                &sh,
+                1
+            ),
+            Err(RtError::Shard(_))
+        ));
+        // Wrong matrix size: shard-level confusion.
+        assert!(matches!(
+            parse_group_reply(
+                r#"{"ok": true, "results": [[1,0]], "stats": [{}]}"#,
+                &sh,
+                1
+            ),
+            Err(RtError::Shard(_))
+        ));
+        // Non-finite results arrive as null: group-level, shard healthy.
+        assert!(matches!(
+            parse_group_reply(
+                r#"{"ok": true, "results": [[null,0,0,1]], "stats": [{}]}"#,
+                &sh,
+                1
+            ),
+            Err(RtError::Group(_))
+        ));
+        // Well-formed reply decodes.
+        let ok = parse_group_reply(
+            r#"{"ok": true, "results": [[1,0,0,1]],
+               "stats": [{"m": 4, "s": 0, "products": 3}]}"#,
+            &sh,
+            1,
+        )
+        .unwrap();
+        assert_eq!(ok[0].0, Matrix::identity(2));
+        assert_eq!(ok[0].1.m, 4);
+        assert_eq!(ok[0].1.matrix_products, 3);
+    }
+
+    #[test]
+    fn overflowing_result_falls_back_without_backoff() {
+        // e^{diag(800)} overflows f64; the worker's reply encodes inf
+        // entries as null, which must read as a *group* problem (fall
+        // back for this group) and never circuit-break the healthy,
+        // responsive shard.
+        let worker_svc = Arc::new(ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            ..Default::default()
+        }));
+        let worker = Server::spawn("127.0.0.1:0", worker_svc).unwrap();
+        let addr = worker.addr.to_string();
+        let metrics = Arc::new(Metrics::new());
+        let backend = RemoteBackend::new(
+            RemoteConfig::new([addr.clone()]),
+            metrics.clone(),
+        );
+        let a = Matrix::from_fn(
+            4,
+            4,
+            |i, j| if i == j { 800.0 } else { 0.0 },
+        );
+        let (plan, _) = crate::coordinator::selector::plan_spec(
+            &a,
+            Method::Sastre,
+            1e-8,
+        );
+        let sh = plan.shape();
+        let err = backend
+            .execute_group(&sh, &[a], &[1e-8], &mut vec![None])
+            .unwrap_err();
+        assert!(err.contains("shard healthy"), "{err}");
+        assert!(
+            backend.plan_hint(&sh),
+            "a responsive shard must not enter backoff"
+        );
+        let snap = metrics.snapshot();
+        assert_eq!(snap.remote_fallbacks, 1);
+        assert_eq!(
+            snap.shard_stats.get(&addr).map_or(0, |s| s.errors),
+            0,
+            "no shard error recorded for a group-level problem"
+        );
+    }
+
+    #[test]
+    fn unreachable_shard_errors_and_counts_fallback() {
+        // Port 1 on loopback refuses immediately.
+        let metrics = Arc::new(Metrics::new());
+        let backend = RemoteBackend::new(
+            RemoteConfig::new(["127.0.0.1:1"]),
+            metrics.clone(),
+        );
+        let sh = shape(4, 4, 0);
+        assert!(backend.plan_hint(&sh), "healthy until proven down");
+        let mats = vec![randm(4, 0.5, 1)];
+        let err = backend
+            .execute_group(&sh, &mats, &[1e-8], &mut vec![None])
+            .unwrap_err();
+        assert!(err.contains("shard"), "{err}");
+        assert_eq!(metrics.snapshot().remote_fallbacks, 1);
+        assert!(
+            !backend.plan_hint(&sh),
+            "failed shard must back off at plan time"
+        );
+    }
+
+    #[test]
+    fn remote_group_matches_native_bitwise() {
+        // A real worker on a thread; the remote path must return exactly
+        // what the native backend computes for the same plan.
+        let worker_svc = Arc::new(ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            ..Default::default()
+        }));
+        let worker = Server::spawn("127.0.0.1:0", worker_svc).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let backend = RemoteBackend::new(
+            RemoteConfig::new([worker.addr.to_string()]),
+            metrics.clone(),
+        );
+        // Three copies of one matrix: the worker re-plans every matrix
+        // from (matrix, tol), so a shared plan must hold group-wide for
+        // the forced-shape native comparison to be the same computation.
+        let a = randm(6, 0.8, 500);
+        let mats = vec![a.clone(), a.clone(), a];
+        let tols = vec![1e-8; mats.len()];
+        let (plan, _) = crate::coordinator::selector::plan_spec(
+            &mats[0],
+            Method::Sastre,
+            1e-8,
+        );
+        let sh = plan.shape();
+        let remote = backend
+            .execute_group(&sh, &mats, &tols, &mut vec![None; 3])
+            .unwrap();
+        let native = NativeBackend
+            .execute_group(&sh, &mats, &tols, &mut vec![None; 3])
+            .unwrap();
+        for (i, ((rv, rs), (nv, ns))) in
+            remote.iter().zip(&native).enumerate()
+        {
+            assert_eq!(rv, nv, "matrix {i} diverged over the wire");
+            assert_eq!(
+                rs.matrix_products, ns.matrix_products,
+                "matrix {i} product count"
+            );
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.shard_stats.len(), 1);
+        assert!(snap.shard_stats.values().all(|s| s.groups == 1));
+        assert_eq!(snap.remote_fallbacks, 0);
+    }
+}

@@ -18,7 +18,9 @@ use super::job::JobUpdate;
 /// Per-matrix outcome.
 #[derive(Clone, Debug)]
 pub struct MatrixResult {
+    /// The computed exponential e^A.
     pub value: Matrix,
+    /// Execution statistics (order, scaling, products).
     pub stats: ExpmStats,
     /// Which expm pipeline ran this matrix (jobs can mix methods).
     pub method: Method,
@@ -47,6 +49,7 @@ struct CollectorState {
 }
 
 impl Collector {
+    /// Collector for a job of `count` matrices streaming into `tx`.
     pub fn new(
         id: u64,
         count: usize,
@@ -64,6 +67,7 @@ impl Collector {
         })
     }
 
+    /// The job id this collector serves.
     pub fn id(&self) -> u64 {
         self.id
     }

@@ -108,6 +108,7 @@ impl Gate {
 
 /// Running server handle.
 pub struct Server {
+    /// The bound address (useful with port 0 for ephemeral binds).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
@@ -164,6 +165,8 @@ impl Server {
         Ok(Server { addr: local, stop, join: Some(join) })
     }
 
+    /// Stop accepting, drain live connections, and join the accept
+    /// thread (idempotent; also runs on drop).
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the accept loop so it observes the flag.
@@ -204,26 +207,65 @@ fn error_reply(id: f64, msg: &str) -> String {
     ]))
 }
 
+/// Reject a frame at the protocol layer (malformed JSON, mistyped or
+/// missing fields, unsupported version): count it in the service metrics
+/// and log the diagnostic server-side — previously only the client saw
+/// the rejection — then answer the usual error frame.
+fn reject_frame(
+    svc: &ExpmService,
+    writer: &mut TcpStream,
+    id: f64,
+    msg: &str,
+) -> std::io::Result<()> {
+    svc.metrics.record_rejected_frame();
+    eprintln!("expm-server: rejected frame (id {id}): {msg}");
+    write_frame(writer, &error_reply(id, msg))
+}
+
 fn write_frame(writer: &mut TcpStream, frame: &str) -> std::io::Result<()> {
     writer.write_all(frame.as_bytes())?;
     writer.write_all(b"\n")
 }
+
+/// How often an idle connection handler wakes to re-check the stop flag.
+const CONN_IDLE_POLL: Duration = Duration::from_millis(250);
 
 fn handle_conn(
     stream: TcpStream,
     svc: Arc<ExpmService>,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
+    // Poll the socket instead of blocking indefinitely: a shutdown then
+    // closes *live* connections within one poll interval, instead of
+    // leaking handler threads that would otherwise serve until their
+    // client disconnects (a remote coordinator's pooled connections, for
+    // example, would keep a "stopped" worker serving groups).
+    stream.set_read_timeout(Some(CONN_IDLE_POLL))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        handle_line(&line, &svc, &stop, &mut writer)?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
         if stop.load(Ordering::SeqCst) {
             break;
+        }
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // client closed the connection
+            Ok(_) => {
+                let line = std::mem::take(&mut buf);
+                if line.trim().is_empty() {
+                    continue;
+                }
+                handle_line(&line, &svc, &stop, &mut writer)?;
+            }
+            // Idle timeout: any partial line stays accumulated in `buf`;
+            // loop to re-check the stop flag.
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
         }
     }
     Ok(())
@@ -343,9 +385,11 @@ fn handle_line(
     let req = match json::parse(line) {
         Ok(r) => r,
         Err(e) => {
-            return write_frame(
+            return reject_frame(
+                svc,
                 writer,
-                &error_reply(-1.0, &format!("bad json: {e}")),
+                -1.0,
+                &format!("bad json: {e}"),
             )
         }
     };
@@ -354,6 +398,32 @@ fn handle_line(
         let frame = match cmd {
             "stats" => {
                 let snap = svc.metrics.snapshot();
+                // Per-shard accounting for sharded deployments: address
+                // -> {groups, errors, mean_latency_s}.
+                let shards = Json::Obj(
+                    snap.shard_stats
+                        .iter()
+                        .map(|(addr, st)| {
+                            (
+                                addr.clone(),
+                                obj(vec![
+                                    (
+                                        "groups",
+                                        Json::Num(st.groups as f64),
+                                    ),
+                                    (
+                                        "errors",
+                                        Json::Num(st.errors as f64),
+                                    ),
+                                    (
+                                        "mean_latency_s",
+                                        Json::Num(st.mean_latency_s()),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                );
                 json::to_string(&obj(vec![
                     ("id", Json::Num(id)),
                     ("ok", Json::Bool(true)),
@@ -361,6 +431,15 @@ fn handle_line(
                     ("matrices", Json::Num(snap.matrices as f64)),
                     ("products", Json::Num(snap.matrix_products as f64)),
                     ("errors", Json::Num(snap.errors as f64)),
+                    (
+                        "rejected_frames",
+                        Json::Num(snap.rejected_frames as f64),
+                    ),
+                    (
+                        "remote_fallbacks",
+                        Json::Num(snap.remote_fallbacks as f64),
+                    ),
+                    ("shards", shards),
                 ]))
             }
             "shutdown" => {
@@ -370,7 +449,14 @@ fn handle_line(
                     ("ok", Json::Bool(true)),
                 ]))
             }
-            other => error_reply(id, &format!("unknown cmd {other:?}")),
+            other => {
+                return reject_frame(
+                    svc,
+                    writer,
+                    id,
+                    &format!("unknown cmd {other:?}"),
+                )
+            }
         };
         return write_frame(writer, &frame);
     }
@@ -382,25 +468,32 @@ fn handle_line(
         Some(v) => match v.as_f64() {
             Some(x) if x.fract() == 0.0 && x >= 0.0 => x as u32,
             _ => {
-                return write_frame(
+                return reject_frame(
+                    svc,
                     writer,
-                    &error_reply(id, "'v' must be a non-negative integer"),
+                    id,
+                    "'v' must be a non-negative integer",
                 )
             }
         },
     };
     match version {
         1 => {
+            // handle_v1's Err is a *frame* problem (bad payload fields);
+            // compute failures come back as Ok(error frame) and are
+            // accounted as job errors by the dispatcher instead.
             let frame = match handle_v1(&req, id, svc) {
                 Ok(f) => f,
-                Err(msg) => error_reply(id, &msg),
+                Err(msg) => return reject_frame(svc, writer, id, &msg),
             };
             write_frame(writer, &frame)
         }
         2 => handle_v2(&req, id, svc, writer),
-        other => write_frame(
+        other => reject_frame(
+            svc,
             writer,
-            &error_reply(id, &format!("unsupported protocol version {other}")),
+            id,
+            &format!("unsupported protocol version {other}"),
         ),
     }
 }
@@ -449,7 +542,7 @@ fn handle_v2(
     })();
     let job = match job {
         Ok(j) => j,
-        Err(msg) => return write_frame(writer, &error_reply(id, &msg)),
+        Err(msg) => return reject_frame(svc, writer, id, &msg),
     };
     // Like "v": a present-but-mistyped "stream" is rejected, not silently
     // degraded to the aggregate reply (a client expecting partial frames
@@ -458,9 +551,11 @@ fn handle_v2(
         None => false,
         Some(Json::Bool(b)) => *b,
         Some(_) => {
-            return write_frame(
+            return reject_frame(
+                svc,
                 writer,
-                &error_reply(id, "'stream' must be a boolean"),
+                id,
+                "'stream' must be a boolean",
             )
         }
     };
@@ -548,6 +643,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a server (coordinator daemon or worker).
     pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
@@ -567,6 +663,7 @@ impl Client {
         Ok(out)
     }
 
+    /// Send one frame and read one reply frame.
     pub fn roundtrip(&mut self, line: &str) -> std::io::Result<String> {
         self.send_line(line)?;
         self.recv_line()

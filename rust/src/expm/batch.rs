@@ -54,6 +54,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Empty arena for order-`n` buffers.
     pub fn new(n: usize) -> Workspace {
         Workspace { n, free: Vec::new() }
     }
@@ -84,8 +85,11 @@ impl Workspace {
 /// Paterson–Stockmeyer this includes the blocking and the 1/i! table,
 /// derived once per bucket instead of once per matrix.
 pub struct Schedule {
+    /// The expm pipeline the bucket runs.
     pub method: Method,
+    /// Shared polynomial order.
     pub m: usize,
+    /// Shared squaring count.
     pub s: u32,
     ps: Option<PsSchedule>,
 }
@@ -97,6 +101,7 @@ struct PsSchedule {
 }
 
 impl Schedule {
+    /// Derive the bucket-wide schedule for `(method, m, s)`.
     pub fn new(method: Method, m: usize, s: u32) -> Schedule {
         let ps = match method {
             Method::PatersonStockmeyer if m > 0 => {

@@ -19,10 +19,12 @@ pub struct Powers {
 }
 
 impl Powers {
+    /// Start from W alone (no products spent yet).
     pub fn new(w: Matrix) -> Powers {
         Powers { pows: vec![w], products: 0 }
     }
 
+    /// The base matrix W.
     pub fn w(&self) -> &Matrix {
         &self.pows[0]
     }
@@ -38,10 +40,12 @@ impl Powers {
         &self.pows[k - 1]
     }
 
+    /// Whether W^k is already cached (no product would be spent).
     pub fn have(&self, k: usize) -> bool {
         k >= 1 && self.pows.len() >= k
     }
 
+    /// Order n of the underlying matrix.
     pub fn order(&self) -> usize {
         self.pows[0].order()
     }
@@ -67,7 +71,9 @@ impl Powers {
 /// Result of a polynomial evaluation: T_m(W) plus products spent *in the
 /// evaluation itself* (not counting powers already in `Powers`).
 pub struct EvalOut {
+    /// The evaluated polynomial T_m(W).
     pub value: Matrix,
+    /// Products spent by the evaluation itself.
     pub products: usize,
 }
 

@@ -45,6 +45,8 @@ pub enum Method {
 }
 
 impl Method {
+    /// The paper-style long name (`expm_flow_sastre`, ...), as reported
+    /// in wire stats and bench tables.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Sastre => "expm_flow_sastre",
@@ -54,6 +56,7 @@ impl Method {
         }
     }
 
+    /// The tolerance-adaptive methods the paper compares (no Pade).
     pub fn all_dynamic() -> [Method; 3] {
         [Method::Sastre, Method::PatersonStockmeyer, Method::Baseline]
     }
@@ -77,6 +80,7 @@ impl Method {
 /// Options for [`expm`].
 #[derive(Clone, Copy, Debug)]
 pub struct ExpmOptions {
+    /// Which expm pipeline to run.
     pub method: Method,
     /// Error tolerance ε (clamped below at unit roundoff, eq. (32)).
     pub tol: f64,
@@ -101,7 +105,9 @@ pub struct ExpmStats {
 
 /// Result of an expm computation.
 pub struct ExpmResult {
+    /// The computed exponential e^A.
     pub value: Matrix,
+    /// Per-call statistics.
     pub stats: ExpmStats,
 }
 

@@ -27,8 +27,9 @@ pub struct Selection {
     pub m: usize,
     /// Scaling parameter: W is divided by 2^s and squared s times after.
     pub s: u32,
-    /// The two remainder-term bounds at the accepted (m, s = 0) stage.
+    /// First remainder-term bound at the accepted (m, s = 0) stage.
     pub e1: f64,
+    /// Second remainder-term bound at the accepted (m, s = 0) stage.
     pub e2: f64,
 }
 

@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 /// Dataset of `count` flattened images of dimension `dim`.
 #[derive(Clone)]
 pub struct Dataset {
+    /// Flattened sample dimension D.
     pub dim: usize,
     data: Vec<f64>,
 }
@@ -46,10 +47,12 @@ impl Dataset {
         Dataset { dim, data }
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.data.len() / self.dim
     }
 
+    /// Whether the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -67,6 +70,7 @@ impl Dataset {
         out
     }
 
+    /// Sample `idx` as a dim-length slice.
     pub fn sample(&self, idx: usize) -> &[f64] {
         &self.data[idx * self.dim..(idx + 1) * self.dim]
     }

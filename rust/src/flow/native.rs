@@ -6,12 +6,15 @@
 use crate::expm::{expm_multi, ExpmOptions, Method};
 use crate::linalg::Matrix;
 
+/// Activation strength in phi(u) = u + ALPHA tanh(u).
 pub const ALPHA: f64 = 0.5;
 
 /// Flow parameters for one block: weight generator A (dim×dim), bias b.
 #[derive(Clone)]
 pub struct Block {
+    /// Weight generator A (the block weight is W = e^A).
     pub a: Matrix,
+    /// Bias vector.
     pub b: Vec<f64>,
 }
 

@@ -18,7 +18,9 @@ use crate::util::rng::Rng;
 /// Outcome of a sampling run.
 #[derive(Clone, Debug)]
 pub struct SampleStats {
+    /// Samples generated.
     pub batch: usize,
+    /// Wall time in seconds.
     pub wall_s: f64,
 }
 

@@ -12,11 +12,17 @@ use crate::runtime::{array_to_literal, Executor};
 
 /// Flat training state (manifest parameter order: A0, b0, A1, b1, ...).
 pub struct TrainState {
+    /// Data dimension D.
     pub dim: usize,
+    /// Number of flow blocks K.
     pub blocks: usize,
+    /// Flat parameter tensors in manifest order.
     pub params: Vec<Vec<f64>>,
+    /// Adam first-moment accumulators, shape-matched to `params`.
     pub adam_m: Vec<Vec<f64>>,
+    /// Adam second-moment accumulators, shape-matched to `params`.
     pub adam_v: Vec<Vec<f64>>,
+    /// Optimizer step counter (drives bias correction).
     pub step: u64,
 }
 
@@ -55,9 +61,13 @@ pub fn init_params(dim: usize, blocks: usize, seed: u64) -> TrainState {
 /// One epoch's outcome.
 #[derive(Clone, Debug)]
 pub struct EpochStats {
+    /// Mean loss over the epoch's steps.
     pub mean_loss: f64,
+    /// Loss at the last step.
     pub final_loss: f64,
+    /// Steps executed.
     pub steps: usize,
+    /// Wall time in seconds.
     pub wall_s: f64,
 }
 

@@ -27,6 +27,8 @@
 //! assert!(r.stats.matrix_products <= 5);
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod coordinator;
 pub mod expm;
 pub mod flow;

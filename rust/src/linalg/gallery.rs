@@ -15,7 +15,9 @@ use crate::util::rng::Rng;
 /// A named testbed matrix.
 #[derive(Clone, Debug)]
 pub struct TestMatrix {
+    /// Gallery class and size tag (e.g. `frank_16`).
     pub name: String,
+    /// The matrix itself.
     pub a: Matrix,
 }
 

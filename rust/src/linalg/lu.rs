@@ -17,6 +17,8 @@ pub struct Lu {
 }
 
 impl Lu {
+    /// Factor PA = LU with partial pivoting (never fails; singularity
+    /// is recorded and queryable).
     pub fn new(a: &Matrix) -> Lu {
         assert!(a.is_square());
         let n = a.order();
@@ -63,10 +65,12 @@ impl Lu {
         Lu { lu, piv, sign, singular }
     }
 
+    /// Whether a zero (or subnormal) pivot was hit.
     pub fn is_singular(&self) -> bool {
         self.singular
     }
 
+    /// Determinant from the factorization (0 when singular).
     pub fn det(&self) -> f64 {
         if self.singular {
             return 0.0;

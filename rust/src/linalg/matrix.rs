@@ -5,6 +5,7 @@
 use std::fmt;
 use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub};
 
+/// Dense row-major `f64` matrix.
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
     rows: usize,
@@ -13,10 +14,12 @@ pub struct Matrix {
 }
 
 impl Matrix {
+    /// All-zero `rows x cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// The `n x n` identity.
     pub fn identity(n: usize) -> Matrix {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -25,6 +28,7 @@ impl Matrix {
         m
     }
 
+    /// Build entry-wise from `f(i, j)` (row-major fill order).
     pub fn from_fn(
         rows: usize,
         cols: usize,
@@ -39,6 +43,7 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// Build from row vectors; panics on ragged input.
     pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -50,52 +55,62 @@ impl Matrix {
         }
     }
 
+    /// Adopt a row-major buffer; panics unless `data.len() == rows * cols`.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
     #[inline]
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
     #[inline]
+    /// Whether `rows == cols`.
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
     }
 
     #[inline]
+    /// Order n of a square matrix (debug-asserts squareness).
     pub fn order(&self) -> usize {
         debug_assert!(self.is_square());
         self.rows
     }
 
     #[inline]
+    /// Row-major entries.
     pub fn data(&self) -> &[f64] {
         &self.data
     }
 
     #[inline]
+    /// Mutable row-major entries.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
     #[inline]
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Row `i` as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// A^T as a new matrix.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -106,6 +121,7 @@ impl Matrix {
         out
     }
 
+    /// Sum of the diagonal (square matrices only).
     pub fn trace(&self) -> f64 {
         assert!(self.is_square());
         (0..self.rows).map(|i| self.data[i * self.cols + i]).sum()
@@ -118,6 +134,7 @@ impl Matrix {
         }
     }
 
+    /// `alpha * self` as a new matrix.
     pub fn scaled(&self, alpha: f64) -> Matrix {
         let mut out = self.clone();
         out.scale_in_place(alpha);
@@ -153,6 +170,7 @@ impl Matrix {
         self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
     }
 
+    /// Whether every entry is finite (no NaN/inf).
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|x| x.is_finite())
     }

@@ -7,7 +7,12 @@
 //!   trace --dataset D      Figures-2/3/4-style trace replay (text)
 //!   flow --steps N         train the generative flow via PJRT artifacts
 //!   sample --batch B       sample from the flow (Table-5 path)
-//!   daemon --addr A        expose the service over TCP (JSON lines)
+//!   daemon --addr A        expose the service over TCP (JSON lines);
+//!                          `--shards a:p,b:p` routes batch groups to a
+//!                          worker fleet (see docs/architecture.md)
+//!   worker --addr A        run one worker shard (same binary, same v2
+//!                          protocol; a worker is a daemon that serves
+//!                          compute and forwards nothing)
 //!   info                   artifact manifest + platform report
 
 use expmflow::coordinator::{ExpmService, ServiceConfig};
@@ -31,11 +36,12 @@ fn main() {
         "flow" => cmd_flow(&args),
         "sample" => cmd_sample(&args),
         "daemon" => cmd_daemon(&args),
+        "worker" => cmd_worker(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command {other:?}");
             eprintln!(
-                "usage: expmflow <demo|serve|gallery|trace|flow|sample|info> [--flags]"
+                "usage: expmflow <demo|serve|gallery|trace|flow|sample|daemon|worker|info> [--flags]"
             );
             2
         }
@@ -282,7 +288,66 @@ fn cmd_sample(args: &Args) -> i32 {
 
 fn cmd_daemon(args: &Args) -> i32 {
     use expmflow::coordinator::server::Server;
+    use expmflow::coordinator::RemoteConfig;
+    // `daemon --worker` is the same as the `worker` subcommand: one
+    // binary serves both roles of a sharded deployment.
+    if args.has("worker") {
+        return cmd_worker(args);
+    }
     let addr = args.get_str("addr", "127.0.0.1:7788").to_string();
+    let native_only = args.has("native-only");
+    let shards: Vec<String> = args
+        .get_str("shards", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: if native_only {
+            None
+        } else {
+            Some(default_artifact_dir())
+        },
+        remote: if shards.is_empty() {
+            None
+        } else {
+            Some(RemoteConfig::new(shards.clone()))
+        },
+        ..Default::default()
+    }));
+    match Server::spawn(&addr, svc) {
+        Ok(mut server) => {
+            println!(
+                "expm daemon listening on {} (JSON lines, protocol v1+v2; \
+                 {{\"cmd\":\"shutdown\"}} to stop)",
+                server.addr
+            );
+            if !shards.is_empty() {
+                println!(
+                    "routing batch groups to {} worker shard(s): {}",
+                    shards.len(),
+                    shards.join(", ")
+                );
+            }
+            // Block until the accept loop exits (shutdown cmd).
+            server.shutdown_wait();
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+/// Worker role of a sharded deployment: serve the same v1/v2 wire
+/// protocol, execute locally (PJRT when artifacts exist, else native),
+/// never forward. A coordinator daemon points `--shards` at a fleet of
+/// these.
+fn cmd_worker(args: &Args) -> i32 {
+    use expmflow::coordinator::server::Server;
+    let addr = args.get_str("addr", "127.0.0.1:7789").to_string();
     let native_only = args.has("native-only");
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
@@ -295,11 +360,10 @@ fn cmd_daemon(args: &Args) -> i32 {
     match Server::spawn(&addr, svc) {
         Ok(mut server) => {
             println!(
-                "expm daemon listening on {} (JSON lines, protocol v1+v2; \
+                "expm worker listening on {} (JSON lines, protocol v1+v2; \
                  {{\"cmd\":\"shutdown\"}} to stop)",
                 server.addr
             );
-            // Block until the accept loop exits (shutdown cmd).
             server.shutdown_wait();
             0
         }

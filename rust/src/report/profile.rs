@@ -6,6 +6,7 @@
 /// One method's profile curve sampled at `alphas`.
 #[derive(Clone, Debug)]
 pub struct ProfileCurve {
+    /// Method name (curve label).
     pub method: String,
     /// Fractions in [0, 1], one per alpha.
     pub fractions: Vec<f64>,

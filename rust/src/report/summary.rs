@@ -6,19 +6,27 @@ use crate::util::stats::{whisker, Whisker};
 /// Everything one method accumulates over a testbed/trace run.
 #[derive(Clone, Debug, Default)]
 pub struct MethodRun {
+    /// Method name (row label).
     pub method: String,
+    /// Per-case relative errors vs the oracle.
     pub errors: Vec<f64>,
+    /// Per-case selected polynomial orders m.
     pub degrees: Vec<f64>,
+    /// Per-case squaring counts s.
     pub scalings: Vec<f64>,
+    /// Matrix products summed over the run.
     pub products: usize,
+    /// Wall time summed over the run, seconds.
     pub wall_s: f64,
 }
 
 impl MethodRun {
+    /// Empty accumulator labelled `method`.
     pub fn new(method: &str) -> MethodRun {
         MethodRun { method: method.into(), ..Default::default() }
     }
 
+    /// Record one case's error, selection and product count.
     pub fn record(
         &mut self,
         err: f64,
@@ -32,10 +40,12 @@ impl MethodRun {
         self.products += products;
     }
 
+    /// Five-number summary of the selected orders.
     pub fn degree_whisker(&self) -> Whisker {
         whisker(&self.degrees)
     }
 
+    /// Five-number summary of the squaring counts.
     pub fn scaling_whisker(&self) -> Whisker {
         whisker(&self.scalings)
     }

@@ -12,6 +12,7 @@ use crate::util::json::{self, Json};
 /// One AOT-compiled computation.
 #[derive(Clone, Debug)]
 pub struct Artifact {
+    /// Manifest key (artifact file stem).
     pub name: String,
     /// Absolute path to the HLO text file.
     pub path: PathBuf,
@@ -36,17 +37,24 @@ pub struct Artifact {
 /// Flow configuration blob from the manifest.
 #[derive(Clone, Debug)]
 pub struct FlowConfig {
+    /// Data dimension D.
     pub dim: usize,
+    /// Flow blocks K.
     pub blocks: usize,
+    /// Batch size the train artifact was lowered for.
     pub train_batch: usize,
+    /// Batch sizes with emitted sample artifacts.
     pub sample_batches: Vec<usize>,
 }
 
 /// Parsed manifest with lookup indices.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, Artifact>,
+    /// Flow configuration, when flow artifacts were lowered.
     pub flow: Option<FlowConfig>,
     /// Available (n, batch) pairs for sastre poly artifacts.
     pub poly_grid: Vec<(usize, usize)>,
@@ -69,6 +77,8 @@ fn shapes(v: Option<&Json>) -> Vec<Vec<usize>> {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json` and verify every declared artifact
+    /// file exists.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -144,6 +154,7 @@ impl Manifest {
         Ok(Manifest { dir, artifacts, flow, poly_grid })
     }
 
+    /// Look up an artifact by name, erroring with the missing name.
     pub fn get(&self, name: &str) -> Result<&Artifact> {
         self.artifacts
             .get(name)
@@ -155,6 +166,7 @@ impl Manifest {
         format!("poly_sastre_m{m}_n{n}_b{b}")
     }
 
+    /// Name of the repeated-squaring artifact for (n, b).
     pub fn square_name(&self, n: usize, b: usize) -> String {
         format!("square_n{n}_b{b}")
     }

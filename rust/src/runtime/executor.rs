@@ -23,6 +23,7 @@ use crate::linalg::Matrix;
 
 /// Compiled-executable cache keyed by artifact name.
 pub struct Executor {
+    /// The parsed artifact manifest this executor serves.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
@@ -90,6 +91,7 @@ impl Executor {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

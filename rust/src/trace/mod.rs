@@ -16,12 +16,16 @@ use crate::util::rng::Rng;
 /// Which paper workload a trace mimics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TraceKind {
+    /// Glow on CIFAR-10.
     Cifar10,
+    /// Glow on 32x32 ImageNet.
     ImageNet32,
+    /// Glow on 64x64 ImageNet.
     ImageNet64,
 }
 
 impl TraceKind {
+    /// Human-readable workload name.
     pub fn name(&self) -> &'static str {
         match self {
             TraceKind::Cifar10 => "CIFAR-10",
@@ -50,6 +54,7 @@ impl TraceKind {
         }
     }
 
+    /// Every workload, in the paper's reporting order.
     pub fn all() -> [TraceKind; 3] {
         [TraceKind::Cifar10, TraceKind::ImageNet32, TraceKind::ImageNet64]
     }
@@ -57,7 +62,9 @@ impl TraceKind {
 
 /// One recorded expm invocation: a tensor of same-order weight matrices.
 pub struct TraceCall {
+    /// The weight matrices of the invocation (uniform order).
     pub matrices: Vec<Matrix>,
+    /// Their shared order.
     pub n: usize,
 }
 

@@ -28,8 +28,11 @@ pub struct CallRecord {
 /// Replay summary for one method over a whole trace.
 #[derive(Clone, Debug, Default)]
 pub struct ReplaySummary {
+    /// Per-invocation records, in trace order.
     pub records: Vec<CallRecord>,
+    /// Matrix products summed over the trace.
     pub total_products: usize,
+    /// Wall time summed over the trace (seconds).
     pub total_wall_s: f64,
 }
 

@@ -5,13 +5,17 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: positional words and `--key value` flags.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Positional words, in order.
     pub positional: Vec<String>,
+    /// Flag values by key (boolean flags store `"true"`).
     pub flags: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Parse a token stream (no program name).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
@@ -38,30 +42,36 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping the program name).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` as usize, or `default`; panics on a non-integer value.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {s:?}")))
             .unwrap_or(default)
     }
 
+    /// `--key` as f64, or `default`; panics on a non-numeric value.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {s:?}")))
             .unwrap_or(default)
     }
 
+    /// `--key` as a string, or `default`.
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Whether `--key` was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

@@ -9,52 +9,68 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, which also fixes serialization order).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The number, if this is `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// The number truncated to usize, if this is `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// The string, if this is `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The elements, if this is `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// The key/value map, if this is `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
         }
     }
+    /// Object field lookup (`None` for non-objects too).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|m| m.get(key))
     }
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What was expected or found.
     pub msg: String,
 }
 
@@ -273,9 +289,20 @@ pub fn write(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(x) => {
-            if x.fract() == 0.0 && x.abs() < 1e15 {
+            if !x.is_finite() {
+                // JSON has no inf/NaN literal; `null` keeps the frame
+                // parseable and readers see "not a number" — exactly
+                // what an overflowed result entry is. (A bare `inf`
+                // token would corrupt the whole frame.)
+                out.push_str("null");
+            } else if x.fract() == 0.0
+                && x.abs() < 1e15
+                && !(*x == 0.0 && x.is_sign_negative())
+            {
                 out.push_str(&format!("{}", *x as i64));
             } else {
+                // f64 Display is shortest-roundtrip, so the value (and
+                // -0.0's sign bit) survives the wire bit-exactly.
                 out.push_str(&format!("{x}"));
             }
         }
@@ -321,6 +348,7 @@ pub fn write(v: &Json, out: &mut String) {
     }
 }
 
+/// Serialize compactly to a fresh string.
 pub fn to_string(v: &Json) -> String {
     let mut s = String::new();
     write(v, &mut s);
@@ -370,6 +398,29 @@ mod tests {
         let text = r#"{"arr":[1,2.5,"s"],"b":true,"n":null}"#;
         let v = parse(text).unwrap();
         assert_eq!(to_string(&v), text);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(to_string(&Json::Num(f64::INFINITY)), "null");
+        assert_eq!(to_string(&Json::Num(f64::NEG_INFINITY)), "null");
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+        // And the resulting frame stays parseable.
+        let s = to_string(&Json::Arr(vec![
+            Json::Num(1.0),
+            Json::Num(f64::INFINITY),
+        ]));
+        assert!(parse(&s).is_ok(), "{s}");
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bit_exactly() {
+        let s = to_string(&Json::Num(-0.0));
+        assert_eq!(s, "-0");
+        let back = parse(&s).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative(), "{back}");
+        // Positive zero still takes the integer path.
+        assert_eq!(to_string(&Json::Num(0.0)), "0");
     }
 
     #[test]

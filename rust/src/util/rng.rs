@@ -22,6 +22,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed via splitmix64 expansion (any seed, including 0, is fine).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -34,6 +35,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit output of xoshiro256**.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1]

@@ -20,10 +20,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Median (linear-interpolated 50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Arithmetic mean (NaN for an empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -31,10 +33,12 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Minimum (+inf for an empty slice).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (-inf for an empty slice).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -43,14 +47,21 @@ pub fn max(xs: &[f64]) -> f64 {
 /// median, quartiles, whiskers at 1.5 IQR, and outliers beyond them.
 #[derive(Clone, Debug)]
 pub struct Whisker {
+    /// Median of the data.
     pub median: f64,
+    /// First quartile.
     pub q1: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Lowest datum inside the 1.5 IQR whisker.
     pub lo: f64,
+    /// Highest datum inside the 1.5 IQR whisker.
     pub hi: f64,
+    /// Count of data beyond the whiskers.
     pub outliers: usize,
 }
 
+/// Compute the five-number summary of `xs`.
 pub fn whisker(xs: &[f64]) -> Whisker {
     let q1 = percentile(xs, 25.0);
     let q3 = percentile(xs, 75.0);
@@ -74,14 +85,20 @@ pub fn whisker(xs: &[f64]) -> Whisker {
 /// Timing summary from `bench_loop`.
 #[derive(Clone, Debug)]
 pub struct Timing {
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
+    /// Total measured time, seconds.
     pub total_s: f64,
 }
 
 impl Timing {
+    /// Mean milliseconds per iteration.
     pub fn per_iter_ms(&self) -> f64 {
         self.mean_s * 1e3
     }

@@ -7,7 +7,9 @@ mod common;
 use std::fs;
 
 use common::{artifacts_available, randm_norm};
-use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::coordinator::server::Server;
+use expmflow::coordinator::{ExpmService, RemoteConfig, ServiceConfig};
+use expmflow::expm::{expm, ExpmOptions, Method};
 use expmflow::linalg::Matrix;
 use expmflow::runtime::{Executor, Manifest};
 
@@ -105,6 +107,55 @@ fn service_survives_poisoned_then_valid_requests() {
     let r = svc.compute(vec![randm_norm(8, 1.0, 3)], 1e-8).unwrap();
     assert_eq!(r.len(), 1);
     assert!(r[0].value.is_finite());
+}
+
+#[test]
+fn shard_down_falls_back_to_native_bitwise() {
+    // Bind a real worker to learn a routable address, then kill it so
+    // the coordinator faces a dead shard from the first group on.
+    let worker_svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        ..Default::default()
+    }));
+    let mut worker = Server::spawn("127.0.0.1:0", worker_svc).unwrap();
+    let dead_addr = worker.addr.to_string();
+    worker.shutdown();
+    drop(worker);
+
+    let svc = ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        remote: Some(RemoteConfig::new([dead_addr])),
+        ..Default::default()
+    });
+    let mats: Vec<Matrix> =
+        (0..3).map(|i| randm_norm(8, 1.0, 700 + i)).collect();
+    let results = svc.compute(mats.clone(), 1e-8).unwrap();
+    assert_eq!(results.len(), 3, "no job loss on a degraded fleet");
+    for (i, (r, a)) in results.iter().zip(&mats).enumerate() {
+        assert_eq!(r.backend, "native", "matrix {i} must degrade to native");
+        let want = expm(
+            a,
+            &ExpmOptions { method: Method::Sastre, tol: 1e-8 },
+        );
+        assert_eq!(
+            r.value, want.value,
+            "matrix {i}: fallback result must be bitwise-native"
+        );
+        assert_eq!(r.stats.matrix_products, want.stats.matrix_products);
+    }
+    let snap = svc.metrics.snapshot();
+    assert!(
+        snap.remote_fallbacks >= 1,
+        "fallback counter must increment, got {}",
+        snap.remote_fallbacks
+    );
+    assert_eq!(snap.errors, 0, "fail-soft must not count job errors");
+    assert!(snap.backend_hist[&"native"] >= 1);
+
+    // Subsequent traffic flows while the shard backs off (routed to
+    // native at plan time, no per-group connect timeout).
+    let more = svc.compute(vec![randm_norm(8, 1.0, 710)], 1e-8).unwrap();
+    assert_eq!(more[0].backend, "native");
 }
 
 #[test]

@@ -9,7 +9,7 @@ mod common;
 use common::{artifact_dir, artifacts_available, randm_norm, rel_err};
 use expmflow::coordinator::batcher::BatchPolicy;
 use expmflow::coordinator::server::{Client, Server};
-use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::coordinator::{ExpmService, RemoteConfig, ServiceConfig};
 use expmflow::expm::pade::expm_pade13;
 use expmflow::expm::{expm, ExpmOptions, Method};
 use expmflow::linalg::Matrix;
@@ -24,6 +24,7 @@ fn pjrt_service() -> ExpmService {
             max_wait: Duration::from_millis(1),
         },
         artifact_dir: Some(artifact_dir()),
+        ..Default::default()
     })
 }
 
@@ -120,6 +121,7 @@ fn paper_norm_range_workload() {
         } else {
             None
         },
+        ..Default::default()
     });
     let trace = expmflow::trace::generate(
         expmflow::trace::TraceKind::Cifar10,
@@ -224,14 +226,24 @@ fn wire_v2_malformed_frames_error() {
         // absurd order rejected before any allocation
         r#"{"v": 2, "id": 10, "orders": [4294967296], "matrices": [[]]}"#,
     ];
+    let case_count = cases.len() as u64;
     for line in cases {
         let reply = client.roundtrip(line).unwrap();
         assert!(reply.contains("\"ok\":false"), "{line} -> {reply}");
     }
+    // The server counts every rejection instead of only telling the
+    // client (the diagnostic used to vanish server-side).
+    assert_eq!(_svc.metrics.snapshot().rejected_frames, case_count);
     // The connection is still healthy after the error storm.
     let a = randm_norm(4, 0.5, 9);
     let got = client.expm(&a, 1e-8).unwrap();
     assert!(rel_err(&got, &expm_pade13(&a)) < 1e-7);
+    // And the stats command surfaces the counter on the wire.
+    let reply = client.roundtrip(r#"{"id": 99, "cmd": "stats"}"#).unwrap();
+    assert!(
+        reply.contains(&format!("\"rejected_frames\":{case_count}")),
+        "{reply}"
+    );
 }
 
 #[test]
@@ -307,4 +319,139 @@ fn wire_v2_streaming_partials_order() {
     let a = randm_norm(4, 0.5, 23);
     let got = client.expm(&a, 1e-8).unwrap();
     assert!(rel_err(&got, &expm_pade13(&a)) < 1e-7);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded remote backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remote_shard_roundtrip_bitwise_parity() {
+    // Worker hosted on its own thread (Server::spawn threads the accept
+    // loop); the coordinator forwards whole batch groups to it over the
+    // v2 protocol. Every result must be bitwise what the library
+    // computes locally for the same per-matrix contract.
+    let (worker, worker_svc) = native_server();
+    let svc = ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        remote: Some(RemoteConfig::new([worker.addr.to_string()])),
+        ..Default::default()
+    });
+    let mats: Vec<Matrix> = (0..5)
+        .map(|i| randm_norm(4 + (i as usize % 3) * 4, 1.0, 800 + i))
+        .collect();
+    let contracts = [
+        (Method::Sastre, 1e-8),
+        (Method::Sastre, 1e-12),
+        (Method::PatersonStockmeyer, 1e-6),
+        (Method::Baseline, 1e-8),
+        (Method::Pade, 1e-8),
+    ];
+    let mut job = expmflow::coordinator::JobSpec::new();
+    for (a, (method, tol)) in mats.iter().zip(contracts) {
+        job = job.push_with(a.clone(), method, tol);
+    }
+    let resp = svc.submit(job).unwrap().wait().unwrap();
+    assert_eq!(resp.results.len(), 5);
+    for (i, r) in resp.results.iter().enumerate() {
+        let (method, tol) = contracts[i];
+        assert_eq!(
+            r.backend, "remote",
+            "matrix {i} must execute on the worker shard"
+        );
+        let want = expm(&mats[i], &ExpmOptions { method, tol });
+        assert_eq!(
+            r.value, want.value,
+            "matrix {i}: remote group must be bitwise-equal to native"
+        );
+        assert_eq!(
+            r.stats.matrix_products, want.stats.matrix_products,
+            "matrix {i} product count over the wire"
+        );
+    }
+    // The worker actually saw the groups...
+    let wsnap = worker_svc.metrics.snapshot();
+    assert!(wsnap.requests >= 1, "worker served no requests");
+    assert_eq!(wsnap.matrices, 5);
+    // ...and the coordinator accounted them per shard.
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.remote_fallbacks, 0);
+    let shard = snap
+        .shard_stats
+        .get(&worker.addr.to_string())
+        .expect("per-shard stats recorded");
+    assert!(shard.groups >= 1);
+    assert_eq!(shard.errors, 0);
+    assert!(shard.total_latency_s >= 0.0);
+    assert!(snap.backend_hist[&"remote"] >= 1);
+}
+
+#[test]
+fn wire_to_remote_worker_two_hop() {
+    // Full two-process topology, thread-hosted: client -> coordinator
+    // server -> RemoteBackend -> worker server, all over TCP.
+    let (worker, worker_svc) = native_server();
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        remote: Some(RemoteConfig::new([worker.addr.to_string()])),
+        ..Default::default()
+    }));
+    let coordinator = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    let mut client = Client::connect(coordinator.addr).unwrap();
+    let mats: Vec<Matrix> =
+        (0..3).map(|i| randm_norm(6, 1.0, 900 + i)).collect();
+    let jobs: Vec<(&Matrix, Method, f64)> =
+        mats.iter().map(|a| (a, Method::Sastre, 1e-8)).collect();
+    let line = Client::v2_request_line(31, &jobs, false);
+    let reply = client.roundtrip(&line).unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    let results = v.get("results").and_then(Json::as_arr).unwrap();
+    let stats = v.get("stats").and_then(Json::as_arr).unwrap();
+    for (i, a) in mats.iter().enumerate() {
+        let got = wire_matrix(&results[i], a.order());
+        let want = expm(
+            a,
+            &ExpmOptions { method: Method::Sastre, tol: 1e-8 },
+        );
+        assert_eq!(got, want.value, "matrix {i} diverged across two hops");
+        assert_eq!(
+            stats[i].get("backend").and_then(Json::as_str),
+            Some("remote"),
+            "matrix {i} must report the remote backend"
+        );
+    }
+    assert!(worker_svc.metrics.snapshot().matrices >= 3);
+    // The coordinator's wire stats expose the per-shard accounting.
+    let reply = client.roundtrip(r#"{"id": 40, "cmd": "stats"}"#).unwrap();
+    let v = json::parse(&reply).unwrap();
+    let shards = v.get("shards").expect("stats reply carries 'shards'");
+    let entry = shards
+        .get(&worker.addr.to_string())
+        .expect("worker shard listed in stats");
+    assert!(entry.get("groups").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert_eq!(entry.get("errors").and_then(Json::as_f64), Some(0.0));
+    // Kill the worker. Its connection handlers notice the shutdown
+    // within the server's idle poll interval; until then a pooled
+    // coordinator connection may still be served. Poll until the fleet
+    // is observably dead — every interim reply is still a correct
+    // result (fail-soft means no job loss, not instant detection).
+    drop(worker);
+    let mut fell_back = false;
+    for attempt in 0..50u64 {
+        let line = Client::v2_request_line(100 + attempt, &jobs, false);
+        let reply = client.roundtrip(&line).unwrap();
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+        let stats = v.get("stats").and_then(Json::as_arr).unwrap();
+        if stats.iter().all(|st| {
+            st.get("backend").and_then(Json::as_str) == Some("native")
+        }) {
+            fell_back = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(fell_back, "dead fleet must eventually fail soft to native");
+    assert!(svc.metrics.snapshot().remote_fallbacks >= 1);
 }

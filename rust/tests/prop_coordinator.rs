@@ -30,6 +30,7 @@ fn native_service() -> ExpmService {
             max_wait: Duration::from_millis(1),
         },
         artifact_dir: None,
+        ..Default::default()
     })
 }
 

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the docs/ handbook and README.
+
+Verifies that every relative link / image target in the given markdown
+files resolves to an existing file (anchors are stripped; http(s) and
+mailto links are skipped — CI runs offline). Exits non-zero listing the
+broken links so the handbook cannot rot silently.
+
+Usage: tools/check_markdown_links.py README.md docs/*.md
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and ![alt](target); stops at the first ')' so titled
+# links ("target "title"") keep only the target token.
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)[^)]*\)")
+# Fenced code blocks must not contribute false links.
+FENCE = re.compile(r"^\s*(```|~~~)")
+
+
+def links_in(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(
+        path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip())
+        return 2
+    broken = []
+    checked = 0
+    for name in argv[1:]:
+        path = Path(name)
+        if not path.is_file():
+            broken.append(f"{name}: file itself is missing")
+            continue
+        for lineno, target in links_in(path):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref = target.split("#", 1)[0]
+            if not ref:  # pure in-page anchor
+                continue
+            checked += 1
+            resolved = (path.parent / ref).resolve()
+            if not resolved.exists():
+                broken.append(f"{name}:{lineno}: broken link -> {target}")
+    if broken:
+        print("\n".join(broken))
+        return 1
+    print(f"markdown links ok ({checked} relative links checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
