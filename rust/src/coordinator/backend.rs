@@ -1,17 +1,27 @@
 //! Pluggable execution backends. The dispatcher owns a [`BackendRegistry`]
 //! of trait objects; every group the batcher flushes is routed at
 //! *planning* time ([`Backend::plan_hint`]) and executed through
-//! [`Backend::execute_group`]. New engines (GPU PJRT, remote shards, ...)
-//! register uniformly instead of growing a match in the dispatch loop; the
-//! native batched engine registers last and accepts everything, so routing
-//! and fail-soft degradation always terminate.
+//! [`Backend::execute_group`] — since the scheduler refactor, on the
+//! backend's own execution lane thread ([`super::scheduler`]). New
+//! engines (GPU PJRT, remote shards, ...) register uniformly instead of
+//! growing a match in the dispatch loop; the native batched engine
+//! registers last and accepts everything, so routing and fail-soft
+//! degradation always terminate.
+//!
+//! Backends are `Send + Sync`: routing queries run on the dispatcher
+//! thread while execution runs on lane threads. Engines built on
+//! thread-confined handles (PJRT wraps raw C pointers) keep the handle
+//! in thread-local storage so each lane thread owns its own instance —
+//! see [`PjrtBackend`].
+
+use std::cell::RefCell;
 
 use crate::expm::batch::{run_group, Schedule};
 use crate::expm::eval::{eval_sastre, Powers};
 use crate::expm::scaling::repeated_square;
 use crate::expm::{coeffs, ExpmOptions, ExpmStats, Method};
 use crate::linalg::{Matrix, SMALL_N};
-use crate::runtime::Executor;
+use crate::runtime::{Executor, Manifest};
 use crate::util::threads::parallel_map;
 
 /// Execution shape of one batch group — what the batcher keys on
@@ -30,7 +40,10 @@ pub struct GroupShape {
 
 /// A compute engine that can execute pre-bucketed groups of matrices
 /// sharing one [`GroupShape`].
-pub trait Backend {
+///
+/// `Send + Sync` because the dispatcher routes on its own thread while
+/// the scheduler executes groups on per-backend lane threads.
+pub trait Backend: Send + Sync {
     /// Stable name, reported per result (e.g. "native", "pjrt").
     fn name(&self) -> &'static str;
 
@@ -51,6 +64,46 @@ pub trait Backend {
         tols: &[f64],
         powers: &mut [Option<Powers>],
     ) -> Result<Vec<(Matrix, ExpmStats)>, String>;
+
+    /// How many independent execution lanes the scheduler should give
+    /// this backend. One per *instance* of the underlying resource: the
+    /// sharded remote backend answers its shard count so every shard
+    /// gets its own lane (a slow worker never stalls its siblings);
+    /// local engines answer 1 — their internal parallelism policy
+    /// (batch fan-out below `SMALL_N`, blocked GEMM above it) already
+    /// owns the cores, so extra lanes would only oversubscribe.
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Which of this backend's lanes a group of `shape` belongs on —
+    /// must match the backend's internal routing (the remote backend
+    /// answers its consistent shard hash) so a lane only carries groups
+    /// its resource instance will actually execute.
+    fn lane_of(&self, _shape: &GroupShape) -> usize {
+        0
+    }
+
+    /// Human-readable lane label for metrics (`"native"`,
+    /// `"remote:host:port"`, ...).
+    fn lane_name(&self, _lane: usize) -> String {
+        self.name().to_string()
+    }
+
+    /// Execute one group on a specific lane. Backends with one lane
+    /// ignore the index; the remote backend pins the round-trip to the
+    /// lane's shard (skipping its own hash, which would re-derive the
+    /// same index).
+    fn execute_lane(
+        &self,
+        _lane: usize,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+        self.execute_group(shape, mats, tols, powers)
+    }
 }
 
 /// Execute e^W with a fixed plan on the native engine (no batching —
@@ -150,14 +203,61 @@ impl Backend for NativeBackend {
 /// (the lowered kernels implement formulas (10)–(17)). Product accounting
 /// uses the paper's cost model (the kernels perform exactly those dots in
 /// VMEM).
+///
+/// PJRT objects wrap raw C pointers without Sync guarantees, so the
+/// backend keeps only the (plain-data) [`Manifest`] for routing; the
+/// [`Executor`] itself lives in thread-local storage, built lazily by
+/// whichever lane thread executes PJRT groups — the same single-owner
+/// discipline the dispatcher used before the scheduler refactor, now
+/// expressed per lane.
 pub struct PjrtBackend {
-    exec: Executor,
+    dir: std::path::PathBuf,
+    manifest: Manifest,
+}
+
+thread_local! {
+    /// The calling thread's PJRT executor, tagged with the artifact dir
+    /// it was built from (see [`PjrtBackend`]). The tag guards the
+    /// (unlikely but possible) case of one thread serving two
+    /// `PjrtBackend` instances with different artifact dirs: a mismatch
+    /// rebuilds instead of silently running the wrong artifacts.
+    static PJRT_EXEC: RefCell<Option<(std::path::PathBuf, Executor)>> =
+        const { RefCell::new(None) };
 }
 
 impl PjrtBackend {
-    /// Wrap a loaded artifact executor.
-    pub fn new(exec: Executor) -> PjrtBackend {
-        PjrtBackend { exec }
+    /// Load the artifact manifest in `dir` for routing; the executor is
+    /// built lazily on the executing lane thread. The full executor
+    /// (manifest *and* PJRT client) is probed once here, so a host
+    /// without a usable PJRT runtime runs native-only from the start
+    /// instead of paying a failed attempt per group.
+    pub fn from_dir(
+        dir: impl Into<std::path::PathBuf>,
+    ) -> Result<PjrtBackend, String> {
+        let dir = dir.into();
+        let probe = Executor::new(&dir).map_err(|e| e.to_string())?;
+        let manifest = probe.manifest.clone();
+        Ok(PjrtBackend { dir, manifest })
+    }
+
+    /// Run `f` against this thread's executor, building it on first use
+    /// (or rebuilding when a different artifact dir owned it last).
+    fn with_executor<T>(
+        &self,
+        f: impl FnOnce(&Executor) -> Result<T, String>,
+    ) -> Result<T, String> {
+        PJRT_EXEC.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if !matches!(&*slot, Some((dir, _)) if *dir == self.dir) {
+                *slot = Some((
+                    self.dir.clone(),
+                    Executor::new(&self.dir).map_err(|e| e.to_string())?,
+                ));
+            }
+            let (_, exec) =
+                slot.as_ref().expect("executor just installed");
+            f(exec)
+        })
     }
 }
 
@@ -167,7 +267,11 @@ impl Backend for PjrtBackend {
     }
 
     fn plan_hint(&self, shape: &GroupShape) -> bool {
-        self.exec.supports_group(shape.n, shape.method, shape.m)
+        // Mirrors `Executor::supports_group` without needing the
+        // (thread-confined) executor on the routing thread.
+        shape.method == Method::Sastre
+            && shape.m != 0
+            && self.manifest.supports_order(shape.n)
     }
 
     fn execute_group(
@@ -177,10 +281,10 @@ impl Backend for PjrtBackend {
         _tols: &[f64],
         _powers: &mut [Option<Powers>],
     ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
-        let values = self
-            .exec
-            .expm_batch(mats, shape.m, shape.s)
-            .map_err(|e| e.to_string())?;
+        let values = self.with_executor(|exec| {
+            exec.expm_batch(mats, shape.m, shape.s)
+                .map_err(|e| e.to_string())
+        })?;
         let per = ExpmStats {
             m: shape.m,
             s: shape.s,
@@ -224,6 +328,33 @@ impl BackendRegistry {
         self.backends[idx].name()
     }
 
+    /// The backend at registry index `idx` (lane construction and the
+    /// scheduler's per-lane execution go through this).
+    pub fn get(&self, idx: usize) -> &dyn Backend {
+        self.backends[idx].as_ref()
+    }
+
+    /// The fail-soft successor of backend `after` for `shape`: the next
+    /// registered backend accepting the shape, falling through to the
+    /// last (native, which accepts everything). `None` only when `after`
+    /// already *is* the last backend — then the group has nowhere left
+    /// to degrade and must fail.
+    pub fn next_accepting(
+        &self,
+        after: usize,
+        shape: &GroupShape,
+    ) -> Option<usize> {
+        let last = self.backends.len().checked_sub(1)?;
+        if after >= last {
+            return None;
+        }
+        Some(
+            (after + 1..last)
+                .find(|&j| self.backends[j].plan_hint(shape))
+                .unwrap_or(last),
+        )
+    }
+
     /// Index of the first backend accepting the shape; falls back to the
     /// last (native) backend, which accepts everything.
     pub fn route(&self, shape: &GroupShape) -> usize {
@@ -235,7 +366,11 @@ impl BackendRegistry {
     }
 
     /// Execute a group on the routed backend, degrading down the
-    /// registration order on failure (PJRT issues fail soft to native).
+    /// registration order on failure. This is the *inline* (serial)
+    /// execution reference — the production path is the scheduler's
+    /// lane loop, which applies the identical degradation contract by
+    /// walking the same [`BackendRegistry::next_accepting`] chain; both
+    /// paths share that routine so they cannot drift.
     pub fn execute(
         &self,
         routed: usize,
@@ -245,31 +380,23 @@ impl BackendRegistry {
         powers: &mut [Option<Powers>],
     ) -> Result<(Vec<(Matrix, ExpmStats)>, &'static str), String> {
         assert!(!self.backends.is_empty(), "no backends registered");
-        let first = routed.min(self.backends.len() - 1);
-        let mut order = vec![first];
-        for j in first + 1..self.backends.len() {
-            if self.backends[j].plan_hint(shape) {
-                order.push(j);
-            }
-        }
-        let last = self.backends.len() - 1;
-        if *order.last().unwrap() != last {
-            order.push(last);
-        }
-        let mut err = String::new();
-        for &j in &order {
-            match self.backends[j].execute_group(shape, mats, tols, powers) {
-                Ok(v) => return Ok((v, self.backends[j].name())),
+        let mut idx = routed.min(self.backends.len() - 1);
+        loop {
+            match self.backends[idx].execute_group(shape, mats, tols, powers)
+            {
+                Ok(v) => return Ok((v, self.backends[idx].name())),
                 Err(e) => {
                     eprintln!(
                         "backend {} failed ({e}); degrading",
-                        self.backends[j].name()
+                        self.backends[idx].name()
                     );
-                    err = e;
+                    match self.next_accepting(idx, shape) {
+                        Some(next) => idx = next,
+                        None => return Err(e),
+                    }
                 }
             }
         }
-        Err(err)
     }
 }
 
@@ -379,6 +506,39 @@ mod tests {
             .unwrap();
         assert_eq!(name, "native");
         assert_eq!(res.len(), 1);
+    }
+
+    #[test]
+    fn next_accepting_walks_forward_to_native() {
+        struct Picky;
+        impl Backend for Picky {
+            fn name(&self) -> &'static str {
+                "picky"
+            }
+            fn plan_hint(&self, s: &GroupShape) -> bool {
+                s.n == 8
+            }
+            fn execute_group(
+                &self,
+                _shape: &GroupShape,
+                _mats: &[Matrix],
+                _tols: &[f64],
+                _powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                Err("unused".into())
+            }
+        }
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(Picky)); // 0
+        reg.register(Box::new(Picky)); // 1
+        reg.register(Box::new(NativeBackend)); // 2
+        // From 0 on an accepted shape: the sibling picky backend.
+        assert_eq!(reg.next_accepting(0, &sastre_shape(8, 4, 0)), Some(1));
+        // From 0 on a refused shape: falls through to native.
+        assert_eq!(reg.next_accepting(0, &sastre_shape(5, 4, 0)), Some(2));
+        assert_eq!(reg.next_accepting(1, &sastre_shape(5, 4, 0)), Some(2));
+        // Native itself has no successor.
+        assert_eq!(reg.next_accepting(2, &sastre_shape(8, 4, 0)), None);
     }
 
     #[test]

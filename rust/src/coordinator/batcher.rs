@@ -121,6 +121,18 @@ impl Batcher {
             .collect()
     }
 
+    /// When the oldest open group entered the batcher — the dispatcher
+    /// derives its receive deadline from this, so a partially filled
+    /// group can never wait past `max_wait` behind a steady stream of
+    /// non-matching jobs (each group's first item is its oldest: items
+    /// append in arrival order).
+    pub fn oldest_enqueued(&self) -> Option<Instant> {
+        self.groups
+            .values()
+            .filter_map(|v| v.first().map(|i| i.enqueued))
+            .min()
+    }
+
     /// Flush *everything* whose oldest item breached the deadline — the
     /// paper's workloads arrive in waves, so one stale group drains all
     /// (avoids order inversion between a request's sub-groups).
@@ -236,6 +248,20 @@ mod tests {
         let drained = b.take_expired(&policy);
         assert_eq!(drained.iter().map(Vec::len).sum::<usize>(), 2);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn oldest_enqueued_tracks_head_of_line() {
+        let mut b = Batcher::new();
+        assert!(b.oldest_enqueued().is_none());
+        let first = item(4, 2, 0);
+        let t0 = first.enqueued;
+        b.push(first);
+        b.push(item(8, 8, 1));
+        let oldest = b.oldest_enqueued().expect("non-empty batcher");
+        assert_eq!(oldest, t0, "head-of-line item drives the deadline");
+        b.drain_all();
+        assert!(b.oldest_enqueued().is_none());
     }
 
     #[test]

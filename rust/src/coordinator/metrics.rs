@@ -20,12 +20,43 @@ struct Inner {
     matrix_products: u64,
     rejected_frames: u64,
     remote_fallbacks: u64,
+    powers_hits: u64,
+    powers_misses: u64,
+    powers_evictions: u64,
     degree_hist: BTreeMap<usize, u64>,
     scaling_hist: BTreeMap<u32, u64>,
     backend_hist: BTreeMap<&'static str, u64>,
     shard_stats: BTreeMap<String, ShardStat>,
+    lane_stats: BTreeMap<String, LaneStat>,
     batch_fill: Vec<f64>,
     latencies_s: Vec<f64>,
+}
+
+/// Per-lane accounting for the scheduler: cumulative enqueue/start/
+/// finish counters, from which the two gauges the stats surface shows —
+/// queue depth and in-flight groups — are derived.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStat {
+    /// Groups ever enqueued on the lane (including fail-soft
+    /// re-submissions from other lanes).
+    pub enqueued: u64,
+    /// Groups a lane thread has pulled off the queue.
+    pub started: u64,
+    /// Groups whose execution attempt finished (delivered, degraded
+    /// onward, or failed).
+    pub finished: u64,
+}
+
+impl LaneStat {
+    /// Groups currently waiting in the lane's queue.
+    pub fn queue_depth(&self) -> u64 {
+        self.enqueued.saturating_sub(self.started)
+    }
+
+    /// Groups currently executing on the lane.
+    pub fn in_flight(&self) -> u64 {
+        self.started.saturating_sub(self.finished)
+    }
 }
 
 /// Per-shard accounting for the remote backend: how many batch groups a
@@ -72,6 +103,14 @@ pub struct Snapshot {
     /// Remote groups that degraded to a lower-priority backend because
     /// their shard was down or a round-trip failed.
     pub remote_fallbacks: u64,
+    /// Planning-time powers-cache hits (the matrix's W, W², … ladder was
+    /// already paid for by an earlier request).
+    pub powers_hits: u64,
+    /// Planning-time powers-cache misses (a fresh ladder was built and
+    /// cached).
+    pub powers_misses: u64,
+    /// Ladders evicted from the powers cache to respect its size bound.
+    pub powers_evictions: u64,
     /// Matrices per selected polynomial order m.
     pub degree_hist: BTreeMap<usize, u64>,
     /// Matrices per squaring count s.
@@ -81,6 +120,9 @@ pub struct Snapshot {
     /// Per-shard groups/errors/latency for the remote backend, keyed by
     /// shard address.
     pub shard_stats: BTreeMap<String, ShardStat>,
+    /// Per-lane queue depth / in-flight / throughput counters for the
+    /// scheduler, keyed by lane name ("native", "remote:host:port", …).
+    pub lane_stats: BTreeMap<String, LaneStat>,
     /// Mean group size as a fraction of `max_batch`.
     pub mean_batch_fill: f64,
     /// Mean group execution latency, seconds.
@@ -141,6 +183,43 @@ impl Metrics {
         self.inner.lock().unwrap().remote_fallbacks += 1;
     }
 
+    /// One planning-time powers-cache lookup: a hit reused a cached
+    /// ladder, a miss built (and cached) a fresh one.
+    pub fn record_powers_cache(&self, hit: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if hit {
+            g.powers_hits += 1;
+        } else {
+            g.powers_misses += 1;
+        }
+    }
+
+    /// `n` ladders evicted from the powers cache by an insertion.
+    pub fn record_powers_evictions(&self, n: u64) {
+        if n > 0 {
+            self.inner.lock().unwrap().powers_evictions += n;
+        }
+    }
+
+    /// One group enqueued on the named scheduler lane.
+    pub fn record_lane_enqueued(&self, lane: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.lane_stats.entry(lane.to_string()).or_default().enqueued += 1;
+    }
+
+    /// One group pulled off the named lane's queue for execution.
+    pub fn record_lane_started(&self, lane: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.lane_stats.entry(lane.to_string()).or_default().started += 1;
+    }
+
+    /// One execution attempt on the named lane finished (delivered,
+    /// degraded onward, or failed).
+    pub fn record_lane_finished(&self, lane: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.lane_stats.entry(lane.to_string()).or_default().finished += 1;
+    }
+
     /// One batch group executed successfully on shard `addr` with the
     /// given round-trip latency.
     pub fn record_shard_ok(&self, addr: &str, latency: Duration) {
@@ -184,10 +263,14 @@ impl Metrics {
             matrix_products: g.matrix_products,
             rejected_frames: g.rejected_frames,
             remote_fallbacks: g.remote_fallbacks,
+            powers_hits: g.powers_hits,
+            powers_misses: g.powers_misses,
+            powers_evictions: g.powers_evictions,
             degree_hist: g.degree_hist,
             scaling_hist: g.scaling_hist,
             backend_hist: g.backend_hist,
             shard_stats: g.shard_stats,
+            lane_stats: g.lane_stats,
             mean_batch_fill: mean(&g.batch_fill),
             mean_latency_s: mean(&g.latencies_s),
             p99_latency_s: p99,
@@ -230,6 +313,22 @@ impl Snapshot {
             "rejected_frames={} remote_fallbacks={}\n",
             self.rejected_frames, self.remote_fallbacks
         ));
+        s.push_str(&format!(
+            "powers_cache: hits={} misses={} evictions={}\n",
+            self.powers_hits, self.powers_misses, self.powers_evictions
+        ));
+        if !self.lane_stats.is_empty() {
+            s.push_str("lanes:");
+            for (name, st) in &self.lane_stats {
+                s.push_str(&format!(
+                    " {name}:depth={},inflight={},done={}",
+                    st.queue_depth(),
+                    st.in_flight(),
+                    st.finished
+                ));
+            }
+            s.push('\n');
+        }
         if !self.shard_stats.is_empty() {
             s.push_str("shards:");
             for (addr, st) in &self.shard_stats {
@@ -300,6 +399,33 @@ mod tests {
         assert!(out.contains("rejected_frames=2"));
         assert!(out.contains("remote_fallbacks=1"));
         assert!(out.contains("127.0.0.1:9000:groups=2"));
+    }
+
+    #[test]
+    fn lane_and_powers_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_lane_enqueued("native");
+        m.record_lane_enqueued("native");
+        m.record_lane_started("native");
+        m.record_lane_finished("native");
+        m.record_lane_enqueued("remote:1.2.3.4:9");
+        m.record_powers_cache(true);
+        m.record_powers_cache(false);
+        m.record_powers_cache(true);
+        m.record_powers_evictions(2);
+        m.record_powers_evictions(0);
+        let s = m.snapshot();
+        let native = &s.lane_stats["native"];
+        assert_eq!((native.enqueued, native.started, native.finished), (2, 1, 1));
+        assert_eq!(native.queue_depth(), 1);
+        assert_eq!(native.in_flight(), 0);
+        let remote = &s.lane_stats["remote:1.2.3.4:9"];
+        assert_eq!(remote.queue_depth(), 1);
+        assert_eq!((s.powers_hits, s.powers_misses, s.powers_evictions), (2, 1, 2));
+        let out = s.render();
+        assert!(out.contains("powers_cache: hits=2 misses=1 evictions=2"));
+        assert!(out.contains("native:depth=1,inflight=0,done=1"), "{out}");
+        assert!(out.contains("remote:1.2.3.4:9:depth=1"), "{out}");
     }
 
     #[test]

@@ -8,20 +8,28 @@
 //!    [`backend::Backend`] whose `plan_hint` accepts the shape,
 //! 3. dynamically batches matrices that share an execution key
 //!    (backend, method, n, m, s) ([`batcher`]),
-//! 4. dispatches groups through the [`BackendRegistry`] — the sharded
-//!    [`remote`] backend when a worker fleet is configured, the PJRT
-//!    artifact engine when registered, the native *batched* engine
-//!    (`expm::batch`) always, failing soft down the registration order
-//!    ([`backend`]), and
+//! 4. hands sealed groups to the [`scheduler`] — a pool of execution
+//!    lanes, one per backend instance (each remote worker shard gets its
+//!    own lane; local engines get one each), pulling in
+//!    priority-then-deadline order and failing soft down the
+//!    registration order ([`backend`]) — and
 //! 5. streams per-matrix results back through each job's [`Ticket`] as
 //!    its groups finish, while accounting
 //!    products/degrees/scalings/latencies ([`metrics`]).
 //!
-//! Threading: clients talk to the service over an mpsc channel; a single
-//! dispatcher thread owns the (non-Sync) PJRT executor and drives the
-//! batch loop; native groups fan out over the scoped thread pool.
-//! (tokio is not in the offline vendor set — std threads + channels carry
-//! the same architecture.)
+//! Threading: clients talk to the service over an mpsc channel; the
+//! dispatcher thread *only* plans, routes and batches — execution
+//! happens on the scheduler's lane threads, so a slow remote round-trip
+//! never stalls native groups, sibling shards, or the planning of newly
+//! arrived jobs. Native groups additionally fan out over the scoped
+//! thread pool inside their lane. (tokio is not in the offline vendor
+//! set — std threads + channels carry the same architecture.)
+//!
+//! Planning can consult a cross-request [`PowersCache`]
+//! ([`ServiceConfig::powers_cache`]): repeated matrices — flow sampling
+//! steps re-exponentiate the same block generators — reuse their
+//! W, W², … ladder, so the second request on a matrix skips the A²…Aᵏ
+//! products while producing bitwise-identical values.
 
 pub mod backend;
 pub mod batcher;
@@ -29,6 +37,7 @@ pub mod job;
 pub mod metrics;
 pub mod remote;
 pub mod request;
+pub mod scheduler;
 pub mod selector;
 pub mod server;
 
@@ -37,12 +46,14 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::expm::powers_cache::PowersCache;
 use crate::linalg::Matrix;
-use crate::runtime::Executor;
 use backend::{BackendRegistry, NativeBackend, PjrtBackend};
 use batcher::{BatchPolicy, Batcher, Item};
 use metrics::Metrics;
 use request::Collector;
+use scheduler::Scheduler;
+use selector::CacheOutcome;
 
 pub use job::{
     JobResponse, JobSpec, JobUpdate, MatrixSpec, ServiceClosed, Ticket,
@@ -62,6 +73,15 @@ pub struct ServiceConfig {
     /// [`remote::RemoteBackend`] ahead of every local backend (see
     /// `docs/architecture.md` for the deployment topology).
     pub remote: Option<RemoteConfig>,
+    /// Cross-request powers-cache capacity in ladders; 0 disables.
+    /// Disabled by default so per-request product counts stay exactly
+    /// reproducible (the library's accounting contract); the daemon and
+    /// worker CLIs enable it (`--powers-cache`). Values are bitwise
+    /// identical either way — a hit only lowers the products *charged*.
+    pub powers_cache: usize,
+    /// Per-lane bound on queued groups; a full lane queue blocks the
+    /// dispatcher (backpressure) instead of growing without bound.
+    pub lane_queue_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -70,6 +90,8 @@ impl Default for ServiceConfig {
             policy: BatchPolicy::default(),
             artifact_dir: Some(crate::runtime::default_artifact_dir()),
             remote: None,
+            powers_cache: 0,
+            lane_queue_cap: 256,
         }
     }
 }
@@ -166,8 +188,12 @@ impl Drop for ExpmService {
     }
 }
 
-/// The dispatch loop: receive with a deadline equal to the batch window,
-/// plan + enqueue, flush full groups eagerly and stale groups on timeout.
+/// The dispatch loop — plan, route, batch. Execution happens on the
+/// scheduler's lanes: the dispatcher seals full groups eagerly and stale
+/// groups as soon as their batch window closes (the receive deadline is
+/// derived from the *oldest open group*, and expiry is checked on every
+/// iteration, so a steady stream of non-matching jobs can never starve a
+/// partially filled group past `max_wait`).
 fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
     let mut registry = BackendRegistry::new();
     // Registration order is routing priority. A configured shard fleet
@@ -188,8 +214,8 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
         }
     }
     if let Some(dir) = &config.artifact_dir {
-        match Executor::new(dir) {
-            Ok(e) => registry.register(Box::new(PjrtBackend::new(e))),
+        match PjrtBackend::from_dir(dir.clone()) {
+            Ok(b) => registry.register(Box::new(b)),
             Err(err) => eprintln!(
                 "expm-service: PJRT backend unavailable ({err}); \
                  running native-only"
@@ -199,179 +225,126 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
     // The native engine registers last: it accepts every shape, so routing
     // and fail-soft degradation always terminate there.
     registry.register(Box::new(NativeBackend));
+    let registry = Arc::new(registry);
+    let scheduler = Scheduler::start(
+        registry.clone(),
+        config.policy,
+        metrics.clone(),
+        config.lane_queue_cap,
+    );
+    let cache = if config.powers_cache > 0 {
+        Some(PowersCache::new(config.powers_cache))
+    } else {
+        None
+    };
     let mut batcher = Batcher::new();
     loop {
-        let msg = if batcher.is_empty() {
-            match rx.recv() {
+        let msg = match batcher.oldest_enqueued() {
+            None => match rx.recv() {
                 Ok(m) => Some(m),
                 Err(_) => break,
-            }
-        } else {
-            match rx.recv_timeout(config.policy.max_wait) {
-                Ok(m) => Some(m),
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => break,
+            },
+            Some(oldest) => {
+                // Receive until the oldest open group's window closes —
+                // not a fresh `max_wait` per message, which under a
+                // steady stream would postpone expiry unboundedly.
+                let timeout = match oldest.checked_add(config.policy.max_wait)
+                {
+                    Some(deadline) => {
+                        deadline.saturating_duration_since(Instant::now())
+                    }
+                    None => config.policy.max_wait,
+                };
+                match rx.recv_timeout(timeout) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
             }
         };
         match msg {
-            Some(Msg::Shutdown) => {
-                flush(
-                    batcher.drain_all(),
-                    &registry,
-                    &metrics,
-                    &config.policy,
-                );
-                break;
-            }
+            Some(Msg::Shutdown) => break,
             Some(Msg::Job(envelope)) => {
                 metrics.record_request(envelope.spec.len());
                 if let Err(e) = envelope.spec.validate() {
                     metrics.record_error();
                     Collector::new(envelope.id, 0, envelope.tx).fail(e);
-                    continue;
-                }
-                let collector = Collector::new(
-                    envelope.id,
-                    envelope.spec.len(),
-                    envelope.tx,
-                );
-                // checked_add: an unrepresentable deadline (e.g. a
-                // Duration::MAX "no deadline" sentinel) degrades to no
-                // deadline instead of panicking the dispatcher.
-                let deadline = envelope
-                    .spec
-                    .get_deadline()
-                    .and_then(|d| envelope.submitted.checked_add(d));
-                let priority = envelope.spec.get_priority();
-                for (slot, spec) in
-                    envelope.spec.into_specs().into_iter().enumerate()
-                {
-                    let (plan, powers) = selector::plan_spec(
-                        &spec.matrix,
-                        spec.method,
-                        spec.tol,
+                } else {
+                    let collector = Collector::new(
+                        envelope.id,
+                        envelope.spec.len(),
+                        envelope.tx,
                     );
-                    let routed = registry.route(&plan.shape());
-                    batcher.push(Item {
-                        matrix: spec.matrix,
-                        plan,
-                        tol: spec.tol,
-                        powers,
-                        backend: routed,
-                        priority,
-                        deadline,
-                        collector: collector.clone(),
-                        slot,
-                        enqueued: Instant::now(),
-                    });
+                    // checked_add: an unrepresentable deadline (e.g. a
+                    // Duration::MAX "no deadline" sentinel) degrades to
+                    // no deadline instead of panicking the dispatcher.
+                    let deadline = envelope
+                        .spec
+                        .get_deadline()
+                        .and_then(|d| envelope.submitted.checked_add(d));
+                    let priority = envelope.spec.get_priority();
+                    for (slot, spec) in
+                        envelope.spec.into_specs().into_iter().enumerate()
+                    {
+                        let (plan, powers) = match &cache {
+                            Some(cache) => {
+                                let (plan, powers, outcome) =
+                                    selector::plan_spec_cached(
+                                        &spec.matrix,
+                                        spec.method,
+                                        spec.tol,
+                                        cache,
+                                    );
+                                match outcome {
+                                    CacheOutcome::Hit => {
+                                        metrics.record_powers_cache(true)
+                                    }
+                                    CacheOutcome::Miss(evicted) => {
+                                        metrics.record_powers_cache(false);
+                                        metrics
+                                            .record_powers_evictions(evicted);
+                                    }
+                                    CacheOutcome::Bypass => {}
+                                }
+                                (plan, powers)
+                            }
+                            None => selector::plan_spec(
+                                &spec.matrix,
+                                spec.method,
+                                spec.tol,
+                            ),
+                        };
+                        let routed = registry.route(&plan.shape());
+                        batcher.push(Item {
+                            matrix: spec.matrix,
+                            plan,
+                            tol: spec.tol,
+                            powers,
+                            backend: routed,
+                            priority,
+                            deadline,
+                            collector: collector.clone(),
+                            slot,
+                            enqueued: Instant::now(),
+                        });
+                    }
+                    scheduler
+                        .submit_wave(batcher.take_full(&config.policy));
                 }
-                flush(
-                    batcher.take_full(&config.policy),
-                    &registry,
-                    &metrics,
-                    &config.policy,
-                );
+                // Group age is checked on *every* loop iteration, not
+                // only on a receive timeout.
+                scheduler.submit_wave(batcher.take_expired(&config.policy));
             }
             None => {
                 // Batch window elapsed: drain stale groups.
-                flush(
-                    batcher.take_expired(&config.policy),
-                    &registry,
-                    &metrics,
-                    &config.policy,
-                );
+                scheduler.submit_wave(batcher.take_expired(&config.policy));
             }
         }
     }
-}
-
-fn flush(
-    mut groups: Vec<Vec<Item>>,
-    registry: &BackendRegistry,
-    metrics: &Metrics,
-    policy: &BatchPolicy,
-) {
-    // Higher-priority jobs' groups execute first within this wave.
-    groups.sort_by_key(|g| {
-        std::cmp::Reverse(g.iter().map(|i| i.priority).max().unwrap_or(0))
-    });
-    for mut group in groups {
-        // Jobs whose deadline passed before their group reached a backend
-        // fail as a whole; surviving items still execute.
-        let now = Instant::now();
-        group.retain(|item| match item.deadline {
-            Some(d) if now > d => {
-                // fail() transitions once per job, so the error metric
-                // counts failed jobs, not expired items.
-                if item
-                    .collector
-                    .fail("job deadline exceeded before execution".into())
-                {
-                    metrics.record_error();
-                }
-                false
-            }
-            _ => true,
-        });
-        if group.is_empty() {
-            continue;
-        }
-        let started = Instant::now();
-        let shape = group[0].plan.shape();
-        metrics.record_batch(group.len(), policy.max_batch);
-        // The items are owned and their matrices are not needed after
-        // execution, so move them out instead of cloning O(n^2) data on
-        // the dispatcher hot path (powers already move the same way).
-        let mut mats = Vec::with_capacity(group.len());
-        let mut tols = Vec::with_capacity(group.len());
-        let mut powers = Vec::with_capacity(group.len());
-        for item in group.iter_mut() {
-            mats.push(std::mem::replace(&mut item.matrix, Matrix::zeros(0, 0)));
-            tols.push(item.tol);
-            powers.push(item.powers.take());
-        }
-        match registry.execute(
-            group[0].backend,
-            &shape,
-            &mats,
-            &tols,
-            &mut powers,
-        ) {
-            Ok((results, backend_name)) => {
-                metrics.record_backend(backend_name);
-                for (item, (value, stats)) in group.iter().zip(results) {
-                    metrics.record_matrix(
-                        stats.m,
-                        stats.s,
-                        stats.matrix_products,
-                    );
-                    item.collector.fulfill(
-                        item.slot,
-                        MatrixResult {
-                            value,
-                            stats,
-                            method: shape.method,
-                            backend: backend_name,
-                        },
-                    );
-                }
-                metrics.record_latency(started.elapsed());
-            }
-            Err(e) => {
-                // Every backend (including native) refused — fail the
-                // affected jobs instead of dropping their tickets (one
-                // error count per job, not per item).
-                for item in &group {
-                    if item
-                        .collector
-                        .fail(format!("group execution failed: {e}"))
-                    {
-                        metrics.record_error();
-                    }
-                }
-            }
-        }
-    }
+    // Hand every open group to the lanes, then wait for all in-flight
+    // work (including fail-soft re-submissions) before joining them.
+    scheduler.submit_wave(batcher.drain_all());
+    scheduler.shutdown();
 }
 
 #[cfg(test)]
@@ -386,7 +359,7 @@ mod tests {
         ExpmService::start(ServiceConfig {
             policy: BatchPolicy::default(),
             artifact_dir: None,
-            remote: None,
+            ..Default::default()
         })
     }
 
@@ -521,6 +494,143 @@ mod tests {
             .push(randm(8, 1.0, 7));
         let err = svc.submit(job).unwrap().wait().unwrap_err();
         assert!(err.contains("deadline"), "{err}");
+    }
+
+    #[test]
+    fn deadline_expiring_in_queue_fails_once_survivors_execute() {
+        // A job whose deadline passes *while queued* (not at submission)
+        // fails exactly once with one error count, and the surviving
+        // items of the same batch group still execute. max_batch is
+        // never reached, so the group sits for the full window — well
+        // past the job's deadline.
+        let svc = ExpmService::start(ServiceConfig {
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: std::time::Duration::from_millis(250),
+            },
+            artifact_dir: None,
+            ..Default::default()
+        });
+        let a = randm(8, 1.0, 77);
+        let dead = JobSpec::new()
+            .deadline(std::time::Duration::from_millis(30))
+            .push(a.clone())
+            .push(a.clone());
+        let live = JobSpec::new().push(a.clone());
+        let dead_ticket = svc.submit(dead).unwrap();
+        let live_ticket = svc.submit(live).unwrap();
+        let err = dead_ticket.wait().unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        let resp = live_ticket.wait().unwrap();
+        assert_eq!(resp.results.len(), 1);
+        let want = expm(
+            &a,
+            &ExpmOptions { method: Method::Sastre, tol: 1e-8 },
+        );
+        assert_eq!(
+            resp.results[0].value, want.value,
+            "survivor executes bitwise-normally"
+        );
+        assert_eq!(
+            svc.metrics.snapshot().errors,
+            1,
+            "a two-matrix job expiring in one group fails exactly once"
+        );
+    }
+
+    #[test]
+    fn stale_group_flushes_under_nonmatching_stream() {
+        // Starvation pin: with a steady stream of non-matching jobs
+        // arriving faster than max_wait, a partially filled group must
+        // still flush at ~max_wait (the recv deadline derives from the
+        // oldest open group) instead of waiting for a gap in traffic.
+        use std::sync::atomic::AtomicBool;
+        let svc = Arc::new(ExpmService::start(ServiceConfig {
+            policy: BatchPolicy {
+                max_batch: 1000,
+                max_wait: std::time::Duration::from_millis(40),
+            },
+            artifact_dir: None,
+            ..Default::default()
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let streamer = {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut seed = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    seed += 1;
+                    let _ = svc.submit_batch(
+                        vec![randm(4, 0.5, 10_000 + seed)],
+                        1e-8,
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            })
+        };
+        let t0 = Instant::now();
+        let r = svc.compute(vec![randm(12, 1.0, 9)], 1e-8).unwrap();
+        let waited = t0.elapsed();
+        stop.store(true, Ordering::SeqCst);
+        streamer.join().unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(
+            waited < std::time::Duration::from_millis(1500),
+            "stale group starved for {waited:?} under a 40ms window"
+        );
+    }
+
+    #[test]
+    fn powers_cache_repeat_matrix_hits_and_saves_products() {
+        // The cache acceptance pin: submitting the same matrix twice
+        // yields a cache hit, bitwise-identical results, and a lower
+        // product count on the second run.
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            ..Default::default()
+        });
+        let a = randm(10, 2.0, 123);
+        let first = svc.compute(vec![a.clone()], 1e-8).unwrap();
+        let second = svc.compute(vec![a.clone()], 1e-8).unwrap();
+        assert_eq!(
+            first[0].value, second[0].value,
+            "cache hit must be bitwise identical"
+        );
+        assert_eq!(
+            (first[0].stats.m, first[0].stats.s),
+            (second[0].stats.m, second[0].stats.s),
+            "same plan either way"
+        );
+        assert!(
+            second[0].stats.matrix_products
+                < first[0].stats.matrix_products,
+            "repeat run must charge fewer products ({} vs {})",
+            second[0].stats.matrix_products,
+            first[0].stats.matrix_products
+        );
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.powers_hits, 1);
+        assert_eq!(snap.powers_misses, 1);
+        // An uncached service charges the full count both times — and
+        // the cached service's *first* run matches it exactly.
+        let plain = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            ..Default::default()
+        });
+        let p1 = plain.compute(vec![a.clone()], 1e-8).unwrap();
+        let p2 = plain.compute(vec![a.clone()], 1e-8).unwrap();
+        assert_eq!(
+            p1[0].stats.matrix_products,
+            first[0].stats.matrix_products
+        );
+        assert_eq!(
+            p2[0].stats.matrix_products,
+            p1[0].stats.matrix_products,
+            "no cache, no savings"
+        );
+        assert_eq!(p1[0].value, first[0].value);
     }
 
     #[test]

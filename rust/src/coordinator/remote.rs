@@ -50,13 +50,16 @@
 //! [`super::metrics::Metrics`] (`shards:` / `remote_fallbacks=` lines of
 //! the stats render).
 //!
-//! ## Current limitation
+//! ## Concurrency: one lane per shard
 //!
-//! Round-trips execute on the single dispatcher thread, one group at a
-//! time (the `Backend` trait is synchronous), so fleet throughput is one
-//! in-flight group and a slow shard delays groups bound elsewhere for up
-//! to [`RemoteConfig::io_timeout`]. Per-shard dispatch threads that
-//! overlap round-trips are the next scaling step (see ROADMAP).
+//! The backend reports one execution lane per shard
+//! ([`Backend::lanes`]/[`Backend::lane_of`]), so the scheduler gives
+//! every worker its own lane thread: round-trips against different
+//! shards overlap, and a slow shard stalls only its own queue — never
+//! sibling shards, native execution, or the dispatcher's planning loop
+//! (`coordinator::scheduler` pins the overlap in tests). All shared
+//! state here (pools, health) is mutex-guarded per shard, so concurrent
+//! lane threads never contend beyond their own shard.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -457,23 +460,50 @@ impl Backend for RemoteBackend {
             && self.shards[self.shard_of(shape)].usable_now()
     }
 
+    /// One lane per worker shard, so the scheduler overlaps round-trips
+    /// against different shards.
+    fn lanes(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The lane is the consistent shard assignment — the same hash that
+    /// routes the group, so a lane only queues groups its shard serves.
+    fn lane_of(&self, shape: &GroupShape) -> usize {
+        self.shard_of(shape)
+    }
+
+    fn lane_name(&self, lane: usize) -> String {
+        format!("remote:{}", self.shards[lane].addr)
+    }
+
     fn execute_group(
         &self,
         shape: &GroupShape,
         mats: &[Matrix],
         tols: &[f64],
-        _powers: &mut [Option<Powers>],
+        powers: &mut [Option<Powers>],
     ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
         if self.shards.is_empty() {
             return Err("no shards configured".into());
         }
+        self.execute_lane(self.shard_of(shape), shape, mats, tols, powers)
+    }
+
+    fn execute_lane(
+        &self,
+        lane: usize,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        _powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
         if shape.n > MAX_WIRE_ORDER {
             return Err(format!(
                 "order {} beyond wire limit {MAX_WIRE_ORDER}",
                 shape.n
             ));
         }
-        let shard = &self.shards[self.shard_of(shape)];
+        let shard = &self.shards[lane];
         // Re-checked here (not just in plan_hint): the shard may have
         // gone down between routing and execution.
         if !shard.usable_now() {

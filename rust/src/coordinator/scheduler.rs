@@ -1,0 +1,975 @@
+//! Pipelined multi-lane dispatch: the execution half of the coordinator.
+//!
+//! Before this module the dispatcher thread executed every batch group
+//! inline and serially, so one slow remote round-trip stalled native
+//! execution, sibling shards, and the planning of newly arrived jobs.
+//! The scheduler splits that responsibility: the dispatcher shrinks to
+//! plan → route → batch and hands *sealed* groups here; a pool of
+//! **execution lanes** — one lane (thread + bounded work queue) per
+//! backend instance, i.e. one per remote worker shard and one for each
+//! local engine — runs them concurrently.
+//!
+//! Ordering: lanes pull the highest-priority group first, tie-broken by
+//! the oldest head-of-line item and then by submission sequence, so
+//! equal-priority groups execute in a deterministic, age-respecting
+//! order (deadline-critical jobs are never reordered arbitrarily).
+//!
+//! Fail-soft: a group whose backend errors is re-submitted to the lane
+//! of the next accepting backend down the registration order (ultimately
+//! native, which accepts everything) — the same degradation contract the
+//! inline path had, now concurrency-safe: the group's matrices, powers
+//! and collectors travel with it, nothing re-plans and no job is lost.
+//! A backend that *panics* is contained the same way.
+//!
+//! Shutdown: `shutdown` blocks until every submitted group has resolved
+//! (delivered or failed) — including groups still bouncing through
+//! fail-soft re-submission — then parks and joins the lane threads.
+
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::expm::eval::Powers;
+use crate::linalg::Matrix;
+
+use super::backend::{BackendRegistry, GroupShape};
+use super::batcher::{BatchPolicy, Item};
+use super::metrics::Metrics;
+use super::request::{Collector, MatrixResult};
+
+/// Where one matrix's result goes: its job collector, slot, deadline.
+struct Dest {
+    collector: Arc<Collector>,
+    slot: usize,
+    deadline: Option<Instant>,
+}
+
+/// A batch group sealed for execution: the items' matrices, tolerances
+/// and selection powers extracted into parallel arrays, plus the routing
+/// and ordering metadata lanes schedule on. Sealed groups are what the
+/// dispatcher hands the scheduler and what fail-soft re-submission moves
+/// between lanes.
+pub struct SealedGroup {
+    shape: GroupShape,
+    backend: usize,
+    priority: i32,
+    enqueued: Instant,
+    seq: u64,
+    attempt: u32,
+    mats: Vec<Matrix>,
+    tols: Vec<f64>,
+    powers: Vec<Option<Powers>>,
+    dests: Vec<Dest>,
+}
+
+impl SealedGroup {
+    /// Seal one key-homogeneous batch group (as produced by the
+    /// batcher). Panics on an empty group.
+    pub fn seal(items: Vec<Item>) -> SealedGroup {
+        assert!(!items.is_empty(), "cannot seal an empty group");
+        let shape = items[0].plan.shape();
+        let backend = items[0].backend;
+        let priority = items.iter().map(|i| i.priority).max().unwrap_or(0);
+        let enqueued = items
+            .iter()
+            .map(|i| i.enqueued)
+            .min()
+            .expect("non-empty group");
+        let mut mats = Vec::with_capacity(items.len());
+        let mut tols = Vec::with_capacity(items.len());
+        let mut powers = Vec::with_capacity(items.len());
+        let mut dests = Vec::with_capacity(items.len());
+        for item in items {
+            mats.push(item.matrix);
+            tols.push(item.tol);
+            powers.push(item.powers);
+            dests.push(Dest {
+                collector: item.collector,
+                slot: item.slot,
+                deadline: item.deadline,
+            });
+        }
+        SealedGroup {
+            shape,
+            backend,
+            priority,
+            enqueued,
+            seq: 0,
+            attempt: 0,
+            mats,
+            tols,
+            powers,
+            dests,
+        }
+    }
+
+    /// Matrices in the group.
+    pub fn len(&self) -> usize {
+        self.mats.len()
+    }
+
+    /// Whether the group holds no matrices.
+    pub fn is_empty(&self) -> bool {
+        self.mats.is_empty()
+    }
+
+    /// The deterministic scheduling key: priority first (higher runs
+    /// earlier), then the oldest head-of-line item, then submission
+    /// order. Used both for wave submission order and for lane pulls.
+    fn order_key(&self) -> (Reverse<i32>, Instant, u64) {
+        (Reverse(self.priority), self.enqueued, self.seq)
+    }
+
+    /// Drop all but the (ascending) `keep` indices from every parallel
+    /// array — the deadline-expiry path.
+    fn retain_indices(&mut self, keep: &[usize]) {
+        let mats = std::mem::take(&mut self.mats);
+        let tols = std::mem::take(&mut self.tols);
+        let powers = std::mem::take(&mut self.powers);
+        let dests = std::mem::take(&mut self.dests);
+        for (i, (((mat, tol), pw), dest)) in mats
+            .into_iter()
+            .zip(tols)
+            .zip(powers)
+            .zip(dests)
+            .enumerate()
+        {
+            if keep.binary_search(&i).is_ok() {
+                self.mats.push(mat);
+                self.tols.push(tol);
+                self.powers.push(pw);
+                self.dests.push(dest);
+            }
+        }
+    }
+}
+
+/// One execution lane: a bounded queue its thread pulls from in
+/// priority-then-age order.
+struct Lane {
+    /// Metrics label (`"native"`, `"remote:host:port"`, ...).
+    name: String,
+    /// Registry index of the backend this lane executes on.
+    backend: usize,
+    /// Which of the backend's lanes this is (the shard index for the
+    /// remote backend).
+    backend_lane: usize,
+    queue: Mutex<Vec<SealedGroup>>,
+    cv: Condvar,
+}
+
+struct Shared {
+    registry: Arc<BackendRegistry>,
+    lanes: Vec<Lane>,
+    /// Registry index -> id of the backend's first lane (a backend's
+    /// lanes are contiguous).
+    lane_base: Vec<usize>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    queue_cap: usize,
+    stop: AtomicBool,
+    seq: AtomicU64,
+    pending: Mutex<usize>,
+    pending_cv: Condvar,
+}
+
+/// Handle to the lane pool. Dropping without [`Scheduler::shutdown`]
+/// detaches the lane threads (they live until the process exits); the
+/// service always shuts down explicitly.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Build the lane pool for `registry` and start one thread per lane:
+    /// each backend contributes [`super::backend::Backend::lanes`] lanes
+    /// (one per remote shard; local engines get a single lane because
+    /// their internal parallelism policy already owns the cores). Each
+    /// lane's queue admits at most `queue_cap` groups — a full queue
+    /// blocks the submitter, which is the dispatcher's backpressure.
+    pub fn start(
+        registry: Arc<BackendRegistry>,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+        queue_cap: usize,
+    ) -> Scheduler {
+        assert!(!registry.is_empty(), "no backends registered");
+        let mut lanes = Vec::new();
+        let mut lane_base = Vec::with_capacity(registry.len());
+        for idx in 0..registry.len() {
+            lane_base.push(lanes.len());
+            let backend = registry.get(idx);
+            for l in 0..backend.lanes().max(1) {
+                lanes.push(Lane {
+                    name: backend.lane_name(l),
+                    backend: idx,
+                    backend_lane: l,
+                    queue: Mutex::new(Vec::new()),
+                    cv: Condvar::new(),
+                });
+            }
+        }
+        let shared = Arc::new(Shared {
+            registry,
+            lanes,
+            lane_base,
+            policy,
+            metrics,
+            queue_cap: queue_cap.max(1),
+            stop: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            pending: Mutex::new(0),
+            pending_cv: Condvar::new(),
+        });
+        let handles = (0..shared.lanes.len())
+            .map(|lane_id| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!(
+                        "expm-lane-{}",
+                        shared.lanes[lane_id].name
+                    ))
+                    .spawn(move || lane_loop(lane_id, &shared))
+                    .expect("spawn lane thread")
+            })
+            .collect();
+        Scheduler { shared, handles }
+    }
+
+    /// Lane labels in lane order (metrics/debugging).
+    pub fn lane_names(&self) -> Vec<String> {
+        self.shared.lanes.iter().map(|l| l.name.clone()).collect()
+    }
+
+    /// Submit one sealed group to its routed backend's lane. Blocks only
+    /// when that lane's queue is full (backpressure).
+    pub fn submit(&self, group: SealedGroup) {
+        if group.is_empty() {
+            return;
+        }
+        *self.shared.pending.lock().unwrap() += 1;
+        self.shared.enqueue(group);
+    }
+
+    /// Seal and submit one flush wave in deterministic order: priority
+    /// first, then oldest head-of-line item — so equal-priority groups
+    /// enter the lanes (and therefore execute, per the identical lane
+    /// pull order) oldest-first instead of in hash-map order.
+    pub fn submit_wave(&self, groups: Vec<Vec<Item>>) {
+        let mut sealed: Vec<SealedGroup> = groups
+            .into_iter()
+            .filter(|g| !g.is_empty())
+            .map(SealedGroup::seal)
+            .collect();
+        sealed.sort_by_key(|group| group.order_key());
+        for group in sealed {
+            self.submit(group);
+        }
+    }
+
+    /// Block until every submitted group has resolved (delivered or
+    /// failed, including fail-soft re-submissions), then stop and join
+    /// the lane threads. Consumes the scheduler: nothing may submit
+    /// after shutdown.
+    pub fn shutdown(mut self) {
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            while *p > 0 {
+                p = self.shared.pending_cv.wait(p).unwrap();
+            }
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for lane in &self.shared.lanes {
+            lane.cv.notify_all();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Shared {
+    /// Queue a group on the lane of its (current) backend. Also the
+    /// fail-soft path: re-submissions keep their original `enqueued`
+    /// age, so a degraded group does not lose its place behind younger
+    /// work on the fallback lane.
+    fn enqueue(&self, mut group: SealedGroup) {
+        group.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let backend = group.backend.min(self.lane_base.len() - 1);
+        group.backend = backend;
+        let b = self.registry.get(backend);
+        let lane_count = b.lanes().max(1);
+        let which = if lane_count > 1 {
+            b.lane_of(&group.shape).min(lane_count - 1)
+        } else {
+            0
+        };
+        let lane = &self.lanes[self.lane_base[backend] + which];
+        let mut q = lane.queue.lock().unwrap();
+        while q.len() >= self.queue_cap && !self.stop.load(Ordering::SeqCst)
+        {
+            q = lane.cv.wait(q).unwrap();
+        }
+        self.metrics.record_lane_enqueued(&lane.name);
+        q.push(group);
+        lane.cv.notify_all();
+    }
+
+    /// One group fully resolved (all results delivered or the jobs
+    /// failed) — wake `shutdown` when the last one lands.
+    fn resolve(&self) {
+        let mut p = self.pending.lock().unwrap();
+        *p = p.saturating_sub(1);
+        if *p == 0 {
+            self.pending_cv.notify_all();
+        }
+    }
+}
+
+/// Highest priority first, then oldest head-of-line item, then
+/// submission order — `min_by_key` over the same key `submit_wave`
+/// sorts by.
+fn best_index(queue: &[SealedGroup]) -> Option<usize> {
+    queue
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, g)| g.order_key())
+        .map(|(i, _)| i)
+}
+
+fn lane_loop(lane_id: usize, shared: &Shared) {
+    loop {
+        let group = {
+            let lane = &shared.lanes[lane_id];
+            let mut q = lane.queue.lock().unwrap();
+            loop {
+                if let Some(i) = best_index(&q) {
+                    let group = q.remove(i);
+                    // A submitter may be blocked on a full queue.
+                    lane.cv.notify_all();
+                    break group;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = lane.cv.wait(q).unwrap();
+            }
+        };
+        execute_group(lane_id, group, shared);
+    }
+}
+
+/// Execute one group on this lane's backend; deliver, or degrade to the
+/// next accepting backend's lane, or fail the affected jobs when no
+/// backend is left.
+fn execute_group(lane_id: usize, mut group: SealedGroup, shared: &Shared) {
+    let lane = &shared.lanes[lane_id];
+    assert_eq!(
+        lane.backend, group.backend,
+        "a lane may only execute groups routed to its backend"
+    );
+    shared.metrics.record_lane_started(&lane.name);
+    // Jobs whose deadline passed before their group reached a backend
+    // fail as a whole; surviving items still execute. fail() transitions
+    // once per job, so the error metric counts failed jobs, not items.
+    let now = Instant::now();
+    let mut keep = Vec::with_capacity(group.dests.len());
+    for (i, dest) in group.dests.iter().enumerate() {
+        match dest.deadline {
+            Some(d) if now > d => {
+                if dest
+                    .collector
+                    .fail("job deadline exceeded before execution".into())
+                {
+                    shared.metrics.record_error();
+                }
+            }
+            _ => keep.push(i),
+        }
+    }
+    if keep.len() != group.dests.len() {
+        group.retain_indices(&keep);
+    }
+    if group.is_empty() {
+        shared.metrics.record_lane_finished(&lane.name);
+        shared.resolve();
+        return;
+    }
+    if group.attempt == 0 {
+        // Batch accounting is per flushed group, not per fail-soft
+        // attempt (the inline path counted the same way).
+        shared
+            .metrics
+            .record_batch(group.len(), shared.policy.max_batch);
+    }
+    let started = Instant::now();
+    let backend = shared.registry.get(group.backend);
+    // A panicking backend is contained like an Err: the group degrades
+    // instead of wedging the lane (and `shutdown`) forever.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || {
+            backend.execute_lane(
+                lane.backend_lane,
+                &group.shape,
+                &group.mats,
+                &group.tols,
+                &mut group.powers,
+            )
+        },
+    ))
+    .unwrap_or_else(|_| Err("backend panicked".into()));
+    shared.metrics.record_lane_finished(&lane.name);
+    match outcome {
+        Ok(results) => {
+            let name = backend.name();
+            shared.metrics.record_backend(name);
+            for (dest, (value, stats)) in group.dests.iter().zip(results) {
+                shared.metrics.record_matrix(
+                    stats.m,
+                    stats.s,
+                    stats.matrix_products,
+                );
+                dest.collector.fulfill(
+                    dest.slot,
+                    MatrixResult {
+                        value,
+                        stats,
+                        method: group.shape.method,
+                        backend: name,
+                    },
+                );
+            }
+            shared.metrics.record_latency(started.elapsed());
+            shared.resolve();
+        }
+        Err(e) => {
+            match shared
+                .registry
+                .next_accepting(group.backend, &group.shape)
+            {
+                Some(next) => {
+                    eprintln!(
+                        "backend {} failed ({e}); re-submitting group to {}",
+                        backend.name(),
+                        shared.registry.name(next)
+                    );
+                    group.backend = next;
+                    group.attempt += 1;
+                    shared.enqueue(group);
+                }
+                None => {
+                    // Every backend (including native) refused — fail
+                    // the affected jobs instead of dropping tickets.
+                    for dest in &group.dests {
+                        if dest
+                            .collector
+                            .fail(format!("group execution failed: {e}"))
+                        {
+                            shared.metrics.record_error();
+                        }
+                    }
+                    shared.resolve();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, NativeBackend};
+    use crate::coordinator::selector::Plan;
+    use crate::coordinator::JobUpdate;
+    use crate::expm::{ExpmStats, Method};
+    use crate::linalg::norm1;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Duration;
+
+    fn randm(n: usize, target: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let nn = norm1(&a);
+        a.scaled(target / nn)
+    }
+
+    /// An injected-latency "remote shard": accepts only order SLOW_N and
+    /// sleeps before answering, like a worker at the far end of a slow
+    /// round-trip.
+    struct SlowShard {
+        delay: Duration,
+    }
+
+    const SLOW_N: usize = 6;
+
+    impl Backend for SlowShard {
+        fn name(&self) -> &'static str {
+            "slowshard"
+        }
+        fn plan_hint(&self, shape: &GroupShape) -> bool {
+            shape.n == SLOW_N
+        }
+        fn lane_name(&self, _lane: usize) -> String {
+            "remote:slowshard".into()
+        }
+        fn execute_group(
+            &self,
+            shape: &GroupShape,
+            mats: &[Matrix],
+            _tols: &[f64],
+            _powers: &mut [Option<Powers>],
+        ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+            std::thread::sleep(self.delay);
+            Ok(mats
+                .iter()
+                .map(|_| {
+                    (
+                        Matrix::identity(shape.n),
+                        ExpmStats { m: shape.m, s: shape.s, matrix_products: 0 },
+                    )
+                })
+                .collect())
+        }
+    }
+
+    /// Group of `count` order-`n` matrices with its own collector; the
+    /// receiver sees the job updates.
+    fn group_for(
+        registry: &BackendRegistry,
+        n: usize,
+        count: usize,
+        seed: u64,
+        priority: i32,
+        deadline: Option<Instant>,
+    ) -> (SealedGroup, Receiver<JobUpdate>) {
+        let (tx, rx) = channel();
+        let collector = Collector::new(seed, count, tx);
+        let mats: Vec<Matrix> =
+            (0..count).map(|i| randm(n, 1.0, seed * 100 + i as u64)).collect();
+        let items: Vec<Item> = mats
+            .into_iter()
+            .enumerate()
+            .map(|(slot, matrix)| {
+                let plan = Plan { n, method: Method::Sastre, m: 8, s: 1 };
+                Item {
+                    matrix,
+                    plan,
+                    tol: 1e-8,
+                    powers: None,
+                    backend: registry.route(&plan.shape()),
+                    priority,
+                    deadline,
+                    collector: collector.clone(),
+                    slot,
+                    enqueued: Instant::now(),
+                }
+            })
+            .collect();
+        (SealedGroup::seal(items), rx)
+    }
+
+    /// Drain a ticket receiver until its terminal update; `Ok` carries
+    /// the completion instant.
+    fn wait_done(rx: &Receiver<JobUpdate>) -> Result<Instant, String> {
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(JobUpdate::Done { .. }) => return Ok(Instant::now()),
+                Ok(JobUpdate::Error { message }) => return Err(message),
+                Ok(JobUpdate::Result { .. }) => continue,
+                Err(e) => return Err(format!("ticket stalled: {e}")),
+            }
+        }
+    }
+
+    fn slow_native_registry(delay: Duration) -> Arc<BackendRegistry> {
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(SlowShard { delay }));
+        reg.register(Box::new(NativeBackend));
+        Arc::new(reg)
+    }
+
+    #[test]
+    fn overlap_native_completes_while_remote_in_flight() {
+        // The acceptance pin: with one slow (injected-latency) remote
+        // shard lane and a native lane, native groups complete while the
+        // remote group is still in flight, and total wall time for the
+        // mixed plan is strictly below serial execution of the same plan.
+        let delay = Duration::from_millis(500);
+        let registry = slow_native_registry(delay);
+        // Measure the serial plan first: the slow group then the native
+        // groups, one after another on one thread (the pre-scheduler
+        // dispatch model).
+        let native_groups = 6usize;
+        let serial_started = Instant::now();
+        {
+            let (slow, rx) = group_for(&registry, SLOW_N, 2, 1, 0, None);
+            let mut powers: Vec<Option<Powers>> =
+                slow.mats.iter().map(|_| None).collect();
+            registry
+                .get(slow.backend)
+                .execute_group(&slow.shape, &slow.mats, &slow.tols, &mut powers)
+                .unwrap();
+            drop(rx);
+            for g in 0..native_groups {
+                let (nat, rx) =
+                    group_for(&registry, 40, 6, 10 + g as u64, 0, None);
+                let mut powers: Vec<Option<Powers>> =
+                    nat.mats.iter().map(|_| None).collect();
+                registry
+                    .get(nat.backend)
+                    .execute_group(&nat.shape, &nat.mats, &nat.tols, &mut powers)
+                    .unwrap();
+                drop(rx);
+            }
+        }
+        let serial = serial_started.elapsed();
+        assert!(serial >= delay, "serial plan includes the slow round-trip");
+
+        // Now the same plan through the scheduler.
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        let wall_started = Instant::now();
+        let (slow, slow_rx) = group_for(&registry, SLOW_N, 2, 1, 0, None);
+        assert_eq!(slow.backend, 0, "order {SLOW_N} routes to the shard");
+        scheduler.submit(slow);
+        let native_rxs: Vec<Receiver<JobUpdate>> = (0..native_groups)
+            .map(|g| {
+                let (nat, rx) =
+                    group_for(&registry, 40, 6, 10 + g as u64, 0, None);
+                assert_eq!(nat.backend, 1, "order 40 routes native");
+                scheduler.submit(nat);
+                rx
+            })
+            .collect();
+        // Every native group completes while the remote group is still
+        // in flight...
+        for rx in &native_rxs {
+            wait_done(rx).expect("native group completes");
+        }
+        let native_done = wall_started.elapsed();
+        assert!(
+            native_done < delay,
+            "native groups must finish while the slow round-trip is in \
+             flight ({native_done:?} vs {delay:?})"
+        );
+        assert!(
+            slow_rx.try_recv().is_err(),
+            "slow group must still be in flight when native work is done"
+        );
+        wait_done(&slow_rx).expect("slow group completes");
+        let wall = wall_started.elapsed();
+        scheduler.shutdown();
+        // ...and the pipelined wall time beats the serial plan.
+        assert!(
+            wall < serial,
+            "pipelined wall {wall:?} must be strictly below serial {serial:?}"
+        );
+        let snap = metrics.snapshot();
+        assert_eq!(snap.backend_hist[&"native"], native_groups as u64);
+        assert_eq!(snap.backend_hist[&"slowshard"], 1);
+        let native_lane = &snap.lane_stats["native"];
+        assert_eq!(native_lane.finished, native_groups as u64);
+        assert_eq!(native_lane.queue_depth(), 0);
+        assert_eq!(native_lane.in_flight(), 0);
+        assert_eq!(snap.lane_stats["remote:slowshard"].finished, 1);
+    }
+
+    #[test]
+    fn fail_soft_resubmits_to_next_backend_lane() {
+        struct Flaky;
+        impl Backend for Flaky {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn plan_hint(&self, _s: &GroupShape) -> bool {
+                true
+            }
+            fn execute_group(
+                &self,
+                _shape: &GroupShape,
+                _mats: &[Matrix],
+                _tols: &[f64],
+                _powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                Err("injected".into())
+            }
+        }
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(Flaky));
+        reg.register(Box::new(NativeBackend));
+        let registry = Arc::new(reg);
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        let (group, rx) = group_for(&registry, 8, 3, 5, 0, None);
+        assert_eq!(group.backend, 0, "flaky accepts, so it routes there");
+        scheduler.submit(group);
+        wait_done(&rx).expect("group must degrade to native, not fail");
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.errors, 0, "fail-soft is not a job error");
+        assert_eq!(snap.backend_hist[&"native"], 1);
+        assert!(!snap.backend_hist.contains_key("flaky"));
+        assert_eq!(
+            snap.batches, 1,
+            "one flushed group, regardless of fail-soft attempts"
+        );
+    }
+
+    #[test]
+    fn panicking_backend_degrades_instead_of_wedging() {
+        struct Bomb;
+        impl Backend for Bomb {
+            fn name(&self) -> &'static str {
+                "bomb"
+            }
+            fn plan_hint(&self, _s: &GroupShape) -> bool {
+                true
+            }
+            fn execute_group(
+                &self,
+                _shape: &GroupShape,
+                _mats: &[Matrix],
+                _tols: &[f64],
+                _powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                panic!("injected panic");
+            }
+        }
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(Bomb));
+        reg.register(Box::new(NativeBackend));
+        let registry = Arc::new(reg);
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        let (group, rx) = group_for(&registry, 7, 2, 9, 0, None);
+        scheduler.submit(group);
+        wait_done(&rx).expect("panic must degrade, not wedge the lane");
+        scheduler.shutdown();
+        assert_eq!(metrics.snapshot().errors, 0);
+    }
+
+    #[test]
+    fn expired_jobs_fail_once_survivors_execute() {
+        let registry = Arc::new({
+            let mut reg = BackendRegistry::new();
+            reg.register(Box::new(NativeBackend));
+            reg
+        });
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        // One group mixing an already-expired two-matrix job with a
+        // deadline-free one: build items by hand so both jobs share the
+        // group.
+        let (dead_tx, dead_rx) = channel();
+        let dead_collector = Collector::new(1, 2, dead_tx);
+        let (live_tx, live_rx) = channel();
+        let live_collector = Collector::new(2, 1, live_tx);
+        let plan = Plan { n: 8, method: Method::Sastre, m: 8, s: 1 };
+        let expired = Instant::now() - Duration::from_millis(5);
+        let mut items = Vec::new();
+        for slot in 0..2 {
+            items.push(Item {
+                matrix: randm(8, 1.0, 40 + slot as u64),
+                plan,
+                tol: 1e-8,
+                powers: None,
+                backend: 0,
+                priority: 0,
+                deadline: Some(expired),
+                collector: dead_collector.clone(),
+                slot,
+                enqueued: Instant::now(),
+            });
+        }
+        items.push(Item {
+            matrix: randm(8, 1.0, 50),
+            plan,
+            tol: 1e-8,
+            powers: None,
+            backend: 0,
+            priority: 0,
+            deadline: None,
+            collector: live_collector.clone(),
+            slot: 0,
+            enqueued: Instant::now(),
+        });
+        scheduler.submit(SealedGroup::seal(items));
+        let err = wait_done(&dead_rx).expect_err("expired job must fail");
+        assert!(err.contains("deadline"), "{err}");
+        wait_done(&live_rx).expect("survivor in the same group executes");
+        scheduler.shutdown();
+        assert_eq!(
+            metrics.snapshot().errors,
+            1,
+            "a job expiring across several items fails exactly once"
+        );
+    }
+
+    #[test]
+    fn pull_order_is_priority_then_age_then_seq() {
+        let registry = Arc::new({
+            let mut reg = BackendRegistry::new();
+            reg.register(Box::new(NativeBackend));
+            reg
+        });
+        let mk = |priority: i32, enqueued: Instant, seq: u64| {
+            let (mut g, rx) = group_for(&registry, 4, 1, 70, priority, None);
+            g.enqueued = enqueued;
+            g.seq = seq;
+            std::mem::forget(rx);
+            g
+        };
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(1);
+        let queue = vec![
+            mk(0, t0, 3), // oldest of the low-priority groups
+            mk(0, t1, 1),
+            mk(5, t1, 2), // highest priority wins outright
+        ];
+        assert_eq!(best_index(&queue), Some(2));
+        let queue = vec![mk(0, t1, 0), mk(0, t0, 1)];
+        assert_eq!(
+            best_index(&queue),
+            Some(1),
+            "equal priority falls back to the oldest head-of-line item"
+        );
+        let queue = vec![mk(1, t0, 7), mk(1, t0, 4)];
+        assert_eq!(
+            best_index(&queue),
+            Some(1),
+            "full ties resolve by submission sequence"
+        );
+        assert_eq!(best_index(&[]), None);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_groups() {
+        let registry = Arc::new({
+            let mut reg = BackendRegistry::new();
+            reg.register(Box::new(NativeBackend));
+            reg
+        });
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        let rxs: Vec<Receiver<JobUpdate>> = (0..8u64)
+            .map(|g| {
+                let (group, rx) = group_for(&registry, 8, 2, 100 + g, 0, None);
+                scheduler.submit(group);
+                rx
+            })
+            .collect();
+        // Shut down immediately: every group must still resolve.
+        scheduler.shutdown();
+        for rx in &rxs {
+            assert!(
+                matches!(rx.try_recv(), Ok(_)),
+                "shutdown must have drained every group"
+            );
+        }
+        assert_eq!(metrics.snapshot().errors, 0);
+    }
+
+    #[test]
+    fn remote_style_backend_gets_one_lane_per_instance() {
+        struct TwoLanes;
+        impl Backend for TwoLanes {
+            fn name(&self) -> &'static str {
+                "twolanes"
+            }
+            fn plan_hint(&self, _s: &GroupShape) -> bool {
+                true
+            }
+            fn lanes(&self) -> usize {
+                2
+            }
+            fn lane_of(&self, shape: &GroupShape) -> usize {
+                shape.n % 2
+            }
+            fn lane_name(&self, lane: usize) -> String {
+                format!("twolanes:{lane}")
+            }
+            fn execute_group(
+                &self,
+                shape: &GroupShape,
+                mats: &[Matrix],
+                _tols: &[f64],
+                _powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                Ok(mats
+                    .iter()
+                    .map(|_| {
+                        (Matrix::identity(shape.n), ExpmStats::default())
+                    })
+                    .collect())
+            }
+            fn execute_lane(
+                &self,
+                lane: usize,
+                shape: &GroupShape,
+                mats: &[Matrix],
+                tols: &[f64],
+                powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                assert_eq!(
+                    lane,
+                    self.lane_of(shape),
+                    "a lane must only execute its own groups"
+                );
+                self.execute_group(shape, mats, tols, powers)
+            }
+        }
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(TwoLanes));
+        reg.register(Box::new(NativeBackend));
+        let registry = Arc::new(reg);
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        assert_eq!(
+            scheduler.lane_names(),
+            vec!["twolanes:0", "twolanes:1", "native"]
+        );
+        let (even, even_rx) = group_for(&registry, 4, 1, 200, 0, None);
+        let (odd, odd_rx) = group_for(&registry, 5, 1, 201, 0, None);
+        scheduler.submit(even);
+        scheduler.submit(odd);
+        wait_done(&even_rx).unwrap();
+        wait_done(&odd_rx).unwrap();
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.lane_stats["twolanes:0"].finished, 1);
+        assert_eq!(snap.lane_stats["twolanes:1"].finished, 1);
+    }
+}

@@ -11,7 +11,8 @@
 //! `(method, 0, 0)` and group only by `(backend, n, method)`.
 
 use crate::expm::eval::Powers;
-use crate::expm::selection::select_dynamic;
+use crate::expm::powers_cache::PowersCache;
+use crate::expm::selection::{select_dynamic, select_dynamic_from};
 use crate::expm::Method;
 use crate::linalg::Matrix;
 
@@ -68,6 +69,71 @@ pub fn plan_spec(
             )
         }
         _ => (Plan { n: w.order(), method, m: 0, s: 0 }, None),
+    }
+}
+
+/// What the powers cache did for one planned matrix (for metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// A cached ladder was reused (the A^2.. products were already paid).
+    Hit,
+    /// No ladder was cached; a fresh one was built and stored, evicting
+    /// the given number of older entries.
+    Miss(u64),
+    /// The method plans at execution time (Baseline/Padé) or the matrix
+    /// was zero — the cache does not apply.
+    Bypass,
+}
+
+/// [`plan_spec`] consulting the cross-request [`PowersCache`]: a repeat
+/// matrix reuses its cached W, W², … ladder, so selection re-reads the
+/// powers for free and the later evaluation skips rebuilding them. The
+/// selection outcome and the computed exponential are bitwise identical
+/// to an uncached plan (cached entries are exactly what fresh `get`s
+/// would compute); only the products charged to this request drop.
+pub fn plan_spec_cached(
+    w: &Matrix,
+    method: Method,
+    tol: f64,
+    cache: &PowersCache,
+) -> (Plan, Option<Powers>, CacheOutcome) {
+    match method {
+        Method::Sastre | Method::PatersonStockmeyer => {
+            if let Some(mut powers) = cache.lookup(w) {
+                let depth_before = powers.depth();
+                let sel = select_dynamic_from(&mut powers, method, tol);
+                // Selection may have extended the ladder (a tighter tol
+                // walks further); keep the deeper version cached. In the
+                // steady state nothing deepens, so the hit path skips
+                // the re-hash/re-lock of an insert entirely (lookup
+                // already refreshed the LRU recency).
+                if powers.depth() > depth_before {
+                    cache.insert(&powers);
+                }
+                return (
+                    Plan { n: w.order(), method, m: sel.m, s: sel.s },
+                    Some(powers),
+                    CacheOutcome::Hit,
+                );
+            }
+            let (sel, powers) = select_dynamic(w, method, tol);
+            let outcome = if sel.m == 0 {
+                // Zero matrix: nothing worth caching (e^0 = I is free).
+                CacheOutcome::Bypass
+            } else {
+                CacheOutcome::Miss(cache.insert(&powers))
+            };
+            (
+                Plan { n: w.order(), method, m: sel.m, s: sel.s },
+                Some(powers),
+                outcome,
+            )
+        }
+        _ => (
+            Plan { n: w.order(), method, m: 0, s: 0 },
+            None,
+            CacheOutcome::Bypass,
+        ),
     }
 }
 
@@ -129,6 +195,46 @@ mod tests {
             assert!([0usize, 1, 2, 4, 8, 15].contains(&p.m), "{p:?}");
             assert!(p.s <= 20);
         }
+    }
+
+    #[test]
+    fn cached_plan_is_identical_to_fresh_plan() {
+        let mut rng = Rng::new(77);
+        let a = {
+            let m = Matrix::from_fn(10, 10, |_, _| rng.normal());
+            let nn = norm1(&m);
+            m.scaled(2.0 / nn)
+        };
+        let cache = PowersCache::new(16);
+        let (fresh, fresh_powers) = plan_spec(&a, Method::Sastre, 1e-8);
+        let (cold, _, outcome) =
+            plan_spec_cached(&a, Method::Sastre, 1e-8, &cache);
+        assert!(matches!(outcome, CacheOutcome::Miss(0)), "{outcome:?}");
+        assert_eq!(cold, fresh, "cold cached plan must equal fresh");
+        let (warm, warm_powers, outcome) =
+            plan_spec_cached(&a, Method::Sastre, 1e-8, &cache);
+        assert_eq!(outcome, CacheOutcome::Hit);
+        assert_eq!(warm, fresh, "warm plan must equal fresh");
+        // The warm ladder is bitwise the fresh ladder with zero products.
+        let (mut wp, mut fp) =
+            (warm_powers.unwrap(), fresh_powers.unwrap());
+        assert_eq!(wp.products, 0);
+        for k in 1..=fp.depth() {
+            assert_eq!(wp.get(k), fp.get(k), "ladder entry {k}");
+        }
+        // Baseline bypasses the cache entirely.
+        let (_, _, outcome) =
+            plan_spec_cached(&a, Method::Baseline, 1e-8, &cache);
+        assert_eq!(outcome, CacheOutcome::Bypass);
+        // Zero matrices bypass too (nothing worth caching).
+        let (p, _, outcome) = plan_spec_cached(
+            &Matrix::zeros(4, 4),
+            Method::Sastre,
+            1e-8,
+            &cache,
+        );
+        assert_eq!((p.m, p.s), (0, 0));
+        assert_eq!(outcome, CacheOutcome::Bypass);
     }
 
     #[test]

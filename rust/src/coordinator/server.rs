@@ -424,6 +424,40 @@ fn handle_line(
                         })
                         .collect(),
                 );
+                // Per-lane scheduler gauges: name -> {queue_depth,
+                // in_flight, executed}.
+                let lanes = Json::Obj(
+                    snap.lane_stats
+                        .iter()
+                        .map(|(name, st)| {
+                            (
+                                name.clone(),
+                                obj(vec![
+                                    (
+                                        "queue_depth",
+                                        Json::Num(st.queue_depth() as f64),
+                                    ),
+                                    (
+                                        "in_flight",
+                                        Json::Num(st.in_flight() as f64),
+                                    ),
+                                    (
+                                        "executed",
+                                        Json::Num(st.finished as f64),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                );
+                let powers_cache = obj(vec![
+                    ("hits", Json::Num(snap.powers_hits as f64)),
+                    ("misses", Json::Num(snap.powers_misses as f64)),
+                    (
+                        "evictions",
+                        Json::Num(snap.powers_evictions as f64),
+                    ),
+                ]);
                 json::to_string(&obj(vec![
                     ("id", Json::Num(id)),
                     ("ok", Json::Bool(true)),
@@ -440,6 +474,8 @@ fn handle_line(
                         Json::Num(snap.remote_fallbacks as f64),
                     ),
                     ("shards", shards),
+                    ("lanes", lanes),
+                    ("powers_cache", powers_cache),
                 ]))
             }
             "shutdown" => {
@@ -799,10 +835,13 @@ mod tests {
             )
             .unwrap();
         assert!(reply.contains("\"ok\":false"), "{reply}");
-        // Stats works.
+        // Stats works and surfaces the scheduler and cache sections.
         let reply = client.roundtrip(r#"{"id": 3, "cmd": "stats"}"#).unwrap();
         assert!(reply.contains("\"ok\":true"));
         assert!(reply.contains("\"requests\""));
+        assert!(reply.contains("\"lanes\""), "{reply}");
+        assert!(reply.contains("\"powers_cache\""), "{reply}");
+        assert!(reply.contains("\"hits\""), "{reply}");
     }
 
     #[test]

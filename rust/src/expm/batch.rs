@@ -35,6 +35,7 @@ use std::sync::Mutex;
 
 use super::coeffs::{self, C15, C8};
 use super::eval::Powers;
+use super::powers_cache::PowersCache;
 use super::selection::{self, Selection};
 use super::{ExpmOptions, ExpmResult, ExpmStats, Method};
 use crate::linalg::{matmul_into, Matrix, SMALL_N};
@@ -377,13 +378,32 @@ enum Planned {
 /// is bitwise identical to the historical `expm_batch` path —
 /// `tests/prop_batch.rs` pins that contract.
 pub fn expm_multi(jobs: &[(&Matrix, ExpmOptions)]) -> Vec<ExpmResult> {
+    expm_multi_cached(jobs, None)
+}
+
+/// [`expm_multi`] with an optional cross-request [`PowersCache`]: the
+/// planning sweep consults the cache before building a fresh ladder, so a
+/// matrix seen before (flow sampling recomputes e^{A_k} for the same
+/// block generators every step) skips recomputing W^2..W^k. Values are
+/// bitwise identical to the uncached path — cached ladder entries are
+/// exactly what a fresh `Powers::get` computes — but the reported
+/// `matrix_products` charge only the products the run actually spends,
+/// so repeat matrices report measurably lower counts. Pass `None` to
+/// keep the historical products accounting exactly.
+pub fn expm_multi_cached(
+    jobs: &[(&Matrix, ExpmOptions)],
+    cache: Option<&PowersCache>,
+) -> Vec<ExpmResult> {
     for (w, _) in jobs {
         assert!(w.is_square(), "expm_multi needs square matrices");
     }
     match jobs.len() {
         0 => return Vec::new(),
-        // Single job: the serial pipeline, no engine overhead.
-        1 => return vec![super::expm_serial(jobs[0].0, &jobs[0].1)],
+        // Single job: the serial pipeline, no engine overhead (unless a
+        // cache is in play, which only the batched planner consults).
+        1 if cache.is_none() => {
+            return vec![super::expm_serial(jobs[0].0, &jobs[0].1)]
+        }
         _ => {}
     }
     // Same policy as the execute phase: fan out across the batch only
@@ -397,8 +417,31 @@ pub fn expm_multi(jobs: &[(&Matrix, ExpmOptions)]) -> Vec<ExpmResult> {
         let (w, opts) = jobs[i];
         match opts.method {
             Method::Sastre | Method::PatersonStockmeyer => {
+                if let Some(cache) = cache {
+                    if let Some(mut powers) = cache.lookup(w) {
+                        let depth_before = powers.depth();
+                        let sel = selection::select_dynamic_from(
+                            &mut powers,
+                            opts.method,
+                            opts.tol,
+                        );
+                        // Selection may have extended the ladder; keep
+                        // the deeper version for the next request (a
+                        // steady-state hit deepens nothing and skips
+                        // the insert — lookup already refreshed LRU).
+                        if powers.depth() > depth_before {
+                            cache.insert(&powers);
+                        }
+                        return Planned::Dynamic(sel, powers);
+                    }
+                }
                 let (sel, powers) =
                     selection::select_dynamic(w, opts.method, opts.tol);
+                if let Some(cache) = cache {
+                    if sel.m != 0 {
+                        cache.insert(&powers);
+                    }
+                }
                 Planned::Dynamic(sel, powers)
             }
             _ => Planned::Direct(super::expm_serial(w, &opts)),
@@ -568,6 +611,41 @@ mod tests {
             assert_eq!(a.value, b.value);
             assert_eq!(a.stats.matrix_products, b.stats.matrix_products);
         }
+    }
+
+    #[test]
+    fn cached_multi_is_bitwise_equal_with_fewer_products() {
+        // Same batch twice through one cache: second pass hits for every
+        // dynamic matrix, values stay bitwise identical, and the product
+        // count drops by at least the ladder cost of each hit.
+        use crate::expm::powers_cache::PowersCache;
+        let mats: Vec<Matrix> = (0..5)
+            .map(|i| randm_norm(6 + i % 2, [0.4, 3.0][i % 2], 300 + i as u64))
+            .collect();
+        let opts = ExpmOptions { method: Method::Sastre, tol: 1e-8 };
+        let jobs: Vec<(&Matrix, ExpmOptions)> =
+            mats.iter().map(|w| (w, opts)).collect();
+        let cache = PowersCache::new(64);
+        let cold = expm_multi_cached(&jobs, Some(&cache));
+        let plain = expm_multi(&jobs);
+        for (c, p) in cold.iter().zip(&plain) {
+            assert_eq!(c.value, p.value, "cold pass must match uncached");
+            assert_eq!(c.stats.matrix_products, p.stats.matrix_products);
+        }
+        let warm = expm_multi_cached(&jobs, Some(&cache));
+        let mut saved = 0usize;
+        for (i, (w, c)) in warm.iter().zip(&cold).enumerate() {
+            assert_eq!(w.value, c.value, "warm value {i} must be bitwise");
+            assert_eq!((w.stats.m, w.stats.s), (c.stats.m, c.stats.s));
+            assert!(
+                w.stats.matrix_products <= c.stats.matrix_products,
+                "matrix {i}: warm products exceed cold"
+            );
+            saved += c.stats.matrix_products - w.stats.matrix_products;
+        }
+        assert!(saved > 0, "repeat pass must save products");
+        let st = cache.stats();
+        assert_eq!(st.hits as usize, mats.len(), "every repeat is a hit");
     }
 
     #[test]

@@ -50,6 +50,20 @@ impl Powers {
         self.pows[0].order()
     }
 
+    /// Zero the product counter without touching the cached ladder. The
+    /// cross-request powers cache ([`super::powers_cache`]) hands out
+    /// clones of ladders whose products were paid by an *earlier* request;
+    /// resetting makes the next run's stats charge only the products it
+    /// actually spends.
+    pub fn reset_products(&mut self) {
+        self.products = 0;
+    }
+
+    /// Number of cached powers (W counts as one).
+    pub fn depth(&self) -> usize {
+        self.pows.len()
+    }
+
     /// Rescale all cached powers for W <- W / 2^s (W^k scales by 2^{-ks}).
     pub fn rescale(&mut self, s: u32) {
         if s == 0 {

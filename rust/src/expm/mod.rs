@@ -19,6 +19,7 @@ pub mod cond;
 pub mod error;
 pub mod eval;
 pub mod pade;
+pub mod powers_cache;
 pub mod scaling;
 pub mod selection;
 
@@ -26,7 +27,8 @@ use crate::linalg::Matrix;
 use eval::Powers;
 use selection::{SelectOptions, Selection};
 
-pub use batch::{expm_batch, expm_multi};
+pub use batch::{expm_batch, expm_multi, expm_multi_cached};
+pub use powers_cache::PowersCache;
 
 /// Which expm pipeline to run.
 ///

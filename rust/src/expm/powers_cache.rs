@@ -1,0 +1,325 @@
+//! Cross-request powers cache: a sharded, size-bounded LRU of
+//! [`Powers`] ladders keyed on a content hash of the (unscaled) matrix.
+//!
+//! The paper's cost model (and the Bader–Blanes–Casas line of work,
+//! arXiv:1710.10989) minimizes matrix products *per evaluation*; this
+//! cache extends that economy *across* evaluations. Generative-flow
+//! workloads recompute e^{A_k} for the same block generators every
+//! sampling step — and a service sees the same matrix again whenever a
+//! client retries or two requests share inputs. On a repeat, the ladder
+//! W, W², … that selection and evaluation need is already paid for: the
+//! planner re-reads it for free, so the second request's product count
+//! drops by the ladder cost (A² alone is the single biggest term for the
+//! low-order rungs).
+//!
+//! Correctness guarantees:
+//!
+//! - **Bitwise-identical values.** A cached ladder entry is exactly the
+//!   matrix a fresh `Powers::get` would compute (same deterministic
+//!   `matmul` on the same W), so planning and evaluating from the cache
+//!   produces bit-for-bit the values of a cold run. Only the *product
+//!   count* differs — by design; that is the win being measured.
+//! - **No hash-collision corruption.** `lookup` compares the stored W
+//!   against the queried matrix entry-for-entry before returning; a
+//!   colliding hash is a miss, never a wrong ladder.
+//! - **Bounded memory.** At most `capacity` ladders total (each at most
+//!   a handful of n×n buffers), evicted least-recently-used per shard.
+//!
+//! The cache is `Sync` (per-shard mutexes + atomic counters), so the
+//! batch engine's parallel planning sweep and the coordinator's
+//! dispatcher can share one instance.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::eval::Powers;
+use crate::linalg::Matrix;
+
+/// Number of independently locked shards. A power of two so the shard
+/// index is a cheap mask of the key hash.
+const SHARDS: usize = 8;
+
+/// FNV-1a over the matrix order and the raw f64 bit patterns — content
+/// identity, deterministic across runs and hosts (same rationale as the
+/// remote backend's group-shape routing hash).
+pub fn matrix_hash(w: &Matrix) -> u64 {
+    const PRIME: u64 = 0x0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(&(w.order() as u64).to_le_bytes());
+    for &x in w.data() {
+        eat(&x.to_bits().to_le_bytes());
+    }
+    h
+}
+
+struct Entry {
+    key: u64,
+    powers: Powers,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheShard {
+    entries: Vec<Entry>,
+    tick: u64,
+}
+
+/// Point-in-time counter snapshot (see [`PowersCache::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Lookups that returned a ladder.
+    pub hits: u64,
+    /// Lookups that found nothing (or a colliding key).
+    pub misses: u64,
+    /// Entries evicted to respect the size bound.
+    pub evictions: u64,
+    /// Ladders currently held.
+    pub entries: usize,
+}
+
+/// Sharded LRU of powers ladders, bounded at `capacity` entries total.
+pub struct PowersCache {
+    shards: Vec<Mutex<CacheShard>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PowersCache {
+    /// Cache bounded at `capacity` ladders (rounded up to a multiple of
+    /// the shard count; a capacity of 0 still admits one entry per shard,
+    /// so callers wanting "disabled" should not construct a cache at all).
+    pub fn new(capacity: usize) -> PowersCache {
+        PowersCache {
+            shards: (0..SHARDS).map(|_| Mutex::default()).collect(),
+            per_shard_cap: capacity.div_ceil(SHARDS).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<CacheShard> {
+        &self.shards[(key as usize) & (SHARDS - 1)]
+    }
+
+    /// Fetch the ladder cached for `w`, if any. The returned clone has
+    /// its product counter reset to zero: the products were paid by an
+    /// earlier request, so a run planned from it charges only what it
+    /// newly spends. Collisions are verified away by comparing the
+    /// stored W with `w` before returning.
+    pub fn lookup(&self, w: &Matrix) -> Option<Powers> {
+        let key = matrix_hash(w);
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        for entry in shard.entries.iter_mut() {
+            if entry.key == key && entry.powers.w() == w {
+                entry.last_used = tick;
+                let mut out = entry.powers.clone();
+                out.reset_products();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(out);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Store (or refresh) the ladder for `powers.w()`, evicting the
+    /// least-recently-used entry of the shard when it is full. Returns
+    /// how many entries were evicted (0 or 1).
+    pub fn insert(&self, powers: &Powers) -> u64 {
+        let key = matrix_hash(powers.w());
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        if let Some(entry) = shard
+            .entries
+            .iter_mut()
+            .find(|e| e.key == key && e.powers.w() == powers.w())
+        {
+            // Refresh in place — keep the deeper ladder, so a request
+            // that extended the cached powers grows the entry.
+            if powers.depth() > entry.powers.depth() {
+                entry.powers = powers.clone();
+            }
+            entry.last_used = tick;
+            return 0;
+        }
+        let mut evicted = 0;
+        if shard.entries.len() >= self.per_shard_cap {
+            if let Some(idx) = shard
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+            {
+                shard.entries.swap_remove(idx);
+                evicted = 1;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.entries.push(Entry {
+            key,
+            powers: powers.clone(),
+            last_used: tick,
+        });
+        evicted
+    }
+
+    /// Ladders currently held across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().entries.len())
+            .sum()
+    }
+
+    /// Whether the cache holds no ladders.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot (hits, misses, evictions, current entries).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn hit_returns_identical_ladder_with_zero_products() {
+        let a = randm(6, 1);
+        let mut powers = Powers::new(a.clone());
+        powers.get(3);
+        assert_eq!(powers.products, 2);
+        let cache = PowersCache::new(16);
+        cache.insert(&powers);
+        let mut got = cache.lookup(&a).expect("hit");
+        assert_eq!(got.products, 0, "cached products are already paid");
+        assert!(got.have(3));
+        for k in 1..=3 {
+            assert_eq!(got.get(k), powers.get(k), "ladder entry {k}");
+        }
+        assert_eq!(got.products, 0, "re-reads stay free");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 0, 1));
+    }
+
+    #[test]
+    fn miss_on_unknown_and_on_different_matrix() {
+        let cache = PowersCache::new(16);
+        assert!(cache.lookup(&randm(4, 2)).is_none());
+        let a = randm(4, 3);
+        let mut p = Powers::new(a.clone());
+        p.get(2);
+        cache.insert(&p);
+        // Same order, different values: miss.
+        assert!(cache.lookup(&randm(4, 4)).is_none());
+        // Different order entirely: miss.
+        assert!(cache.lookup(&randm(5, 3)).is_none());
+        assert!(cache.lookup(&a).is_some());
+        let st = cache.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 3);
+    }
+
+    #[test]
+    fn size_bound_evicts_lru() {
+        // Capacity 8 across 8 shards = 1 entry per shard: inserting many
+        // distinct matrices keeps the total at <= 8 and counts evictions.
+        let cache = PowersCache::new(8);
+        for seed in 0..40u64 {
+            let p = Powers::new(randm(3, 100 + seed));
+            cache.insert(&p);
+            assert!(cache.len() <= 8, "size bound violated");
+        }
+        let st = cache.stats();
+        assert_eq!(st.entries, cache.len());
+        assert!(st.evictions >= 32 - 8, "evictions counted: {st:?}");
+    }
+
+    #[test]
+    fn reinsert_refreshes_and_keeps_deeper_ladder() {
+        let a = randm(5, 9);
+        let mut shallow = Powers::new(a.clone());
+        shallow.get(2);
+        let cache = PowersCache::new(16);
+        assert_eq!(cache.insert(&shallow), 0);
+        let mut deep = Powers::new(a.clone());
+        deep.get(4);
+        assert_eq!(cache.insert(&deep), 0, "refresh is not an eviction");
+        assert_eq!(cache.len(), 1, "one entry per matrix");
+        let got = cache.lookup(&a).unwrap();
+        assert!(got.have(4), "deeper ladder kept");
+        // Re-inserting the shallow ladder must not shrink the entry.
+        cache.insert(&shallow);
+        assert!(cache.lookup(&a).unwrap().have(4));
+    }
+
+    #[test]
+    fn hash_is_content_sensitive() {
+        let a = randm(4, 11);
+        assert_eq!(matrix_hash(&a), matrix_hash(&a.clone()));
+        let mut b = a.clone();
+        b[(2, 1)] += 1e-13;
+        assert_ne!(matrix_hash(&a), matrix_hash(&b));
+        // -0.0 and 0.0 differ bitwise, so they hash apart (the ladder of
+        // a sign-flipped zero entry can differ bitwise too).
+        let z = Matrix::zeros(2, 2);
+        let mut nz = Matrix::zeros(2, 2);
+        nz[(0, 0)] = -0.0;
+        assert_ne!(matrix_hash(&z), matrix_hash(&nz));
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache = std::sync::Arc::new(PowersCache::new(32));
+        let mats: Vec<Matrix> = (0..8).map(|i| randm(4, 200 + i)).collect();
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let cache = cache.clone();
+                let mats = &mats;
+                scope.spawn(move || {
+                    for round in 0..50usize {
+                        let a = &mats[(t + round) % mats.len()];
+                        match cache.lookup(a) {
+                            Some(p) => assert_eq!(p.w(), a),
+                            None => {
+                                let mut p = Powers::new(a.clone());
+                                p.get(2);
+                                cache.insert(&p);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let st = cache.stats();
+        assert!(st.hits > 0);
+        assert!(st.entries <= 32);
+    }
+}

@@ -91,17 +91,33 @@ pub fn select_dynamic(
     method: Method,
     tol: f64,
 ) -> (Selection, Powers) {
+    let mut powers = Powers::new(w.clone());
+    let sel = select_dynamic_from(&mut powers, method, tol);
+    (sel, powers)
+}
+
+/// [`select_dynamic`] on an *existing* ladder — the entry point for the
+/// cross-request powers cache, where W..W^k of an earlier request are
+/// already in `powers` and the ladder walk re-reads them for free. The
+/// selection outcome is identical to a fresh ladder (cached entries are
+/// bitwise what a fresh `get` would compute); only the products spent
+/// differ.
+///
+/// Panics on non-dynamic methods (Baseline/Padé select at execution time).
+pub fn select_dynamic_from(
+    powers: &mut Powers,
+    method: Method,
+    tol: f64,
+) -> Selection {
     let opts = SelectOptions {
         tol: tol.max(UNIT_ROUNDOFF),
         power_est: false,
     };
-    let mut powers = Powers::new(w.clone());
-    let sel = match method {
-        Method::Sastre => select_sastre(&mut powers, &opts),
-        Method::PatersonStockmeyer => select_ps(&mut powers, &opts),
+    match method {
+        Method::Sastre => select_sastre(powers, &opts),
+        Method::PatersonStockmeyer => select_ps(powers, &opts),
         other => panic!("select_dynamic needs a dynamic method, got {other:?}"),
-    };
-    (sel, powers)
+    }
 }
 
 /// Algorithm 4: degree ladder for the Sastre evaluation formulas.

@@ -3,7 +3,7 @@
 //! artifacts (integration tests assert loss agreement) and as the
 //! artifact-free fallback for the examples.
 
-use crate::expm::{expm_multi, ExpmOptions, Method};
+use crate::expm::{expm_multi_cached, ExpmOptions, Method, PowersCache};
 use crate::linalg::Matrix;
 
 /// Activation strength in phi(u) = u + ALPHA tanh(u).
@@ -41,7 +41,8 @@ pub fn phi_inverse(y: f64) -> f64 {
     u
 }
 
-/// e^{±A_k} for every block in one [`expm_multi`] call — the flow's K
+/// e^{±A_k} for every block in one [`crate::expm::expm_multi`] call —
+/// the flow's K
 /// exponentials share the batched engine's selection bucketing and
 /// workspace reuse instead of going through K independent expm calls.
 /// (The flow uses one uniform `(method, tol)` contract today; routing
@@ -53,6 +54,22 @@ pub fn block_exponentials(
     method: Method,
     tol: f64,
 ) -> Vec<Matrix> {
+    block_exponentials_cached(blocks, negate, method, tol, None)
+}
+
+/// [`block_exponentials`] with an optional cross-request
+/// [`PowersCache`]. A sampling or evaluation loop calls the flow with
+/// the *same* block generators A_k step after step; sharing one cache
+/// across those calls means every step past the first reuses the cached
+/// W, W², … ladders, dropping each block's product count by the ladder
+/// cost while the computed e^{±A_k} stay bitwise identical.
+pub fn block_exponentials_cached(
+    blocks: &[Block],
+    negate: bool,
+    method: Method,
+    tol: f64,
+    cache: Option<&PowersCache>,
+) -> Vec<Matrix> {
     let mats: Vec<Matrix> = blocks
         .iter()
         .map(|b| if negate { -&b.a } else { b.a.clone() })
@@ -60,7 +77,10 @@ pub fn block_exponentials(
     let opts = ExpmOptions { method, tol };
     let jobs: Vec<(&Matrix, ExpmOptions)> =
         mats.iter().map(|m| (m, opts)).collect();
-    expm_multi(&jobs).into_iter().map(|r| r.value).collect()
+    expm_multi_cached(&jobs, cache)
+        .into_iter()
+        .map(|r| r.value)
+        .collect()
 }
 
 /// z = f(x) for a batch (rows of `x`); returns (z, per-sample logdet).
@@ -200,6 +220,42 @@ mod tests {
         let n2 = nll(&blocks, &x, Method::Baseline, 1e-10);
         assert!(n1.is_finite());
         assert!((n1 - n2).abs() < 1e-7, "{n1} vs {n2}");
+    }
+
+    #[test]
+    fn repeated_sampling_steps_hit_powers_cache() {
+        // A sampling loop re-exponentiates the same block generators
+        // every step; with a shared cache, steps past the first hit for
+        // every block and return bitwise-identical weights.
+        let blocks = init_blocks(8, 3, 9);
+        let cache = PowersCache::new(32);
+        let step1 = block_exponentials_cached(
+            &blocks,
+            true,
+            Method::Sastre,
+            1e-10,
+            Some(&cache),
+        );
+        let plain = block_exponentials(&blocks, true, Method::Sastre, 1e-10);
+        for (a, b) in step1.iter().zip(&plain) {
+            assert_eq!(a, b, "cached first step must match uncached");
+        }
+        let step2 = block_exponentials_cached(
+            &blocks,
+            true,
+            Method::Sastre,
+            1e-10,
+            Some(&cache),
+        );
+        for (a, b) in step2.iter().zip(&step1) {
+            assert_eq!(a, b, "warm step must be bitwise identical");
+        }
+        let st = cache.stats();
+        assert_eq!(
+            st.hits as usize,
+            blocks.len(),
+            "every block hits on the second step: {st:?}"
+        );
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //!   sample --batch B       sample from the flow (Table-5 path)
 //!   daemon --addr A        expose the service over TCP (JSON lines);
 //!                          `--shards a:p,b:p` routes batch groups to a
-//!                          worker fleet (see docs/architecture.md)
+//!                          worker fleet (see docs/architecture.md);
+//!                          `--powers-cache N` sizes the cross-request
+//!                          powers cache (0 disables; default 256) and
+//!                          `--lane-queue N` bounds each execution
+//!                          lane's queue (default 256)
 //!   worker --addr A        run one worker shard (same binary, same v2
 //!                          protocol; a worker is a daemon that serves
-//!                          compute and forwards nothing)
+//!                          compute and forwards nothing; same
+//!                          --powers-cache/--lane-queue knobs)
 //!   info                   artifact manifest + platform report
 
 use expmflow::coordinator::{ExpmService, ServiceConfig};
@@ -92,6 +97,10 @@ fn cmd_serve(args: &Args) -> i32 {
         } else {
             Some(default_artifact_dir())
         },
+        // Synthetic load never repeats a matrix, so the powers cache is
+        // off unless asked for (`--powers-cache N`).
+        powers_cache: args.get_usize("powers-cache", 0),
+        lane_queue_cap: args.get_usize("lane-queue", 256),
         ..Default::default()
     };
     let svc = ExpmService::start(cfg);
@@ -303,6 +312,11 @@ fn cmd_daemon(args: &Args) -> i32 {
         .filter(|s| !s.is_empty())
         .map(str::to_string)
         .collect();
+    // Real client traffic repeats matrices (flow sampling steps, client
+    // retries), so the daemon enables the cross-request powers cache by
+    // default; `--powers-cache 0` turns it off.
+    let powers_cache = args.get_usize("powers-cache", 256);
+    let lane_queue_cap = args.get_usize("lane-queue", 256);
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -314,6 +328,8 @@ fn cmd_daemon(args: &Args) -> i32 {
         } else {
             Some(RemoteConfig::new(shards.clone()))
         },
+        powers_cache,
+        lane_queue_cap,
         ..Default::default()
     }));
     match Server::spawn(&addr, svc) {
@@ -322,6 +338,14 @@ fn cmd_daemon(args: &Args) -> i32 {
                 "expm daemon listening on {} (JSON lines, protocol v1+v2; \
                  {{\"cmd\":\"shutdown\"}} to stop)",
                 server.addr
+            );
+            println!(
+                "scheduler lanes per backend instance; powers cache: {}",
+                if powers_cache > 0 {
+                    format!("{powers_cache} ladders")
+                } else {
+                    "off".into()
+                }
             );
             if !shards.is_empty() {
                 println!(
@@ -355,6 +379,10 @@ fn cmd_worker(args: &Args) -> i32 {
         } else {
             Some(default_artifact_dir())
         },
+        // Workers see whatever group mix their coordinator routes to
+        // them, repeats included, so the cache defaults on here too.
+        powers_cache: args.get_usize("powers-cache", 256),
+        lane_queue_cap: args.get_usize("lane-queue", 256),
         ..Default::default()
     }));
     match Server::spawn(&addr, svc) {

@@ -48,7 +48,7 @@ pub struct FlowConfig {
 }
 
 /// Parsed manifest with lookup indices.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Manifest {
     /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,

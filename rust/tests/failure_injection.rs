@@ -159,6 +159,72 @@ fn shard_down_falls_back_to_native_bitwise() {
 }
 
 #[test]
+fn shard_kill_under_concurrency_loses_no_jobs() {
+    // The no-job-loss guarantee, pinned under the scheduler's
+    // concurrency: several client threads stream jobs through a
+    // coordinator whose only shard is killed mid-stream. Every job must
+    // still complete (remote before the kill, fail-soft native after),
+    // every result bitwise equal to the library — parity holds on both
+    // sides of the kill because remote and native execution are
+    // bitwise-identical for the same plan.
+    let worker_svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        ..Default::default()
+    }));
+    let worker = Server::spawn("127.0.0.1:0", worker_svc).unwrap();
+    let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        remote: Some(RemoteConfig::new([worker.addr.to_string()])),
+        ..Default::default()
+    }));
+    let threads = 4u64;
+    let rounds = 8u64;
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        joins.push(std::thread::spawn(move || {
+            for round in 0..rounds {
+                let mats: Vec<Matrix> = (0..2)
+                    .map(|i| {
+                        randm_norm(6, 1.0, 5_000 + t * 100 + round * 10 + i)
+                    })
+                    .collect();
+                let results = svc.compute(mats.clone(), 1e-8).unwrap();
+                assert_eq!(results.len(), 2, "thread {t} round {round}");
+                for (r, a) in results.iter().zip(&mats) {
+                    let want = expm(
+                        a,
+                        &ExpmOptions { method: Method::Sastre, tol: 1e-8 },
+                    );
+                    assert_eq!(
+                        r.value, want.value,
+                        "thread {t} round {round}: result must be \
+                         bitwise-library on either side of the kill"
+                    );
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }));
+    }
+    // Let some traffic reach the shard, then kill it mid-stream.
+    std::thread::sleep(std::time::Duration::from_millis(60));
+    drop(worker);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(
+        snap.errors, 0,
+        "fail-soft under concurrency must not fail a single job"
+    );
+    assert_eq!(snap.matrices, threads * rounds * 2);
+    assert!(
+        snap.lane_stats.values().all(|l| l.in_flight() == 0),
+        "no group may be stranded on a lane"
+    );
+}
+
+#[test]
 fn vandalized_square_artifact_falls_back_in_service() {
     // The dispatcher's PJRT failure path degrades to native per group.
     let Some(dir) = clone_artifacts("svc") else { return };

@@ -140,6 +140,64 @@ fn prop_mixed_contract_jobs_match_library() {
 }
 
 #[test]
+fn prop_concurrent_jobs_bitwise_match_library() {
+    // The scheduler parity pin under concurrency: jobs submitted from
+    // many threads — so groups interleave arbitrarily across lanes —
+    // still come back bitwise equal (values AND stats) to the library's
+    // expm_batch of the same matrices.
+    let svc = Arc::new(native_service());
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let svc = svc.clone();
+        joins.push(std::thread::spawn(move || {
+            for round in 0..4u64 {
+                let tol = [1e-6, 1e-8, 1e-10][(t % 3) as usize];
+                let mats: Vec<Matrix> = (0..3)
+                    .map(|i| {
+                        let n = [4usize, 6, 8][i % 3];
+                        randm_norm(
+                            n,
+                            0.3 + (t + round) as f64,
+                            40_000 + t * 1000 + round * 10 + i as u64,
+                        )
+                    })
+                    .collect();
+                let results = svc.compute(mats.clone(), tol).unwrap();
+                let batch = expm_batch(
+                    &mats,
+                    &ExpmOptions { method: Method::Sastre, tol },
+                );
+                for (i, (r, b)) in results.iter().zip(&batch).enumerate() {
+                    assert_eq!(
+                        r.value, b.value,
+                        "thread {t} round {round} matrix {i}"
+                    );
+                    assert_eq!(
+                        (r.stats.m, r.stats.s, r.stats.matrix_products),
+                        (b.stats.m, b.stats.s, b.stats.matrix_products),
+                        "thread {t} round {round} matrix {i}: stats"
+                    );
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.matrices, 6 * 4 * 3);
+    assert_eq!(snap.errors, 0);
+    // Every group went through a scheduler lane.
+    let lane_total: u64 =
+        snap.lane_stats.values().map(|l| l.finished).sum();
+    assert!(lane_total >= snap.batches);
+    assert!(snap
+        .lane_stats
+        .values()
+        .all(|l| l.queue_depth() == 0 && l.in_flight() == 0));
+}
+
+#[test]
 fn prop_batcher_conserves_items() {
     // Push random items, flush with random policies: nothing lost, nothing
     // duplicated, every flushed group is key-homogeneous and within size.
