@@ -214,6 +214,44 @@ impl std::fmt::Display for ServiceClosed {
 
 impl std::error::Error for ServiceClosed {}
 
+/// Why [`submit_admitted`](super::ExpmService::submit_admitted) refused a
+/// job without queueing it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubmitError {
+    /// The dispatcher has stopped (the [`ServiceClosed`] failure mode).
+    Closed,
+    /// Admission control shed the job: queue depth or the estimated
+    /// queueing delay exceeds the configured latency budget (or the
+    /// job's own deadline, whichever is tighter), so the service rejects
+    /// fast instead of queueing work it would only time out on.
+    Shed {
+        /// The estimated queueing delay at rejection time, seconds.
+        estimated_delay_s: f64,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => ServiceClosed.fmt(f),
+            SubmitError::Shed { estimated_delay_s } => write!(
+                f,
+                "shed: estimated queueing delay {:.1}ms exceeds the \
+                 latency budget",
+                estimated_delay_s * 1e3
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<ServiceClosed> for SubmitError {
+    fn from(_: ServiceClosed) -> SubmitError {
+        SubmitError::Closed
+    }
+}
+
 /// Aggregated outcome of a completed job (the blocking view).
 #[derive(Debug)]
 pub struct JobResponse {

@@ -11,6 +11,86 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// Capacity of the per-service latency and batch-fill sample windows.
+/// Large enough for stable tail percentiles, small enough that a daemon
+/// under sustained traffic holds O(1) memory instead of one `f64` per
+/// group forever.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-capacity sliding window of `f64` samples plus exact running
+/// totals: `mean` is exact over the whole stream, `percentile` covers the
+/// most recent [`RESERVOIR_CAP`] samples. Replaces the unbounded `Vec`s
+/// that used to leak under exactly the sustained traffic a production
+/// daemon sees.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    buf: Vec<f64>,
+    /// Ring write cursor once `buf` has reached capacity.
+    next: usize,
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Reservoir {
+        Reservoir::new(RESERVOIR_CAP)
+    }
+}
+
+impl Reservoir {
+    /// Empty window holding at most `cap` samples (minimum 1).
+    pub fn new(cap: usize) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            buf: Vec::new(),
+            next: 0,
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Record one sample, evicting the oldest once at capacity.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Samples ever recorded (not just those still in the window).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Samples currently held — bounded by the capacity.
+    pub fn window_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Exact mean over *every* sample ever pushed (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile over the current window (0.0 when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::percentile(&self.buf, p)
+        }
+    }
+}
+
 #[derive(Default, Clone)]
 struct Inner {
     requests: u64,
@@ -23,13 +103,17 @@ struct Inner {
     powers_hits: u64,
     powers_misses: u64,
     powers_evictions: u64,
+    submitted: u64,
+    admitted: u64,
+    shed: u64,
+    batcher_depth: u64,
     degree_hist: BTreeMap<usize, u64>,
     scaling_hist: BTreeMap<u32, u64>,
     backend_hist: BTreeMap<&'static str, u64>,
     shard_stats: BTreeMap<String, ShardStat>,
     lane_stats: BTreeMap<String, LaneStat>,
-    batch_fill: Vec<f64>,
-    latencies_s: Vec<f64>,
+    batch_fill: Reservoir,
+    latencies_s: Reservoir,
 }
 
 /// Per-lane accounting for the scheduler: cumulative enqueue/start/
@@ -125,10 +209,22 @@ pub struct Snapshot {
     pub lane_stats: BTreeMap<String, LaneStat>,
     /// Mean group size as a fraction of `max_batch`.
     pub mean_batch_fill: f64,
-    /// Mean group execution latency, seconds.
+    /// Mean group execution latency, seconds (exact over all groups).
     pub mean_latency_s: f64,
-    /// 99th-percentile group execution latency, seconds.
+    /// Median group execution latency over the sample window, seconds.
+    pub p50_latency_s: f64,
+    /// 95th-percentile group execution latency (window), seconds.
+    pub p95_latency_s: f64,
+    /// 99th-percentile group execution latency (window), seconds.
     pub p99_latency_s: f64,
+    /// Jobs handed to [`ExpmService::submit`](super::ExpmService::submit)
+    /// — incremented at submission, before dispatch.
+    pub submitted: u64,
+    /// Jobs that passed admission control (only counted while a latency
+    /// budget is configured).
+    pub admitted: u64,
+    /// Jobs shed by admission control instead of being queued.
+    pub shed: u64,
 }
 
 impl Metrics {
@@ -240,21 +336,49 @@ impl Metrics {
         self.inner.lock().unwrap().latencies_s.push(d.as_secs_f64());
     }
 
+    /// One job handed to the service's submit path (pre-dispatch).
+    pub fn record_submitted(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    /// One job that passed admission control.
+    pub fn record_admitted(&self) {
+        self.inner.lock().unwrap().admitted += 1;
+    }
+
+    /// One job shed by admission control instead of being queued.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Dispatcher gauge: matrices currently waiting in open batch groups.
+    pub fn set_batcher_depth(&self, depth: u64) {
+        self.inner.lock().unwrap().batcher_depth = depth;
+    }
+
+    /// Admission-control pressure: the backlog a newly admitted job
+    /// would queue behind — jobs submitted but not yet dispatched,
+    /// matrices waiting in the batcher, groups queued or in flight on
+    /// the lanes — and the estimated queueing delay, backlog × the mean
+    /// group execution latency observed so far. The backlog mixes jobs,
+    /// matrices and groups deliberately: it is a shedding heuristic, not
+    /// a schedule. A cold service (no completed groups yet) estimates
+    /// zero delay, so admission always opens up for the first requests.
+    pub fn queue_pressure(&self) -> (u64, f64) {
+        let g = self.inner.lock().unwrap();
+        let undispatched = g.submitted.saturating_sub(g.requests);
+        let lanes: u64 = g
+            .lane_stats
+            .values()
+            .map(|st| st.queue_depth() + st.in_flight())
+            .sum();
+        let backlog = undispatched + g.batcher_depth + lanes;
+        (backlog, backlog as f64 * g.latencies_s.mean())
+    }
+
     /// Point-in-time copy of every counter.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap().clone();
-        let mean = |xs: &[f64]| {
-            if xs.is_empty() {
-                0.0
-            } else {
-                xs.iter().sum::<f64>() / xs.len() as f64
-            }
-        };
-        let p99 = if g.latencies_s.is_empty() {
-            0.0
-        } else {
-            crate::util::stats::percentile(&g.latencies_s, 99.0)
-        };
         Snapshot {
             requests: g.requests,
             matrices: g.matrices,
@@ -271,9 +395,14 @@ impl Metrics {
             backend_hist: g.backend_hist,
             shard_stats: g.shard_stats,
             lane_stats: g.lane_stats,
-            mean_batch_fill: mean(&g.batch_fill),
-            mean_latency_s: mean(&g.latencies_s),
-            p99_latency_s: p99,
+            mean_batch_fill: g.batch_fill.mean(),
+            mean_latency_s: g.latencies_s.mean(),
+            p50_latency_s: g.latencies_s.percentile(50.0),
+            p95_latency_s: g.latencies_s.percentile(95.0),
+            p99_latency_s: g.latencies_s.percentile(99.0),
+            submitted: g.submitted,
+            admitted: g.admitted,
+            shed: g.shed,
         }
     }
 }
@@ -291,10 +420,17 @@ impl Snapshot {
             self.matrix_products
         ));
         s.push_str(&format!(
-            "mean_batch_fill={:.2} mean_latency={:.3}ms p99={:.3}ms\n",
+            "mean_batch_fill={:.2} mean_latency={:.3}ms p50={:.3}ms \
+             p95={:.3}ms p99={:.3}ms\n",
             self.mean_batch_fill,
             self.mean_latency_s * 1e3,
+            self.p50_latency_s * 1e3,
+            self.p95_latency_s * 1e3,
             self.p99_latency_s * 1e3
+        ));
+        s.push_str(&format!(
+            "admission: submitted={} admitted={} shed={}\n",
+            self.submitted, self.admitted, self.shed
         ));
         s.push_str("degree histogram:");
         for (m, c) in &self.degree_hist {
@@ -426,6 +562,67 @@ mod tests {
         assert!(out.contains("powers_cache: hits=2 misses=1 evictions=2"));
         assert!(out.contains("native:depth=1,inflight=0,done=1"), "{out}");
         assert!(out.contains("remote:1.2.3.4:9:depth=1"), "{out}");
+    }
+
+    #[test]
+    fn reservoir_memory_stays_bounded_past_capacity() {
+        // The leak pin: >capacity samples must not grow the window, while
+        // percentiles stay correct over the most recent samples and the
+        // mean stays exact over the full stream.
+        let mut r = Reservoir::new(100);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.window_len(), 100, "window bounded at capacity");
+        assert_eq!(r.count(), 10_000);
+        // The window holds exactly the last 100 samples: 9900..=9999.
+        assert_eq!(r.percentile(0.0), 9900.0);
+        assert_eq!(r.percentile(100.0), 9999.0);
+        assert!((r.percentile(50.0) - 9949.5).abs() < 1e-9);
+        // Mean covers every sample ever pushed, not just the window.
+        assert!((r.mean() - 4999.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_window_bounded_through_metrics() {
+        let m = Metrics::new();
+        for i in 0..(RESERVOIR_CAP + 500) {
+            m.record_latency(Duration::from_micros(1 + i as u64));
+        }
+        let g = m.inner.lock().unwrap();
+        assert_eq!(g.latencies_s.window_len(), RESERVOIR_CAP);
+        assert_eq!(g.latencies_s.count(), (RESERVOIR_CAP + 500) as u64);
+        drop(g);
+        let s = m.snapshot();
+        assert!(s.p50_latency_s > 0.0);
+        assert!(s.p95_latency_s >= s.p50_latency_s);
+        assert!(s.p99_latency_s >= s.p95_latency_s);
+    }
+
+    #[test]
+    fn admission_counters_and_pressure() {
+        let m = Metrics::new();
+        // Cold service: no backlog, no estimate.
+        assert_eq!(m.queue_pressure(), (0, 0.0));
+        m.record_submitted();
+        m.record_submitted();
+        m.record_admitted();
+        m.record_shed();
+        m.record_lane_enqueued("native");
+        m.record_latency(Duration::from_millis(50));
+        // Backlog: 2 undispatched jobs + 1 queued group; mean 50ms.
+        let (backlog, est) = m.queue_pressure();
+        assert_eq!(backlog, 3);
+        assert!((est - 0.15).abs() < 1e-9, "est {est}");
+        m.set_batcher_depth(4);
+        assert_eq!(m.queue_pressure().0, 7);
+        let s = m.snapshot();
+        assert_eq!((s.submitted, s.admitted, s.shed), (2, 1, 1));
+        let out = s.render();
+        assert!(
+            out.contains("admission: submitted=2 admitted=1 shed=1"),
+            "{out}"
+        );
     }
 
     #[test]

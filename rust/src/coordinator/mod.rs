@@ -56,7 +56,8 @@ use scheduler::Scheduler;
 use selector::CacheOutcome;
 
 pub use job::{
-    JobResponse, JobSpec, JobUpdate, MatrixSpec, ServiceClosed, Ticket,
+    JobResponse, JobSpec, JobUpdate, MatrixSpec, ServiceClosed,
+    SubmitError, Ticket,
 };
 pub use remote::{RemoteBackend, RemoteConfig};
 pub use request::MatrixResult;
@@ -82,6 +83,22 @@ pub struct ServiceConfig {
     /// Per-lane bound on queued groups; a full lane queue blocks the
     /// dispatcher (backpressure) instead of growing without bound.
     pub lane_queue_cap: usize,
+    /// Admission-control latency budget: `Some(budget)` makes
+    /// [`ExpmService::submit_admitted`] shed a job — reject fast,
+    /// without queueing — when the estimated queueing delay
+    /// ([`Metrics::queue_pressure`](metrics::Metrics::queue_pressure))
+    /// exceeds the budget, or the job's own deadline when that is
+    /// tighter. `None` (the default) disables admission control;
+    /// `submit_admitted` then behaves exactly like
+    /// [`ExpmService::submit`].
+    pub latency_budget: Option<std::time::Duration>,
+    /// Admission-control depth bound: with a latency budget configured,
+    /// a job is also shed while the backlog (undispatched jobs +
+    /// batcher matrices + queued/in-flight lane groups) exceeds this
+    /// count — a hard cap that sheds floods even before enough groups
+    /// have completed to estimate a delay. Effectively unbounded by
+    /// default.
+    pub admission_queue_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -92,6 +109,8 @@ impl Default for ServiceConfig {
             remote: None,
             powers_cache: 0,
             lane_queue_cap: 256,
+            latency_budget: None,
+            admission_queue_cap: usize::MAX,
         }
     }
 }
@@ -118,6 +137,8 @@ pub struct ExpmService {
     /// Service-wide counters, shared with the server front-end.
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    latency_budget: Option<std::time::Duration>,
+    admission_queue_cap: usize,
 }
 
 impl ExpmService {
@@ -127,6 +148,8 @@ impl ExpmService {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
+        let latency_budget = config.latency_budget;
+        let admission_queue_cap = config.admission_queue_cap;
         let worker = std::thread::Builder::new()
             .name("expm-dispatch".into())
             .spawn(move || dispatcher(rx, config, m2))
@@ -136,6 +159,8 @@ impl ExpmService {
             worker: Some(worker),
             metrics,
             next_id: AtomicU64::new(1),
+            latency_budget,
+            admission_queue_cap,
         }
     }
 
@@ -154,7 +179,40 @@ impl ExpmService {
                 submitted: Instant::now(),
             }))
             .map_err(|_| ServiceClosed)?;
+        self.metrics.record_submitted();
         Ok(Ticket::new(id, count, jrx))
+    }
+
+    /// Deadline-aware admission control in front of [`submit`]
+    /// ([`ServiceConfig::latency_budget`]): while the backlog exceeds
+    /// [`ServiceConfig::admission_queue_cap`], or the estimated queueing
+    /// delay exceeds the latency budget — tightened to the job's own
+    /// deadline when that is shorter — the job is shed with
+    /// [`SubmitError::Shed`] instead of joining a queue it would only
+    /// time out in. Without a configured budget this is exactly
+    /// [`submit`].
+    ///
+    /// [`submit`]: ExpmService::submit
+    pub fn submit_admitted(
+        &self,
+        spec: JobSpec,
+    ) -> Result<Ticket, SubmitError> {
+        if let Some(budget) = self.latency_budget {
+            let (backlog, estimated_delay_s) =
+                self.metrics.queue_pressure();
+            let limit = match spec.get_deadline() {
+                Some(d) if d < budget => d,
+                _ => budget,
+            };
+            if backlog > self.admission_queue_cap as u64
+                || estimated_delay_s > limit.as_secs_f64()
+            {
+                self.metrics.record_shed();
+                return Err(SubmitError::Shed { estimated_delay_s });
+            }
+            self.metrics.record_admitted();
+        }
+        Ok(self.submit(spec)?)
     }
 
     /// v1-shaped convenience: every matrix under one tolerance (Sastre).
@@ -340,10 +398,14 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
                 scheduler.submit_wave(batcher.take_expired(&config.policy));
             }
         }
+        // Keep the admission-control estimator's view of the batcher
+        // current: matrices parked in open groups are backlog too.
+        metrics.set_batcher_depth(batcher.len() as u64);
     }
     // Hand every open group to the lanes, then wait for all in-flight
     // work (including fail-soft re-submissions) before joining them.
     scheduler.submit_wave(batcher.drain_all());
+    metrics.set_batcher_depth(0);
     scheduler.shutdown();
 }
 
@@ -480,6 +542,11 @@ mod tests {
             .submit(JobSpec::new().push(Matrix::identity(3)))
             .unwrap_err();
         assert_eq!(err, ServiceClosed);
+        assert_eq!(
+            svc.submit_admitted(JobSpec::new().push(Matrix::identity(3)))
+                .unwrap_err(),
+            SubmitError::Closed
+        );
         assert!(svc
             .compute(vec![Matrix::identity(3)], 1e-8)
             .unwrap_err()
@@ -649,6 +716,79 @@ mod tests {
             assert_eq!(j.join().unwrap(), 4);
         }
         assert_eq!(svc.metrics.snapshot().matrices, 32);
+    }
+
+    #[test]
+    fn admission_sheds_under_pressure_and_admits_when_idle() {
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            latency_budget: Some(std::time::Duration::from_millis(1)),
+            ..Default::default()
+        });
+        // Idle service: zero backlog, so the job is admitted and runs.
+        let ticket = svc
+            .submit_admitted(JobSpec::uniform(vec![randm(6, 0.5, 1)], 1e-8))
+            .unwrap();
+        assert_eq!(ticket.wait().unwrap().results.len(), 1);
+        // Manufacture pressure: queued groups at a ~50ms observed mean
+        // estimate far beyond the 1ms budget.
+        svc.metrics.record_latency(std::time::Duration::from_millis(50));
+        for _ in 0..3 {
+            svc.metrics.record_lane_enqueued("test-lane");
+        }
+        let err = svc
+            .submit_admitted(JobSpec::uniform(vec![randm(6, 0.5, 2)], 1e-8))
+            .unwrap_err();
+        assert!(
+            matches!(err, SubmitError::Shed { estimated_delay_s }
+                if estimated_delay_s > 0.001),
+            "{err:?}"
+        );
+        let snap = svc.metrics.snapshot();
+        assert_eq!((snap.admitted, snap.shed), (1, 1));
+    }
+
+    #[test]
+    fn admission_deadline_tightens_budget() {
+        // Generous 10s budget; the job's own deadline governs when it is
+        // the tighter bound.
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            latency_budget: Some(std::time::Duration::from_secs(10)),
+            ..Default::default()
+        });
+        svc.metrics.record_latency(std::time::Duration::from_millis(50));
+        svc.metrics.record_lane_enqueued("test-lane");
+        // Estimated delay ~50ms: inside the budget, so no deadline means
+        // admission...
+        let no_deadline =
+            JobSpec::uniform(vec![randm(4, 0.5, 3)], 1e-8);
+        assert!(svc.submit_admitted(no_deadline).is_ok());
+        // ...but far beyond a 1ms job deadline, which must shed.
+        let tight = JobSpec::new()
+            .deadline(std::time::Duration::from_millis(1))
+            .push(randm(4, 0.5, 4));
+        let err = svc.submit_admitted(tight).unwrap_err();
+        assert!(matches!(err, SubmitError::Shed { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn admission_queue_cap_sheds_floods() {
+        // Depth bound: with no latency samples yet (estimate 0) a
+        // backlog past the cap still sheds.
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            latency_budget: Some(std::time::Duration::from_secs(10)),
+            admission_queue_cap: 2,
+            ..Default::default()
+        });
+        for _ in 0..3 {
+            svc.metrics.record_lane_enqueued("test-lane");
+        }
+        let err = svc
+            .submit_admitted(JobSpec::new().push(Matrix::identity(3)))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Shed { .. }), "{err:?}");
     }
 
     #[test]

@@ -37,6 +37,21 @@
 //! A request with `"cmd": "stats"` returns the metrics snapshot; with
 //! `"cmd": "shutdown"` it stops the listener (used by tests).
 //!
+//! ## Overload (additive, both protocol versions)
+//!
+//! With a configured latency budget
+//! ([`ServiceConfig::latency_budget`](super::ServiceConfig)) the daemon
+//! *sheds* instead of queueing past its SLO: the error frame then
+//! carries `"shed": true` so clients can tell overload (retry later,
+//! or on another replica) from a bad request (don't retry):
+//!
+//!   <- {"id": 7, "ok": false, "shed": true, "error": "shed: ..."}
+//!
+//! v2 requests may carry an additive `"deadline_ms"` number; the job
+//! fails if it cannot start executing within that long of arrival, and
+//! admission control sheds it up front when the estimated queueing
+//! delay already exceeds it. See docs/wire-protocol.md.
+//!
 //! Connection handling is bounded: at most [`MAX_CONNS`] concurrent
 //! per-connection threads; a burst beyond that waits in the accept loop
 //! instead of spawning unboundedly.
@@ -48,7 +63,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{
-    ExpmService, JobSpec, JobUpdate, MatrixResult, Ticket,
+    ExpmService, JobSpec, JobUpdate, MatrixResult, SubmitError, Ticket,
 };
 use crate::expm::Method;
 use crate::linalg::Matrix;
@@ -61,8 +76,63 @@ pub const MAX_CONNS: usize = 64;
 /// usize overflow and bounds the allocation a single frame can demand.
 pub const MAX_WIRE_ORDER: usize = 4096;
 
+/// Shutdown signal shared by the accept loop, every connection handler,
+/// and the host process: an atomic flag plus a condvar, so waiters like
+/// [`Server::shutdown_wait`] wake the moment the signal is raised
+/// instead of noticing it on their next poll.
+#[derive(Clone)]
+pub struct StopSignal {
+    inner: Arc<StopInner>,
+}
+
+struct StopInner {
+    raised: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl StopSignal {
+    fn new() -> StopSignal {
+        StopSignal {
+            inner: Arc::new(StopInner {
+                raised: AtomicBool::new(false),
+                lock: Mutex::new(()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Raise the signal and wake every waiter (idempotent).
+    pub fn raise(&self) {
+        self.inner.raised.store(true, Ordering::SeqCst);
+        // Take the waiters' lock before notifying so a waiter between
+        // its flag check and its wait cannot miss the wakeup.
+        let _guard = self.inner.lock.lock().unwrap();
+        self.inner.cv.notify_all();
+    }
+
+    /// Whether the signal has been raised.
+    pub fn is_raised(&self) -> bool {
+        self.inner.raised.load(Ordering::SeqCst)
+    }
+
+    /// Block until raised. The condvar delivers the prompt wakeup; the
+    /// timeout re-check is belt-and-braces, not the mechanism.
+    fn wait_raised(&self) {
+        let mut guard = self.inner.lock.lock().unwrap();
+        while !self.is_raised() {
+            let (g, _) = self
+                .inner
+                .cv
+                .wait_timeout(guard, Duration::from_millis(100))
+                .unwrap();
+            guard = g;
+        }
+    }
+}
+
 /// Counting semaphore for the accept loop: `acquire` blocks while
-/// [`MAX_CONNS`] connections are live, re-checking the stop flag so
+/// [`MAX_CONNS`] connections are live, re-checking the stop signal so
 /// shutdown never deadlocks behind a full house.
 struct Gate {
     max: usize,
@@ -76,10 +146,10 @@ impl Gate {
     }
 
     /// Take a slot; `false` means the server is stopping.
-    fn acquire(&self, stop: &AtomicBool) -> bool {
+    fn acquire(&self, stop: &StopSignal) -> bool {
         let mut n = self.count.lock().unwrap();
         loop {
-            if stop.load(Ordering::SeqCst) {
+            if stop.is_raised() {
                 return false;
             }
             if *n < self.max {
@@ -110,7 +180,7 @@ impl Gate {
 pub struct Server {
     /// The bound address (useful with port 0 for ephemeral binds).
     pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
+    stop: StopSignal,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -122,7 +192,7 @@ impl Server {
     ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
+        let stop = StopSignal::new();
         let stop2 = stop.clone();
         let join = std::thread::Builder::new()
             .name("expm-server".into())
@@ -134,7 +204,7 @@ impl Server {
                 // Accept loop; each connection gets a thread, bounded by
                 // the gate.
                 for conn in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
+                    if stop2.is_raised() {
                         break;
                     }
                     match conn {
@@ -168,24 +238,34 @@ impl Server {
     /// Stop accepting, drain live connections, and join the accept
     /// thread (idempotent; also runs on drop).
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Poke the accept loop so it observes the flag.
+        self.stop.raise();
+        // Poke the accept loop so it observes the signal.
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
     }
 
-    /// Block until a client sends `{"cmd": "shutdown"}` (daemon mode).
+    /// Block until the stop signal is raised — by a client's
+    /// `{"cmd": "shutdown"}` frame, by [`Server::shutdown`], or by a
+    /// host thread holding [`Server::stop_signal`] — then join the
+    /// accept thread. The signal's condvar wakes this promptly; the old
+    /// implementation polled a flag at 100ms forever and gave the host
+    /// process no way to interrupt it at all.
     pub fn shutdown_wait(&mut self) {
-        while !self.stop.load(Ordering::SeqCst) {
-            std::thread::sleep(std::time::Duration::from_millis(100));
-        }
+        self.stop.wait_raised();
         if let Some(j) = self.join.take() {
             // Unblock accept() so the loop can exit.
             let _ = TcpStream::connect(self.addr);
             let _ = j.join();
         }
+    }
+
+    /// Clonable handle to this server's stop signal, so the host process
+    /// can interrupt [`Server::shutdown_wait`] (e.g. from a signal
+    /// handler or a supervising thread) without a TCP round-trip.
+    pub fn stop_signal(&self) -> StopSignal {
+        self.stop.clone()
     }
 }
 
@@ -204,6 +284,23 @@ fn error_reply(id: f64, msg: &str) -> String {
         ("id", Json::Num(id)),
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.into())),
+    ]))
+}
+
+/// Typed load-shed reply: the usual error frame plus an additive
+/// `"shed": true` marker, so clients can tell overload (retry later or
+/// on another replica) apart from a bad request (don't retry).
+fn shed_reply(id: f64, estimated_delay_s: f64) -> String {
+    json::to_string(&obj(vec![
+        ("id", Json::Num(id)),
+        ("ok", Json::Bool(false)),
+        ("shed", Json::Bool(true)),
+        (
+            "error",
+            Json::Str(
+                SubmitError::Shed { estimated_delay_s }.to_string(),
+            ),
+        ),
     ]))
 }
 
@@ -233,7 +330,7 @@ const CONN_IDLE_POLL: Duration = Duration::from_millis(250);
 fn handle_conn(
     stream: TcpStream,
     svc: Arc<ExpmService>,
-    stop: Arc<AtomicBool>,
+    stop: StopSignal,
 ) -> std::io::Result<()> {
     // Poll the socket instead of blocking indefinitely: a shutdown then
     // closes *live* connections within one poll interval, instead of
@@ -245,7 +342,7 @@ fn handle_conn(
     let mut reader = BufReader::new(stream);
     let mut buf = String::new();
     loop {
-        if stop.load(Ordering::SeqCst) {
+        if stop.is_raised() {
             break;
         }
         match reader.read_line(&mut buf) {
@@ -339,12 +436,23 @@ fn parse_methods(req: &Json, count: usize) -> Result<Vec<Method>, String> {
     }
 }
 
+/// A tolerance the planner can honour: finite and strictly positive.
+/// `{"tol": -1}`, `0` or `1e999` (which parses to `inf`) used to sail
+/// through to the planner; now the frame rejects.
+fn check_tol(tol: f64) -> Result<f64, String> {
+    if tol.is_finite() && tol > 0.0 {
+        Ok(tol)
+    } else {
+        Err(format!("'tol' must be finite and positive, got {tol}"))
+    }
+}
+
 /// Per-matrix tolerances: a single number applies to all, an array is
-/// positional. Defaults to 1e-8.
+/// positional. Defaults to 1e-8. Every entry must pass [`check_tol`].
 fn parse_tols(req: &Json, count: usize) -> Result<Vec<f64>, String> {
     match req.get("tol") {
         None => Ok(vec![1e-8; count]),
-        Some(Json::Num(tol)) => Ok(vec![*tol; count]),
+        Some(Json::Num(tol)) => Ok(vec![check_tol(*tol)?; count]),
         Some(Json::Arr(entries)) => {
             if entries.len() != count {
                 return Err("tol/matrices length mismatch".into());
@@ -352,13 +460,35 @@ fn parse_tols(req: &Json, count: usize) -> Result<Vec<f64>, String> {
             entries
                 .iter()
                 .map(|e| {
-                    e.as_f64().ok_or_else(|| {
+                    let t = e.as_f64().ok_or_else(|| {
                         "tol entries must be numbers".to_string()
-                    })
+                    })?;
+                    check_tol(t)
                 })
                 .collect()
         }
         Some(_) => Err("'tol' must be a number or an array".into()),
+    }
+}
+
+/// Optional v2 job deadline in milliseconds (additive field): the job
+/// fails — or is shed at admission — when it cannot start executing
+/// within this long of arrival. Mistyped or out-of-domain values reject
+/// the frame, per the same policy as `v` and `stream`.
+fn parse_deadline(req: &Json) -> Result<Option<Duration>, String> {
+    match req.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms.is_finite() && ms > 0.0 => {
+                // Cap at ~11.5 days so the Duration conversion can never
+                // panic; anything longer is effectively "no deadline".
+                Ok(Some(Duration::from_secs_f64(ms.min(1e9) / 1e3)))
+            }
+            _ => {
+                Err("'deadline_ms' must be a finite positive number"
+                    .into())
+            }
+        },
     }
 }
 
@@ -379,7 +509,7 @@ fn stats_json(r: &MatrixResult) -> Json {
 fn handle_line(
     line: &str,
     svc: &ExpmService,
-    stop: &AtomicBool,
+    stop: &StopSignal,
     writer: &mut TcpStream,
 ) -> std::io::Result<()> {
     let req = match json::parse(line) {
@@ -458,6 +588,21 @@ fn handle_line(
                         Json::Num(snap.powers_evictions as f64),
                     ),
                 ]);
+                // Additive (wire-compat rules): group execution latency
+                // percentiles over the metrics sample window.
+                let latency = obj(vec![
+                    ("mean_s", Json::Num(snap.mean_latency_s)),
+                    ("p50_s", Json::Num(snap.p50_latency_s)),
+                    ("p95_s", Json::Num(snap.p95_latency_s)),
+                    ("p99_s", Json::Num(snap.p99_latency_s)),
+                ]);
+                // Additive: admission-control counters (all zero unless
+                // the daemon runs with a latency budget).
+                let admission = obj(vec![
+                    ("submitted", Json::Num(snap.submitted as f64)),
+                    ("admitted", Json::Num(snap.admitted as f64)),
+                    ("shed", Json::Num(snap.shed as f64)),
+                ]);
                 json::to_string(&obj(vec![
                     ("id", Json::Num(id)),
                     ("ok", Json::Bool(true)),
@@ -476,10 +621,12 @@ fn handle_line(
                     ("shards", shards),
                     ("lanes", lanes),
                     ("powers_cache", powers_cache),
+                    ("latency", latency),
+                    ("admission", admission),
                 ]))
             }
             "shutdown" => {
-                stop.store(true, Ordering::SeqCst);
+                stop.raise();
                 json::to_string(&obj(vec![
                     ("id", Json::Num(id)),
                     ("ok", Json::Bool(true)),
@@ -540,12 +687,34 @@ fn handle_v1(
     id: f64,
     svc: &ExpmService,
 ) -> Result<String, String> {
-    let tol = req.get("tol").and_then(Json::as_f64).unwrap_or(1e-8);
+    // Like v2's "stream": a present-but-mistyped or out-of-domain "tol"
+    // rejects the frame instead of silently serving the 1e-8 default
+    // under a different contract than the client asked for.
+    let tol = match req.get("tol") {
+        None => 1e-8,
+        Some(v) => match v.as_f64() {
+            Some(t) => check_tol(t)?,
+            None => {
+                return Err("'tol' must be a number".into());
+            }
+        },
+    };
     let mats = parse_matrix_payload(req)?;
-    match svc.compute(mats, tol) {
-        Ok(results) => {
-            let vals: Vec<Json> = results.iter().map(value_json).collect();
-            let stats: Vec<Json> = results.iter().map(stats_json).collect();
+    let ticket = match svc.submit_admitted(JobSpec::uniform(mats, tol)) {
+        Ok(t) => t,
+        Err(SubmitError::Shed { estimated_delay_s }) => {
+            return Ok(shed_reply(id, estimated_delay_s))
+        }
+        Err(e @ SubmitError::Closed) => {
+            return Ok(error_reply(id, &e.to_string()))
+        }
+    };
+    match ticket.wait() {
+        Ok(resp) => {
+            let vals: Vec<Json> =
+                resp.results.iter().map(value_json).collect();
+            let stats: Vec<Json> =
+                resp.results.iter().map(stats_json).collect();
             Ok(json::to_string(&obj(vec![
                 ("id", Json::Num(id)),
                 ("ok", Json::Bool(true)),
@@ -569,6 +738,9 @@ fn handle_v2(
         let methods = parse_methods(req, mats.len())?;
         let tols = parse_tols(req, mats.len())?;
         let mut job = JobSpec::new();
+        if let Some(d) = parse_deadline(req)? {
+            job = job.deadline(d);
+        }
         for ((matrix, method), tol) in
             mats.into_iter().zip(methods).zip(tols)
         {
@@ -595,9 +767,15 @@ fn handle_v2(
             )
         }
     };
-    let ticket = match svc.submit(job) {
+    let ticket = match svc.submit_admitted(job) {
         Ok(t) => t,
-        Err(e) => {
+        Err(SubmitError::Shed { estimated_delay_s }) => {
+            return write_frame(
+                writer,
+                &shed_reply(id, estimated_delay_s),
+            )
+        }
+        Err(e @ SubmitError::Closed) => {
             return write_frame(writer, &error_reply(id, &e.to_string()))
         }
     };
@@ -790,18 +968,20 @@ mod tests {
     #[test]
     fn gate_bounds_and_releases() {
         let gate = Gate::new(2);
-        let stop = AtomicBool::new(false);
+        let stop = StopSignal::new();
         assert!(gate.acquire(&stop));
         assert!(gate.acquire(&stop));
         assert_eq!(gate.live(), 2);
-        // A full gate with the stop flag raised refuses instead of
+        // A full gate with the stop signal raised refuses instead of
         // blocking forever.
-        stop.store(true, Ordering::SeqCst);
+        stop.raise();
         assert!(!gate.acquire(&stop));
-        stop.store(false, Ordering::SeqCst);
         gate.release();
         assert_eq!(gate.live(), 1);
-        assert!(gate.acquire(&stop));
+        // The gate's count carries across stop signals (raising is
+        // one-way; a fresh signal models a restarted server).
+        let fresh = StopSignal::new();
+        assert!(gate.acquire(&fresh));
     }
 
     #[test]
@@ -842,6 +1022,11 @@ mod tests {
         assert!(reply.contains("\"lanes\""), "{reply}");
         assert!(reply.contains("\"powers_cache\""), "{reply}");
         assert!(reply.contains("\"hits\""), "{reply}");
+        // Additive SLO surface: latency percentiles + admission counters.
+        assert!(reply.contains("\"latency\""), "{reply}");
+        assert!(reply.contains("\"p99_s\""), "{reply}");
+        assert!(reply.contains("\"admission\""), "{reply}");
+        assert!(reply.contains("\"shed\""), "{reply}");
     }
 
     #[test]
@@ -874,5 +1059,94 @@ mod tests {
             client.roundtrip(r#"{"id": 9, "cmd": "shutdown"}"#).unwrap();
         assert!(reply.contains("\"ok\":true"));
         server.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn shutdown_wait_wakes_promptly_on_host_signal() {
+        let (mut server, _svc) = start();
+        let signal = server.stop_signal();
+        let raiser = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            signal.raise();
+        });
+        let t0 = std::time::Instant::now();
+        server.shutdown_wait();
+        let waited = t0.elapsed();
+        raiser.join().unwrap();
+        assert!(waited >= Duration::from_millis(45), "{waited:?}");
+        // Within one 100ms poll interval of the raise (plus join slack
+        // for a loaded CI box) — not the old poll-forever.
+        assert!(waited < Duration::from_millis(500), "{waited:?}");
+    }
+
+    #[test]
+    fn shutdown_cmd_wakes_shutdown_wait() {
+        let (mut server, _svc) = start();
+        let addr = server.addr;
+        let client_thread = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let mut client = Client::connect(addr).unwrap();
+            let _ = client.roundtrip(r#"{"id": 1, "cmd": "shutdown"}"#);
+        });
+        // Must return once the wire shutdown lands (not hang).
+        server.shutdown_wait();
+        client_thread.join().unwrap();
+    }
+
+    #[test]
+    fn tol_validation_rejects_bad_frames() {
+        let (server, svc) = start();
+        let mut client = Client::connect(server.addr).unwrap();
+        let payload =
+            r#""orders": [2], "matrices": [[1.0, 0.0, 0.0, 1.0]]"#;
+        // v1: zero, negative, non-finite (1e999 parses to inf) and
+        // mistyped tolerances all reject instead of reaching the
+        // planner or silently serving the 1e-8 default.
+        for tol in ["-1", "0", "1e999", r#""tight""#, "[1e-8]"] {
+            let line = format!(r#"{{"id": 1, "tol": {tol}, {payload}}}"#);
+            let reply = client.roundtrip(&line).unwrap();
+            assert!(
+                reply.contains("\"ok\":false"),
+                "tol {tol}: {reply}"
+            );
+            assert!(reply.contains("tol"), "tol {tol}: {reply}");
+        }
+        // v2: a bad entry inside a tol array rejects too.
+        let line =
+            format!(r#"{{"v": 2, "id": 2, "tol": [-0.5], {payload}}}"#);
+        let reply = client.roundtrip(&line).unwrap();
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        assert_eq!(svc.metrics.snapshot().rejected_frames, 6);
+        // A valid tolerance still computes.
+        let line = format!(r#"{{"id": 3, "tol": 1e-8, {payload}}}"#);
+        let reply = client.roundtrip(&line).unwrap();
+        assert!(reply.contains("\"ok\":true"), "{reply}");
+    }
+
+    #[test]
+    fn v2_deadline_ms_accepts_and_rejects() {
+        let (server, _svc) = start();
+        let mut client = Client::connect(server.addr).unwrap();
+        let payload =
+            r#""orders": [2], "matrices": [[0.1, 0.0, 0.0, 0.1]]"#;
+        // Mistyped / out-of-domain deadlines reject the frame, per the
+        // same policy as "v" and "stream".
+        for d in [r#""soon""#, "0", "-5", "1e999"] {
+            let line = format!(
+                r#"{{"v": 2, "id": 4, "deadline_ms": {d}, {payload}}}"#
+            );
+            let reply = client.roundtrip(&line).unwrap();
+            assert!(
+                reply.contains("\"ok\":false"),
+                "deadline {d}: {reply}"
+            );
+            assert!(reply.contains("deadline_ms"), "{reply}");
+        }
+        // A generous deadline admits and completes normally.
+        let line = format!(
+            r#"{{"v": 2, "id": 5, "deadline_ms": 60000, {payload}}}"#
+        );
+        let reply = client.roundtrip(&line).unwrap();
+        assert!(reply.contains("\"ok\":true"), "{reply}");
     }
 }

@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod expm;
 pub mod flow;
 pub mod linalg;
+pub mod loadgen;
 pub mod report;
 pub mod runtime;
 pub mod trace;

@@ -1,0 +1,631 @@
+//! Open-loop load generator with SLO reporting.
+//!
+//! Drives a daemon over the NDJSON TCP protocol with Poisson
+//! arrivals of mixed sizes, methods, tolerances, and deadlines, then
+//! reports p50/p95/p99 latency, goodput, and shed/error counts.
+//!
+//! The driver is *open-loop*: arrival times are drawn up front from
+//! an exponential inter-arrival distribution and each request is
+//! fired at its scheduled offset regardless of how the previous one
+//! fared. A closed-loop driver (wait for the reply, then send) would
+//! slow down exactly when the server struggles and hide the backlog
+//! the admission controller exists to bound; open-loop keeps the
+//! offered rate honest, which is what makes the shed counters and
+//! tail percentiles meaningful.
+//!
+//! Workloads reuse [`crate::trace::generate`], so a loadgen run
+//! offers the same matrix mix as the replay benchmarks. Results are
+//! persisted as `BENCH_<pr>.json` at the repo root (see
+//! [`write_bench`]) so runs can be diffed between PRs; the schema is
+//! checked by `tools/check_bench_json.py`.
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::Client;
+use crate::expm::Method;
+use crate::trace::{self, TraceKind};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Knobs for one load run.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Workload shape (matrix orders and batch sizes).
+    pub kind: TraceKind,
+    /// Offered rate in requests per second.
+    pub rate: f64,
+    /// How long to keep offering load.
+    pub duration: Duration,
+    /// Number of concurrent client connections.
+    pub conns: usize,
+    /// Seed for arrivals and workload generation.
+    pub seed: u64,
+    /// Cap on matrices per request (trace calls can be large).
+    pub max_matrices: usize,
+    /// Methods drawn uniformly per matrix.
+    pub methods: Vec<Method>,
+    /// Tolerances drawn uniformly per matrix.
+    pub tols: Vec<f64>,
+    /// Deadline attached to a fraction of requests, in ms.
+    pub deadline_ms: f64,
+    /// Fraction of requests carrying a deadline, in `[0, 1]`.
+    pub deadline_fraction: f64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            kind: TraceKind::Cifar10,
+            rate: 50.0,
+            duration: Duration::from_secs(2),
+            conns: 8,
+            seed: 42,
+            max_matrices: 8,
+            methods: Method::all_dynamic().to_vec(),
+            tols: vec![1e-6, 1e-8, 1e-10],
+            deadline_ms: 250.0,
+            deadline_fraction: 0.25,
+        }
+    }
+}
+
+/// One pre-built request: the wire frame, its scheduled send offset
+/// from the start of the run, and how many results a complete reply
+/// must carry.
+struct RequestSpec {
+    line: String,
+    offset_s: f64,
+    matrices: usize,
+}
+
+/// Outcome of one load run, plus enough of the config to label it.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Workload name (e.g. `CIFAR-10`).
+    pub kind_name: &'static str,
+    /// Offered rate in requests per second.
+    pub rate: f64,
+    /// Configured run duration in seconds.
+    pub duration_s: f64,
+    /// Concurrent connections used.
+    pub conns: usize,
+    /// Seed the workload was drawn with.
+    pub seed: u64,
+    /// Requests drawn from the Poisson process.
+    pub planned: usize,
+    /// Requests actually sent (== planned unless a worker died).
+    pub sent: u64,
+    /// Requests answered with a complete `ok` frame.
+    pub ok: u64,
+    /// Requests rejected by admission control (`"shed": true`).
+    pub shed: u64,
+    /// Requests that errored, were cut short, or hit I/O failure.
+    pub failed: u64,
+    /// Matrices exponentiated across all `ok` replies.
+    pub matrices_ok: u64,
+    /// Wall-clock seconds from first send to last reply.
+    pub wall_s: f64,
+    /// Worst lateness of any send vs. its scheduled offset.
+    pub max_lag_s: f64,
+    /// Per-request latency of each `ok` reply, seconds.
+    pub latencies_s: Vec<f64>,
+    /// `cmd:stats` frame fetched after the run, if the daemon was
+    /// still reachable.
+    pub server_stats: Option<Json>,
+}
+
+impl LoadReport {
+    /// Latency percentile over `ok` replies; `0.0` when none.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&self.latencies_s, p)
+        }
+    }
+
+    /// Mean latency over `ok` replies; `0.0` when none.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            let sum: f64 = self.latencies_s.iter().sum();
+            sum / self.latencies_s.len() as f64
+        }
+    }
+
+    /// Completed requests per wall-clock second.
+    pub fn goodput_rps(&self) -> f64 {
+        self.ok as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Exponentiated matrices per wall-clock second.
+    pub fn goodput_mps(&self) -> f64 {
+        self.matrices_ok as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Human-readable run summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "loadgen: {} @ {:.0} req/s for {:.1}s over {} conns \
+             (seed {})\n",
+            self.kind_name,
+            self.rate,
+            self.duration_s,
+            self.conns,
+            self.seed,
+        ));
+        out.push_str(&format!(
+            "requests: sent={} ok={} shed={} failed={} \
+             (planned {})\n",
+            self.sent, self.ok, self.shed, self.failed, self.planned,
+        ));
+        out.push_str(&format!(
+            "latency:  p50={:.3}ms p95={:.3}ms p99={:.3}ms \
+             mean={:.3}ms\n",
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.percentile(99.0) * 1e3,
+            self.mean_latency_s() * 1e3,
+        ));
+        out.push_str(&format!(
+            "goodput:  {:.1} req/s, {:.1} matrices/s over {:.2}s \
+             wall (max send lag {:.1}ms)\n",
+            self.goodput_rps(),
+            self.goodput_mps(),
+            self.wall_s,
+            self.max_lag_s * 1e3,
+        ));
+        out
+    }
+}
+
+/// Per-worker tally, merged across threads after the run.
+#[derive(Default)]
+struct Tally {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    failed: u64,
+    matrices_ok: u64,
+    max_lag_s: f64,
+    latencies_s: Vec<f64>,
+}
+
+impl Tally {
+    fn merge(&mut self, other: Tally) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.failed += other.failed;
+        self.matrices_ok += other.matrices_ok;
+        self.max_lag_s = self.max_lag_s.max(other.max_lag_s);
+        self.latencies_s.extend(other.latencies_s);
+    }
+
+    fn classify(&mut self, reply: &str, expected: usize, lat: Duration) {
+        let parsed = match json::parse(reply.trim()) {
+            Ok(v) => v,
+            Err(_) => {
+                self.failed += 1;
+                return;
+            }
+        };
+        if parsed.get("ok") == Some(&Json::Bool(true)) {
+            let n = parsed
+                .get("results")
+                .and_then(Json::as_arr)
+                .map(|r| r.len())
+                .unwrap_or(0);
+            if n == expected {
+                self.ok += 1;
+                self.matrices_ok += n as u64;
+                self.latencies_s.push(lat.as_secs_f64());
+            } else {
+                // A short reply is job loss, not success.
+                self.failed += 1;
+            }
+        } else if parsed.get("shed") == Some(&Json::Bool(true)) {
+            self.shed += 1;
+        } else {
+            self.failed += 1;
+        }
+    }
+}
+
+/// Build a v2 request frame from trace matrices.
+fn request_line(
+    id: usize,
+    call: &trace::TraceCall,
+    take: usize,
+    methods: &[Method],
+    tols: &[f64],
+    deadline_ms: Option<f64>,
+    rng: &mut Rng,
+) -> (String, usize) {
+    let mats = &call.matrices[..take];
+    let mut orders = Vec::with_capacity(take);
+    let mut data = Vec::with_capacity(take);
+    let mut method = Vec::with_capacity(take);
+    let mut tol = Vec::with_capacity(take);
+    for a in mats {
+        orders.push(Json::Num(a.order() as f64));
+        data.push(Json::Arr(
+            a.data().iter().map(|&x| Json::Num(x)).collect(),
+        ));
+        let m = methods[rng.below(methods.len())];
+        method.push(Json::Str(m.name().into()));
+        tol.push(Json::Num(tols[rng.below(tols.len())]));
+    }
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("v".into(), Json::Num(2.0));
+    obj.insert("id".into(), Json::Num(id as f64));
+    obj.insert("orders".into(), Json::Arr(orders));
+    obj.insert("matrices".into(), Json::Arr(data));
+    obj.insert("method".into(), Json::Arr(method));
+    obj.insert("tol".into(), Json::Arr(tol));
+    if let Some(ms) = deadline_ms {
+        obj.insert("deadline_ms".into(), Json::Num(ms));
+    }
+    (json::to_string(&Json::Obj(obj)), take)
+}
+
+/// Draw Poisson arrival offsets and pair each with a trace call.
+fn build_requests(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(cfg.seed);
+    let dur = cfg.duration.as_secs_f64().max(0.0);
+    let rate = cfg.rate.max(1e-9);
+    let mut offsets = Vec::new();
+    let mut t = 0.0;
+    loop {
+        // Exponential inter-arrival; guard u=0 so ln() stays finite.
+        let u = (1.0 - rng.uniform()).max(f64::MIN_POSITIVE);
+        t += -u.ln() / rate;
+        if t >= dur {
+            break;
+        }
+        offsets.push(t);
+    }
+    let methods = if cfg.methods.is_empty() {
+        Method::all_dynamic().to_vec()
+    } else {
+        cfg.methods.clone()
+    };
+    let tols = if cfg.tols.is_empty() {
+        vec![1e-8]
+    } else {
+        cfg.tols.clone()
+    };
+    let calls =
+        trace::generate(cfg.kind, offsets.len().max(1), cfg.seed ^ 0x10AD);
+    let mut specs = Vec::with_capacity(offsets.len());
+    for (i, &offset_s) in offsets.iter().enumerate() {
+        let call = &calls[i % calls.len()];
+        let take = call.matrices.len().min(cfg.max_matrices.max(1));
+        let deadline = if cfg.deadline_ms > 0.0
+            && rng.uniform() < cfg.deadline_fraction
+        {
+            Some(cfg.deadline_ms)
+        } else {
+            None
+        };
+        let (line, matrices) = request_line(
+            i, call, take, &methods, &tols, deadline, &mut rng,
+        );
+        specs.push(RequestSpec { line, offset_s, matrices });
+    }
+    specs
+}
+
+/// One worker: claim specs off the shared cursor, pace each to its
+/// scheduled offset, fire it, and classify the reply.
+fn worker_loop(
+    addr: SocketAddr,
+    specs: &[RequestSpec],
+    cursor: &AtomicUsize,
+    start: Instant,
+) -> Tally {
+    let mut tally = Tally::default();
+    let mut client = Client::connect(addr).ok();
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= specs.len() {
+            break;
+        }
+        let spec = &specs[i];
+        let target = start + Duration::from_secs_f64(spec.offset_s);
+        let now = Instant::now();
+        if now < target {
+            std::thread::sleep(target - now);
+        } else {
+            let lag = (now - target).as_secs_f64();
+            tally.max_lag_s = tally.max_lag_s.max(lag);
+        }
+        tally.sent += 1;
+        let outcome = match client.as_mut() {
+            None => None,
+            Some(c) => {
+                let sent_at = Instant::now();
+                match c.roundtrip(&spec.line) {
+                    Ok(r) if !r.is_empty() => {
+                        Some((r, sent_at.elapsed()))
+                    }
+                    _ => None,
+                }
+            }
+        };
+        match outcome {
+            Some((reply, lat)) => {
+                tally.classify(&reply, spec.matrices, lat);
+            }
+            None => {
+                // I/O failure (or no connection). Count the loss and
+                // reconnect once so one dropped connection does not
+                // fail every remaining request on this worker.
+                tally.failed += 1;
+                client = Client::connect(addr).ok();
+            }
+        }
+    }
+    tally
+}
+
+/// Run the load against a daemon at `addr` and collect the report.
+///
+/// Blocks for roughly `cfg.duration` plus the drain time of the
+/// final in-flight requests.
+pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
+    let specs = Arc::new(build_requests(cfg));
+    let planned = specs.len();
+    let cursor = Arc::new(AtomicUsize::new(0));
+    let start = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..cfg.conns.max(1) {
+        let specs = Arc::clone(&specs);
+        let cursor = Arc::clone(&cursor);
+        joins.push(std::thread::spawn(move || {
+            worker_loop(addr, &specs, &cursor, start)
+        }));
+    }
+    let mut tally = Tally::default();
+    for j in joins {
+        if let Ok(t) = j.join() {
+            tally.merge(t);
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let server_stats = Client::connect(addr)
+        .ok()
+        .and_then(|mut c| c.roundtrip(r#"{"cmd": "stats"}"#).ok())
+        .and_then(|r| json::parse(r.trim()).ok());
+    LoadReport {
+        kind_name: cfg.kind.name(),
+        rate: cfg.rate,
+        duration_s: cfg.duration.as_secs_f64(),
+        conns: cfg.conns.max(1),
+        seed: cfg.seed,
+        planned,
+        sent: tally.sent,
+        ok: tally.ok,
+        shed: tally.shed,
+        failed: tally.failed,
+        matrices_ok: tally.matrices_ok,
+        wall_s,
+        max_lag_s: tally.max_lag_s,
+        latencies_s: tally.latencies_s,
+        server_stats,
+    }
+}
+
+/// The `BENCH_<pr>.json` document for a run.
+///
+/// Schema (checked by `tools/check_bench_json.py`):
+/// `schema`, `pr`, `workload{..}`, `requests{sent,ok,shed,failed}`,
+/// `latency_s{p50,p95,p99,mean,max}`, `goodput{requests_per_s,
+/// matrices_per_s}`, `arrival{max_lag_s}`, `server_stats`.
+pub fn bench_json(report: &LoadReport, pr: usize) -> Json {
+    fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+    let workload = obj(vec![
+        ("kind", Json::Str(report.kind_name.into())),
+        ("rate_rps", Json::Num(report.rate)),
+        ("duration_s", Json::Num(report.duration_s)),
+        ("conns", Json::Num(report.conns as f64)),
+        ("seed", Json::Num(report.seed as f64)),
+        ("requests_planned", Json::Num(report.planned as f64)),
+    ]);
+    let requests = obj(vec![
+        ("sent", Json::Num(report.sent as f64)),
+        ("ok", Json::Num(report.ok as f64)),
+        ("shed", Json::Num(report.shed as f64)),
+        ("failed", Json::Num(report.failed as f64)),
+    ]);
+    let max_lat = report
+        .latencies_s
+        .iter()
+        .fold(0.0_f64, |m, &x| m.max(x));
+    let latency = obj(vec![
+        ("p50", Json::Num(report.percentile(50.0))),
+        ("p95", Json::Num(report.percentile(95.0))),
+        ("p99", Json::Num(report.percentile(99.0))),
+        ("mean", Json::Num(report.mean_latency_s())),
+        ("max", Json::Num(max_lat)),
+    ]);
+    let goodput = obj(vec![
+        ("requests_per_s", Json::Num(report.goodput_rps())),
+        ("matrices_per_s", Json::Num(report.goodput_mps())),
+    ]);
+    let arrival =
+        obj(vec![("max_lag_s", Json::Num(report.max_lag_s))]);
+    obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("pr", Json::Num(pr as f64)),
+        ("workload", workload),
+        ("requests", requests),
+        ("latency_s", latency),
+        ("goodput", goodput),
+        ("arrival", arrival),
+        (
+            "server_stats",
+            report.server_stats.clone().unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// Persist the run as a `BENCH_<pr>.json` document at `path`.
+pub fn write_bench(
+    path: &Path,
+    report: &LoadReport,
+    pr: usize,
+) -> std::io::Result<()> {
+    let doc = json::to_string(&bench_json(report, pr));
+    std::fs::write(path, doc + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_are_sorted_and_bounded() {
+        let cfg = LoadgenConfig {
+            rate: 200.0,
+            duration: Duration::from_millis(500),
+            ..LoadgenConfig::default()
+        };
+        let specs = build_requests(&cfg);
+        assert!(!specs.is_empty());
+        let mut prev = 0.0;
+        for s in &specs {
+            assert!(s.offset_s >= prev);
+            assert!(s.offset_s < 0.5);
+            assert!(s.matrices >= 1);
+            prev = s.offset_s;
+        }
+        // Deterministic for a fixed seed.
+        let again = build_requests(&cfg);
+        assert_eq!(specs.len(), again.len());
+        assert_eq!(specs[0].line, again[0].line);
+    }
+
+    #[test]
+    fn request_frames_parse_and_cap_matrices() {
+        let cfg = LoadgenConfig {
+            rate: 500.0,
+            duration: Duration::from_millis(200),
+            max_matrices: 2,
+            deadline_fraction: 1.0,
+            ..LoadgenConfig::default()
+        };
+        let specs = build_requests(&cfg);
+        assert!(!specs.is_empty());
+        for s in &specs {
+            let v = json::parse(&s.line).unwrap();
+            assert_eq!(v.get("v").and_then(Json::as_f64), Some(2.0));
+            let mats = v
+                .get("matrices")
+                .and_then(Json::as_arr)
+                .unwrap();
+            assert!(mats.len() <= 2);
+            assert_eq!(mats.len(), s.matrices);
+            let tols = v.get("tol").and_then(Json::as_arr).unwrap();
+            assert_eq!(tols.len(), mats.len());
+            for t in tols {
+                let t = t.as_f64().unwrap();
+                assert!(t.is_finite() && t > 0.0);
+            }
+            // deadline_fraction = 1.0 puts one on every request.
+            assert_eq!(
+                v.get("deadline_ms").and_then(Json::as_f64),
+                Some(250.0)
+            );
+        }
+    }
+
+    #[test]
+    fn tally_classifies_ok_shed_and_short_replies() {
+        let mut t = Tally::default();
+        let lat = Duration::from_millis(5);
+        t.classify(
+            r#"{"ok": true, "results": [{}, {}]}"#,
+            2,
+            lat,
+        );
+        t.classify(r#"{"ok": true, "results": [{}]}"#, 2, lat);
+        t.classify(
+            r#"{"ok": false, "shed": true, "error": "shed"}"#,
+            2,
+            lat,
+        );
+        t.classify(r#"{"ok": false, "error": "boom"}"#, 2, lat);
+        t.classify("not json", 2, lat);
+        assert_eq!(t.ok, 1);
+        assert_eq!(t.shed, 1);
+        assert_eq!(t.failed, 3);
+        assert_eq!(t.matrices_ok, 2);
+        assert_eq!(t.latencies_s.len(), 1);
+    }
+
+    #[test]
+    fn bench_json_has_required_schema() {
+        let report = LoadReport {
+            kind_name: "CIFAR-10",
+            rate: 50.0,
+            duration_s: 2.0,
+            conns: 4,
+            seed: 42,
+            planned: 100,
+            sent: 100,
+            ok: 90,
+            shed: 6,
+            failed: 4,
+            matrices_ok: 720,
+            wall_s: 2.1,
+            max_lag_s: 0.003,
+            latencies_s: vec![0.010, 0.020, 0.030],
+            server_stats: None,
+        };
+        let doc = bench_json(&report, 6);
+        for key in [
+            "schema",
+            "pr",
+            "workload",
+            "requests",
+            "latency_s",
+            "goodput",
+            "arrival",
+            "server_stats",
+        ] {
+            assert!(doc.get(key).is_some(), "missing {key}");
+        }
+        let req = doc.get("requests").unwrap();
+        let sum = ["ok", "shed", "failed"]
+            .iter()
+            .map(|k| req.get(k).and_then(Json::as_f64).unwrap())
+            .sum::<f64>();
+        assert_eq!(
+            req.get("sent").and_then(Json::as_f64),
+            Some(sum)
+        );
+        let lat = doc.get("latency_s").unwrap();
+        assert_eq!(
+            lat.get("p50").and_then(Json::as_f64),
+            Some(0.020)
+        );
+        // Round-trips through the serializer.
+        let text = json::to_string(&doc);
+        assert!(json::parse(&text).is_ok());
+    }
+}

@@ -11,13 +11,22 @@
 //!                          `--shards a:p,b:p` routes batch groups to a
 //!                          worker fleet (see docs/architecture.md);
 //!                          `--powers-cache N` sizes the cross-request
-//!                          powers cache (0 disables; default 256) and
+//!                          powers cache (0 disables; default 256),
 //!                          `--lane-queue N` bounds each execution
-//!                          lane's queue (default 256)
+//!                          lane's queue (default 256), and
+//!                          `--latency-budget MS` enables deadline-aware
+//!                          admission control (0 = off; shed frames
+//!                          carry `"shed": true`), with
+//!                          `--admission-queue N` as a hard backlog cap
 //!   worker --addr A        run one worker shard (same binary, same v2
 //!                          protocol; a worker is a daemon that serves
 //!                          compute and forwards nothing; same
-//!                          --powers-cache/--lane-queue knobs)
+//!                          --powers-cache/--lane-queue/
+//!                          --latency-budget knobs)
+//!   loadgen [--rate R]     open-loop Poisson load against a daemon
+//!                          (`--addr`, or an in-process one), reporting
+//!                          p50/p95/p99 latency, goodput, and shed
+//!                          counts, persisted as `BENCH_<pr>.json`
 //!   info                   artifact manifest + platform report
 
 use expmflow::coordinator::{ExpmService, ServiceConfig};
@@ -42,11 +51,12 @@ fn main() {
         "sample" => cmd_sample(&args),
         "daemon" => cmd_daemon(&args),
         "worker" => cmd_worker(&args),
+        "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command {other:?}");
             eprintln!(
-                "usage: expmflow <demo|serve|gallery|trace|flow|sample|daemon|worker|info> [--flags]"
+                "usage: expmflow <demo|serve|gallery|trace|flow|sample|daemon|worker|loadgen|info> [--flags]"
             );
             2
         }
@@ -295,6 +305,25 @@ fn cmd_sample(args: &Args) -> i32 {
     }
 }
 
+/// Admission-control knobs shared by `daemon`, `worker`, and the
+/// in-process daemon of `loadgen`: `--latency-budget MS` (0 disables,
+/// the default here is per-caller) and `--admission-queue N` (hard
+/// backlog cap; default unbounded).
+fn admission_from_args(
+    args: &Args,
+    default_budget_ms: f64,
+) -> (Option<std::time::Duration>, usize) {
+    let ms = args.get_f64("latency-budget", default_budget_ms);
+    let budget = if ms.is_finite() && ms > 0.0 {
+        // Same cap as the wire's `deadline_ms`: ~11.5 days, so the
+        // Duration conversion can never panic.
+        Some(std::time::Duration::from_secs_f64(ms.min(1e9) / 1e3))
+    } else {
+        None
+    };
+    (budget, args.get_usize("admission-queue", usize::MAX))
+}
+
 fn cmd_daemon(args: &Args) -> i32 {
     use expmflow::coordinator::server::Server;
     use expmflow::coordinator::RemoteConfig;
@@ -317,6 +346,8 @@ fn cmd_daemon(args: &Args) -> i32 {
     // default; `--powers-cache 0` turns it off.
     let powers_cache = args.get_usize("powers-cache", 256);
     let lane_queue_cap = args.get_usize("lane-queue", 256);
+    let (latency_budget, admission_queue_cap) =
+        admission_from_args(args, 0.0);
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -330,6 +361,8 @@ fn cmd_daemon(args: &Args) -> i32 {
         },
         powers_cache,
         lane_queue_cap,
+        latency_budget,
+        admission_queue_cap,
         ..Default::default()
     }));
     match Server::spawn(&addr, svc) {
@@ -347,6 +380,12 @@ fn cmd_daemon(args: &Args) -> i32 {
                     "off".into()
                 }
             );
+            if let Some(b) = latency_budget {
+                println!(
+                    "admission control: latency budget {:.0}ms",
+                    b.as_secs_f64() * 1e3
+                );
+            }
             if !shards.is_empty() {
                 println!(
                     "routing batch groups to {} worker shard(s): {}",
@@ -373,6 +412,8 @@ fn cmd_worker(args: &Args) -> i32 {
     use expmflow::coordinator::server::Server;
     let addr = args.get_str("addr", "127.0.0.1:7789").to_string();
     let native_only = args.has("native-only");
+    let (latency_budget, admission_queue_cap) =
+        admission_from_args(args, 0.0);
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -383,6 +424,8 @@ fn cmd_worker(args: &Args) -> i32 {
         // them, repeats included, so the cache defaults on here too.
         powers_cache: args.get_usize("powers-cache", 256),
         lane_queue_cap: args.get_usize("lane-queue", 256),
+        latency_budget,
+        admission_queue_cap,
         ..Default::default()
     }));
     match Server::spawn(&addr, svc) {
@@ -399,6 +442,104 @@ fn cmd_worker(args: &Args) -> i32 {
             eprintln!("cannot bind {addr}: {e}");
             1
         }
+    }
+}
+
+/// Open-loop load generator (see `rust/src/loadgen/`). With no
+/// `--addr` it spawns an in-process native-only daemon with admission
+/// control on (`--latency-budget`, default 250 ms) so a single command
+/// exercises the full shed path; `--addr HOST:PORT` targets a running
+/// daemon instead. The run is persisted as `BENCH_<pr>.json` at the
+/// current directory (override with `--out`).
+fn cmd_loadgen(args: &Args) -> i32 {
+    use expmflow::coordinator::server::Server;
+    use expmflow::loadgen::{self, LoadgenConfig};
+    let kind = match args.get_str("dataset", "cifar10") {
+        "cifar10" => TraceKind::Cifar10,
+        "imagenet32" => TraceKind::ImageNet32,
+        "imagenet64" => TraceKind::ImageNet64,
+        other => {
+            eprintln!("unknown dataset {other}");
+            return 2;
+        }
+    };
+    let duration_s = args.get_f64("duration", 2.0);
+    let duration_s = if duration_s.is_finite() {
+        duration_s.clamp(0.0, 3600.0)
+    } else {
+        2.0
+    };
+    let cfg = LoadgenConfig {
+        kind,
+        rate: args.get_f64("rate", 50.0).max(1e-3),
+        duration: std::time::Duration::from_secs_f64(duration_s),
+        conns: args.get_usize("conns", 4).max(1),
+        seed: args.get_usize("seed", 42) as u64,
+        max_matrices: args.get_usize("max-matrices", 8).max(1),
+        deadline_ms: args.get_f64("deadline-ms", 250.0),
+        deadline_fraction: args
+            .get_f64("deadline-fraction", 0.25)
+            .clamp(0.0, 1.0),
+        ..LoadgenConfig::default()
+    };
+    let pr = args.get_usize("pr", 6);
+    let out = match args.get_str("out", "") {
+        "" => format!("BENCH_{pr}.json"),
+        path => path.to_string(),
+    };
+    // Target: a running daemon via --addr, else an in-process one
+    // (kept alive in `server` until the run and stats fetch finish).
+    let mut server = None;
+    let addr = match args.get_str("addr", "") {
+        "" => {
+            let (latency_budget, admission_queue_cap) =
+                admission_from_args(args, 250.0);
+            let svc = std::sync::Arc::new(ExpmService::start(
+                ServiceConfig {
+                    artifact_dir: None,
+                    lane_queue_cap: args.get_usize("lane-queue", 256),
+                    latency_budget,
+                    admission_queue_cap,
+                    ..Default::default()
+                },
+            ));
+            match Server::spawn("127.0.0.1:0", svc) {
+                Ok(s) => {
+                    let addr = s.addr;
+                    server = Some(s);
+                    addr
+                }
+                Err(e) => {
+                    eprintln!("cannot spawn in-process daemon: {e}");
+                    return 1;
+                }
+            }
+        }
+        addr => match addr.parse() {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("bad --addr {addr}: {e}");
+                return 1;
+            }
+        },
+    };
+    let report = loadgen::run(addr, &cfg);
+    if let Some(mut s) = server.take() {
+        s.shutdown();
+    }
+    print!("{}", report.render());
+    match loadgen::write_bench(std::path::Path::new(&out), &report, pr)
+    {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            return 1;
+        }
+    }
+    if report.ok > 0 {
+        0
+    } else {
+        1
     }
 }
 

@@ -1,0 +1,147 @@
+//! Integration: the loadgen harness end-to-end against deadline-aware
+//! admission control. Overload against a tiny-budget daemon must shed
+//! with typed frames (`"shed": true`) while every admitted job
+//! completes (zero job loss), and the `cmd:stats` shed/admitted
+//! counters must reconcile with the client-observed outcomes. A
+//! light-load run pins the `BENCH_<pr>.json` document shape.
+
+use expmflow::coordinator::server::Server;
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::loadgen::{self, LoadgenConfig};
+use expmflow::trace::TraceKind;
+use expmflow::util::json::{self, Json};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn admission_server(
+    budget: Duration,
+    queue_cap: usize,
+) -> (Server, Arc<ExpmService>) {
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        latency_budget: Some(budget),
+        admission_queue_cap: queue_cap,
+        ..Default::default()
+    }));
+    let server = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    (server, svc)
+}
+
+fn get_num(v: &Json, path: &[&str]) -> f64 {
+    let mut cur = v;
+    for k in path {
+        cur = cur
+            .get(k)
+            .unwrap_or_else(|| panic!("missing key {k} in {cur:?}"));
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("{path:?} not a number"))
+}
+
+#[test]
+fn overload_sheds_typed_frames_with_zero_job_loss() {
+    // 1 ms budget and a backlog cap of 2: anything beyond a couple of
+    // in-flight jobs is shed. The workload is deliberately heavy
+    // (ImageNet64 orders, 8 matrices per request) and offered far
+    // beyond capacity, open-loop.
+    let (server, svc) =
+        admission_server(Duration::from_millis(1), 2);
+    let cfg = LoadgenConfig {
+        kind: TraceKind::ImageNet64,
+        rate: 1500.0,
+        duration: Duration::from_millis(400),
+        conns: 8,
+        seed: 7,
+        max_matrices: 8,
+        // No deadlines here: this test isolates the budget/cap path.
+        deadline_fraction: 0.0,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(server.addr, &cfg);
+
+    // Every planned request went out and was classified exactly once.
+    assert_eq!(report.sent, report.planned as u64);
+    assert_eq!(
+        report.sent,
+        report.ok + report.shed + report.failed,
+        "{report:?}"
+    );
+    // Overload must shed...
+    assert!(report.shed > 0, "no shed under overload: {report:?}");
+    // ...but never at the cost of admitted work: zero job loss means
+    // no errored, truncated, or dropped replies — only clean `ok`
+    // frames and typed shed frames.
+    assert_eq!(report.failed, 0, "job loss under overload: {report:?}");
+    assert!(report.ok >= 1, "nothing admitted at all: {report:?}");
+
+    // The daemon's own counters reconcile with what clients saw.
+    let stats = report.server_stats.as_ref().expect("stats frame");
+    assert_eq!(
+        get_num(stats, &["admission", "shed"]) as u64,
+        report.shed
+    );
+    assert_eq!(
+        get_num(stats, &["admission", "admitted"]) as u64,
+        report.ok
+    );
+    assert_eq!(
+        get_num(stats, &["admission", "submitted"]) as u64,
+        report.ok,
+        "every admitted job must reach submit()"
+    );
+    // The SLO surface is present and ordered.
+    let p50 = get_num(stats, &["latency", "p50_s"]);
+    let p99 = get_num(stats, &["latency", "p99_s"]);
+    assert!(p50 >= 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+    // And the service-side snapshot agrees with the wire.
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.shed, report.shed);
+    assert_eq!(snap.admitted, report.ok);
+}
+
+#[test]
+fn light_load_admits_everything_and_writes_bench_json() {
+    // A generous budget under light load: nothing sheds, and the run
+    // persists a well-formed BENCH document.
+    let (server, _svc) =
+        admission_server(Duration::from_secs(5), usize::MAX);
+    let cfg = LoadgenConfig {
+        kind: TraceKind::Cifar10,
+        rate: 40.0,
+        duration: Duration::from_millis(500),
+        conns: 2,
+        seed: 11,
+        max_matrices: 4,
+        deadline_ms: 60_000.0,
+        deadline_fraction: 0.25,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(server.addr, &cfg);
+    assert_eq!(report.sent, report.planned as u64);
+    assert!(report.ok >= 1, "{report:?}");
+    assert_eq!(report.failed, 0, "{report:?}");
+    assert_eq!(report.shed, 0, "light load must not shed: {report:?}");
+
+    let path = std::env::temp_dir().join("expmflow_bench_test.json");
+    loadgen::write_bench(&path, &report, 6).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let doc = json::parse(text.trim()).unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("pr").and_then(Json::as_f64), Some(6.0));
+    // requests reconcile inside the persisted document too.
+    let sent = get_num(&doc, &["requests", "sent"]);
+    let ok = get_num(&doc, &["requests", "ok"]);
+    let shed = get_num(&doc, &["requests", "shed"]);
+    let failed = get_num(&doc, &["requests", "failed"]);
+    assert_eq!(sent, ok + shed + failed);
+    // SLO percentiles are present and ordered.
+    let p50 = get_num(&doc, &["latency_s", "p50"]);
+    let p95 = get_num(&doc, &["latency_s", "p95"]);
+    let p99 = get_num(&doc, &["latency_s", "p99"]);
+    assert!(p50 > 0.0, "ok replies must yield latencies");
+    assert!(p95 >= p50 && p99 >= p95);
+    assert!(get_num(&doc, &["goodput", "requests_per_s"]) > 0.0);
+    assert!(get_num(&doc, &["goodput", "matrices_per_s"]) > 0.0);
+    // The stats frame is embedded for postmortems.
+    assert!(doc.get("server_stats").is_some());
+}

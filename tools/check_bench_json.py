@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Schema check for loadgen's BENCH_<pr>.json run documents.
+
+Validates that each given file is well-formed JSON carrying the SLO
+surface the loadgen harness promises (see rust/src/loadgen/): request
+counts that reconcile (sent == ok + shed + failed), ordered latency
+percentiles, and non-negative goodput. Exits non-zero listing every
+violation so a malformed bench artifact cannot land silently.
+
+Usage: tools/check_bench_json.py BENCH_6.json [more.json ...]
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# (object key, field, minimum) — every field must be a non-negative
+# number; counts are additionally checked to be integers.
+NUMBER_FIELDS = [
+    ("requests", "sent"),
+    ("requests", "ok"),
+    ("requests", "shed"),
+    ("requests", "failed"),
+    ("latency_s", "p50"),
+    ("latency_s", "p95"),
+    ("latency_s", "p99"),
+    ("latency_s", "mean"),
+    ("latency_s", "max"),
+    ("goodput", "requests_per_s"),
+    ("goodput", "matrices_per_s"),
+    ("arrival", "max_lag_s"),
+]
+COUNT_OBJS = {"requests"}
+
+
+def check(path: Path):
+    errors = []
+
+    def err(msg):
+        errors.append(f"{path}: {msg}")
+
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+
+    if doc.get("schema") != 1:
+        err(f"schema must be 1, got {doc.get('schema')!r}")
+    if not isinstance(doc.get("pr"), int) or doc.get("pr") < 0:
+        err(f"pr must be a non-negative integer, got {doc.get('pr')!r}")
+    for key in ("workload", "requests", "latency_s", "goodput", "arrival"):
+        if not isinstance(doc.get(key), dict):
+            err(f"missing or non-object {key!r}")
+    if "server_stats" not in doc:
+        err("missing 'server_stats' (object or null)")
+
+    for obj, field in NUMBER_FIELDS:
+        holder = doc.get(obj)
+        if not isinstance(holder, dict):
+            continue  # already reported above
+        val = holder.get(field)
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            err(f"{obj}.{field} must be a number, got {val!r}")
+        elif val < 0:
+            err(f"{obj}.{field} must be >= 0, got {val!r}")
+        elif obj in COUNT_OBJS and val != int(val):
+            err(f"{obj}.{field} must be an integer count, got {val!r}")
+
+    req = doc.get("requests")
+    if isinstance(req, dict) and all(
+        isinstance(req.get(k), (int, float))
+        for k in ("sent", "ok", "shed", "failed")
+    ):
+        total = req["ok"] + req["shed"] + req["failed"]
+        if req["sent"] != total:
+            err(
+                f"requests do not reconcile: sent={req['sent']} != "
+                f"ok+shed+failed={total}"
+            )
+
+    lat = doc.get("latency_s")
+    if isinstance(lat, dict) and all(
+        isinstance(lat.get(k), (int, float)) for k in ("p50", "p95", "p99")
+    ):
+        if not lat["p50"] <= lat["p95"] <= lat["p99"]:
+            err(
+                "latency percentiles out of order: "
+                f"p50={lat['p50']} p95={lat['p95']} p99={lat['p99']}"
+            )
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip())
+        return 2
+    failures = []
+    for name in argv[1:]:
+        failures.extend(check(Path(name)))
+    if failures:
+        print("\n".join(failures))
+        return 1
+    print(f"bench json ok ({len(argv) - 1} file(s) checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
