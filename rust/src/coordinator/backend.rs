@@ -106,6 +106,56 @@ pub trait Backend: Send + Sync {
     }
 }
 
+/// A shared backend is a backend. Lets the dispatcher keep a typed
+/// `Arc` to an engine (the elastic control plane holds the remote
+/// backend this way) while registering the same instance in the
+/// [`BackendRegistry`]. Every method forwards, so trait-object
+/// dispatch through `Box<Arc<T>>` hits the engine's own overrides —
+/// a derived impl that only forwarded the required methods would
+/// silently collapse a multi-lane backend to one lane.
+impl<T: Backend + ?Sized> Backend for std::sync::Arc<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn plan_hint(&self, shape: &GroupShape) -> bool {
+        (**self).plan_hint(shape)
+    }
+
+    fn execute_group(
+        &self,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+        (**self).execute_group(shape, mats, tols, powers)
+    }
+
+    fn lanes(&self) -> usize {
+        (**self).lanes()
+    }
+
+    fn lane_of(&self, shape: &GroupShape) -> usize {
+        (**self).lane_of(shape)
+    }
+
+    fn lane_name(&self, lane: usize) -> String {
+        (**self).lane_name(lane)
+    }
+
+    fn execute_lane(
+        &self,
+        lane: usize,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+        powers: &mut [Option<Powers>],
+    ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+        (**self).execute_lane(lane, shape, mats, tols, powers)
+    }
+}
+
 /// Execute e^W with a fixed plan on the native engine (no batching —
 /// the single-matrix reference the group paths are tested against).
 pub fn native_expm_planned(w: &Matrix, m: usize, s: u32) -> (Matrix, ExpmStats) {

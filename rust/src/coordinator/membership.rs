@@ -1,0 +1,764 @@
+//! Live fleet membership: the control-plane state behind the
+//! `register`/`deregister` wire frames.
+//!
+//! A coordinator daemon started elastic (`--elastic`, or any daemon
+//! with a `--member-token`) keeps a [`Membership`] table of worker
+//! shards. Workers join and leave at runtime; the table drives
+//!
+//! - **routing** — a consistent-hash ring over the healthy members
+//!   ([`Membership::route`]), rebuilt on every change so only the
+//!   groups owned by the joining/leaving member move
+//!   ([`RING_VNODES`] virtual nodes per member keep the movement near
+//!   the 1/N ideal; the rebuild test pins it exactly);
+//! - **failover** — ring successors ([`Membership::siblings`]) give a
+//!   failed shard's groups healthy siblings to retry on before the
+//!   group degrades to native;
+//! - **lanes** — [`ControlPlane`] spins scheduler lanes up and down as
+//!   members come and go, and keeps the remote backend's shard slots
+//!   in sync.
+//!
+//! Slots are append-only: a member keeps its slot index for the
+//! lifetime of the daemon (rejoining revives the same slot), so lane
+//! indices, ring points and per-shard stats stay stable across churn.
+//!
+//! Frame shapes, authentication and error cases are specified
+//! normatively in `docs/wire-protocol.md` ("Control frames").
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::remote::RemoteBackend;
+use crate::coordinator::scheduler::SchedulerHandle;
+
+/// Virtual ring points per healthy member. More points spread each
+/// member's arc more evenly and shrink the set of groups that move on
+/// a membership change toward the 1/N ideal.
+pub const RING_VNODES: usize = 64;
+
+/// Bounded length of the membership event log surfaced in `cmd:stats`.
+pub const EVENT_LOG_CAP: usize = 128;
+
+/// Consecutive transport failures after which a healthy member is
+/// evicted from the ring (an explicit `register` revives it).
+pub const EVICT_AFTER_FAILURES: u32 = 8;
+
+/// Health state of one member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// In the ring: receives new groups.
+    Healthy,
+    /// Leaving gracefully: out of the ring (no new groups) but still
+    /// executing whatever is already queued on its lane.
+    Draining,
+    /// Out of the fleet: out of the ring and refused at execution
+    /// time. Rejoining via `register` revives the same slot.
+    Removed,
+}
+
+impl MemberState {
+    /// Stable lowercase name used on the wire and in logs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MemberState::Healthy => "healthy",
+            MemberState::Draining => "draining",
+            MemberState::Removed => "removed",
+        }
+    }
+}
+
+/// Read-only view of one member, as surfaced in `cmd:stats`.
+#[derive(Clone, Debug)]
+pub struct MemberView {
+    /// Worker address (`host:port`).
+    pub addr: String,
+    /// Stable slot index (also the backend lane index).
+    pub slot: usize,
+    /// Current health state.
+    pub state: MemberState,
+    /// Largest matrix order the member announced it accepts.
+    pub max_order: usize,
+    /// Times this member joined (first join + every rejoin).
+    pub joins: u64,
+    /// Times this member left via `deregister` (drain or remove).
+    pub leaves: u64,
+    /// Times this member was evicted for repeated failures.
+    pub evicts: u64,
+}
+
+/// One entry of the bounded membership event log.
+#[derive(Clone, Debug)]
+pub struct MembershipEvent {
+    /// Monotonic sequence number (never reused, survives log pruning).
+    pub seq: u64,
+    /// Event kind: `join`, `rejoin`, `drain`, `leave`, or `evict`.
+    pub kind: &'static str,
+    /// The member the event concerns.
+    pub addr: String,
+    /// Human-readable detail (slot, failure count, …).
+    pub detail: String,
+}
+
+/// Point-in-time copy of the membership table for stats rendering.
+#[derive(Clone, Debug)]
+pub struct MembershipSnapshot {
+    /// Ring epoch: bumped on every rebuild (join/leave/evict).
+    pub epoch: u64,
+    /// Every slot ever occupied, in slot order.
+    pub members: Vec<MemberView>,
+    /// Addresses currently in the ring (healthy members, slot order).
+    pub ring: Vec<String>,
+    /// Most recent events, oldest first (bounded by [`EVENT_LOG_CAP`]).
+    pub events: Vec<MembershipEvent>,
+}
+
+/// Outcome of [`Membership::register`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Registration {
+    /// A new address joined and was assigned a fresh slot.
+    Joined(usize),
+    /// A draining/removed/evicted member revived its old slot.
+    Rejoined(usize),
+    /// The address is already healthy — idempotent, nothing changed.
+    Duplicate(usize),
+}
+
+impl Registration {
+    /// The member's slot, whichever way registration resolved.
+    pub fn slot(self) -> usize {
+        match self {
+            Registration::Joined(s)
+            | Registration::Rejoined(s)
+            | Registration::Duplicate(s) => s,
+        }
+    }
+}
+
+struct Member {
+    addr: String,
+    state: MemberState,
+    max_order: usize,
+    /// Consecutive transport failures since the last success.
+    failures: u32,
+    joins: u64,
+    leaves: u64,
+    evicts: u64,
+}
+
+struct Inner {
+    members: Vec<Member>,
+    by_addr: HashMap<String, usize>,
+    /// Sorted `(vnode hash, slot)` points over the healthy members.
+    ring: Vec<(u64, usize)>,
+    epoch: u64,
+    events: VecDeque<MembershipEvent>,
+    next_event: u64,
+}
+
+/// The membership table: addresses, health states, and the
+/// consistent-hash ring derived from them. Shared (`Arc`) between the
+/// wire server, the remote backend's router, and the scheduler's
+/// control plane.
+pub struct Membership {
+    token: Option<String>,
+    inner: Mutex<Inner>,
+}
+
+/// FNV-1a over raw bytes — the same hash family as the group router in
+/// the remote backend, so ring placement is deterministic across every
+/// coordinator of a fleet.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// First ring point at or clockwise-after `hash` (with wraparound).
+fn ring_start(ring: &[(u64, usize)], hash: u64) -> usize {
+    let i = ring.partition_point(|&(h, _)| h < hash);
+    if i == ring.len() {
+        0
+    } else {
+        i
+    }
+}
+
+impl Membership {
+    /// An empty table. With `Some(token)`, every `register`/
+    /// `deregister` must present the matching token; with `None` the
+    /// control frames are unauthenticated (loopback deployments).
+    pub fn new(token: Option<String>) -> Membership {
+        Membership {
+            token,
+            inner: Mutex::new(Inner {
+                members: Vec::new(),
+                by_addr: HashMap::new(),
+                ring: Vec::new(),
+                epoch: 0,
+                events: VecDeque::new(),
+                next_event: 0,
+            }),
+        }
+    }
+
+    /// Validate a control frame's token against the configured one.
+    /// A daemon without a token accepts anything (including a stray
+    /// token field, per the ignore-unknown rule's spirit).
+    pub fn check_token(&self, provided: Option<&str>) -> Result<(), String> {
+        match (&self.token, provided) {
+            (None, _) => Ok(()),
+            (Some(want), Some(got)) if want == got => Ok(()),
+            (Some(_), Some(_)) => Err("bad membership token".into()),
+            (Some(_), None) => {
+                Err("missing membership token ('token' field)".into())
+            }
+        }
+    }
+
+    /// Join (or revive) `addr`, announcing it accepts orders up to
+    /// `max_order`. Idempotent for an already-healthy member.
+    pub fn register(&self, addr: &str, max_order: usize) -> Registration {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&slot) = inner.by_addr.get(addr) {
+            let m = &mut inner.members[slot];
+            m.max_order = max_order;
+            m.failures = 0;
+            if m.state == MemberState::Healthy {
+                return Registration::Duplicate(slot);
+            }
+            m.state = MemberState::Healthy;
+            m.joins += 1;
+            Self::push_event(
+                &mut inner,
+                "rejoin",
+                addr,
+                format!("slot {slot} revived"),
+            );
+            Self::rebuild_ring(&mut inner);
+            return Registration::Rejoined(slot);
+        }
+        let slot = inner.members.len();
+        inner.members.push(Member {
+            addr: addr.to_string(),
+            state: MemberState::Healthy,
+            max_order,
+            failures: 0,
+            joins: 1,
+            leaves: 0,
+            evicts: 0,
+        });
+        inner.by_addr.insert(addr.to_string(), slot);
+        Self::push_event(
+            &mut inner,
+            "join",
+            addr,
+            format!("slot {slot}, max_order {max_order}"),
+        );
+        Self::rebuild_ring(&mut inner);
+        Registration::Joined(slot)
+    }
+
+    /// Leave the fleet: `drain` keeps queued work running on the
+    /// member's lane (state [`MemberState::Draining`]) while routing
+    /// no new groups to it; without `drain` the member is removed
+    /// outright. Unknown or already-removed addresses are stale
+    /// frames and answer `Err`.
+    pub fn deregister(
+        &self,
+        addr: &str,
+        drain: bool,
+    ) -> Result<usize, String> {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = *inner
+            .by_addr
+            .get(addr)
+            .ok_or_else(|| format!("unknown member {addr}"))?;
+        let m = &mut inner.members[slot];
+        let next = if drain {
+            MemberState::Draining
+        } else {
+            MemberState::Removed
+        };
+        if m.state == MemberState::Removed {
+            return Err(format!("member {addr} already left the fleet"));
+        }
+        if m.state == next {
+            return Err(format!("member {addr} is already draining"));
+        }
+        m.state = next;
+        m.leaves += 1;
+        let kind = if drain { "drain" } else { "leave" };
+        Self::push_event(
+            &mut inner,
+            kind,
+            addr,
+            format!("slot {slot} -> {}", next.as_str()),
+        );
+        Self::rebuild_ring(&mut inner);
+        Ok(slot)
+    }
+
+    /// A round-trip to `slot` succeeded: reset its failure streak.
+    pub fn note_ok(&self, slot: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = inner.members.get_mut(slot) {
+            m.failures = 0;
+        }
+    }
+
+    /// A round-trip to `slot` failed at the transport layer. After
+    /// [`EVICT_AFTER_FAILURES`] consecutive failures a healthy member
+    /// is evicted from the ring (returns `true`); an explicit
+    /// `register` is then required to revive it.
+    pub fn note_failure(&self, slot: usize) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(m) = inner.members.get_mut(slot) else {
+            return false;
+        };
+        if m.state != MemberState::Healthy {
+            return false;
+        }
+        m.failures += 1;
+        if m.failures < EVICT_AFTER_FAILURES {
+            return false;
+        }
+        m.state = MemberState::Removed;
+        m.evicts += 1;
+        let addr = m.addr.clone();
+        let failures = m.failures;
+        Self::push_event(
+            &mut inner,
+            "evict",
+            &addr,
+            format!("slot {slot} after {failures} failures"),
+        );
+        Self::rebuild_ring(&mut inner);
+        true
+    }
+
+    /// The slot owning `hash` on the ring; `None` while no member is
+    /// healthy.
+    pub fn route(&self, hash: u64) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        if inner.ring.is_empty() {
+            return None;
+        }
+        let i = ring_start(&inner.ring, hash);
+        Some(inner.ring[i].1)
+    }
+
+    /// Ring successors of `hash`, excluding slot `exclude`: the
+    /// failover order for a group whose primary shard failed. Every
+    /// healthy member other than `exclude` appears exactly once,
+    /// nearest successor first.
+    pub fn siblings(&self, hash: u64, exclude: usize) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        let ring = &inner.ring;
+        if ring.is_empty() {
+            return Vec::new();
+        }
+        let start = ring_start(ring, hash);
+        let mut out = Vec::new();
+        for step in 0..ring.len() {
+            let slot = ring[(start + step) % ring.len()].1;
+            if slot != exclude && !out.contains(&slot) {
+                out.push(slot);
+            }
+        }
+        out
+    }
+
+    /// Whether `slot` is healthy (in the ring).
+    pub fn is_active(&self, slot: usize) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .members
+            .get(slot)
+            .map(|m| m.state == MemberState::Healthy)
+            .unwrap_or(false)
+    }
+
+    /// Whether `slot` may still *execute* queued groups: healthy or
+    /// draining, but not removed/evicted.
+    pub fn allows_execution(&self, slot: usize) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .members
+            .get(slot)
+            .map(|m| m.state != MemberState::Removed)
+            .unwrap_or(false)
+    }
+
+    /// Whether `slot` is healthy and accepts order-`n` matrices.
+    pub fn accepts(&self, slot: usize, n: usize) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .members
+            .get(slot)
+            .map(|m| m.state == MemberState::Healthy && n <= m.max_order)
+            .unwrap_or(false)
+    }
+
+    /// The address occupying `slot`, if any was ever assigned.
+    pub fn addr_of(&self, slot: usize) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        inner.members.get(slot).map(|m| m.addr.clone())
+    }
+
+    /// Number of healthy members.
+    pub fn active_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .members
+            .iter()
+            .filter(|m| m.state == MemberState::Healthy)
+            .count()
+    }
+
+    /// Current ring epoch (bumped on every rebuild).
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Copy of the table for `cmd:stats`.
+    pub fn snapshot(&self) -> MembershipSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MembershipSnapshot {
+            epoch: inner.epoch,
+            members: inner
+                .members
+                .iter()
+                .enumerate()
+                .map(|(slot, m)| MemberView {
+                    addr: m.addr.clone(),
+                    slot,
+                    state: m.state,
+                    max_order: m.max_order,
+                    joins: m.joins,
+                    leaves: m.leaves,
+                    evicts: m.evicts,
+                })
+                .collect(),
+            ring: inner
+                .members
+                .iter()
+                .filter(|m| m.state == MemberState::Healthy)
+                .map(|m| m.addr.clone())
+                .collect(),
+            events: inner.events.iter().cloned().collect(),
+        }
+    }
+
+    fn push_event(
+        inner: &mut Inner,
+        kind: &'static str,
+        addr: &str,
+        detail: String,
+    ) {
+        let seq = inner.next_event;
+        inner.next_event += 1;
+        inner.events.push_back(MembershipEvent {
+            seq,
+            kind,
+            addr: addr.to_string(),
+            detail,
+        });
+        while inner.events.len() > EVENT_LOG_CAP {
+            inner.events.pop_front();
+        }
+    }
+
+    /// Rebuild the sorted vnode ring from the healthy members and bump
+    /// the epoch. Vnode hashes depend only on `(addr, vnode index)`,
+    /// so an unchanged member contributes exactly the same points
+    /// before and after — that is the minimal-movement property the
+    /// rebuild test pins.
+    fn rebuild_ring(inner: &mut Inner) {
+        let mut points = Vec::new();
+        for (slot, m) in inner.members.iter().enumerate() {
+            if m.state != MemberState::Healthy {
+                continue;
+            }
+            for v in 0..RING_VNODES {
+                let key = format!("{}#{v}", m.addr);
+                points.push((fnv1a(key.as_bytes()), slot));
+            }
+        }
+        points.sort_unstable();
+        inner.ring = points;
+        inner.epoch += 1;
+    }
+}
+
+/// Ack returned to a successfully registered worker.
+#[derive(Clone, Copy, Debug)]
+pub struct RegisterAck {
+    /// The slot (and backend lane index) the worker occupies.
+    pub slot: usize,
+    /// Healthy members after the registration.
+    pub members: usize,
+    /// Ring epoch after the registration.
+    pub epoch: u64,
+    /// `true` when the register was an idempotent duplicate.
+    pub duplicate: bool,
+}
+
+/// Glue between the membership table and the running service: applies
+/// `register`/`deregister` frames by updating the table, syncing the
+/// remote backend's shard slots, and spinning scheduler lanes up and
+/// down. Held by the wire server via `ExpmService::control_plane`.
+pub struct ControlPlane {
+    membership: Arc<Membership>,
+    remote: Arc<RemoteBackend>,
+    scheduler: SchedulerHandle,
+    /// The remote backend's index in the registry (its lane group).
+    backend_index: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl ControlPlane {
+    /// Wire the control plane to a running scheduler + remote backend.
+    pub fn new(
+        membership: Arc<Membership>,
+        remote: Arc<RemoteBackend>,
+        scheduler: SchedulerHandle,
+        backend_index: usize,
+        metrics: Arc<Metrics>,
+    ) -> ControlPlane {
+        ControlPlane { membership, remote, scheduler, backend_index, metrics }
+    }
+
+    /// Apply a `register` frame: authenticate, join (or revive) the
+    /// member, create its shard slot and scheduler lane, count the
+    /// join. Duplicate registers ack without side effects.
+    pub fn register_worker(
+        &self,
+        addr: &str,
+        token: Option<&str>,
+        max_order: usize,
+    ) -> Result<RegisterAck, String> {
+        if let Err(e) = self.membership.check_token(token) {
+            self.metrics.record_register_rejected();
+            return Err(e);
+        }
+        let reg = self.membership.register(addr, max_order);
+        let duplicate = matches!(reg, Registration::Duplicate(_));
+        let slot = reg.slot();
+        if !duplicate {
+            self.remote.ensure_slot(slot, addr);
+            self.scheduler.add_lane(
+                self.backend_index,
+                slot,
+                format!("remote:{addr}"),
+            );
+            self.metrics.record_membership_join();
+        }
+        Ok(RegisterAck {
+            slot,
+            members: self.membership.active_count(),
+            epoch: self.membership.epoch(),
+            duplicate,
+        })
+    }
+
+    /// Apply a `deregister` frame: authenticate, mark the member
+    /// draining/removed, retire its lane (queued groups still drain),
+    /// count the leave. Returns the freed slot.
+    pub fn deregister_worker(
+        &self,
+        addr: &str,
+        token: Option<&str>,
+        drain: bool,
+    ) -> Result<usize, String> {
+        if let Err(e) = self.membership.check_token(token) {
+            self.metrics.record_register_rejected();
+            return Err(e);
+        }
+        let slot = self.membership.deregister(addr, drain)?;
+        self.scheduler.retire_lane(self.backend_index, slot);
+        self.metrics.record_membership_leave();
+        Ok(slot)
+    }
+
+    /// The membership table behind this control plane.
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hashes(count: u64) -> Vec<u64> {
+        (0..count).map(|i| fnv1a(&i.to_le_bytes())).collect()
+    }
+
+    #[test]
+    fn empty_ring_routes_nothing() {
+        let m = Membership::new(None);
+        assert_eq!(m.route(42), None);
+        assert!(m.siblings(42, 0).is_empty());
+        assert_eq!(m.active_count(), 0);
+    }
+
+    #[test]
+    fn ring_rebuild_moves_only_the_departed_members_groups() {
+        let m = Membership::new(None);
+        let a = m.register("hosta:7789", 4096).slot();
+        let b = m.register("hostb:7789", 4096).slot();
+        let c = m.register("hostc:7789", 4096).slot();
+        let keys = hashes(1000);
+        let before: Vec<usize> =
+            keys.iter().map(|&h| m.route(h).unwrap()).collect();
+        // Every member owns a share of the keyspace.
+        for slot in [a, b, c] {
+            assert!(before.contains(&slot), "slot {slot} owns nothing");
+        }
+        // Removing B must not move any group owned by A or C.
+        m.deregister("hostb:7789", false).unwrap();
+        let mut moved = 0usize;
+        for (&h, &was) in keys.iter().zip(&before) {
+            let now = m.route(h).unwrap();
+            if was == b {
+                assert_ne!(now, b, "removed member still routed");
+                moved += 1;
+            } else {
+                assert_eq!(now, was, "unrelated group moved");
+            }
+        }
+        assert!(moved > 0);
+        // Reviving B restores the original routing exactly: the only
+        // groups that move back are the ones B owned before.
+        assert_eq!(
+            m.register("hostb:7789", 4096),
+            Registration::Rejoined(b)
+        );
+        for (&h, &was) in keys.iter().zip(&before) {
+            assert_eq!(m.route(h), Some(was));
+        }
+    }
+
+    #[test]
+    fn siblings_are_distinct_healthy_and_exclude_the_primary() {
+        let m = Membership::new(None);
+        m.register("a:1", 4096);
+        m.register("b:1", 4096);
+        m.register("c:1", 4096);
+        for &h in &hashes(50) {
+            let primary = m.route(h).unwrap();
+            let sibs = m.siblings(h, primary);
+            assert_eq!(sibs.len(), 2, "{sibs:?}");
+            assert!(!sibs.contains(&primary));
+            assert_ne!(sibs[0], sibs[1]);
+        }
+        // A draining member leaves the failover order too.
+        m.deregister("b:1", true).unwrap();
+        let h = hashes(1)[0];
+        let primary = m.route(h).unwrap();
+        let sibs = m.siblings(h, primary);
+        assert_eq!(sibs.len(), 1);
+        assert_ne!(m.addr_of(sibs[0]).unwrap(), "b:1");
+    }
+
+    #[test]
+    fn duplicate_register_is_idempotent() {
+        let m = Membership::new(None);
+        let first = m.register("a:1", 4096);
+        assert_eq!(first, Registration::Joined(0));
+        let epoch = m.epoch();
+        // Same address again: same slot, no ring rebuild, but the
+        // announced capability refreshes.
+        assert_eq!(m.register("a:1", 64), Registration::Duplicate(0));
+        assert_eq!(m.epoch(), epoch);
+        assert_eq!(m.active_count(), 1);
+        assert!(m.accepts(0, 64));
+        assert!(!m.accepts(0, 65));
+    }
+
+    #[test]
+    fn stale_and_unknown_deregisters_error() {
+        let m = Membership::new(None);
+        assert!(m.deregister("ghost:1", false).is_err());
+        m.register("a:1", 4096);
+        m.deregister("a:1", false).unwrap();
+        // Second leave is stale: the member already left.
+        let err = m.deregister("a:1", false).unwrap_err();
+        assert!(err.contains("already left"), "{err}");
+        // But an explicit rejoin revives the same slot.
+        assert_eq!(m.register("a:1", 4096), Registration::Rejoined(0));
+        assert!(m.is_active(0));
+    }
+
+    #[test]
+    fn token_gate_rejects_bad_and_missing_tokens() {
+        let m = Membership::new(Some("s3cret".into()));
+        assert!(m.check_token(None).is_err());
+        assert!(m.check_token(Some("wrong")).is_err());
+        assert!(m.check_token(Some("s3cret")).is_ok());
+        // A daemon without a token accepts anything.
+        let open = Membership::new(None);
+        assert!(open.check_token(None).is_ok());
+        assert!(open.check_token(Some("whatever")).is_ok());
+    }
+
+    #[test]
+    fn repeated_failures_evict_until_explicit_rejoin() {
+        let m = Membership::new(None);
+        m.register("a:1", 4096);
+        m.register("b:1", 4096);
+        // Successes reset the streak.
+        for _ in 0..EVICT_AFTER_FAILURES - 1 {
+            assert!(!m.note_failure(0));
+        }
+        m.note_ok(0);
+        for _ in 0..EVICT_AFTER_FAILURES - 1 {
+            assert!(!m.note_failure(0));
+        }
+        assert!(m.is_active(0));
+        // One more crosses the threshold: evicted, out of the ring.
+        assert!(m.note_failure(0));
+        assert!(!m.is_active(0));
+        assert_eq!(m.active_count(), 1);
+        // Further failures on an evicted member are no-ops.
+        assert!(!m.note_failure(0));
+        let snap = m.snapshot();
+        assert_eq!(snap.members[0].evicts, 1);
+        assert!(snap.events.iter().any(|e| e.kind == "evict"));
+        // Only an explicit register revives it.
+        assert_eq!(m.register("a:1", 4096), Registration::Rejoined(0));
+        assert!(m.is_active(0));
+    }
+
+    #[test]
+    fn drain_keeps_execution_but_not_routing() {
+        let m = Membership::new(None);
+        m.register("a:1", 4096);
+        m.deregister("a:1", true).unwrap();
+        assert!(!m.is_active(0));
+        assert!(m.allows_execution(0));
+        assert_eq!(m.route(7), None);
+        // Finalizing the drain removes execution rights too.
+        m.deregister("a:1", false).unwrap();
+        assert!(!m.allows_execution(0));
+    }
+
+    #[test]
+    fn event_log_is_bounded_with_monotonic_seq() {
+        let m = Membership::new(None);
+        m.register("a:1", 4096);
+        for _ in 0..EVENT_LOG_CAP {
+            m.deregister("a:1", false).unwrap();
+            m.register("a:1", 4096);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.events.len(), EVENT_LOG_CAP);
+        for w in snap.events.windows(2) {
+            assert!(w[1].seq > w[0].seq);
+        }
+    }
+}

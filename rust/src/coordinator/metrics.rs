@@ -106,6 +106,12 @@ struct Inner {
     submitted: u64,
     admitted: u64,
     shed: u64,
+    cancelled_expired: u64,
+    sibling_retries: u64,
+    membership_joins: u64,
+    membership_leaves: u64,
+    membership_evicts: u64,
+    register_rejected: u64,
     batcher_depth: u64,
     degree_hist: BTreeMap<usize, u64>,
     scaling_hist: BTreeMap<u32, u64>,
@@ -225,6 +231,21 @@ pub struct Snapshot {
     pub admitted: u64,
     /// Jobs shed by admission control instead of being queued.
     pub shed: u64,
+    /// Queued groups cancelled at pull time because every job deadline
+    /// in them had already lapsed (post-admission enforcement).
+    pub cancelled_expired: u64,
+    /// Remote groups retried on a sibling shard after their primary
+    /// failed a round-trip (each attempt counts once).
+    pub sibling_retries: u64,
+    /// Workers that joined (or rejoined) the fleet via `register`.
+    pub membership_joins: u64,
+    /// Workers that left the fleet via `deregister` (drain or remove).
+    pub membership_leaves: u64,
+    /// Workers evicted from the ring after repeated transport failures.
+    pub membership_evicts: u64,
+    /// `register`/`deregister` frames refused by the membership token
+    /// gate.
+    pub register_rejected: u64,
 }
 
 impl Metrics {
@@ -351,6 +372,38 @@ impl Metrics {
         self.inner.lock().unwrap().shed += 1;
     }
 
+    /// One queued group cancelled before execution because every job
+    /// deadline in it had already lapsed.
+    pub fn record_cancelled_expired(&self) {
+        self.inner.lock().unwrap().cancelled_expired += 1;
+    }
+
+    /// One retry of a remote group on a sibling shard after its
+    /// primary failed.
+    pub fn record_sibling_retry(&self) {
+        self.inner.lock().unwrap().sibling_retries += 1;
+    }
+
+    /// One worker joined (or rejoined) the fleet.
+    pub fn record_membership_join(&self) {
+        self.inner.lock().unwrap().membership_joins += 1;
+    }
+
+    /// One worker left the fleet via `deregister`.
+    pub fn record_membership_leave(&self) {
+        self.inner.lock().unwrap().membership_leaves += 1;
+    }
+
+    /// One worker evicted after repeated transport failures.
+    pub fn record_membership_evict(&self) {
+        self.inner.lock().unwrap().membership_evicts += 1;
+    }
+
+    /// One control frame refused by the membership token gate.
+    pub fn record_register_rejected(&self) {
+        self.inner.lock().unwrap().register_rejected += 1;
+    }
+
     /// Dispatcher gauge: matrices currently waiting in open batch groups.
     pub fn set_batcher_depth(&self, depth: u64) {
         self.inner.lock().unwrap().batcher_depth = depth;
@@ -403,6 +456,12 @@ impl Metrics {
             submitted: g.submitted,
             admitted: g.admitted,
             shed: g.shed,
+            cancelled_expired: g.cancelled_expired,
+            sibling_retries: g.sibling_retries,
+            membership_joins: g.membership_joins,
+            membership_leaves: g.membership_leaves,
+            membership_evicts: g.membership_evicts,
+            register_rejected: g.register_rejected,
         }
     }
 }
@@ -432,6 +491,13 @@ impl Snapshot {
             "admission: submitted={} admitted={} shed={}\n",
             self.submitted, self.admitted, self.shed
         ));
+        s.push_str(&format!(
+            "membership: joins={} leaves={} evicts={} rejected={}\n",
+            self.membership_joins,
+            self.membership_leaves,
+            self.membership_evicts,
+            self.register_rejected
+        ));
         s.push_str("degree histogram:");
         for (m, c) in &self.degree_hist {
             s.push_str(&format!(" m={m}:{c}"));
@@ -446,8 +512,12 @@ impl Snapshot {
         }
         s.push('\n');
         s.push_str(&format!(
-            "rejected_frames={} remote_fallbacks={}\n",
-            self.rejected_frames, self.remote_fallbacks
+            "rejected_frames={} remote_fallbacks={} sibling_retries={} \
+             cancelled_expired={}\n",
+            self.rejected_frames,
+            self.remote_fallbacks,
+            self.sibling_retries,
+            self.cancelled_expired
         ));
         s.push_str(&format!(
             "powers_cache: hits={} misses={} evictions={}\n",
@@ -623,6 +693,33 @@ mod tests {
             out.contains("admission: submitted=2 admitted=1 shed=1"),
             "{out}"
         );
+    }
+
+    #[test]
+    fn membership_and_failover_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_membership_join();
+        m.record_membership_join();
+        m.record_membership_leave();
+        m.record_membership_evict();
+        m.record_register_rejected();
+        m.record_sibling_retry();
+        m.record_sibling_retry();
+        m.record_cancelled_expired();
+        let s = m.snapshot();
+        assert_eq!(s.membership_joins, 2);
+        assert_eq!(s.membership_leaves, 1);
+        assert_eq!(s.membership_evicts, 1);
+        assert_eq!(s.register_rejected, 1);
+        assert_eq!(s.sibling_retries, 2);
+        assert_eq!(s.cancelled_expired, 1);
+        let out = s.render();
+        assert!(
+            out.contains("membership: joins=2 leaves=1 evicts=1 rejected=1"),
+            "{out}"
+        );
+        assert!(out.contains("sibling_retries=2"), "{out}");
+        assert!(out.contains("cancelled_expired=1"), "{out}");
     }
 
     #[test]

@@ -34,6 +34,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod job;
+pub mod membership;
 pub mod metrics;
 pub mod remote;
 pub mod request;
@@ -43,13 +44,14 @@ pub mod server;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::expm::powers_cache::PowersCache;
 use crate::linalg::Matrix;
 use backend::{BackendRegistry, NativeBackend, PjrtBackend};
 use batcher::{BatchPolicy, Batcher, Item};
+use membership::{ControlPlane, Membership};
 use metrics::Metrics;
 use request::Collector;
 use scheduler::Scheduler;
@@ -59,6 +61,7 @@ pub use job::{
     JobResponse, JobSpec, JobUpdate, MatrixSpec, ServiceClosed,
     SubmitError, Ticket,
 };
+pub use membership::MembershipSnapshot;
 pub use remote::{RemoteBackend, RemoteConfig};
 pub use request::MatrixResult;
 pub use selector::Plan;
@@ -99,6 +102,18 @@ pub struct ServiceConfig {
     /// have completed to estimate a delay. Effectively unbounded by
     /// default.
     pub admission_queue_cap: usize,
+    /// Enable the elastic membership control plane even with no
+    /// statically configured shards: workers may then join and leave
+    /// via `register`/`deregister` control frames. A non-empty
+    /// [`ServiceConfig::remote`] fleet or a
+    /// [`ServiceConfig::member_token`] enables the control plane on
+    /// its own — this flag exists for the zero-seed case.
+    pub elastic: bool,
+    /// Shared secret for `register`/`deregister` frames. `Some` implies
+    /// [`ServiceConfig::elastic`] and requires every control frame to
+    /// carry the matching `token` field; `None` with `elastic` accepts
+    /// unauthenticated frames (trusted networks, tests).
+    pub member_token: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -111,6 +126,8 @@ impl Default for ServiceConfig {
             lane_queue_cap: 256,
             latency_budget: None,
             admission_queue_cap: usize::MAX,
+            elastic: false,
+            member_token: None,
         }
     }
 }
@@ -139,6 +156,10 @@ pub struct ExpmService {
     next_id: AtomicU64,
     latency_budget: Option<std::time::Duration>,
     admission_queue_cap: usize,
+    /// The elastic control plane, filled by the dispatcher once the
+    /// scheduler is running (empty on non-elastic services and again
+    /// after shutdown).
+    control: Arc<Mutex<Option<Arc<ControlPlane>>>>,
 }
 
 impl ExpmService {
@@ -150,10 +171,18 @@ impl ExpmService {
         let m2 = metrics.clone();
         let latency_budget = config.latency_budget;
         let admission_queue_cap = config.admission_queue_cap;
+        let control: Arc<Mutex<Option<Arc<ControlPlane>>>> =
+            Arc::new(Mutex::new(None));
+        let c2 = control.clone();
+        // Block until the dispatcher has built its backends and filled
+        // (or declined) the control-plane slot, so a register frame
+        // arriving right after `start` returns never races the setup.
+        let (ready_tx, ready_rx) = channel::<()>();
         let worker = std::thread::Builder::new()
             .name("expm-dispatch".into())
-            .spawn(move || dispatcher(rx, config, m2))
+            .spawn(move || dispatcher(rx, config, m2, c2, ready_tx))
             .expect("spawn dispatcher");
+        let _ = ready_rx.recv();
         ExpmService {
             tx,
             worker: Some(worker),
@@ -161,7 +190,17 @@ impl ExpmService {
             next_id: AtomicU64::new(1),
             latency_budget,
             admission_queue_cap,
+            control,
         }
+    }
+
+    /// The membership control plane, once the dispatcher has started
+    /// it. `None` on a non-elastic service (no shards, no
+    /// [`ServiceConfig::elastic`]) and after shutdown — the server
+    /// front-end then answers control frames with an error instead of
+    /// mutating a stopped fleet.
+    pub fn control_plane(&self) -> Option<Arc<ControlPlane>> {
+        self.control.lock().unwrap().clone()
     }
 
     /// Submit a job; the [`Ticket`] streams per-matrix results as batch
@@ -252,24 +291,48 @@ impl Drop for ExpmService {
 /// derived from the *oldest open group*, and expiry is checked on every
 /// iteration, so a steady stream of non-matching jobs can never starve a
 /// partially filled group past `max_wait`).
-fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
+fn dispatcher(
+    rx: Receiver<Msg>,
+    config: ServiceConfig,
+    metrics: Arc<Metrics>,
+    control: Arc<Mutex<Option<Arc<ControlPlane>>>>,
+    ready_tx: Sender<()>,
+) {
     let mut registry = BackendRegistry::new();
     // Registration order is routing priority. A configured shard fleet
     // registers first — shards exist to take load off this host — then
     // the local PJRT engine, then native last (accepts everything, so
     // routing and fail-soft degradation always terminate).
-    if let Some(rc) = &config.remote {
-        if rc.shards.is_empty() {
+    //
+    // An elastic service registers the remote backend even with zero
+    // seed shards: the fleet then grows entirely through `register`
+    // control frames.
+    let elastic = config.elastic || config.member_token.is_some();
+    let remote_cfg = match &config.remote {
+        Some(rc) if !rc.shards.is_empty() => Some(rc.clone()),
+        Some(rc) if elastic => Some(rc.clone()),
+        Some(_) => {
             eprintln!(
                 "expm-service: remote backend configured with no shards; \
                  ignoring"
             );
-        } else {
-            registry.register(Box::new(RemoteBackend::new(
-                rc.clone(),
-                metrics.clone(),
-            )));
+            None
         }
+        None if elastic => Some(RemoteConfig::new(Vec::<String>::new())),
+        None => None,
+    };
+    let mut remote_parts = None;
+    if let Some(rc) = remote_cfg {
+        let membership =
+            Arc::new(Membership::new(config.member_token.clone()));
+        let backend = Arc::new(RemoteBackend::with_membership(
+            rc,
+            metrics.clone(),
+            membership.clone(),
+        ));
+        let index = registry.len();
+        registry.register(Box::new(backend.clone()));
+        remote_parts = Some((backend, membership, index));
     }
     if let Some(dir) = &config.artifact_dir {
         match PjrtBackend::from_dir(dir.clone()) {
@@ -290,6 +353,19 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
         metrics.clone(),
         config.lane_queue_cap,
     );
+    // Any service with a remote backend — explicitly elastic or
+    // seeded via `--shards` — gets the control plane: a fleet that
+    // exists can always be grown or drained over the wire.
+    if let Some((backend, membership, index)) = remote_parts {
+        *control.lock().unwrap() = Some(Arc::new(ControlPlane::new(
+            membership,
+            backend,
+            scheduler.handle(),
+            index,
+            metrics.clone(),
+        )));
+    }
+    let _ = ready_tx.send(());
     let cache = if config.powers_cache > 0 {
         Some(PowersCache::new(config.powers_cache))
     } else {
@@ -402,6 +478,9 @@ fn dispatcher(rx: Receiver<Msg>, config: ServiceConfig, metrics: Arc<Metrics>) {
         // current: matrices parked in open groups are backlog too.
         metrics.set_batcher_depth(batcher.len() as u64);
     }
+    // Membership operations stop first: a register frame arriving
+    // during drain must not spin up lanes on a stopping scheduler.
+    control.lock().unwrap().take();
     // Hand every open group to the lanes, then wait for all in-flight
     // work (including fail-soft re-submissions) before joining them.
     scheduler.submit_wave(batcher.drain_all());

@@ -15,21 +15,37 @@
 //!
 //! Groups are assigned to shards by an FNV-1a hash of the batch group's
 //! execution shape `(method, n, m, s)` — the same key the batcher groups
-//! on — so a given shape consistently lands on the same worker and its
-//! compile/workspace caches stay warm. Sastre et al. (arXiv:2512.20777)
-//! make batch-level throughput the optimization target; routing whole
-//! groups (never splitting one) keeps each worker's batched engine at
-//! full group width.
+//! on — placed on the membership table's consistent-hash ring
+//! ([`super::membership::Membership`]), so a given shape consistently
+//! lands on the same worker and its compile/workspace caches stay warm,
+//! and a membership change (a worker registering or leaving at runtime)
+//! moves only the groups the changed member owns. Sastre et al.
+//! (arXiv:2512.20777) make batch-level throughput the optimization
+//! target; routing whole groups (never splitting one) keeps each
+//! worker's batched engine at full group width.
+//!
+//! Shard slots are append-only and stay aligned with membership slots:
+//! a worker that drains and rejoins reuses its slot (and its lane), so
+//! per-shard stats and queued groups never shift indices under churn.
 //!
 //! ## Failure semantics (fail-soft)
 //!
 //! Every failure path degrades instead of losing work:
 //!
-//! - A failed round-trip (connect, I/O timeout, malformed reply) returns
-//!   `Err` from [`RemoteBackend::execute_group`]; the dispatcher's
-//!   `BackendRegistry` then re-executes the *same group* on the next
-//!   accepting backend (ultimately native, which accepts everything).
-//!   The untouched `powers` cache is deliberately left for that fallback.
+//! - A failed round-trip (connect, I/O timeout, malformed reply) first
+//!   retries the group on up to [`MAX_SIBLING_RETRIES`] healthy ring
+//!   successors of the failed shard — workers re-plan
+//!   deterministically, so a sibling's results are bitwise-identical
+//!   to the primary's. Only when no sibling can take the group does
+//!   [`RemoteBackend::execute_group`] return `Err`, making the
+//!   dispatcher's `BackendRegistry` re-execute the *same group* on the
+//!   next accepting backend (ultimately native, which accepts
+//!   everything). The untouched `powers` cache is deliberately left
+//!   for that fallback.
+//! - Repeated transport failures
+//!   ([`EVICT_AFTER_FAILURES`](super::membership::EVICT_AFTER_FAILURES))
+//!   evict the member from the ring entirely; an explicit `register`
+//!   frame revives it.
 //! - Transport failures open an exponential backoff window on the shard
 //!   ([`RemoteConfig::backoff_base`] doubling up to
 //!   [`RemoteConfig::backoff_max`]); while it is down,
@@ -64,7 +80,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::expm::eval::Powers;
@@ -73,8 +89,16 @@ use crate::linalg::Matrix;
 use crate::util::json::{self, Json};
 
 use super::backend::{Backend, GroupShape};
+use super::membership::Membership;
 use super::metrics::Metrics;
 use super::server::{Client, MAX_WIRE_ORDER};
+
+/// How many healthy ring successors a failed shard's group tries
+/// before degrading to the next backend (ultimately native). Two keeps
+/// the worst case bounded at three round-trip timeouts per group while
+/// covering the common case — one dead shard in an otherwise healthy
+/// fleet — on the first retry.
+pub const MAX_SIBLING_RETRIES: usize = 2;
 
 /// Configuration of the sharded remote backend.
 #[derive(Clone, Debug)]
@@ -275,7 +299,13 @@ impl Shard {
 /// beyond the wire limit) fails soft to the backends after it.
 pub struct RemoteBackend {
     cfg: RemoteConfig,
-    shards: Vec<Shard>,
+    /// Slot-indexed shard table, aligned with the membership table's
+    /// slots. Append-only (a leaving member keeps its slot reserved),
+    /// so concurrently held indices never dangle; `Arc` lets a lane
+    /// thread hold its shard across a round-trip without pinning the
+    /// read lock.
+    shards: RwLock<Vec<Arc<Shard>>>,
+    membership: Arc<Membership>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
@@ -298,18 +328,69 @@ fn group_hash(shape: &GroupShape) -> u64 {
 }
 
 impl RemoteBackend {
-    /// Build the backend for `cfg.shards`; per-shard counters land in
-    /// `metrics`. An empty shard list yields a backend that accepts
-    /// nothing (the dispatcher skips registering it).
+    /// Build the backend for `cfg.shards` with a private membership
+    /// table (static topology, as configured at startup); per-shard
+    /// counters land in `metrics`. An empty shard list yields a
+    /// backend that accepts nothing (a non-elastic dispatcher skips
+    /// registering it).
     pub fn new(cfg: RemoteConfig, metrics: Arc<Metrics>) -> RemoteBackend {
-        let shards =
-            cfg.shards.iter().cloned().map(Shard::new).collect();
-        RemoteBackend { cfg, shards, metrics, next_id: AtomicU64::new(1) }
+        RemoteBackend::with_membership(
+            cfg,
+            metrics,
+            Arc::new(Membership::new(None)),
+        )
     }
 
-    /// Consistent shard assignment for a group shape.
-    fn shard_of(&self, shape: &GroupShape) -> usize {
-        (group_hash(shape) % self.shards.len() as u64) as usize
+    /// Build the backend around an externally owned membership table —
+    /// the elastic control plane's, which `register`/`deregister`
+    /// frames mutate at runtime. The statically configured
+    /// `cfg.shards` seed the table in slot order, so `--shards` and
+    /// live registration compose.
+    pub fn with_membership(
+        cfg: RemoteConfig,
+        metrics: Arc<Metrics>,
+        membership: Arc<Membership>,
+    ) -> RemoteBackend {
+        let seeds = cfg.shards.clone();
+        let backend = RemoteBackend {
+            cfg,
+            shards: RwLock::new(Vec::new()),
+            membership,
+            metrics,
+            next_id: AtomicU64::new(1),
+        };
+        for addr in seeds {
+            let slot =
+                backend.membership.register(&addr, MAX_WIRE_ORDER).slot();
+            backend.ensure_slot(slot, &addr);
+        }
+        backend
+    }
+
+    /// Create (or revive) the shard state for membership slot `slot`.
+    /// Slots arrive densely in assignment order (the membership table
+    /// hands them out sequentially); a revived slot keeps its pooled
+    /// connections' shard but clears any stale backoff so the next
+    /// group probes the replacement worker immediately.
+    pub fn ensure_slot(&self, slot: usize, addr: &str) {
+        let mut shards = self.shards.write().unwrap();
+        debug_assert!(slot <= shards.len(), "non-dense shard slot");
+        if slot >= shards.len() {
+            shards.push(Arc::new(Shard::new(addr.to_string())));
+        } else {
+            shards[slot].mark_ok();
+        }
+    }
+
+    /// The shard occupying `slot`, if any.
+    fn shard_at(&self, slot: usize) -> Option<Arc<Shard>> {
+        self.shards.read().unwrap().get(slot).cloned()
+    }
+
+    /// Consistent shard assignment for a group shape: its hash's owner
+    /// on the membership ring (`None` while no member is healthy).
+    fn route_slot(&self, shape: &GroupShape) -> Option<usize> {
+        self.membership.route(group_hash(shape))
     }
 
     /// One group round-trip against `shard`, reusing a pooled connection
@@ -370,6 +451,78 @@ impl RemoteBackend {
             }
             Err(e) => Err(e),
         }
+    }
+
+    /// Failover pass after a transport failure on slot `failed`: walk
+    /// the ring successors (nearest first) and retry the group on up
+    /// to [`MAX_SIBLING_RETRIES`] healthy siblings. `Some` carries the
+    /// first sibling's successful results — bitwise identical to what
+    /// the failed shard would have produced, since workers re-plan
+    /// deterministically from the same `(method, n, m, s)` shape.
+    /// `None` means no sibling could serve the group (or one answered
+    /// with a group-level rejection, which is deterministic and would
+    /// repeat on every sibling) and the caller should fall back.
+    fn try_siblings(
+        &self,
+        failed: usize,
+        shape: &GroupShape,
+        mats: &[Matrix],
+        tols: &[f64],
+    ) -> Option<Vec<(Matrix, ExpmStats)>> {
+        let mut tried = 0;
+        for slot in self.membership.siblings(group_hash(shape), failed) {
+            if tried >= MAX_SIBLING_RETRIES {
+                break;
+            }
+            if !self.membership.accepts(slot, shape.n) {
+                continue;
+            }
+            let Some(shard) = self.shard_at(slot) else { continue };
+            if !shard.usable_now() {
+                continue;
+            }
+            tried += 1;
+            self.metrics.record_sibling_retry();
+            let started = Instant::now();
+            match self.try_shard(&shard, shape, mats, tols) {
+                Ok(results) => {
+                    shard.mark_ok();
+                    self.membership.note_ok(slot);
+                    self.metrics
+                        .record_shard_ok(&shard.addr, started.elapsed());
+                    return Some(results);
+                }
+                Err(RtError::Group(e)) => {
+                    // The sibling is healthy and rejected the group —
+                    // a deterministic verdict every other sibling
+                    // would repeat. Abort the failover pass.
+                    shard.mark_ok();
+                    self.membership.note_ok(slot);
+                    eprintln!(
+                        "expm-remote: sibling {} rejected the group: {e}",
+                        shard.addr
+                    );
+                    return None;
+                }
+                Err(RtError::Stale(e)) | Err(RtError::Shard(e)) => {
+                    shard.mark_failed(&self.cfg);
+                    self.metrics.record_shard_error(&shard.addr);
+                    if self.membership.note_failure(slot) {
+                        self.metrics.record_membership_evict();
+                        eprintln!(
+                            "expm-remote: shard {} evicted from the ring \
+                             after repeated failures",
+                            shard.addr
+                        );
+                    }
+                    eprintln!(
+                        "expm-remote: sibling {} also failed: {e}",
+                        shard.addr
+                    );
+                }
+            }
+        }
+        None
     }
 }
 
@@ -451,29 +604,40 @@ impl Backend for RemoteBackend {
         "remote"
     }
 
-    /// Accepts a shape when its assigned shard exists, is not backing
-    /// off, and the order fits the wire limit. A declined shape routes
-    /// straight to the next backend without paying a connect timeout.
+    /// Accepts a shape when the ring routes it to a healthy member
+    /// that advertises a sufficient order limit, whose shard is not
+    /// backing off, and the order fits the wire limit. A declined
+    /// shape routes straight to the next backend without paying a
+    /// connect timeout.
     fn plan_hint(&self, shape: &GroupShape) -> bool {
-        !self.shards.is_empty()
-            && shape.n <= MAX_WIRE_ORDER
-            && self.shards[self.shard_of(shape)].usable_now()
+        if shape.n > MAX_WIRE_ORDER {
+            return false;
+        }
+        let Some(slot) = self.route_slot(shape) else { return false };
+        self.membership.accepts(slot, shape.n)
+            && self.shard_at(slot).is_some_and(|s| s.usable_now())
     }
 
-    /// One lane per worker shard, so the scheduler overlaps round-trips
-    /// against different shards.
+    /// One lane per worker slot (living or departed — slots are
+    /// append-only), so the scheduler overlaps round-trips against
+    /// different shards.
     fn lanes(&self) -> usize {
-        self.shards.len()
+        self.shards.read().unwrap().len()
     }
 
-    /// The lane is the consistent shard assignment — the same hash that
-    /// routes the group, so a lane only queues groups its shard serves.
+    /// The lane is the ring's shard assignment — the same hash that
+    /// routes the group, so a lane only queues groups its shard
+    /// serves. With no active member the group still needs a queue
+    /// slot (lane 0) so fail-soft can degrade it to the next backend.
     fn lane_of(&self, shape: &GroupShape) -> usize {
-        self.shard_of(shape)
+        self.route_slot(shape).unwrap_or(0)
     }
 
     fn lane_name(&self, lane: usize) -> String {
-        format!("remote:{}", self.shards[lane].addr)
+        match self.shards.read().unwrap().get(lane) {
+            Some(shard) => format!("remote:{}", shard.addr),
+            None => format!("remote:slot{lane}"),
+        }
     }
 
     fn execute_group(
@@ -483,10 +647,15 @@ impl Backend for RemoteBackend {
         tols: &[f64],
         powers: &mut [Option<Powers>],
     ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
-        if self.shards.is_empty() {
-            return Err("no shards configured".into());
+        match self.route_slot(shape) {
+            Some(slot) => {
+                self.execute_lane(slot, shape, mats, tols, powers)
+            }
+            None => {
+                self.metrics.record_remote_fallback();
+                Err("no active shards in the ring".into())
+            }
         }
-        self.execute_lane(self.shard_of(shape), shape, mats, tols, powers)
     }
 
     fn execute_lane(
@@ -503,9 +672,21 @@ impl Backend for RemoteBackend {
                 shape.n
             ));
         }
-        let shard = &self.shards[lane];
-        // Re-checked here (not just in plan_hint): the shard may have
-        // gone down between routing and execution.
+        let Some(shard) = self.shard_at(lane) else {
+            self.metrics.record_remote_fallback();
+            return Err(format!("no shard occupies slot {lane}"));
+        };
+        // Re-checked here (not just in plan_hint): the member may have
+        // been removed between routing and execution. Draining members
+        // still execute — their queued work should land on the worker
+        // before it goes away.
+        if !self.membership.allows_execution(lane) {
+            self.metrics.record_remote_fallback();
+            return Err(format!(
+                "shard {} has left the fleet",
+                shard.addr
+            ));
+        }
         if !shard.usable_now() {
             self.metrics.record_remote_fallback();
             return Err(format!(
@@ -514,9 +695,10 @@ impl Backend for RemoteBackend {
             ));
         }
         let started = Instant::now();
-        match self.try_shard(shard, shape, mats, tols) {
+        match self.try_shard(&shard, shape, mats, tols) {
             Ok(results) => {
                 shard.mark_ok();
+                self.membership.note_ok(lane);
                 self.metrics
                     .record_shard_ok(&shard.addr, started.elapsed());
                 Ok(results)
@@ -525,8 +707,10 @@ impl Backend for RemoteBackend {
                 // The shard answered; only this group's reply is
                 // unusable (explicit rejection, non-finite results).
                 // Fall back without opening a backoff window — the
-                // shard stays in rotation for other groups.
+                // shard stays in rotation for other groups. No sibling
+                // retry either: the verdict is deterministic.
                 shard.mark_ok();
+                self.membership.note_ok(lane);
                 self.metrics.record_remote_fallback();
                 Err(format!(
                     "shard {}: {e} (group falls back, shard healthy)",
@@ -536,6 +720,19 @@ impl Backend for RemoteBackend {
             Err(RtError::Stale(e)) | Err(RtError::Shard(e)) => {
                 let backoff = shard.mark_failed(&self.cfg);
                 self.metrics.record_shard_error(&shard.addr);
+                if self.membership.note_failure(lane) {
+                    self.metrics.record_membership_evict();
+                    eprintln!(
+                        "expm-remote: shard {} evicted from the ring \
+                         after repeated failures",
+                        shard.addr
+                    );
+                }
+                if let Some(out) =
+                    self.try_siblings(lane, shape, mats, tols)
+                {
+                    return Ok(out);
+                }
                 self.metrics.record_remote_fallback();
                 Err(format!(
                     "shard {}: {e} (backing off {backoff:?})",
@@ -721,6 +918,43 @@ mod tests {
         assert!(
             !backend.plan_hint(&sh),
             "failed shard must back off at plan time"
+        );
+    }
+
+    #[test]
+    fn failed_shard_retries_on_healthy_sibling() {
+        // Two members: a dead port and a live worker. A group routed
+        // to the dead slot must fail over to the sibling and succeed
+        // without ever counting a native fallback.
+        let worker_svc = Arc::new(ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            ..Default::default()
+        }));
+        let worker = Server::spawn("127.0.0.1:0", worker_svc).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let backend = RemoteBackend::new(
+            RemoteConfig::new([
+                "127.0.0.1:1".to_string(),
+                worker.addr.to_string(),
+            ]),
+            metrics.clone(),
+        );
+        // Scan scaling counts until the ring routes a shape to the
+        // dead member's slot (slot 0 — seeded first).
+        let sh = (0..200)
+            .map(|s| shape(4, 4, s))
+            .find(|sh| backend.lane_of(sh) == 0)
+            .expect("some shape must route to slot 0");
+        let mats = vec![randm(4, 0.5, 7)];
+        let out = backend
+            .execute_group(&sh, &mats, &[1e-8], &mut vec![None])
+            .expect("sibling must absorb the group");
+        assert_eq!(out.len(), 1);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.sibling_retries, 1);
+        assert_eq!(
+            snap.remote_fallbacks, 0,
+            "a successful sibling retry is not a fallback"
         );
     }
 

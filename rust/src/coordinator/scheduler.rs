@@ -24,10 +24,19 @@
 //! Shutdown: `shutdown` blocks until every submitted group has resolved
 //! (delivered or failed) — including groups still bouncing through
 //! fail-soft re-submission — then parks and joins the lane threads.
+//!
+//! Elasticity: the lane pool is no longer frozen at startup. A
+//! [`SchedulerHandle`] (cloneable, held by the membership control
+//! plane) spins up a lane when a worker registers mid-run and retires
+//! one when a worker drains out. A retired lane finishes whatever its
+//! queue holds, then exits; groups routed at a missing or closed lane
+//! degrade down the backend order exactly like a failed execution, so
+//! membership churn never strands a sealed group.
 
 use std::cmp::Reverse;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::expm::eval::Powers;
@@ -152,19 +161,28 @@ struct Lane {
     name: String,
     /// Registry index of the backend this lane executes on.
     backend: usize,
-    /// Which of the backend's lanes this is (the shard index for the
+    /// Which of the backend's lanes this is (the shard slot for the
     /// remote backend).
     backend_lane: usize,
     queue: Mutex<Vec<SealedGroup>>,
     cv: Condvar,
+    /// Raised by [`SchedulerHandle::retire_lane`] (under the queue
+    /// lock): the lane refuses new groups, drains its queue and exits.
+    closed: AtomicBool,
 }
 
 struct Shared {
     registry: Arc<BackendRegistry>,
-    lanes: Vec<Lane>,
-    /// Registry index -> id of the backend's first lane (a backend's
-    /// lanes are contiguous).
-    lane_base: Vec<usize>,
+    /// Append-only lane table: a retired lane keeps its entry (its
+    /// thread may still be draining), a revived one gets a fresh entry.
+    lanes: RwLock<Vec<Arc<Lane>>>,
+    /// `(backend, backend_lane)` -> index of the currently *open* lane
+    /// in `lanes`. Retiring removes the mapping, so a rejoining worker
+    /// gets a fresh lane instead of racing the draining one.
+    lane_index: Mutex<HashMap<(usize, usize), usize>>,
+    /// Lane thread handles, joined at shutdown (including threads of
+    /// already-retired lanes).
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     queue_cap: usize,
@@ -179,7 +197,89 @@ struct Shared {
 /// service always shuts down explicitly.
 pub struct Scheduler {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable handle for runtime lane management — how the membership
+/// control plane grows and shrinks the pool while the scheduler keeps
+/// running. Outliving the scheduler is safe: operations on a stopped
+/// pool are no-ops.
+#[derive(Clone)]
+pub struct SchedulerHandle {
+    shared: Arc<Shared>,
+}
+
+impl SchedulerHandle {
+    /// Ensure an open lane exists for `(backend, backend_lane)`,
+    /// spawning its thread if needed. Idempotent: a second call while
+    /// the lane is open does nothing; after [`Self::retire_lane`] it
+    /// creates a fresh lane (the retired one finishes draining
+    /// independently).
+    pub fn add_lane(
+        &self,
+        backend: usize,
+        backend_lane: usize,
+        name: String,
+    ) {
+        let mut index = self.shared.lane_index.lock().unwrap();
+        if let Some(&idx) = index.get(&(backend, backend_lane)) {
+            let open = self
+                .shared
+                .lanes
+                .read()
+                .unwrap()
+                .get(idx)
+                .is_some_and(|l| !l.closed.load(Ordering::SeqCst));
+            if open {
+                return;
+            }
+        }
+        let lane = Arc::new(Lane {
+            name,
+            backend,
+            backend_lane,
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        let idx = {
+            let mut lanes = self.shared.lanes.write().unwrap();
+            lanes.push(lane.clone());
+            lanes.len() - 1
+        };
+        index.insert((backend, backend_lane), idx);
+        drop(index);
+        let shared = self.shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("expm-lane-{}", lane.name))
+            .spawn(move || lane_loop(&lane, &shared))
+            .expect("spawn lane thread");
+        self.shared.handles.lock().unwrap().push(handle);
+    }
+
+    /// Close the lane for `(backend, backend_lane)`: it accepts no new
+    /// groups, drains what it holds, then its thread exits. Returns
+    /// whether an open lane was retired. Groups later routed at the
+    /// retired slot degrade down the backend order.
+    pub fn retire_lane(&self, backend: usize, backend_lane: usize) -> bool {
+        let lane = {
+            let mut index = self.shared.lane_index.lock().unwrap();
+            let Some(idx) = index.remove(&(backend, backend_lane)) else {
+                return false;
+            };
+            self.shared.lanes.read().unwrap().get(idx).cloned()
+        };
+        match lane {
+            Some(lane) => {
+                // Under the queue lock so no enqueue lands between the
+                // flag and the wakeup.
+                let _q = lane.queue.lock().unwrap();
+                lane.closed.store(true, Ordering::SeqCst);
+                lane.cv.notify_all();
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 impl Scheduler {
@@ -196,25 +296,11 @@ impl Scheduler {
         queue_cap: usize,
     ) -> Scheduler {
         assert!(!registry.is_empty(), "no backends registered");
-        let mut lanes = Vec::new();
-        let mut lane_base = Vec::with_capacity(registry.len());
-        for idx in 0..registry.len() {
-            lane_base.push(lanes.len());
-            let backend = registry.get(idx);
-            for l in 0..backend.lanes().max(1) {
-                lanes.push(Lane {
-                    name: backend.lane_name(l),
-                    backend: idx,
-                    backend_lane: l,
-                    queue: Mutex::new(Vec::new()),
-                    cv: Condvar::new(),
-                });
-            }
-        }
         let shared = Arc::new(Shared {
-            registry,
-            lanes,
-            lane_base,
+            registry: registry.clone(),
+            lanes: RwLock::new(Vec::new()),
+            lane_index: Mutex::new(HashMap::new()),
+            handles: Mutex::new(Vec::new()),
             policy,
             metrics,
             queue_cap: queue_cap.max(1),
@@ -223,24 +309,31 @@ impl Scheduler {
             pending: Mutex::new(0),
             pending_cv: Condvar::new(),
         });
-        let handles = (0..shared.lanes.len())
-            .map(|lane_id| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!(
-                        "expm-lane-{}",
-                        shared.lanes[lane_id].name
-                    ))
-                    .spawn(move || lane_loop(lane_id, &shared))
-                    .expect("spawn lane thread")
-            })
-            .collect();
-        Scheduler { shared, handles }
+        let scheduler = Scheduler { shared };
+        let handle = scheduler.handle();
+        for idx in 0..registry.len() {
+            let backend = registry.get(idx);
+            for l in 0..backend.lanes().max(1) {
+                handle.add_lane(idx, l, backend.lane_name(l));
+            }
+        }
+        scheduler
     }
 
-    /// Lane labels in lane order (metrics/debugging).
+    /// A cloneable handle for runtime lane spin-up/tear-down.
+    pub fn handle(&self) -> SchedulerHandle {
+        SchedulerHandle { shared: self.shared.clone() }
+    }
+
+    /// Lane labels in lane-creation order (metrics/debugging).
     pub fn lane_names(&self) -> Vec<String> {
-        self.shared.lanes.iter().map(|l| l.name.clone()).collect()
+        self.shared
+            .lanes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|l| l.name.clone())
+            .collect()
     }
 
     /// Submit one sealed group to its routed backend's lane. Blocks only
@@ -273,7 +366,7 @@ impl Scheduler {
     /// failed, including fail-soft re-submissions), then stop and join
     /// the lane threads. Consumes the scheduler: nothing may submit
     /// after shutdown.
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
         {
             let mut p = self.shared.pending.lock().unwrap();
             while *p > 0 {
@@ -281,40 +374,85 @@ impl Scheduler {
             }
         }
         self.shared.stop.store(true, Ordering::SeqCst);
-        for lane in &self.shared.lanes {
+        for lane in self.shared.lanes.read().unwrap().iter() {
             lane.cv.notify_all();
         }
-        for handle in self.handles.drain(..) {
+        let handles: Vec<_> = {
+            let mut h = self.shared.handles.lock().unwrap();
+            h.drain(..).collect()
+        };
+        for handle in handles {
             let _ = handle.join();
         }
     }
 }
 
 impl Shared {
+    /// The open lane for `(backend, which)`, if one exists.
+    fn lane_for(&self, backend: usize, which: usize) -> Option<Arc<Lane>> {
+        let idx =
+            *self.lane_index.lock().unwrap().get(&(backend, which))?;
+        self.lanes.read().unwrap().get(idx).cloned()
+    }
+
     /// Queue a group on the lane of its (current) backend. Also the
     /// fail-soft path: re-submissions keep their original `enqueued`
     /// age, so a degraded group does not lose its place behind younger
-    /// work on the fallback lane.
+    /// work on the fallback lane. When the target lane is missing or
+    /// closed (its worker left the fleet), the group degrades down the
+    /// backend order here — membership churn must never strand a
+    /// sealed group.
     fn enqueue(&self, mut group: SealedGroup) {
         group.seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let backend = group.backend.min(self.lane_base.len() - 1);
-        group.backend = backend;
-        let b = self.registry.get(backend);
-        let lane_count = b.lanes().max(1);
-        let which = if lane_count > 1 {
-            b.lane_of(&group.shape).min(lane_count - 1)
-        } else {
-            0
-        };
-        let lane = &self.lanes[self.lane_base[backend] + which];
-        let mut q = lane.queue.lock().unwrap();
-        while q.len() >= self.queue_cap && !self.stop.load(Ordering::SeqCst)
-        {
-            q = lane.cv.wait(q).unwrap();
+        let mut backend = group.backend.min(self.registry.len() - 1);
+        loop {
+            group.backend = backend;
+            let b = self.registry.get(backend);
+            let lane_count = b.lanes().max(1);
+            let which = if lane_count > 1 {
+                b.lane_of(&group.shape).min(lane_count - 1)
+            } else {
+                0
+            };
+            if let Some(lane) = self.lane_for(backend, which) {
+                let mut q = lane.queue.lock().unwrap();
+                while q.len() >= self.queue_cap
+                    && !self.stop.load(Ordering::SeqCst)
+                    && !lane.closed.load(Ordering::SeqCst)
+                {
+                    q = lane.cv.wait(q).unwrap();
+                }
+                if !lane.closed.load(Ordering::SeqCst) {
+                    self.metrics.record_lane_enqueued(&lane.name);
+                    q.push(group);
+                    lane.cv.notify_all();
+                    return;
+                }
+            }
+            match self.registry.next_accepting(backend, &group.shape) {
+                Some(next) => {
+                    eprintln!(
+                        "lane {}:{which} is gone; re-routing group to {}",
+                        self.registry.name(backend),
+                        self.registry.name(next)
+                    );
+                    backend = next;
+                }
+                None => {
+                    for dest in &group.dests {
+                        if dest.collector.fail(
+                            "group execution failed: no accepting \
+                             backend"
+                                .into(),
+                        ) {
+                            self.metrics.record_error();
+                        }
+                    }
+                    self.resolve();
+                    return;
+                }
+            }
         }
-        self.metrics.record_lane_enqueued(&lane.name);
-        q.push(group);
-        lane.cv.notify_all();
     }
 
     /// One group fully resolved (all results delivered or the jobs
@@ -339,10 +477,9 @@ fn best_index(queue: &[SealedGroup]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
-fn lane_loop(lane_id: usize, shared: &Shared) {
+fn lane_loop(lane: &Arc<Lane>, shared: &Arc<Shared>) {
     loop {
         let group = {
-            let lane = &shared.lanes[lane_id];
             let mut q = lane.queue.lock().unwrap();
             loop {
                 if let Some(i) = best_index(&q) {
@@ -351,21 +488,24 @@ fn lane_loop(lane_id: usize, shared: &Shared) {
                     lane.cv.notify_all();
                     break group;
                 }
-                if shared.stop.load(Ordering::SeqCst) {
+                // A retired lane drains its queue before exiting, so
+                // every group accepted before the close still runs.
+                if shared.stop.load(Ordering::SeqCst)
+                    || lane.closed.load(Ordering::SeqCst)
+                {
                     return;
                 }
                 q = lane.cv.wait(q).unwrap();
             }
         };
-        execute_group(lane_id, group, shared);
+        execute_group(lane, group, shared);
     }
 }
 
 /// Execute one group on this lane's backend; deliver, or degrade to the
 /// next accepting backend's lane, or fail the affected jobs when no
 /// backend is left.
-fn execute_group(lane_id: usize, mut group: SealedGroup, shared: &Shared) {
-    let lane = &shared.lanes[lane_id];
+fn execute_group(lane: &Lane, mut group: SealedGroup, shared: &Shared) {
     assert_eq!(
         lane.backend, group.backend,
         "a lane may only execute groups routed to its backend"
@@ -393,6 +533,9 @@ fn execute_group(lane_id: usize, mut group: SealedGroup, shared: &Shared) {
         group.retain_indices(&keep);
     }
     if group.is_empty() {
+        // Every job lapsed while the group sat in the queue: the
+        // whole group is cancelled before execution starts.
+        shared.metrics.record_cancelled_expired();
         shared.metrics.record_lane_finished(&lane.name);
         shared.resolve();
         return;
@@ -826,6 +969,128 @@ mod tests {
             1,
             "a job expiring across several items fails exactly once"
         );
+    }
+
+    #[test]
+    fn fully_expired_group_cancelled_without_execution() {
+        let registry = Arc::new({
+            let mut reg = BackendRegistry::new();
+            reg.register(Box::new(NativeBackend));
+            reg
+        });
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        let expired = Instant::now() - Duration::from_millis(5);
+        let (group, rx) =
+            group_for(&registry, 8, 2, 60, 0, Some(expired));
+        scheduler.submit(group);
+        let err = wait_done(&rx).expect_err("expired group must fail");
+        assert!(err.contains("deadline"), "{err}");
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(
+            snap.cancelled_expired, 1,
+            "a fully lapsed group counts as one cancellation"
+        );
+        assert_eq!(
+            snap.batches, 0,
+            "a cancelled group never reaches a backend"
+        );
+        assert_eq!(snap.errors, 1, "the job fails exactly once");
+    }
+
+    #[test]
+    fn lanes_spin_up_and_tear_down() {
+        use std::sync::atomic::AtomicUsize;
+
+        /// A backend whose lane count grows at runtime, like the
+        /// remote backend when a worker registers mid-run.
+        struct Grow {
+            lanes: Arc<AtomicUsize>,
+        }
+        impl Backend for Grow {
+            fn name(&self) -> &'static str {
+                "grow"
+            }
+            fn plan_hint(&self, _s: &GroupShape) -> bool {
+                true
+            }
+            fn lanes(&self) -> usize {
+                self.lanes.load(Ordering::SeqCst)
+            }
+            fn lane_of(&self, shape: &GroupShape) -> usize {
+                shape.n % 2
+            }
+            fn lane_name(&self, lane: usize) -> String {
+                format!("grow:{lane}")
+            }
+            fn execute_group(
+                &self,
+                shape: &GroupShape,
+                mats: &[Matrix],
+                _tols: &[f64],
+                _powers: &mut [Option<Powers>],
+            ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
+                Ok(mats
+                    .iter()
+                    .map(|_| {
+                        (Matrix::identity(shape.n), ExpmStats::default())
+                    })
+                    .collect())
+            }
+        }
+        let lane_count = Arc::new(AtomicUsize::new(1));
+        let mut reg = BackendRegistry::new();
+        reg.register(Box::new(Grow { lanes: lane_count.clone() }));
+        reg.register(Box::new(NativeBackend));
+        let registry = Arc::new(reg);
+        let metrics = Arc::new(Metrics::new());
+        let scheduler = Scheduler::start(
+            registry.clone(),
+            BatchPolicy::default(),
+            metrics.clone(),
+            64,
+        );
+        assert_eq!(scheduler.lane_names(), vec!["grow:0", "native"]);
+        let handle = scheduler.handle();
+
+        // A worker joins: one more backend lane appears and odd-order
+        // groups route to it.
+        lane_count.store(2, Ordering::SeqCst);
+        handle.add_lane(0, 1, "grow:1".into());
+        assert_eq!(
+            scheduler.lane_names(),
+            vec!["grow:0", "native", "grow:1"]
+        );
+        let (odd, odd_rx) = group_for(&registry, 5, 1, 300, 0, None);
+        scheduler.submit(odd);
+        wait_done(&odd_rx).unwrap();
+        assert_eq!(
+            metrics.snapshot().lane_stats["grow:1"].finished,
+            1
+        );
+
+        // The worker drains out: its lane closes and later groups for
+        // that slot degrade down the backend order instead of
+        // stranding.
+        assert!(handle.retire_lane(0, 1));
+        assert!(
+            !handle.retire_lane(0, 1),
+            "retiring twice reports no open lane"
+        );
+        let (odd, odd_rx) = group_for(&registry, 5, 1, 301, 0, None);
+        scheduler.submit(odd);
+        wait_done(&odd_rx)
+            .expect("group for a retired lane degrades, not fails");
+        scheduler.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.backend_hist[&"native"], 1);
     }
 
     #[test]

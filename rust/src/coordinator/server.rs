@@ -63,7 +63,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{
-    ExpmService, JobSpec, JobUpdate, MatrixResult, SubmitError, Ticket,
+    ExpmService, JobSpec, JobUpdate, MatrixResult, MembershipSnapshot,
+    SubmitError, Ticket,
 };
 use crate::expm::Method;
 use crate::linalg::Matrix;
@@ -506,6 +507,51 @@ fn stats_json(r: &MatrixResult) -> Json {
     ])
 }
 
+/// Render the elastic fleet view for the `stats` reply: ring epoch,
+/// current ring, per-member state/counters, and the bounded event log.
+fn membership_json(snap: &MembershipSnapshot) -> Json {
+    let members = Json::Obj(
+        snap.members
+            .iter()
+            .map(|m| {
+                (
+                    m.addr.clone(),
+                    obj(vec![
+                        ("slot", Json::Num(m.slot as f64)),
+                        ("state", Json::Str(m.state.as_str().into())),
+                        ("max_order", Json::Num(m.max_order as f64)),
+                        ("joins", Json::Num(m.joins as f64)),
+                        ("leaves", Json::Num(m.leaves as f64)),
+                        ("evicts", Json::Num(m.evicts as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let ring = Json::Arr(
+        snap.ring.iter().map(|a| Json::Str(a.clone())).collect(),
+    );
+    let events = Json::Arr(
+        snap.events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("seq", Json::Num(e.seq as f64)),
+                    ("kind", Json::Str(e.kind.into())),
+                    ("addr", Json::Str(e.addr.clone())),
+                    ("detail", Json::Str(e.detail.clone())),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("epoch", Json::Num(snap.epoch as f64)),
+        ("members", members),
+        ("ring", ring),
+        ("events", events),
+    ])
+}
+
 fn handle_line(
     line: &str,
     svc: &ExpmService,
@@ -603,6 +649,15 @@ fn handle_line(
                     ("admitted", Json::Num(snap.admitted as f64)),
                     ("shed", Json::Num(snap.shed as f64)),
                 ]);
+                // Additive: the elastic fleet view — `null` on a
+                // non-elastic daemon, so clients can tell "membership
+                // off" apart from "empty fleet".
+                let membership = match svc.control_plane() {
+                    Some(plane) => {
+                        membership_json(&plane.membership().snapshot())
+                    }
+                    None => Json::Null,
+                };
                 json::to_string(&obj(vec![
                     ("id", Json::Num(id)),
                     ("ok", Json::Bool(true)),
@@ -618,11 +673,20 @@ fn handle_line(
                         "remote_fallbacks",
                         Json::Num(snap.remote_fallbacks as f64),
                     ),
+                    (
+                        "sibling_retries",
+                        Json::Num(snap.sibling_retries as f64),
+                    ),
+                    (
+                        "cancelled_expired",
+                        Json::Num(snap.cancelled_expired as f64),
+                    ),
                     ("shards", shards),
                     ("lanes", lanes),
                     ("powers_cache", powers_cache),
                     ("latency", latency),
                     ("admission", admission),
+                    ("membership", membership),
                 ]))
             }
             "shutdown" => {
@@ -631,6 +695,108 @@ fn handle_line(
                     ("id", Json::Num(id)),
                     ("ok", Json::Bool(true)),
                 ]))
+            }
+            // Control frames (docs/wire-protocol.md): workers join and
+            // leave a live fleet. Field errors are protocol rejections
+            // (counted); a disabled control plane is a plain error —
+            // the frame was well-formed, the daemon just is not
+            // elastic.
+            "register" | "deregister" => {
+                let Some(addr) =
+                    req.get("addr").and_then(Json::as_str)
+                else {
+                    return reject_frame(
+                        svc,
+                        writer,
+                        id,
+                        "control frame needs a string 'addr' field",
+                    );
+                };
+                let token = match req.get("token") {
+                    None => None,
+                    Some(Json::Str(t)) => Some(t.as_str()),
+                    Some(_) => {
+                        return reject_frame(
+                            svc,
+                            writer,
+                            id,
+                            "'token' must be a string",
+                        )
+                    }
+                };
+                let Some(plane) = svc.control_plane() else {
+                    return write_frame(
+                        writer,
+                        &error_reply(
+                            id,
+                            "membership is not enabled on this daemon \
+                             (start with --elastic, --member-token or \
+                             --shards)",
+                        ),
+                    );
+                };
+                if cmd == "register" {
+                    let max_order = match req.get("max_order") {
+                        None => MAX_WIRE_ORDER,
+                        Some(v) => match v.as_usize() {
+                            Some(n) if n > 0 => n.min(MAX_WIRE_ORDER),
+                            _ => {
+                                return reject_frame(
+                                    svc,
+                                    writer,
+                                    id,
+                                    "'max_order' must be a positive \
+                                     integer",
+                                )
+                            }
+                        },
+                    };
+                    match plane.register_worker(addr, token, max_order)
+                    {
+                        Ok(ack) => json::to_string(&obj(vec![
+                            ("id", Json::Num(id)),
+                            ("ok", Json::Bool(true)),
+                            ("registered", Json::Bool(true)),
+                            ("addr", Json::Str(addr.into())),
+                            ("slot", Json::Num(ack.slot as f64)),
+                            (
+                                "members",
+                                Json::Num(ack.members as f64),
+                            ),
+                            ("epoch", Json::Num(ack.epoch as f64)),
+                            ("duplicate", Json::Bool(ack.duplicate)),
+                        ])),
+                        Err(e) => {
+                            return reject_frame(svc, writer, id, &e)
+                        }
+                    }
+                } else {
+                    let drain = match req.get("drain") {
+                        None => false,
+                        Some(Json::Bool(b)) => *b,
+                        Some(_) => {
+                            return reject_frame(
+                                svc,
+                                writer,
+                                id,
+                                "'drain' must be a boolean",
+                            )
+                        }
+                    };
+                    match plane.deregister_worker(addr, token, drain) {
+                        Ok(slot) => json::to_string(&obj(vec![
+                            ("id", Json::Num(id)),
+                            ("ok", Json::Bool(true)),
+                            ("deregistered", Json::Bool(true)),
+                            ("addr", Json::Str(addr.into())),
+                            ("slot", Json::Num(slot as f64)),
+                            ("drain", Json::Bool(drain)),
+                        ])),
+                        Err(e) => {
+                            return reject_frame(svc, writer, id, &e)
+                        }
+                    }
+                }
             }
             other => {
                 return reject_frame(
@@ -916,6 +1082,54 @@ impl Client {
         Ok(Matrix::from_vec(a.order(), a.order(), flat))
     }
 
+    /// Build a `register` control frame: announce `addr` (the worker's
+    /// serving address) to a daemon, optionally authenticated and with
+    /// a capability bound on the matrix order it accepts.
+    pub fn register_line(
+        id: u64,
+        addr: &str,
+        token: Option<&str>,
+        max_order: Option<usize>,
+    ) -> String {
+        let mut line = format!(
+            "{{\"id\": {id}, \"cmd\": \"register\", \"addr\": {}",
+            json::to_string(&Json::Str(addr.into()))
+        );
+        if let Some(t) = token {
+            line.push_str(&format!(
+                ", \"token\": {}",
+                json::to_string(&Json::Str(t.into()))
+            ));
+        }
+        if let Some(n) = max_order {
+            line.push_str(&format!(", \"max_order\": {n}"));
+        }
+        line.push('}');
+        line
+    }
+
+    /// Build a `deregister` control frame: remove `addr` from a
+    /// daemon's fleet, draining (finish queued work) or hard-removing.
+    pub fn deregister_line(
+        id: u64,
+        addr: &str,
+        token: Option<&str>,
+        drain: bool,
+    ) -> String {
+        let mut line = format!(
+            "{{\"id\": {id}, \"cmd\": \"deregister\", \"addr\": {}",
+            json::to_string(&Json::Str(addr.into()))
+        );
+        if let Some(t) = token {
+            line.push_str(&format!(
+                ", \"token\": {}",
+                json::to_string(&Json::Str(t.into()))
+            ));
+        }
+        line.push_str(&format!(", \"drain\": {drain}}}"));
+        line
+    }
+
     /// Build a v2 request line for mixed per-matrix contracts.
     pub fn v2_request_line(
         id: u64,
@@ -1027,6 +1241,34 @@ mod tests {
         assert!(reply.contains("\"p99_s\""), "{reply}");
         assert!(reply.contains("\"admission\""), "{reply}");
         assert!(reply.contains("\"shed\""), "{reply}");
+        // Additive elastic surface: failover counters always present;
+        // membership is null on this non-elastic daemon.
+        assert!(reply.contains("\"sibling_retries\""), "{reply}");
+        assert!(reply.contains("\"cancelled_expired\""), "{reply}");
+        assert!(reply.contains("\"membership\":null"), "{reply}");
+    }
+
+    #[test]
+    fn control_frames_require_an_elastic_daemon() {
+        let (server, svc) = start();
+        let mut client = Client::connect(server.addr).unwrap();
+        // Well-formed register on a non-elastic daemon: a plain error,
+        // not a protocol rejection.
+        let reply = client
+            .roundtrip(&Client::register_line(1, "127.0.0.1:9", None, None))
+            .unwrap();
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        let err = v.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("membership is not enabled"), "{err}");
+        assert_eq!(svc.metrics.snapshot().rejected_frames, 0);
+        // A mistyped field is rejected (and counted) before the
+        // control-plane check.
+        let reply = client
+            .roundtrip(r#"{"id": 2, "cmd": "register", "addr": 7}"#)
+            .unwrap();
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        assert_eq!(svc.metrics.snapshot().rejected_frames, 1);
     }
 
     #[test]

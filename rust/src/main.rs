@@ -10,10 +10,13 @@
 //!   daemon --addr A        expose the service over TCP (JSON lines);
 //!                          `--shards a:p,b:p` routes batch groups to a
 //!                          worker fleet (see docs/architecture.md);
-//!                          `--powers-cache N` sizes the cross-request
-//!                          powers cache (0 disables; default 256),
-//!                          `--lane-queue N` bounds each execution
-//!                          lane's queue (default 256), and
+//!                          `--elastic` / `--member-token T` accept
+//!                          live `register`/`deregister` control
+//!                          frames (elastic fleet; token-gated when T
+//!                          is set); `--powers-cache N` sizes the
+//!                          cross-request powers cache (0 disables;
+//!                          default 256), `--lane-queue N` bounds each
+//!                          execution lane's queue (default 256), and
 //!                          `--latency-budget MS` enables deadline-aware
 //!                          admission control (0 = off; shed frames
 //!                          carry `"shed": true`), with
@@ -22,7 +25,11 @@
 //!                          protocol; a worker is a daemon that serves
 //!                          compute and forwards nothing; same
 //!                          --powers-cache/--lane-queue/
-//!                          --latency-budget knobs)
+//!                          --latency-budget knobs);
+//!                          `--register-to HOST:PORT` joins a live
+//!                          elastic daemon on startup (with
+//!                          `--member-token T`, and `--advertise A` to
+//!                          announce an address other than the bind)
 //!   loadgen [--rate R]     open-loop Poisson load against a daemon
 //!                          (`--addr`, or an in-process one), reporting
 //!                          p50/p95/p99 latency, goodput, and shed
@@ -348,6 +355,12 @@ fn cmd_daemon(args: &Args) -> i32 {
     let lane_queue_cap = args.get_usize("lane-queue", 256);
     let (latency_budget, admission_queue_cap) =
         admission_from_args(args, 0.0);
+    let elastic = args.has("elastic");
+    let member_token = match args.get_str("member-token", "") {
+        "" => None,
+        t => Some(t.to_string()),
+    };
+    let token_gated = member_token.is_some();
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -363,6 +376,8 @@ fn cmd_daemon(args: &Args) -> i32 {
         lane_queue_cap,
         latency_budget,
         admission_queue_cap,
+        elastic,
+        member_token,
         ..Default::default()
     }));
     match Server::spawn(&addr, svc) {
@@ -393,6 +408,13 @@ fn cmd_daemon(args: &Args) -> i32 {
                     shards.join(", ")
                 );
             }
+            if elastic || token_gated {
+                println!(
+                    "elastic membership: register/deregister control \
+                     frames accepted (token {})",
+                    if token_gated { "required" } else { "not set" }
+                );
+            }
             // Block until the accept loop exits (shutdown cmd).
             server.shutdown_wait();
             0
@@ -407,13 +429,19 @@ fn cmd_daemon(args: &Args) -> i32 {
 /// Worker role of a sharded deployment: serve the same v1/v2 wire
 /// protocol, execute locally (PJRT when artifacts exist, else native),
 /// never forward. A coordinator daemon points `--shards` at a fleet of
-/// these.
+/// these, or the worker joins a live elastic daemon itself via
+/// `--register-to` (deregistering again on shutdown, best effort).
 fn cmd_worker(args: &Args) -> i32 {
     use expmflow::coordinator::server::Server;
     let addr = args.get_str("addr", "127.0.0.1:7789").to_string();
     let native_only = args.has("native-only");
     let (latency_budget, admission_queue_cap) =
         admission_from_args(args, 0.0);
+    let register_to = args.get_str("register-to", "").to_string();
+    let member_token = match args.get_str("member-token", "") {
+        "" => None,
+        t => Some(t.to_string()),
+    };
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -435,7 +463,39 @@ fn cmd_worker(args: &Args) -> i32 {
                  {{\"cmd\":\"shutdown\"}} to stop)",
                 server.addr
             );
+            // The address the daemon's coordinator should dial back:
+            // the bind address unless `--advertise` overrides it
+            // (NAT, 0.0.0.0 binds).
+            let advertise = match args.get_str("advertise", "") {
+                "" => server.addr.to_string(),
+                a => a.to_string(),
+            };
+            if !register_to.is_empty() {
+                match register_worker_with(
+                    &register_to,
+                    &advertise,
+                    member_token.as_deref(),
+                ) {
+                    Ok(slot) => println!(
+                        "registered with daemon {register_to} as \
+                         {advertise} (slot {slot})"
+                    ),
+                    Err(e) => eprintln!(
+                        "WARNING: cannot register with {register_to}: \
+                         {e}; serving unattached"
+                    ),
+                }
+            }
             server.shutdown_wait();
+            if !register_to.is_empty() {
+                // Best effort: a dead daemon just means nothing to
+                // leave.
+                let _ = deregister_worker_with(
+                    &register_to,
+                    &advertise,
+                    member_token.as_deref(),
+                );
+            }
             0
         }
         Err(e) => {
@@ -443,6 +503,53 @@ fn cmd_worker(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Send one `register` control frame for `advertise` to the daemon at
+/// `daemon_addr`; returns the assigned slot.
+fn register_worker_with(
+    daemon_addr: &str,
+    advertise: &str,
+    token: Option<&str>,
+) -> Result<usize, String> {
+    use expmflow::coordinator::server::Client;
+    use expmflow::util::json::{self, Json};
+    let addr: std::net::SocketAddr =
+        daemon_addr.parse().map_err(|e| format!("bad address: {e}"))?;
+    let mut client =
+        Client::connect(addr).map_err(|e| e.to_string())?;
+    let reply = client
+        .roundtrip(&Client::register_line(1, advertise, token, None))
+        .map_err(|e| e.to_string())?;
+    let v = json::parse(&reply).map_err(|e| e.to_string())?;
+    if v.get("ok") != Some(&Json::Bool(true)) {
+        return Err(v
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("register rejected")
+            .to_string());
+    }
+    v.get("slot")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "reply missing 'slot'".to_string())
+}
+
+/// Send one best-effort `deregister` control frame for `advertise` to
+/// the daemon at `daemon_addr`.
+fn deregister_worker_with(
+    daemon_addr: &str,
+    advertise: &str,
+    token: Option<&str>,
+) -> Result<(), String> {
+    use expmflow::coordinator::server::Client;
+    let addr: std::net::SocketAddr =
+        daemon_addr.parse().map_err(|e| format!("bad address: {e}"))?;
+    let mut client =
+        Client::connect(addr).map_err(|e| e.to_string())?;
+    client
+        .roundtrip(&Client::deregister_line(2, advertise, token, false))
+        .map_err(|e| e.to_string())?;
+    Ok(())
 }
 
 /// Open-loop load generator (see `rust/src/loadgen/`). With no
@@ -482,7 +589,7 @@ fn cmd_loadgen(args: &Args) -> i32 {
             .clamp(0.0, 1.0),
         ..LoadgenConfig::default()
     };
-    let pr = args.get_usize("pr", 6);
+    let pr = args.get_usize("pr", 7);
     let out = match args.get_str("out", "") {
         "" => format!("BENCH_{pr}.json"),
         path => path.to_string(),

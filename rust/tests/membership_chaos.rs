@@ -1,0 +1,262 @@
+//! Membership chaos: the elastic control plane under fire. A shard is
+//! killed mid-stream, a replacement worker registers over the wire,
+//! the corpse drains out — and not a single job may be lost, every
+//! result staying bitwise-equal to the library while the native
+//! fallback counter stays bounded. Stale and duplicate control frames
+//! must be acked or rejected without ever corrupting the table.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::randm_norm;
+use expmflow::coordinator::server::{Client, Server};
+use expmflow::coordinator::{ExpmService, RemoteConfig, ServiceConfig};
+use expmflow::expm::{expm, ExpmOptions, Method};
+use expmflow::linalg::Matrix;
+use expmflow::util::json::{self, Json};
+
+fn spawn_worker() -> (Server, Arc<ExpmService>) {
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        ..Default::default()
+    }));
+    let server = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    (server, svc)
+}
+
+fn oracle(a: &Matrix) -> Matrix {
+    expm(a, &ExpmOptions { method: Method::Sastre, tol: 1e-8 }).value
+}
+
+#[test]
+fn killed_shard_replaced_via_register_frames_no_job_loss() {
+    let (mut worker1, _w1svc) = spawn_worker();
+    let w1_addr = worker1.addr.to_string();
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        remote: Some(RemoteConfig::new([w1_addr.clone()])),
+        member_token: Some("chaos-secret".into()),
+        ..Default::default()
+    }));
+    let daemon = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    let mut submitted = 0u64;
+
+    // Phase A: traffic flows to the seeded shard, bitwise.
+    for i in 0..3u64 {
+        let mats = vec![randm_norm(6, 1.0, 9_000 + i)];
+        let r = svc.compute(mats.clone(), 1e-8).unwrap();
+        submitted += 1;
+        assert_eq!(r[0].backend, "remote", "phase A round {i}");
+        assert_eq!(r[0].value, oracle(&mats[0]), "phase A round {i}");
+    }
+    assert!(
+        svc.metrics
+            .snapshot()
+            .shard_stats
+            .get(&w1_addr)
+            .expect("seed shard accounted")
+            .groups
+            >= 1,
+        "seed shard must have served phase A"
+    );
+
+    // Kill the only shard mid-run. Pooled connections may serve a few
+    // more groups before the death is observed; every interim result
+    // is still correct (fail-soft means no loss, not instant
+    // detection).
+    worker1.shutdown();
+    drop(worker1);
+    let mut fell_back = false;
+    for i in 0..50u64 {
+        let mats = vec![randm_norm(6, 1.0, 9_100 + i)];
+        let r = svc.compute(mats.clone(), 1e-8).unwrap();
+        submitted += 1;
+        assert_eq!(r[0].value, oracle(&mats[0]), "phase B round {i}");
+        if r[0].backend == "native" {
+            fell_back = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(fell_back, "dead shard must fail soft to native");
+    let mid = svc.metrics.snapshot();
+    assert!(mid.remote_fallbacks >= 1, "fallback counter must move");
+
+    // Replace the dead member over the wire: a bad token is rejected
+    // and counted, the real one admits the new worker into slot 1.
+    let (worker2, w2svc) = spawn_worker();
+    let w2_addr = worker2.addr.to_string();
+    let mut ctl = Client::connect(daemon.addr).unwrap();
+    let reply = ctl
+        .roundtrip(&Client::register_line(1, &w2_addr, Some("wrong"), None))
+        .unwrap();
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("bad membership token"), "{reply}");
+    let reply = ctl
+        .roundtrip(&Client::register_line(
+            2,
+            &w2_addr,
+            Some("chaos-secret"),
+            None,
+        ))
+        .unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(v.get("registered"), Some(&Json::Bool(true)));
+    assert_eq!(v.get("slot").and_then(Json::as_usize), Some(1));
+    assert_eq!(v.get("duplicate"), Some(&Json::Bool(false)));
+
+    // Drain the corpse out of the fleet so nothing routes to it.
+    let reply = ctl
+        .roundtrip(&Client::deregister_line(
+            3,
+            &w1_addr,
+            Some("chaos-secret"),
+            true,
+        ))
+        .unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(v.get("deregistered"), Some(&Json::Bool(true)));
+
+    // Phase C: goodput recovers onto the replacement with zero further
+    // native fallbacks.
+    let before = svc.metrics.snapshot().remote_fallbacks;
+    for i in 0..4u64 {
+        let mats = vec![randm_norm(6, 1.0, 9_200 + i)];
+        let r = svc.compute(mats.clone(), 1e-8).unwrap();
+        submitted += 1;
+        assert_eq!(r[0].backend, "remote", "phase C round {i}");
+        assert_eq!(r[0].value, oracle(&mats[0]), "phase C round {i}");
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(
+        snap.remote_fallbacks, before,
+        "recovered fleet must not fall back again"
+    );
+    assert!(
+        snap.shard_stats
+            .get(&w2_addr)
+            .expect("replacement shard accounted")
+            .groups
+            >= 1
+    );
+    assert!(w2svc.metrics.snapshot().matrices >= 1);
+
+    // Zero job loss across the whole run, bounded fallback, and the
+    // membership counters tell the story: one wire join, one drain,
+    // one rejected register.
+    assert_eq!(snap.errors, 0, "no job may be lost across the kill");
+    assert_eq!(snap.matrices, submitted);
+    assert!(
+        snap.remote_fallbacks < submitted,
+        "native fallback must stay bounded, got {} of {submitted}",
+        snap.remote_fallbacks
+    );
+    assert_eq!(snap.membership_joins, 1);
+    assert_eq!(snap.membership_leaves, 1);
+    assert_eq!(snap.register_rejected, 1);
+    assert_eq!(snap.rejected_frames, 1);
+
+    // The stats frame surfaces the ring view: only the replacement is
+    // in the ring, the drained seed still shows its state.
+    let reply = ctl.roundtrip(r#"{"id": 9, "cmd": "stats"}"#).unwrap();
+    let v = json::parse(&reply).unwrap();
+    let mem = v.get("membership").expect("membership in elastic stats");
+    let ring = mem.get("ring").and_then(Json::as_arr).unwrap();
+    assert_eq!(ring.len(), 1, "{reply}");
+    assert_eq!(ring[0], Json::Str(w2_addr.clone()), "{reply}");
+    let members = mem.get("members").expect("member table in stats");
+    assert_eq!(
+        members
+            .get(&w1_addr)
+            .and_then(|m| m.get("state"))
+            .and_then(Json::as_str),
+        Some("draining"),
+        "{reply}"
+    );
+}
+
+#[test]
+fn duplicate_and_stale_control_frames() {
+    let (worker, _wsvc) = spawn_worker();
+    let addr = worker.addr.to_string();
+    let svc = Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        elastic: true,
+        ..Default::default()
+    }));
+    let daemon = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    let mut ctl = Client::connect(daemon.addr).unwrap();
+
+    // First register joins slot 0...
+    let reply = ctl
+        .roundtrip(&Client::register_line(1, &addr, None, Some(64)))
+        .unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(v.get("slot").and_then(Json::as_usize), Some(0));
+    assert_eq!(v.get("duplicate"), Some(&Json::Bool(false)));
+    // ...and a duplicate register acks idempotently: same slot, no
+    // second join counted, no ring churn.
+    let reply = ctl
+        .roundtrip(&Client::register_line(2, &addr, None, Some(64)))
+        .unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(v.get("slot").and_then(Json::as_usize), Some(0));
+    assert_eq!(v.get("duplicate"), Some(&Json::Bool(true)));
+    assert_eq!(svc.metrics.snapshot().membership_joins, 1);
+
+    // Traffic lands on the registered worker, bitwise.
+    let mats = vec![randm_norm(6, 1.0, 9_300)];
+    let r = svc.compute(mats.clone(), 1e-8).unwrap();
+    assert_eq!(r[0].backend, "remote");
+    assert_eq!(r[0].value, oracle(&mats[0]));
+
+    // Unknown members and double-leaves are stale frames: rejected and
+    // counted, never applied.
+    let reply = ctl
+        .roundtrip(&Client::deregister_line(3, "ghost:1", None, false))
+        .unwrap();
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("unknown member"), "{reply}");
+    let reply = ctl
+        .roundtrip(&Client::deregister_line(4, &addr, None, false))
+        .unwrap();
+    assert!(reply.contains("\"deregistered\":true"), "{reply}");
+    let reply = ctl
+        .roundtrip(&Client::deregister_line(5, &addr, None, false))
+        .unwrap();
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("already left"), "{reply}");
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.rejected_frames, 2);
+    assert_eq!(snap.membership_leaves, 1);
+    assert_eq!(snap.register_rejected, 0);
+
+    // With the ring empty the daemon still serves natively...
+    let mats = vec![randm_norm(6, 1.0, 9_301)];
+    let r = svc.compute(mats.clone(), 1e-8).unwrap();
+    assert_eq!(r[0].backend, "native");
+    assert_eq!(r[0].value, oracle(&mats[0]));
+
+    // ...and an explicit rejoin revives the same slot and a fresh
+    // lane; traffic flows remote again.
+    let reply = ctl
+        .roundtrip(&Client::register_line(6, &addr, None, None))
+        .unwrap();
+    let v = json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(v.get("slot").and_then(Json::as_usize), Some(0));
+    assert_eq!(v.get("duplicate"), Some(&Json::Bool(false)));
+    let mats = vec![randm_norm(6, 1.0, 9_302)];
+    let r = svc.compute(mats.clone(), 1e-8).unwrap();
+    assert_eq!(r[0].backend, "remote");
+    assert_eq!(r[0].value, oracle(&mats[0]));
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.membership_joins, 2);
+    assert_eq!(snap.errors, 0);
+}

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Regression gate between two loadgen BENCH_<pr>.json artifacts.
+
+Compares the latest bench run against a baseline (typically the
+previous PR's committed artifact) and fails when tail latency regresses
+or goodput drops beyond the allowed thresholds:
+
+  * latency_s.p99 may grow by at most --max-p99-regress percent;
+  * goodput.requests_per_s may shrink by at most --max-goodput-drop
+    percent.
+
+A missing or unreadable baseline is not an error — first runs and
+renamed artifacts print a note and exit 0, so the gate only ever
+compares real apples to real apples. Malformed *new* artifacts are an
+error (run tools/check_bench_json.py first for the full schema check).
+
+Usage:
+  tools/diff_bench_json.py BENCH_7.json --baseline BENCH_6.json \
+      [--max-p99-regress 50] [--max-goodput-drop 30]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: Path):
+    """Parse one bench document; returns (doc, error_string)."""
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        return None, f"{path}: unreadable ({e})"
+    if not isinstance(doc, dict):
+        return None, f"{path}: top level is not an object"
+    return doc, None
+
+
+def metric(doc, obj, field):
+    holder = doc.get(obj)
+    val = holder.get(field) if isinstance(holder, dict) else None
+    if not isinstance(val, (int, float)) or isinstance(val, bool):
+        return None
+    return float(val)
+
+
+def main(argv):
+    parser = argparse.ArgumentParser(
+        description="Fail on bench regressions between two runs."
+    )
+    parser.add_argument("new", help="latest BENCH_<pr>.json")
+    parser.add_argument(
+        "--baseline",
+        required=True,
+        help="previous PR's bench artifact to compare against",
+    )
+    parser.add_argument(
+        "--max-p99-regress",
+        type=float,
+        default=50.0,
+        metavar="PCT",
+        help="allowed p99 latency growth in percent (default 50)",
+    )
+    parser.add_argument(
+        "--max-goodput-drop",
+        type=float,
+        default=30.0,
+        metavar="PCT",
+        help="allowed requests/s shrinkage in percent (default 30)",
+    )
+    args = parser.parse_args(argv[1:])
+
+    base_path = Path(args.baseline)
+    base, base_err = load(base_path)
+    if base is None:
+        print(f"no usable baseline, skipping diff: {base_err}")
+        return 0
+
+    new, new_err = load(Path(args.new))
+    if new is None:
+        print(new_err)
+        return 1
+
+    failures = []
+
+    old_p99 = metric(base, "latency_s", "p99")
+    new_p99 = metric(new, "latency_s", "p99")
+    if new_p99 is None:
+        failures.append(f"{args.new}: latency_s.p99 missing or non-numeric")
+    elif old_p99 is not None and old_p99 > 0:
+        growth = (new_p99 / old_p99 - 1.0) * 100.0
+        limit = args.max_p99_regress
+        line = (
+            f"p99 {old_p99:.6f}s -> {new_p99:.6f}s "
+            f"({growth:+.1f}%, limit +{limit:.1f}%)"
+        )
+        if growth > limit:
+            failures.append(f"{args.new}: {line}")
+        else:
+            print(line)
+
+    old_rps = metric(base, "goodput", "requests_per_s")
+    new_rps = metric(new, "goodput", "requests_per_s")
+    if new_rps is None:
+        failures.append(
+            f"{args.new}: goodput.requests_per_s missing or non-numeric"
+        )
+    elif old_rps is not None and old_rps > 0:
+        drop = (1.0 - new_rps / old_rps) * 100.0
+        limit = args.max_goodput_drop
+        line = (
+            f"goodput {old_rps:.2f} req/s -> {new_rps:.2f} req/s "
+            f"({-drop:+.1f}%, limit -{limit:.1f}%)"
+        )
+        if drop > limit:
+            failures.append(f"{args.new}: {line}")
+        else:
+            print(line)
+
+    if failures:
+        print("\n".join(failures))
+        return 1
+    print(f"bench diff ok ({args.new} vs {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
