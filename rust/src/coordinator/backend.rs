@@ -181,9 +181,11 @@ pub fn native_expm_planned(w: &Matrix, m: usize, s: u32) -> (Matrix, ExpmStats) 
 }
 
 /// The native f64 engine: any shape, thread-parallel, infallible. Dynamic
-/// methods run through the batched engine (`expm::batch`) with one shared
-/// evaluation schedule and per-worker workspaces; Baseline/Padé groups
-/// run the serial pipeline per matrix under each matrix's own tolerance.
+/// methods (Sastre, Paterson–Stockmeyer, BBC, tolerance-adaptive — plus
+/// Auto, which the planner resolves to one of them) run through the
+/// batched engine (`expm::batch`) with one shared evaluation schedule and
+/// per-worker workspaces; Baseline/Padé/Structured groups run the serial
+/// pipeline per matrix under each matrix's own tolerance.
 pub struct NativeBackend;
 
 impl Backend for NativeBackend {
@@ -203,7 +205,10 @@ impl Backend for NativeBackend {
         powers: &mut [Option<Powers>],
     ) -> Result<Vec<(Matrix, ExpmStats)>, String> {
         match shape.method {
-            Method::Sastre | Method::PatersonStockmeyer => {
+            Method::Sastre
+            | Method::PatersonStockmeyer
+            | Method::Bbc
+            | Method::TolAdaptive => {
                 // Groups arrive pre-bucketed on the plan key, so the whole
                 // group is one bucket sharing one schedule. When the
                 // selector's cached powers are supplied, evaluation starts
@@ -229,9 +234,11 @@ impl Backend for NativeBackend {
                     .collect())
             }
             _ => {
-                // Baseline/Padé select at execution time; batch-parallel
-                // below the GEMM threshold, serial above it (the inner
-                // GEMM already takes the cores there).
+                // Baseline/Padé/Structured select at execution time;
+                // batch-parallel below the GEMM threshold, serial above
+                // it (the inner GEMM already takes the cores there).
+                // Auto never reaches execution — the planner resolves it
+                // to the race winner or to Structured.
                 let run = |i: usize| {
                     let r = crate::expm::expm_serial(
                         &mats[i],

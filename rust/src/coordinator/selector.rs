@@ -6,14 +6,18 @@
 //! native backend keeps it. The accounting below follows the paper's
 //! convention of charging the evaluation-formula totals of Section 3.1.
 //!
-//! Baseline/Padé matrices carry no pre-computed (m, s): their selection
-//! happens inside the serial pipeline at execution time, so they plan as
-//! `(method, 0, 0)` and group only by `(backend, n, method)`.
+//! Baseline/Padé/Structured matrices carry no pre-computed (m, s): their
+//! selection happens inside the serial pipeline at execution time, so
+//! they plan as `(method, 0, 0)` and group only by `(backend, n,
+//! method)`. Auto requests resolve at planning time: matrices that
+//! trigger the block-triangular fast path plan as Structured, the rest
+//! race the scheme pool and plan as the *winner* — so an Auto request
+//! shares buckets (and bits) with directly-requested schemes.
 
 use crate::expm::eval::Powers;
 use crate::expm::powers_cache::PowersCache;
 use crate::expm::selection::{select_dynamic, select_dynamic_from};
-use crate::expm::Method;
+use crate::expm::{structured, Method};
 use crate::linalg::Matrix;
 
 use super::backend::GroupShape;
@@ -59,12 +63,29 @@ pub fn plan_spec(
     tol: f64,
 ) -> (Plan, Option<Powers>) {
     match method {
-        Method::Sastre | Method::PatersonStockmeyer => {
+        // An Auto request whose matrix triggers the block-triangular
+        // fast path plans like Baseline/Padé: the structured pipeline
+        // has no bucketed (m, s) shape, so it selects and evaluates in
+        // one pass at execution time under Method::Structured (whose
+        // serial pipeline — structured first, race fallback — is
+        // exactly what serial Auto runs).
+        Method::Auto if structured::triggers(w) => (
+            Plan { n: w.order(), method: Method::Structured, m: 0, s: 0 },
+            None,
+        ),
+        Method::Sastre
+        | Method::PatersonStockmeyer
+        | Method::Bbc
+        | Method::TolAdaptive
+        | Method::Auto => {
             // One shared planning routine with the batch engine — the
             // service/library bitwise-parity contract depends on it.
+            // The plan records the *selection's* method: under Auto it
+            // names the race winner, so Auto groups coalesce with (and
+            // execute exactly like) directly-requested schemes.
             let (sel, powers) = select_dynamic(w, method, tol);
             (
-                Plan { n: w.order(), method, m: sel.m, s: sel.s },
+                Plan { n: w.order(), method: sel.method, m: sel.m, s: sel.s },
                 Some(powers),
             )
         }
@@ -98,20 +119,33 @@ pub fn plan_spec_cached(
     cache: &PowersCache,
 ) -> (Plan, Option<Powers>, CacheOutcome) {
     match method {
-        Method::Sastre | Method::PatersonStockmeyer => {
+        // Structured fast path: execution-time selection, cache-free
+        // (same routing as the uncached planner above).
+        Method::Auto if structured::triggers(w) => (
+            Plan { n: w.order(), method: Method::Structured, m: 0, s: 0 },
+            None,
+            CacheOutcome::Bypass,
+        ),
+        Method::Sastre
+        | Method::PatersonStockmeyer
+        | Method::Bbc
+        | Method::TolAdaptive
+        | Method::Auto => {
             if let Some(mut powers) = cache.lookup(w) {
                 let depth_before = powers.depth();
                 let sel = select_dynamic_from(&mut powers, method, tol);
                 // Selection may have extended the ladder (a tighter tol
-                // walks further); keep the deeper version cached. In the
-                // steady state nothing deepens, so the hit path skips
-                // the re-hash/re-lock of an insert entirely (lookup
-                // already refreshed the LRU recency).
+                // walks further; the BBC rungs and the Auto race probe
+                // deeper powers than Sastre does); keep the deeper
+                // version cached. In the steady state nothing deepens,
+                // so the hit path skips the re-hash/re-lock of an
+                // insert entirely (lookup already refreshed the LRU
+                // recency).
                 if powers.depth() > depth_before {
                     cache.insert(&powers);
                 }
                 return (
-                    Plan { n: w.order(), method, m: sel.m, s: sel.s },
+                    Plan { n: w.order(), method: sel.method, m: sel.m, s: sel.s },
                     Some(powers),
                     CacheOutcome::Hit,
                 );
@@ -124,7 +158,7 @@ pub fn plan_spec_cached(
                 CacheOutcome::Miss(cache.insert(&powers))
             };
             (
-                Plan { n: w.order(), method, m: sel.m, s: sel.s },
+                Plan { n: w.order(), method: sel.method, m: sel.m, s: sel.s },
                 Some(powers),
                 outcome,
             )
@@ -235,6 +269,83 @@ mod tests {
         );
         assert_eq!((p.m, p.s), (0, 0));
         assert_eq!(outcome, CacheOutcome::Bypass);
+    }
+
+    #[test]
+    fn beyond_ps_plans_carry_selection_shapes() {
+        let mut rng = Rng::new(41);
+        let a = {
+            let m = Matrix::from_fn(8, 8, |_, _| rng.normal());
+            let nn = norm1(&m);
+            m.scaled(3.0 / nn)
+        };
+        // BBC / tol-adaptive plan like the other dynamic methods: a
+        // concrete (m, s) from the BBC ladder, powers retained.
+        for method in [Method::Bbc, Method::TolAdaptive] {
+            let (p, powers) = plan_spec(&a, method, 1e-8);
+            assert_eq!(p.method, method);
+            assert!([1usize, 2, 4, 8, 12, 18].contains(&p.m), "{p:?}");
+            assert!(powers.is_some());
+        }
+        // Auto on a dense matrix resolves to the race winner — never
+        // Auto itself — so its group key coalesces with a direct
+        // request for the same scheme.
+        let (p, powers) = plan_spec(&a, Method::Auto, 1e-8);
+        assert_ne!(p.method, Method::Auto);
+        assert!(powers.is_some());
+        let (direct, _) = plan_spec(&a, p.method, 1e-8);
+        assert_eq!(p.key(), direct.key());
+    }
+
+    #[test]
+    fn auto_plans_structured_matrices_for_execution_time() {
+        let mut rng = Rng::new(43);
+        // Block-upper-triangular: the 3x3 lower-left block is zero.
+        let a = Matrix::from_fn(6, 6, |i, j| {
+            if i >= 3 && j < 3 {
+                0.0
+            } else {
+                rng.normal() * 0.2
+            }
+        });
+        assert!(structured::triggers(&a));
+        let (p, powers) = plan_spec(&a, Method::Auto, 1e-8);
+        assert_eq!(p.method, Method::Structured);
+        assert_eq!((p.m, p.s), (0, 0));
+        assert!(powers.is_none());
+        // The cached planner routes identically and bypasses the cache.
+        let cache = PowersCache::new(8);
+        let (pc, powers, outcome) =
+            plan_spec_cached(&a, Method::Auto, 1e-8, &cache);
+        assert_eq!(pc, p);
+        assert!(powers.is_none());
+        assert_eq!(outcome, CacheOutcome::Bypass);
+        // A direct Structured request takes the execution-time path too.
+        let (ps, powers) = plan_spec(&a, Method::Structured, 1e-8);
+        assert_eq!((ps.method, ps.m, ps.s), (Method::Structured, 0, 0));
+        assert!(powers.is_none());
+    }
+
+    #[test]
+    fn cached_bbc_plan_is_identical_to_fresh_plan() {
+        let mut rng = Rng::new(79);
+        let a = {
+            let m = Matrix::from_fn(9, 9, |_, _| rng.normal());
+            let nn = norm1(&m);
+            m.scaled(5.0 / nn)
+        };
+        let cache = PowersCache::new(16);
+        for method in [Method::Bbc, Method::TolAdaptive, Method::Auto] {
+            let (fresh, _) = plan_spec(&a, method, 1e-9);
+            let (cold, _, _) = plan_spec_cached(&a, method, 1e-9, &cache);
+            assert_eq!(cold, fresh, "{method:?} cold plan");
+            let (warm, warm_powers, outcome) =
+                plan_spec_cached(&a, method, 1e-9, &cache);
+            assert_eq!(outcome, CacheOutcome::Hit, "{method:?}");
+            assert_eq!(warm, fresh, "{method:?} warm plan");
+            // The warm ladder replays for free.
+            assert_eq!(warm_powers.unwrap().products, 0);
+        }
     }
 
     #[test]

@@ -26,9 +26,10 @@
 //! scale with cores instead of serializing behind one tiny GEMM.
 //!
 //! The float-op sequence of the workspace evaluators mirrors
-//! [`eval::eval_sastre`] / [`eval::eval_ps`] operation for operation, so
-//! batched results are bitwise identical to looping [`super::expm`] —
-//! `tests/prop_batch.rs` pins that contract.
+//! [`eval::eval_sastre`] / [`eval::eval_ps`] / [`eval::eval_bbc`]
+//! operation for operation, so batched results are bitwise identical to
+//! looping [`super::expm`] — `tests/prop_batch.rs` and
+//! `tests/prop_numerics.rs` pin that contract.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -37,6 +38,7 @@ use super::coeffs::{self, C15, C8};
 use super::eval::Powers;
 use super::powers_cache::PowersCache;
 use super::selection::{self, Selection};
+use super::structured;
 use super::{ExpmOptions, ExpmResult, ExpmStats, Method};
 use crate::linalg::{matmul_into, Matrix, SMALL_N};
 use crate::util::threads::{parallel_for_chunks, parallel_map};
@@ -254,6 +256,136 @@ fn eval_ps_ws(ws: &mut Workspace, p: &mut Powers, sched: &PsSchedule, m: usize) 
     acc
 }
 
+/// One q_i of the BBC degree-12 scheme (column `col` of the table) into
+/// a workspace buffer; op-order mirrors the closure in `eval::eval_bbc`.
+fn bbc12_q(ws: &mut Workspace, p: &mut Powers, col: usize) -> Matrix {
+    let t = coeffs::BBC12;
+    let mut x = ws.take();
+    x.copy_from(p.get(3));
+    x.scale_in_place(t[3][col]);
+    x.axpy(t[2][col], p.get(2));
+    x.axpy(t[1][col], p.w());
+    x.add_diag(t[0][col]);
+    x
+}
+
+/// One B_i of the BBC degree-18 scheme (row `r` of the table) into a
+/// workspace buffer; op-order mirrors the closure in `eval::eval_bbc`.
+fn bbc18_b(
+    ws: &mut Workspace,
+    p: &mut Powers,
+    a6: &Matrix,
+    r: usize,
+) -> Matrix {
+    let t = coeffs::BBC18;
+    let mut x = ws.take();
+    x.copy_from(a6);
+    x.scale_in_place(t[r][4]);
+    x.axpy(t[r][3], p.get(3));
+    x.axpy(t[r][2], p.get(2));
+    x.axpy(t[r][1], p.w());
+    x.add_diag(t[r][0]);
+    x
+}
+
+/// Bader–Blanes–Casas nested products through workspace buffers. The
+/// float-op sequence mirrors [`eval::eval_bbc`] exactly — only the
+/// allocation strategy differs — so batched `Bbc`/`TolAdaptive` results
+/// are bitwise identical to the serial path (`tests/prop_numerics.rs`).
+fn eval_bbc_ws(ws: &mut Workspace, p: &mut Powers, m: usize) -> Matrix {
+    match m {
+        // m = 1, 2 share the Sastre rungs op for op.
+        1 | 2 => eval_sastre_ws(ws, p, m),
+        4 => {
+            let mut inner = ws.take();
+            inner.copy_from(p.get(2));
+            inner.scale_in_place(1.0 / 24.0);
+            inner.axpy(1.0 / 6.0, p.w());
+            inner.add_diag(0.5);
+            let mut x = ws.take();
+            matmul_into(&inner, p.get(2), &mut x);
+            x.axpy(1.0, p.w());
+            x.add_diag(1.0);
+            p.products += 1;
+            ws.put(inner);
+            x
+        }
+        8 => {
+            let [x1, x2, x3, x4, x5, x6, x7, y2] = coeffs::bbc8();
+            let mut rhs = ws.take();
+            rhs.copy_from(p.w());
+            rhs.scale_in_place(x1);
+            rhs.axpy(x2, p.get(2));
+            let mut a4 = ws.take();
+            matmul_into(p.get(2), &rhs, &mut a4);
+            let mut left = ws.take();
+            left.copy_from(&a4);
+            left.axpy(x3, p.get(2));
+            // rhs is consumed; rebuild it as the right factor.
+            rhs.copy_from(&a4);
+            rhs.scale_in_place(x7);
+            rhs.axpy(x6, p.get(2));
+            rhs.axpy(x5, p.w());
+            rhs.add_diag(x4);
+            let mut x = ws.take();
+            matmul_into(&left, &rhs, &mut x);
+            x.axpy(y2, p.get(2));
+            x.axpy(1.0, p.w());
+            x.add_diag(1.0);
+            p.products += 2;
+            ws.put(rhs);
+            ws.put(a4);
+            ws.put(left);
+            x
+        }
+        12 => {
+            let q4 = bbc12_q(ws, p, 3);
+            let mut q31 = ws.take();
+            matmul_into(&q4, &q4, &mut q31);
+            let q2 = bbc12_q(ws, p, 2);
+            q31.axpy(1.0, &q2);
+            let mut lhs = bbc12_q(ws, p, 1);
+            lhs.axpy(1.0, &q31);
+            let mut x = ws.take();
+            matmul_into(&lhs, &q31, &mut x);
+            let q0 = bbc12_q(ws, p, 0);
+            x.axpy(1.0, &q0);
+            p.products += 2;
+            ws.put(q4);
+            ws.put(q31);
+            ws.put(q2);
+            ws.put(lhs);
+            ws.put(q0);
+            x
+        }
+        18 => {
+            let mut a6 = ws.take();
+            {
+                let a3 = p.get(3);
+                matmul_into(a3, a3, &mut a6);
+            }
+            let b1 = bbc18_b(ws, p, &a6, 0);
+            let b5 = bbc18_b(ws, p, &a6, 4);
+            let mut a9 = ws.take();
+            matmul_into(&b1, &b5, &mut a9);
+            let b4 = bbc18_b(ws, p, &a6, 3);
+            a9.axpy(1.0, &b4);
+            let mut lhs = bbc18_b(ws, p, &a6, 2);
+            lhs.axpy(1.0, &a9);
+            let mut x = ws.take();
+            matmul_into(&lhs, &a9, &mut x);
+            let b2 = bbc18_b(ws, p, &a6, 1);
+            x.axpy(1.0, &b2);
+            p.products += 3;
+            for buf in [a6, b1, b5, a9, b4, lhs, b2] {
+                ws.put(buf);
+            }
+            x
+        }
+        _ => panic!("no BBC scheme for order {m}"),
+    }
+}
+
 /// Squaring stage through the arena's ping-pong buffer; op-order mirrors
 /// [`super::scaling::repeated_square`]. Returns the products spent (s).
 fn repeated_square_ws(ws: &mut Workspace, x: &mut Matrix, s: u32) -> usize {
@@ -282,9 +414,15 @@ fn run_one(ws: &mut Workspace, mut powers: Powers, sched: &Schedule) -> ExpmResu
         };
     }
     powers.rescale(sched.s);
-    let mut value = match &sched.ps {
-        Some(ps) => eval_ps_ws(ws, &mut powers, ps, sched.m),
-        None => eval_sastre_ws(ws, &mut powers, sched.m),
+    let mut value = match sched.method {
+        Method::PatersonStockmeyer => {
+            let ps = sched.ps.as_ref().expect("P-S bucket carries schedule");
+            eval_ps_ws(ws, &mut powers, ps, sched.m)
+        }
+        Method::Bbc | Method::TolAdaptive => {
+            eval_bbc_ws(ws, &mut powers, sched.m)
+        }
+        _ => eval_sastre_ws(ws, &mut powers, sched.m),
     };
     let squarings = repeated_square_ws(ws, &mut value, sched.s);
     let stats = ExpmStats {
@@ -359,7 +497,8 @@ pub fn expm_batch(mats: &[Matrix], opts: &ExpmOptions) -> Vec<ExpmResult> {
 }
 
 /// A planning outcome: dynamic-method matrices wait for bucketed
-/// execution; Baseline/Padé run the serial pipeline during the sweep.
+/// execution; Baseline/Padé/Structured jobs (and Auto jobs that take the
+/// block-triangular path) run the serial pipeline during the sweep.
 enum Planned {
     Dynamic(Selection, Powers),
     Direct(ExpmResult),
@@ -370,11 +509,14 @@ enum Planned {
 /// ([`super::expm`], [`expm_batch`]) and the coordinator's native backend
 /// all route through.
 ///
-/// Dynamic-method jobs (Sastre, Paterson–Stockmeyer) are planned in
-/// parallel, bucketed by execution shape `(n, method, m, s)` and executed
-/// through shared schedules and per-worker workspaces; Baseline/Padé jobs
-/// have no planned-evaluation structure to share and run the serial
-/// pipeline per matrix (inside the same parallel sweep). A uniform batch
+/// Dynamic-method jobs (Sastre, Paterson–Stockmeyer, BBC, tolerance-
+/// adaptive, and dense-path Auto) are planned in parallel, bucketed by
+/// execution shape `(n, method, m, s)` — for Auto the *race winner's*
+/// method, so mixed batches still coalesce — and executed through shared
+/// schedules and per-worker workspaces; Baseline/Padé/Structured jobs
+/// (and Auto jobs whose matrix triggers the block-triangular path) have
+/// no planned-evaluation structure to share and run the serial pipeline
+/// per matrix (inside the same parallel sweep). A uniform batch
 /// is bitwise identical to the historical `expm_batch` path —
 /// `tests/prop_batch.rs` pins that contract.
 pub fn expm_multi(jobs: &[(&Matrix, ExpmOptions)]) -> Vec<ExpmResult> {
@@ -416,7 +558,18 @@ pub fn expm_multi_cached(
     let plan_one = |i: usize| -> Planned {
         let (w, opts) = jobs[i];
         match opts.method {
-            Method::Sastre | Method::PatersonStockmeyer => {
+            // A structure-triggering Auto job runs the serial pipeline on
+            // the spot: the block path has no bucketed `(m, s)` shape to
+            // share, and routing through `expm_serial` keeps its mid-run
+            // dense fallback bitwise identical to the serial path.
+            Method::Auto if structured::triggers(w) => {
+                Planned::Direct(super::expm_serial(w, &opts))
+            }
+            Method::Sastre
+            | Method::PatersonStockmeyer
+            | Method::Bbc
+            | Method::TolAdaptive
+            | Method::Auto => {
                 if let Some(cache) = cache {
                     if let Some(mut powers) = cache.lookup(w) {
                         let depth_before = powers.depth();
@@ -463,7 +616,10 @@ pub fn expm_multi_cached(
         match p {
             Planned::Direct(r) => *out[i].lock().unwrap() = Some(r),
             Planned::Dynamic(sel, powers) => buckets
-                .entry((jobs[i].0.order(), jobs[i].1.method, sel.m, sel.s))
+                // Bucket by the *selection's* method: for Auto it names
+                // the race winner, so an Auto job lands in (and shares
+                // schedules with) the winning scheme's bucket.
+                .entry((jobs[i].0.order(), sel.method, sel.m, sel.s))
                 .or_default()
                 .push((i, powers)),
         }
@@ -597,6 +753,70 @@ mod tests {
     }
 
     #[test]
+    fn beyond_ps_batch_matches_loop_bitwise() {
+        // The new tier's workspace evaluators mirror the serial float-op
+        // sequence; for Auto the bucketed race must land on the same
+        // winner and the same bits as expm_serial's race.
+        let mats: Vec<Matrix> = (0..9)
+            .map(|i| {
+                randm_norm(5 + i % 3, [0.3, 2.5, 30.0][i % 3], 130 + i as u64)
+            })
+            .collect();
+        for method in [Method::Bbc, Method::TolAdaptive, Method::Auto] {
+            let opts = ExpmOptions { method, tol: 1e-8 };
+            let batch = expm_batch(&mats, &opts);
+            for (i, r) in batch.iter().enumerate() {
+                let single = expm(&mats[i], &opts);
+                assert_eq!(r.value, single.value, "{method:?} matrix {i}");
+                assert_eq!(
+                    r.stats.matrix_products,
+                    single.stats.matrix_products,
+                    "{method:?} matrix {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_batch_routes_structured_members_serially() {
+        // A mixed Auto batch: block-upper-triangular members take the
+        // structured fast path (planned as Direct), dense members race in
+        // buckets — every slot must still match the serial pipeline
+        // bitwise, in order.
+        let block_upper = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let a = Matrix::from_fn(6, 6, |i, j| {
+                if i >= 3 && j < 3 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            });
+            let s = 1.2 / norm1(&a);
+            a.scaled(s)
+        };
+        let mats = vec![
+            block_upper(501),
+            randm_norm(6, 2.0, 502),
+            block_upper(503),
+            randm_norm(6, 0.4, 504),
+        ];
+        assert!(structured::triggers(&mats[0]));
+        assert!(!structured::triggers(&mats[1]));
+        let opts = ExpmOptions { method: Method::Auto, tol: 1e-9 };
+        let batch = expm_batch(&mats, &opts);
+        for (i, r) in batch.iter().enumerate() {
+            let single = expm(&mats[i], &opts);
+            assert_eq!(r.value, single.value, "matrix {i}");
+            assert_eq!(
+                r.stats.matrix_products,
+                single.stats.matrix_products,
+                "matrix {i}"
+            );
+        }
+    }
+
+    #[test]
     fn multi_uniform_equals_expm_batch() {
         // The wrapper contract: a uniform job list is the same computation
         // as expm_batch, bitwise.
@@ -649,13 +869,40 @@ mod tests {
     }
 
     #[test]
+    fn cached_bbc_hits_stay_bitwise() {
+        // BBC reads deeper ladder rungs (W^3) than Sastre's selector
+        // probes at low norms; a cache hit must replay the exact same
+        // bits and charge only the products the warm run spends.
+        use crate::expm::powers_cache::PowersCache;
+        let mats: Vec<Matrix> = (0..4)
+            .map(|i| randm_norm(6, [0.8, 4.0][i % 2], 860 + i as u64))
+            .collect();
+        let opts = ExpmOptions { method: Method::Bbc, tol: 1e-9 };
+        let jobs: Vec<(&Matrix, ExpmOptions)> =
+            mats.iter().map(|w| (w, opts)).collect();
+        let cache = PowersCache::new(16);
+        let cold = expm_multi_cached(&jobs, Some(&cache));
+        let warm = expm_multi_cached(&jobs, Some(&cache));
+        let mut saved = 0usize;
+        for (i, (w, c)) in warm.iter().zip(&cold).enumerate() {
+            assert_eq!(w.value, c.value, "warm BBC value {i} must be bitwise");
+            assert_eq!((w.stats.m, w.stats.s), (c.stats.m, c.stats.s));
+            assert!(w.stats.matrix_products <= c.stats.matrix_products);
+            saved += c.stats.matrix_products - w.stats.matrix_products;
+        }
+        assert!(saved > 0, "warm BBC pass must save ladder products");
+    }
+
+    #[test]
     fn schedule_shares_ps_coefficients() {
         let sched = Schedule::new(Method::PatersonStockmeyer, 12, 1);
         let ps = sched.ps.as_ref().expect("ps schedule");
         assert_eq!((ps.j, ps.k), coeffs::ps_blocking(12));
         assert_eq!(ps.coef.len(), 13);
         assert_eq!(ps.coef[0], 1.0);
-        // Sastre needs no table.
+        // Sastre and the BBC tier need no table.
         assert!(Schedule::new(Method::Sastre, 8, 0).ps.is_none());
+        assert!(Schedule::new(Method::Bbc, 18, 2).ps.is_none());
+        assert!(Schedule::new(Method::TolAdaptive, 12, 0).ps.is_none());
     }
 }

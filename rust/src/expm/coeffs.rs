@@ -36,6 +36,131 @@ pub fn b16() -> f64 {
     C15[0].powi(4)
 }
 
+/// Bader–Blanes–Casas order-8 scheme constants (arXiv:1710.10989, eq.
+/// for T_8 in 3 products): `[x1, x2, x3, x4, x5, x6, x7, y2]` with
+///
+/// ```text
+/// A4 = A2 (x1 A + x2 A2)
+/// A8 = (x3 A2 + A4)(x4 I + x5 A + x6 A2 + x7 A4)
+/// T8 = I + A + y2 A2 + A8
+/// ```
+///
+/// The closed forms below involve sqrt(177); computed at runtime so the
+/// constants stay exactly the IEEE values of the formulas.
+pub fn bbc8() -> [f64; 8] {
+    let s = 177.0f64.sqrt();
+    let x3 = 2.0 / 3.0;
+    [
+        x3 * (1.0 + s) / 88.0,
+        x3 * (1.0 + s) / 352.0,
+        x3,
+        (-271.0 + 29.0 * s) / (315.0 * x3),
+        (11.0 * (-1.0 + s)) / (1260.0 * x3),
+        (11.0 * (-9.0 + s)) / (5040.0 * x3),
+        (89.0 - s) / (5040.0 * x3 * x3),
+        (857.0 - 58.0 * s) / 630.0,
+    ]
+}
+
+/// Bader–Blanes–Casas order-12 scheme table (4 products). Column `i` holds
+/// the coefficients of q_{i+1} over the basis rows `[I, A, A2, A3]`:
+///
+/// ```text
+/// q_i = BBC12[0][i] I + BBC12[1][i] A + BBC12[2][i] A2 + BBC12[3][i] A3
+/// q31 = q3 + q4^2
+/// T12 = q1 + (q2 + q31) q31
+/// ```
+pub const BBC12: [[f64; 4]; 4] = [
+    [
+        -1.860232051462055322e-2,
+        4.60,
+        2.116931182998094429e-1,
+        0.0,
+    ],
+    [
+        -5.00702322573317730e-3,
+        9.9287510353848683614e-1,
+        1.5822438471572672537e-1,
+        -1.3181061013830184015e-1,
+    ],
+    [
+        -5.7342012296052226390e-1,
+        -1.3244556105279963884e-1,
+        1.6563516943672741501e-1,
+        -2.027855540589259079e-2,
+    ],
+    [
+        -1.3339969394389205970e-1,
+        1.7299e-3,
+        1.078627793157924250e-2,
+        -6.75951846863086359e-3,
+    ],
+];
+
+/// Bader–Blanes–Casas order-18 scheme table (5 products). Row `i` holds
+/// the coefficients of B_{i+1} over the basis `[I, A, A2, A3, A6]`
+/// (A6 = A3², the scheme's third power product):
+///
+/// ```text
+/// A9  = B1 B5 + B4
+/// T18 = B2 + (B3 + A9) A9
+/// ```
+pub const BBC18: [[f64; 5]; 5] = [
+    [
+        0.0,
+        -1.00365581030144618291e-1,
+        -8.02924648241156932449e-3,
+        -8.92138498045729985177e-4,
+        0.0,
+    ],
+    [
+        0.0,
+        3.97849749499645077844e-1,
+        1.36783778460411720168,
+        4.98289622525382669416e-1,
+        -6.37898194594723280150e-4,
+    ],
+    [
+        -1.09676396052962061844e1,
+        1.68015813878906206114,
+        5.71779846478865511061e-2,
+        -6.98210122488052056106e-3,
+        3.34975017086070470649e-5,
+    ],
+    [
+        -9.04316832390810593223e-2,
+        -6.76404519071381882256e-2,
+        6.75961301770459654925e-2,
+        2.95552570429315521194e-2,
+        -1.39180257516060693404e-5,
+    ],
+    [
+        0.0,
+        0.0,
+        -9.23364619367118555360e-2,
+        -1.69364939002081722752e-2,
+        -1.40086798182036094347e-5,
+    ],
+];
+
+/// The Bader–Blanes–Casas degree ladder (nested-product schemes).
+pub const BBC_ORDERS: [usize; 6] = [1, 2, 4, 8, 12, 18];
+
+/// Matrix-product cost of evaluating T_m with the BBC schemes, including
+/// the shared powers (A², and A³ for m ≥ 12). The paper's headline: T_18
+/// in 5 products where Paterson–Stockmeyer needs 7.
+pub fn bbc_eval_cost(m: usize) -> usize {
+    match m {
+        1 => 0,
+        2 => 1,
+        4 => 2,
+        8 => 3,
+        12 => 4,
+        18 => 5,
+        _ => panic!("no BBC scheme for order {m}"),
+    }
+}
+
 /// n! as f64 (exact for n <= 22, plenty for the C vectors).
 pub fn factorial(n: usize) -> f64 {
     (1..=n).map(|k| k as f64).product()
@@ -126,6 +251,32 @@ mod tests {
         assert_eq!(ps_eval_cost(16), 6);
         // And order 20 -> 7M (Table 1's last P–S column).
         assert_eq!(ps_eval_cost(20), 7);
+    }
+
+    #[test]
+    fn bbc_cost_matches_paper_tables() {
+        // arXiv:1710.10989 Table: T_2 in 1, T_4 in 2, T_8 in 3, T_12 in 4,
+        // T_18 in 5 products (vs P–S 6 for m = 16, 7 for m = 20).
+        assert_eq!(bbc_eval_cost(1), 0);
+        assert_eq!(bbc_eval_cost(2), 1);
+        assert_eq!(bbc_eval_cost(4), 2);
+        assert_eq!(bbc_eval_cost(8), 3);
+        assert_eq!(bbc_eval_cost(12), 4);
+        assert_eq!(bbc_eval_cost(18), 5);
+        // The headline gap: BBC reaches degree 18 cheaper than P–S
+        // reaches degree 16.
+        assert!(bbc_eval_cost(18) < ps_eval_cost(16));
+    }
+
+    #[test]
+    fn bbc8_constants_satisfy_closed_forms() {
+        // The scheme's free parameters solve the order conditions with
+        // sqrt(177); spot-check the two published rational combinations.
+        let c = bbc8();
+        let s = 177.0f64.sqrt();
+        assert_eq!(c[2], 2.0 / 3.0);
+        assert!((c[0] - 4.0 * c[1]).abs() < 1e-18, "x1 = 4 x2");
+        assert!((c[7] - (857.0 - 58.0 * s) / 630.0).abs() < 1e-18);
     }
 
     #[test]

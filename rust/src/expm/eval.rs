@@ -221,6 +221,120 @@ pub fn eval_ps(p: &mut Powers, m: usize) -> EvalOut {
     EvalOut { value: out.unwrap(), products: p.products - before }
 }
 
+/// Evaluate T_m(W) by the Bader–Blanes–Casas nested-product schemes
+/// (arXiv:1710.10989), m in {1, 2, 4, 8, 12, 18}.
+///
+/// Unlike the Sastre 15+ formula, every BBC scheme reproduces T_m
+/// *exactly* (zero spill into higher-degree coefficients), so the
+/// remainder analysis uses the plain 1/(m+1)!, 1/(m+2)! terms. Product
+/// counts including the shared powers: 0, 1, 2, 3, 4, 5 — degree 18 in
+/// five products is the scheme family's headline.
+pub fn eval_bbc(p: &mut Powers, m: usize) -> EvalOut {
+    let n = p.order();
+    let before = p.products;
+    let value = match m {
+        1 => {
+            // T1 = A + I (shared with the Sastre ladder).
+            let mut x = p.w().clone();
+            x.add_diag(1.0);
+            x
+        }
+        2 => {
+            // T2 = A2/2 + A + I (shared with the Sastre ladder).
+            let mut x = p.get(2).scaled(0.5);
+            x.axpy(1.0, &p.pows[0].clone());
+            x.add_diag(1.0);
+            x
+        }
+        4 => {
+            // T4 = (A2/24 + A/6 + I/2) A2 + A + I — one product past A2.
+            let a2 = p.get(2).clone();
+            let a = p.w().clone();
+            let mut inner = a2.scaled(1.0 / 24.0);
+            inner.axpy(1.0 / 6.0, &a);
+            inner.add_diag(0.5);
+            let mut x = matmul(&inner, &a2);
+            x.axpy(1.0, &a);
+            x.add_diag(1.0);
+            p.products += 1;
+            x
+        }
+        8 => {
+            // A4 = A2 (x1 A + x2 A2); A8 = (x3 A2 + A4)(x4 I + x5 A +
+            // x6 A2 + x7 A4); T8 = I + A + y2 A2 + A8.
+            let a2 = p.get(2).clone();
+            let a = p.w().clone();
+            let [x1, x2, x3, x4, x5, x6, x7, y2] = coeffs::bbc8();
+            let mut rhs = a.scaled(x1);
+            rhs.axpy(x2, &a2);
+            let a4 = matmul(&a2, &rhs);
+            let mut left = a4.clone();
+            left.axpy(x3, &a2);
+            let mut right = a4.scaled(x7);
+            right.axpy(x6, &a2);
+            right.axpy(x5, &a);
+            right.add_diag(x4);
+            let mut x = matmul(&left, &right);
+            x.axpy(y2, &a2);
+            x.axpy(1.0, &a);
+            x.add_diag(1.0);
+            p.products += 2;
+            x
+        }
+        12 => {
+            // q_i from the BBC12 table (columns over [I, A, A2, A3]);
+            // q31 = q3 + q4^2; T12 = q1 + (q2 + q31) q31.
+            let a2 = p.get(2).clone();
+            let a3 = p.get(3).clone();
+            let a = p.w().clone();
+            let t = coeffs::BBC12;
+            let q = |col: usize| -> Matrix {
+                let mut x = a3.scaled(t[3][col]);
+                x.axpy(t[2][col], &a2);
+                x.axpy(t[1][col], &a);
+                x.add_diag(t[0][col]);
+                x
+            };
+            let q4 = q(3);
+            let mut q31 = matmul(&q4, &q4);
+            q31.axpy(1.0, &q(2));
+            let mut lhs = q(1);
+            lhs.axpy(1.0, &q31);
+            let mut x = matmul(&lhs, &q31);
+            x.axpy(1.0, &q(0));
+            p.products += 2;
+            x
+        }
+        18 => {
+            // B_i from the BBC18 table (rows over [I, A, A2, A3, A6],
+            // A6 = A3^2); A9 = B1 B5 + B4; T18 = B2 + (B3 + A9) A9.
+            let a2 = p.get(2).clone();
+            let a3 = p.get(3).clone();
+            let a = p.w().clone();
+            let a6 = matmul(&a3, &a3);
+            let t = coeffs::BBC18;
+            let b = |r: usize| -> Matrix {
+                let mut x = a6.scaled(t[r][4]);
+                x.axpy(t[r][3], &a3);
+                x.axpy(t[r][2], &a2);
+                x.axpy(t[r][1], &a);
+                x.add_diag(t[r][0]);
+                x
+            };
+            let mut a9 = matmul(&b(0), &b(4));
+            a9.axpy(1.0, &b(3));
+            let mut lhs = b(2);
+            lhs.axpy(1.0, &a9);
+            let mut x = matmul(&lhs, &a9);
+            x.axpy(1.0, &b(1));
+            p.products += 3;
+            x
+        }
+        _ => panic!("no BBC scheme for order {m} (n = {n})"),
+    };
+    EvalOut { value, products: p.products - before }
+}
+
 /// Degree-m Taylor by explicit term recurrence — the reference evaluator
 /// (m-1 products, the baseline Algorithm-1 inner loop cost).
 pub fn eval_taylor_terms(w: &Matrix, m: usize) -> EvalOut {
@@ -298,6 +412,61 @@ mod tests {
             let mut p = Powers::new(a.clone());
             eval_ps(&mut p, m);
             assert_eq!(p.products, want, "m={m}");
+        }
+    }
+
+    #[test]
+    fn bbc_matches_taylor_exactly_at_every_order() {
+        // Every BBC scheme reproduces T_m with zero spill — the property
+        // the selection bounds (plain 1/(m+1)! remainders) rely on.
+        let a = randm(9, 0.7, 21);
+        for m in coeffs::BBC_ORDERS {
+            let mut p = Powers::new(a.clone());
+            let got = eval_bbc(&mut p, m);
+            let want = eval_taylor_terms(&a, m);
+            assert_close(&got.value, &want.value, 1e-11);
+        }
+    }
+
+    #[test]
+    fn bbc_product_counts_match_paper() {
+        // Totals incl. shared powers: 0, 1, 2, 3, 4, 5 (T_18 in five
+        // products — the Bader–Blanes–Casas headline).
+        let a = randm(6, 0.5, 22);
+        for m in coeffs::BBC_ORDERS {
+            let mut p = Powers::new(a.clone());
+            let e = eval_bbc(&mut p, m);
+            assert_eq!(p.products, coeffs::bbc_eval_cost(m), "m={m}");
+            // On a fresh ladder the eval charges everything it builds
+            // (A2/A3 extensions included), so the two counters agree.
+            assert_eq!(e.products, p.products, "m={m}");
+        }
+    }
+
+    #[test]
+    fn bbc_low_orders_bitwise_match_sastre() {
+        // The m = 1, 2 rungs are the same float-op sequence in both
+        // families; results must agree to the bit.
+        let a = randm(7, 1.1, 23);
+        for m in [1usize, 2] {
+            let mut pb = Powers::new(a.clone());
+            let mut ps = Powers::new(a.clone());
+            let b = eval_bbc(&mut pb, m);
+            let s = eval_sastre(&mut ps, m);
+            assert_eq!(b.value, s.value, "m={m}");
+        }
+    }
+
+    #[test]
+    fn bbc_identity_evaluation() {
+        let z = Matrix::zeros(4, 4);
+        for m in [4usize, 8, 12, 18] {
+            let mut p = Powers::new(z.clone());
+            assert_close(
+                &eval_bbc(&mut p, m).value,
+                &Matrix::identity(4),
+                1e-15,
+            );
         }
     }
 

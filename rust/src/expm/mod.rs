@@ -1,13 +1,17 @@
 //! The expm core library — the paper's contribution as a clean public API.
 //!
-//! Three dynamic methods (paper Section 4.1's comparands):
+//! The paper Section 4.1 comparands plus the beyond-P–S numerics tier:
 //!
-//! | [`Method`]     | paper name          | selection     | evaluation        |
+//! | [`Method`]     | wire name           | selection     | evaluation        |
 //! |----------------|---------------------|---------------|-------------------|
 //! | `Sastre`       | `expm_flow_sastre`  | Algorithm 4   | formulas (10)-(17)|
 //! | `PatersonStockmeyer` | `expm_flow_ps`| Algorithm 3   | P–S blocking      |
 //! | `Baseline`     | `expm_flow` [25]    | Algorithm 1   | term summation    |
 //! | `Pade`         | (oracle)            | Higham 2005   | Padé-13           |
+//! | `Bbc`          | `expm_flow_bbc`     | BBC ladder    | nested products   |
+//! | `TolAdaptive`  | `expm_flow_tol`     | min-cost walk | nested products   |
+//! | `Structured`   | `expm_flow_structured` | block detection | per-block + Parlett |
+//! | `Auto`         | `expm_flow_auto`    | scheme race   | winner's scheme   |
 //!
 //! Every run returns [`ExpmStats`] with the exact matrix-product count the
 //! paper's cost model predicts — the benches sum these for Figures 1g/2g/….
@@ -22,6 +26,7 @@ pub mod pade;
 pub mod powers_cache;
 pub mod scaling;
 pub mod selection;
+pub mod structured;
 
 use crate::linalg::Matrix;
 use eval::Powers;
@@ -44,6 +49,23 @@ pub enum Method {
     Baseline,
     /// Higham-2005 Padé-13 (oracle; ignores `tol`).
     Pade,
+    /// Bader–Blanes–Casas nested-product schemes (arXiv:1710.10989):
+    /// degree 18 in 5 products where P–S needs 6 for degree 16.
+    Bbc,
+    /// BBC evaluation under tolerance-driven scaling in the
+    /// Blanes–Kopylov–Seydaoğlu spirit (arXiv:2404.12789): minimises
+    /// evaluation + squaring products over the whole (m, s) ladder
+    /// instead of first-accepting an unscaled degree.
+    TolAdaptive,
+    /// Block-triangular fast path: exponentiate the diagonal blocks and
+    /// recover off-diagonal blocks by a Parlett-style Sylvester
+    /// recurrence; falls back to the `Auto` race when the structure test
+    /// or the residual guard declines.
+    Structured,
+    /// Race every polynomial scheme on *predicted* product count per
+    /// matrix — plus the structured fast path when it triggers — and run
+    /// the cheapest. Resolves to a concrete method at planning time.
+    Auto,
 }
 
 impl Method {
@@ -55,12 +77,48 @@ impl Method {
             Method::PatersonStockmeyer => "expm_flow_ps",
             Method::Baseline => "expm_flow",
             Method::Pade => "expm_pade",
+            Method::Bbc => "expm_flow_bbc",
+            Method::TolAdaptive => "expm_flow_tol",
+            Method::Structured => "expm_flow_structured",
+            Method::Auto => "expm_flow_auto",
         }
     }
 
     /// The tolerance-adaptive methods the paper compares (no Pade).
+    ///
+    /// Deliberately unchanged by the beyond-P–S tier: the bench mixes and
+    /// figure reproductions iterate exactly this paper trio. The full
+    /// registered set is [`Method::all_schemes`].
     pub fn all_dynamic() -> [Method; 3] {
         [Method::Sastre, Method::PatersonStockmeyer, Method::Baseline]
+    }
+
+    /// Every scheme the service accepts on the wire — the original
+    /// quartet plus the beyond-P–S tier (additive v2 names).
+    pub fn all_schemes() -> [Method; 8] {
+        [
+            Method::Sastre,
+            Method::PatersonStockmeyer,
+            Method::Baseline,
+            Method::Pade,
+            Method::Bbc,
+            Method::TolAdaptive,
+            Method::Structured,
+            Method::Auto,
+        ]
+    }
+
+    /// The polynomial schemes [`selection::select_race`] bids against
+    /// each other — everything with a selection-time-predictable product
+    /// count. Order matters: earlier entries win exact ties, so Sastre
+    /// keeps pre-race behavior wherever nothing is strictly cheaper.
+    pub fn race_pool() -> [Method; 4] {
+        [
+            Method::Sastre,
+            Method::PatersonStockmeyer,
+            Method::Bbc,
+            Method::TolAdaptive,
+        ]
     }
 
     /// Parse a wire/CLI method name. Accepts both the short spellings used
@@ -74,6 +132,12 @@ impl Method {
             }
             "baseline" | "taylor" | "expm_flow" => Some(Method::Baseline),
             "pade" | "expm_pade" => Some(Method::Pade),
+            "bbc" | "expm_flow_bbc" => Some(Method::Bbc),
+            "tol" | "tol_adaptive" | "bks" | "expm_flow_tol" => {
+                Some(Method::TolAdaptive)
+            }
+            "structured" | "expm_flow_structured" => Some(Method::Structured),
+            "auto" | "race" | "expm_flow_auto" => Some(Method::Auto),
             _ => None,
         }
     }
@@ -148,9 +212,22 @@ pub(crate) fn expm_serial(w: &Matrix, opts: &ExpmOptions) -> ExpmResult {
             value: pade::expm_pade13(w),
             stats: ExpmStats::default(),
         },
-        Method::Sastre | Method::PatersonStockmeyer => {
+        Method::Sastre
+        | Method::PatersonStockmeyer
+        | Method::Bbc
+        | Method::TolAdaptive => {
             let sel_opts = SelectOptions { tol, power_est: false };
             expm_dynamic(w, opts.method, &sel_opts)
+        }
+        Method::Structured | Method::Auto => {
+            // Both try the block-triangular fast path first; `Structured`
+            // is the explicit request, `Auto` considers it alongside the
+            // scheme race. Either way a declined detection or residual
+            // guard falls back to racing the polynomial schemes.
+            let sel_opts = SelectOptions { tol, power_est: false };
+            structured::expm_structured(w, tol).unwrap_or_else(|| {
+                expm_dynamic(w, Method::Auto, &sel_opts)
+            })
         }
     }
 }
@@ -169,6 +246,11 @@ pub fn expm_dynamic(
         Method::PatersonStockmeyer => {
             selection::select_ps(&mut powers, sel_opts)
         }
+        Method::Bbc => selection::select_bbc(&mut powers, sel_opts),
+        Method::TolAdaptive => {
+            selection::select_tol_adaptive(&mut powers, sel_opts)
+        }
+        Method::Auto => selection::select_race(&mut powers, sel_opts),
         _ => unreachable!("expm_dynamic is for the dynamic methods"),
     };
     if sel.m == 0 {
@@ -180,9 +262,14 @@ pub fn expm_dynamic(
     }
     // Scale: powers were computed on W, so W^k picks up 2^{-ks}.
     powers.rescale(sel.s);
-    let out = match method {
+    // Dispatch on the *selection's* method: under `Auto` it names the
+    // race winner, so evaluation always runs a concrete scheme.
+    let out = match sel.method {
         Method::Sastre => eval::eval_sastre(&mut powers, sel.m),
         Method::PatersonStockmeyer => eval::eval_ps(&mut powers, sel.m),
+        Method::Bbc | Method::TolAdaptive => {
+            eval::eval_bbc(&mut powers, sel.m)
+        }
         _ => unreachable!(),
     };
     let mut value = out.value;
@@ -421,6 +508,75 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_rotation_beyond_ps_tier() {
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![-1.0, 0.0]]);
+        let (c, s) = (1f64.cos(), 1f64.sin());
+        // BBC accepts its m = 12 rung at ||A|| = 1 (2 probe powers + 2
+        // evaluation products); the tolerance-driven walk lands on the
+        // same rung (its s = 0 wins the 4-product tie against (8, s=1)).
+        // Auto races all four ladders on one shared Powers: Sastre wins
+        // on predicted cost (4), but the P–S probe powers W^3, W^4 are
+        // charged honestly, so the *actual* count is 6.
+        let cases = [
+            (Method::Bbc, 12usize, 0u32, 4usize),
+            (Method::TolAdaptive, 12, 0, 4),
+            (Method::Auto, 15, 0, 6),
+        ];
+        for (method, m, sq, prods) in cases {
+            let r = expm(&a, &ExpmOptions { method, tol: 1e-8 });
+            assert_eq!(
+                (r.stats.m, r.stats.s, r.stats.matrix_products),
+                (m, sq, prods),
+                "{}",
+                method.name()
+            );
+            assert!(
+                (r.value[(0, 0)] - c).abs() < 2e-9
+                    && (r.value[(0, 1)] - s).abs() < 2e-9,
+                "{}: {:?}",
+                method.name(),
+                r.value
+            );
+            // A^2 = -I exactly: the rotation structure survives bitwise.
+            assert_eq!(r.value[(0, 0)], r.value[(1, 1)], "{}", method.name());
+            assert_eq!(r.value[(0, 1)], -r.value[(1, 0)], "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn method_names_round_trip() {
+        for m in Method::all_schemes() {
+            assert_eq!(Method::parse(m.name()), Some(m), "{}", m.name());
+        }
+        assert_eq!(Method::parse("bbc"), Some(Method::Bbc));
+        assert_eq!(Method::parse("bks"), Some(Method::TolAdaptive));
+        assert_eq!(Method::parse("tol"), Some(Method::TolAdaptive));
+        assert_eq!(Method::parse("auto"), Some(Method::Auto));
+        assert_eq!(Method::parse("structured"), Some(Method::Structured));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn new_tier_agrees_with_oracle() {
+        for seed in 0..10u64 {
+            let target = [0.01, 0.3, 1.0, 4.0, 20.0][seed as usize % 5];
+            let a = randm_norm(12, target, seed);
+            let oracle = pade::expm_pade13(&a);
+            for method in
+                [Method::Bbc, Method::TolAdaptive, Method::Auto, Method::Structured]
+            {
+                let r = expm(&a, &ExpmOptions { method, tol: 1e-10 });
+                let err = rel_err(&r.value, &oracle);
+                assert!(
+                    err < 1e-7,
+                    "{} seed {seed} norm {target}: err {err:e}",
+                    method.name()
+                );
             }
         }
     }

@@ -230,6 +230,52 @@ mod tests {
     }
 
     #[test]
+    fn bbc_access_pattern_charges_exact_products() {
+        // The BBC degree-18 scheme reads W^2 and W^3 from the ladder and
+        // builds W^6, W^9-ish intermediates locally. A warm hit must
+        // charge *only* the three local products — no re-charge for the
+        // cached rungs (under-count) and no double-count from the reset.
+        use crate::expm::eval::eval_bbc;
+        let a = randm(6, 11).scaled(0.1);
+        let mut cold = Powers::new(a.clone());
+        let cold_out = eval_bbc(&mut cold, 18);
+        // Fresh ladder: W^2, W^3 (2 products) + 3 local = 5 — exactly
+        // the paper-table cost of the degree-18 scheme.
+        assert_eq!(cold_out.products, 5);
+        assert_eq!(cold.products, 5);
+        let cache = PowersCache::new(16);
+        cache.insert(&cold);
+        let mut warm = cache.lookup(&a).expect("hit");
+        assert_eq!(warm.products, 0, "hit resets the counter");
+        let warm_out = eval_bbc(&mut warm, 18);
+        assert_eq!(warm_out.products, 3, "only the local products");
+        assert_eq!(warm.products, 3, "no double-count via the ladder");
+        assert_eq!(warm_out.value, cold_out.value, "warm bits replay");
+        // A second evaluation from the same ladder charges the local
+        // products again (they are not cached) and nothing else.
+        let again = eval_bbc(&mut warm, 18);
+        assert_eq!(again.products, 3);
+        assert_eq!(warm.products, 6);
+    }
+
+    #[test]
+    fn reset_products_keeps_ladder_reads_free() {
+        // reset_products only zeroes the counter; rungs computed before
+        // the reset stay materialized, so later reads charge nothing.
+        let a = randm(5, 12);
+        let mut p = Powers::new(a);
+        p.get(3);
+        assert_eq!(p.products, 2);
+        p.reset_products();
+        assert_eq!(p.products, 0);
+        p.get(2);
+        p.get(3);
+        assert_eq!(p.products, 0, "pre-reset rungs re-read free");
+        p.get(4);
+        assert_eq!(p.products, 1, "new rungs still charge");
+    }
+
+    #[test]
     fn miss_on_unknown_and_on_different_matrix() {
         let cache = PowersCache::new(16);
         assert!(cache.lookup(&randm(4, 2)).is_none());

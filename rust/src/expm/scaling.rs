@@ -1,4 +1,12 @@
 //! Squaring stage of Algorithm 2 (lines 4–6): X <- X^2, s times.
+//!
+//! How many squarings to pay is decided at selection time: the classic
+//! ladders accept the first (m, s) whose remainder bound meets the
+//! tolerance, while the BKS tolerance-driven selector
+//! (`selection::select_tol_adaptive`, arXiv:2404.12789) minimizes
+//! `eval_cost(m) + s` over *all* rungs — trading Taylor degree against
+//! repeated squaring here. Both end up in this loop; op order is pinned
+//! bitwise by the batch engine's mirror (`batch::repeated_square_ws`).
 
 use crate::linalg::{matmul_into, Matrix};
 

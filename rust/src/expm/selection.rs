@@ -11,7 +11,10 @@
 //! subsequent evaluation reuses them — that bookkeeping is what makes the
 //! total product counts match Table 1 + s.
 
-use super::coeffs::{b16, inv_factorial};
+use super::coeffs::{
+    b16, bbc_eval_cost, inv_factorial, ps_eval_cost, sastre_eval_cost,
+    BBC_ORDERS,
+};
 use super::eval::Powers;
 use super::{Method, UNIT_ROUNDOFF};
 use crate::linalg::norms::{norm1, norm1_power_est};
@@ -23,6 +26,11 @@ pub const MAX_S: u32 = 20;
 /// Outcome of the order/scale selection.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Selection {
+    /// The evaluation scheme the selection is for. Equal to the requested
+    /// method for the concrete ladders; for [`Method::Auto`] it is the
+    /// *winning* concrete method, so downstream bucketing and evaluation
+    /// never see `Auto`.
+    pub method: Method,
     /// Chosen polynomial order (15 means the 15+ scheme in Algorithm 4).
     pub m: usize,
     /// Scaling parameter: W is divided by 2^s and squared s times after.
@@ -116,8 +124,65 @@ pub fn select_dynamic_from(
     match method {
         Method::Sastre => select_sastre(powers, &opts),
         Method::PatersonStockmeyer => select_ps(powers, &opts),
+        Method::Bbc => select_bbc(powers, &opts),
+        Method::TolAdaptive => select_tol_adaptive(powers, &opts),
+        Method::Auto => select_race(powers, &opts),
         other => panic!("select_dynamic needs a dynamic method, got {other:?}"),
     }
+}
+
+/// Products the full dense pipeline will spend on a selection: the
+/// scheme's evaluation cost at degree m (shared power ladder included)
+/// plus one squaring product per scaling step. This is the quantity the
+/// scheme race bids with, and what the golden product-count tests pin
+/// against the paper tables.
+///
+/// Panics on selections no concrete polynomial scheme produced.
+pub fn predicted_products(sel: &Selection) -> usize {
+    if sel.m == 0 {
+        return 0;
+    }
+    let eval = match sel.method {
+        Method::Sastre => sastre_eval_cost(sel.m),
+        Method::PatersonStockmeyer => ps_eval_cost(sel.m),
+        Method::Bbc | Method::TolAdaptive => bbc_eval_cost(sel.m),
+        other => {
+            panic!("predicted_products needs a polynomial scheme, got {other:?}")
+        }
+    };
+    eval + sel.s as usize
+}
+
+/// Race every registered polynomial scheme on *predicted* product count
+/// at this tolerance and keep the winner's selection ([`Method::Auto`]).
+///
+/// All ladders walk the same shared [`Powers`], so probe powers
+/// (W^2..W^4) are computed once, retained for evaluation, and charged
+/// honestly to this matrix's actual product count; the race *decision*
+/// uses predicted costs only. Ties prefer the smaller s (less squaring
+/// error amplification), then the earlier entry of [`Method::race_pool`]
+/// (Sastre first) — so pre-race behavior is preserved wherever the newer
+/// schemes don't strictly win.
+pub fn select_race(powers: &mut Powers, opts: &SelectOptions) -> Selection {
+    let mut best: Option<(usize, Selection)> = None;
+    for method in Method::race_pool() {
+        let sel = match method {
+            Method::Sastre => select_sastre(powers, opts),
+            Method::PatersonStockmeyer => select_ps(powers, opts),
+            Method::Bbc => select_bbc(powers, opts),
+            Method::TolAdaptive => select_tol_adaptive(powers, opts),
+            other => unreachable!("non-dynamic {other:?} in race pool"),
+        };
+        let cost = predicted_products(&sel);
+        let wins = match &best {
+            None => true,
+            Some((bc, bs)) => cost < *bc || (cost == *bc && sel.s < bs.s),
+        };
+        if wins {
+            best = Some((cost, sel));
+        }
+    }
+    best.expect("race pool is non-empty").1
 }
 
 /// Algorithm 4: degree ladder for the Sastre evaluation formulas.
@@ -128,7 +193,7 @@ pub fn select_dynamic_from(
 pub fn select_sastre(powers: &mut Powers, opts: &SelectOptions) -> Selection {
     let nw = norm1(powers.w());
     if nw == 0.0 {
-        return Selection { m: 0, s: 0, e1: 0.0, e2: 0.0 };
+        return zero_selection(Method::Sastre);
     }
     const M: [usize; 5] = [1, 2, 4, 8, 15];
     const J: [usize; 5] = [1, 2, 2, 2, 2];
@@ -173,12 +238,17 @@ pub fn select_sastre(powers: &mut Powers, opts: &SelectOptions) -> Selection {
         let e2 = c[p + 1] * raw2;
         last = (e1, e2);
         if e1 + e2 <= opts.tol {
-            return Selection { m, s: 0, e1, e2 };
+            return Selection { method: Method::Sastre, m, s: 0, e1, e2 };
         }
     }
     let m = 15;
     let s = scale_from_bounds(m, last.0, last.1, opts.tol);
-    Selection { m, s, e1: last.0, e2: last.1 }
+    Selection { method: Method::Sastre, m, s, e1: last.0, e2: last.1 }
+}
+
+/// A zero matrix needs no products under any scheme: T_0 = I.
+fn zero_selection(method: Method) -> Selection {
+    Selection { method, m: 0, s: 0, e1: 0.0, e2: 0.0 }
 }
 
 /// Algorithm 3: degree ladder for Paterson–Stockmeyer evaluation.
@@ -188,7 +258,7 @@ pub fn select_sastre(powers: &mut Powers, opts: &SelectOptions) -> Selection {
 pub fn select_ps(powers: &mut Powers, opts: &SelectOptions) -> Selection {
     let nw = norm1(powers.w());
     if nw == 0.0 {
-        return Selection { m: 0, s: 0, e1: 0.0, e2: 0.0 };
+        return zero_selection(Method::PatersonStockmeyer);
     }
     const M: [usize; 7] = [1, 2, 4, 6, 9, 12, 16];
     const J: [usize; 7] = [1, 2, 2, 3, 3, 4, 4];
@@ -233,12 +303,172 @@ pub fn select_ps(powers: &mut Powers, opts: &SelectOptions) -> Selection {
         let e2 = c[p + 1] * raw2;
         last = (e1, e2);
         if e1 + e2 <= opts.tol {
-            return Selection { m, s: 0, e1, e2 };
+            return Selection {
+                method: Method::PatersonStockmeyer,
+                m,
+                s: 0,
+                e1,
+                e2,
+            };
         }
     }
     let m = 16;
     let s = scale_from_bounds(m, last.0, last.1, opts.tol);
-    Selection { m, s, e1: last.0, e2: last.1 }
+    Selection {
+        method: Method::PatersonStockmeyer,
+        m,
+        s,
+        e1: last.0,
+        e2: last.1,
+    }
+}
+
+/// Highest explicit power each BBC scheme computes (W^2 through m = 8,
+/// W^3 from m = 12 — W^6 is (W^3)^2 and never probed by the selector);
+/// K completes j·k = m so the bound orders line up.
+const BBC_J: [usize; 6] = [1, 2, 2, 2, 3, 3];
+const BBC_K: [usize; 6] = [1, 1, 2, 4, 4, 6];
+
+/// Remainder bounds (e1, e2) at BBC rung `i` on the unscaled W. `nw2`
+/// caches ||W^2||_1 across rungs (NAN until first computed). The C pairs
+/// are the plain Taylor remainders 1/(m+1)!, 1/(m+2)! — the BBC schemes
+/// reproduce T_m exactly (zero coefficient spill), so no scheme-specific
+/// correction like Sastre's |1/16! - b16| term is needed.
+fn bbc_rung_bounds(
+    powers: &mut Powers,
+    i: usize,
+    nw: f64,
+    nw2: &mut f64,
+    opts: &SelectOptions,
+) -> (f64, f64) {
+    let (m, j, k) = (BBC_ORDERS[i], BBC_J[i], BBC_K[i]);
+    let (mut raw1, mut raw2);
+    if m == 1 {
+        raw1 = nw * nw;
+        raw2 = nw * nw * nw;
+    } else {
+        let nwj = norm1(powers.get(j));
+        if nw2.is_nan() {
+            *nw2 = if j == 2 { nwj } else { norm1(powers.get(2)) };
+        }
+        let base = nwj.powi(k as i32);
+        raw1 = base * nw;
+        raw2 = base * *nw2;
+    }
+    raw1 = refine(powers, m + 1, raw1, opts);
+    raw2 = refine(powers, m + 2, raw2, opts);
+    (inv_factorial(m + 1) * raw1, inv_factorial(m + 2) * raw2)
+}
+
+/// Degree ladder for the Bader–Blanes–Casas schemes, Algorithm-4 style:
+/// M = [1, 2, 4, 8, 12, 18], first degree whose two-term remainder bound
+/// clears the tolerance wins with s = 0; otherwise the top degree is
+/// kept and s follows eq. (44). The powers probed (W^2, W^3) are exactly
+/// the ones [`super::eval::eval_bbc`] reuses.
+pub fn select_bbc(powers: &mut Powers, opts: &SelectOptions) -> Selection {
+    let nw = norm1(powers.w());
+    if nw == 0.0 {
+        return zero_selection(Method::Bbc);
+    }
+    let mut nw2 = f64::NAN;
+    let mut last = (0.0f64, 0.0f64);
+    for i in 0..BBC_ORDERS.len() {
+        let (e1, e2) = bbc_rung_bounds(powers, i, nw, &mut nw2, opts);
+        last = (e1, e2);
+        if e1 + e2 <= opts.tol {
+            return Selection {
+                method: Method::Bbc,
+                m: BBC_ORDERS[i],
+                s: 0,
+                e1,
+                e2,
+            };
+        }
+    }
+    let m = 18;
+    let s = scale_from_bounds(m, last.0, last.1, opts.tol);
+    Selection { method: Method::Bbc, m, s, e1: last.0, e2: last.1 }
+}
+
+/// Eq. (44) without the overscaling clamp — lets the tolerance-driven
+/// selector tell "meets tol at this s" apart from "hit the cap".
+fn scale_raw(m: usize, e1: f64, e2: f64, tol: f64) -> i64 {
+    let s1 = ceil_log2_ratio(e1, tol, (m + 1) as f64);
+    let s2 = ceil_log2_ratio(e2, tol, (m + 2) as f64);
+    s1.max(s2).max(0)
+}
+
+/// Tolerance-driven scaling in the Blanes–Kopylov–Seydaoğlu spirit
+/// (arXiv:2404.12789): instead of first-accepting the lowest degree with
+/// s = 0, walk every BBC rung, compute the minimal s_m clearing the
+/// tolerance *at that degree*, and pick the rung minimising the total
+/// predicted products eval_cost(m) + s_m. Ties prefer the smaller s
+/// (less squaring error amplification), then the lower degree.
+///
+/// Two exact early exits keep the walk cheap: a rung with s = 0 is
+/// globally optimal (later rungs cost strictly more products even
+/// unscaled), and once a rung's bare eval cost exceeds the best total no
+/// later rung can win, so W^3 is never probed needlessly. Rungs whose
+/// bounds overflow or need s > [`MAX_S`] are infeasible and skipped; if
+/// every rung is infeasible the top degree is kept at the cap, exactly
+/// like [`select_bbc`].
+pub fn select_tol_adaptive(
+    powers: &mut Powers,
+    opts: &SelectOptions,
+) -> Selection {
+    let nw = norm1(powers.w());
+    if nw == 0.0 {
+        return zero_selection(Method::TolAdaptive);
+    }
+    let mut nw2 = f64::NAN;
+    let mut best: Option<(usize, Selection)> = None;
+    let mut capped: Option<Selection> = None;
+    for i in 0..BBC_ORDERS.len() {
+        let m = BBC_ORDERS[i];
+        if let Some((bc, _)) = best {
+            if bbc_eval_cost(m) > bc {
+                break;
+            }
+        }
+        let (e1, e2) = bbc_rung_bounds(powers, i, nw, &mut nw2, opts);
+        if i == BBC_ORDERS.len() - 1 {
+            let s = scale_from_bounds(m, e1, e2, opts.tol);
+            capped = Some(Selection {
+                method: Method::TolAdaptive,
+                m,
+                s,
+                e1,
+                e2,
+            });
+        }
+        let feasible = e1.is_finite()
+            && e2.is_finite()
+            && scale_raw(m, e1, e2, opts.tol) <= MAX_S as i64;
+        if !feasible {
+            continue;
+        }
+        let s = scale_from_bounds(m, e1, e2, opts.tol);
+        let cost = bbc_eval_cost(m) + s as usize;
+        let wins = match &best {
+            None => true,
+            Some((bc, bs)) => {
+                cost < *bc || (cost == *bc && (s, m) < (bs.s, bs.m))
+            }
+        };
+        if wins {
+            let sel =
+                Selection { method: Method::TolAdaptive, m, s, e1, e2 };
+            best = Some((cost, sel));
+        }
+        if s == 0 {
+            break;
+        }
+    }
+    // `capped` is always set when no rung is feasible: the two breaks
+    // only fire once a feasible best exists, so the walk reaches the
+    // last rung in the fallback case.
+    best.map(|(_, sel)| sel)
+        .unwrap_or_else(|| capped.expect("top rung visited"))
 }
 
 #[cfg(test)]
@@ -396,6 +626,90 @@ mod tests {
     fn select_dynamic_rejects_execution_time_methods() {
         let a = Matrix::identity(3);
         let _ = select_dynamic(&a, Method::Pade, 1e-8);
+    }
+
+    #[test]
+    fn bbc_zero_and_tiny_norm() {
+        let mut p = Powers::new(Matrix::zeros(4, 4));
+        let sel = select_bbc(&mut p, &opts(1e-8));
+        assert_eq!((sel.m, sel.s), (0, 0));
+        assert_eq!(sel.method, Method::Bbc);
+        let a = scaled_randn(8, 1e-6, 1);
+        let mut p = Powers::new(a);
+        let sel = select_bbc(&mut p, &opts(1e-8));
+        assert!(sel.m <= 2, "m = {}", sel.m);
+        assert_eq!(sel.s, 0);
+    }
+
+    #[test]
+    fn bbc_golden_picks_on_scaled_identity() {
+        // alpha*I has exactly-known power norms; the expected picks are
+        // verified against an independent ladder simulation at tol 1e-8.
+        for (alpha, want_m, want_s, want_cost) in
+            [(0.25, 8, 0, 3), (0.9, 12, 0, 4), (2.0, 18, 0, 5), (10.0, 18, 2, 7)]
+        {
+            let a = Matrix::identity(6).scaled(alpha);
+            let mut p = Powers::new(a);
+            let sel = select_bbc(&mut p, &opts(1e-8));
+            assert_eq!((sel.m, sel.s), (want_m, want_s), "alpha={alpha}");
+            assert_eq!(predicted_products(&sel), want_cost, "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn tol_adaptive_never_costlier_than_bbc() {
+        // The min-cost walk sees every rung select_bbc can accept, so its
+        // predicted products are a lower bound on select_bbc's.
+        for seed in 0..20u64 {
+            let norm = [0.3, 1.0, 3.0, 12.0, 80.0][seed as usize % 5];
+            let a = scaled_randn(7, norm, seed + 500);
+            let mut p1 = Powers::new(a.clone());
+            let b = select_bbc(&mut p1, &opts(1e-9));
+            let mut p2 = Powers::new(a);
+            let t = select_tol_adaptive(&mut p2, &opts(1e-9));
+            assert!(
+                predicted_products(&t) <= predicted_products(&b),
+                "{t:?} vs {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn race_matches_cheapest_pool_member() {
+        for seed in 0..12u64 {
+            let norm = [0.5, 2.0, 7.0, 40.0][seed as usize % 4];
+            let a = scaled_randn(6, norm, seed + 900);
+            let (sel, _) = select_dynamic(&a, Method::Auto, 1e-8);
+            assert_ne!(sel.method, Method::Auto, "race must resolve");
+            let win = predicted_products(&sel);
+            for m in Method::race_pool() {
+                let (other, _) = select_dynamic(&a, m, 1e-8);
+                assert!(
+                    win <= predicted_products(&other),
+                    "seed {seed}: {sel:?} loses to {other:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn race_tie_breaks_toward_fewer_squarings() {
+        // alpha = 2.9: Sastre (15, s=1) and BBC (18, s=0) both predict 5
+        // products -- the s = 0 scheme wins. alpha = 10: Sastre (15, 3)
+        // and BBC (18, 2) both predict 7 -- again BBC. Verified against
+        // the ladder simulation.
+        for alpha in [2.9, 10.0] {
+            let a = Matrix::identity(5).scaled(alpha);
+            let (sel, _) = select_dynamic(&a, Method::Auto, 1e-8);
+            assert_eq!(sel.method, Method::Bbc, "alpha={alpha} -> {sel:?}");
+            assert_eq!(sel.m, 18, "alpha={alpha}");
+        }
+        // Where Sastre is strictly cheapest (alpha = 2: 4 products vs
+        // BBC's 5) the race must keep the pre-race behavior.
+        let a = Matrix::identity(5).scaled(2.0);
+        let (sel, _) = select_dynamic(&a, Method::Auto, 1e-8);
+        assert_eq!(sel.method, Method::Sastre, "{sel:?}");
+        assert_eq!((sel.m, sel.s), (15, 0));
     }
 
     #[test]

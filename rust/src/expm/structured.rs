@@ -1,0 +1,455 @@
+//! Structure-aware fast path: block-(upper-)triangular exponentials.
+//!
+//! Flow Jacobians frequently arrive block triangular — conditioning
+//! variables feed generated ones but not back. For
+//!
+//! ```text
+//!     A = [ A11 A12 ... ]        F = e^A = [ F11 F12 ... ]
+//!         [  0  A22 ... ]                  [  0  F22 ... ]
+//! ```
+//!
+//! the exponential keeps the block structure: the diagonal blocks are
+//! plain exponentials F_ii = e^{A_ii} (each small, so each races the
+//! polynomial schemes independently), and every off-diagonal block is
+//! recovered from the commutation relation A F = F A by a Parlett-style
+//! recurrence sweeping superdiagonals outward:
+//!
+//! ```text
+//! A_ii F_ij - F_ij A_jj
+//!     = F_ii A_ij - A_ij F_jj + Σ_{i<l<j} (F_il A_lj - A_il F_lj)
+//! ```
+//!
+//! Each step is a small Sylvester equation, solved by the explicit
+//! Kronecker system with the existing LU. When A_ii and A_jj share
+//! eigenvalues the system is singular (the recurrence cannot determine
+//! F_ij — the classic Parlett confluence case) and the path declines;
+//! [`super::expm_serial`] then falls back to the dense polynomial race.
+//! A residual check guards every solve, so near-confluent blocks that
+//! slip past the exact-singularity test are also declined rather than
+//! returned inaccurate.
+//!
+//! Product accounting: the path never forms dense n×n products, so its
+//! [`super::ExpmStats::matrix_products`] reports the *dense-equivalent*
+//! count ceil(flops / 2n³) — directly comparable with the polynomial
+//! pipelines, and strictly smaller on every triggering input of
+//! meaningful size (pinned by `tests/prop_numerics.rs`).
+
+use super::selection::SelectOptions;
+use super::{expm_dynamic, ExpmResult, ExpmStats, Method, UNIT_ROUNDOFF};
+use crate::linalg::{matmul, norm1, Lu, Matrix};
+
+/// Largest diagonal block the fast path accepts. Bigger blocks mean a
+/// Kronecker system of order up to `MAX_BLOCK²`; past that the LU cost
+/// erodes the advantage over the dense schemes.
+pub const MAX_BLOCK: usize = 16;
+
+/// Relative residual gate on each Sylvester solve: declining at 1e-8
+/// matches the service's default tolerance, so a block the recurrence
+/// cannot resolve to that accuracy falls back to the dense race instead
+/// of degrading the result.
+const RESIDUAL_TOL: f64 = 1e-8;
+
+/// The finest *exact-zero* block-upper-triangular partition of `a`, as
+/// half-open `(start, end)` diagonal spans. A boundary after column t
+/// is valid iff no nonzero sits at `a[(i, j)]` with `j <= t < i`; the
+/// scan tracks the running maximum nonzero row over the columns seen so
+/// far, so the whole detection is one O(n²) pass with no arithmetic on
+/// the values (structure is exact, never tolerance-based).
+pub fn block_partition(a: &Matrix) -> Vec<(usize, usize)> {
+    assert!(a.is_square(), "block_partition needs a square matrix");
+    let n = a.order();
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut maxrow = 0usize;
+    for t in 0..n {
+        for i in (t + 1..n).rev() {
+            if a[(i, t)] != 0.0 {
+                maxrow = maxrow.max(i);
+                break;
+            }
+        }
+        if maxrow <= t {
+            parts.push((start, t + 1));
+            start = t + 1;
+        }
+    }
+    parts
+}
+
+/// Does the fast path trigger on this matrix? At least two exact
+/// diagonal blocks, none larger than [`MAX_BLOCK`]. This is the cheap
+/// planning-time gate; the residual guard inside [`expm_structured`]
+/// can still decline after the fact.
+pub fn triggers(a: &Matrix) -> bool {
+    if !a.is_square() || a.order() < 2 {
+        return false;
+    }
+    let parts = block_partition(a);
+    parts.len() >= 2 && parts.iter().all(|&(s, e)| e - s <= MAX_BLOCK)
+}
+
+/// Copy the `rows` × `cols` sub-block out of `a` (half-open spans).
+fn block(a: &Matrix, rows: (usize, usize), cols: (usize, usize)) -> Matrix {
+    Matrix::from_fn(rows.1 - rows.0, cols.1 - cols.0, |i, j| {
+        a[(rows.0 + i, cols.0 + j)]
+    })
+}
+
+/// Is the sub-block exactly zero (no copy)?
+fn block_is_zero(
+    a: &Matrix,
+    rows: (usize, usize),
+    cols: (usize, usize),
+) -> bool {
+    for i in rows.0..rows.1 {
+        for j in cols.0..cols.1 {
+            if a[(i, j)] != 0.0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Solve the small Sylvester equation A X − X B = C via the explicit
+/// Kronecker matrix M[α, β] = (c==c')·A[r, r'] − (r==r')·B[c', c] with
+/// column-major vec indices α = c·p + r, β = c'·p + r'. Returns `None`
+/// when the system is singular (A and B share an eigenvalue) or the
+/// back-substitution produced non-finite values.
+fn sylvester(a: &Matrix, b: &Matrix, c: &Matrix) -> Option<Matrix> {
+    let (p, q) = (a.order(), b.order());
+    let dim = p * q;
+    let m = Matrix::from_fn(dim, dim, |al, be| {
+        let (r, col) = (al % p, al / p);
+        let (r2, c2) = (be % p, be / p);
+        let mut v = 0.0;
+        if col == c2 {
+            v += a[(r, r2)];
+        }
+        if r == r2 {
+            v -= b[(c2, col)];
+        }
+        v
+    });
+    let lu = Lu::new(&m);
+    if lu.is_singular() {
+        return None;
+    }
+    let rhs: Vec<f64> = (0..dim).map(|al| c[(al % p, al / p)]).collect();
+    let x = lu.solve_vec(&rhs);
+    let xm = Matrix::from_fn(p, q, |r, col| x[col * p + r]);
+    xm.is_finite().then_some(xm)
+}
+
+/// Compute e^W through the block-triangular structure, or `None` when
+/// the matrix does not trigger (see [`triggers`]) or any Sylvester step
+/// is singular / fails its residual guard. `stats.m` and `stats.s`
+/// report the maximum over the diagonal-block exponentials;
+/// `stats.matrix_products` is the dense-equivalent count (module docs).
+pub fn expm_structured(w: &Matrix, tol: f64) -> Option<ExpmResult> {
+    assert!(w.is_square(), "expm needs a square matrix");
+    let n = w.order();
+    let parts = block_partition(w);
+    if parts.len() < 2 || parts.iter().any(|&(s, e)| e - s > MAX_BLOCK) {
+        return None;
+    }
+    let tol = tol.max(UNIT_ROUNDOFF);
+    let sel_opts = SelectOptions { tol, power_est: false };
+    let k = parts.len();
+
+    // Diagonal blocks: each small exponential races the polynomial
+    // schemes on its own (never the structured path — no recursion).
+    let mut diag: Vec<Matrix> = Vec::with_capacity(k);
+    let mut flops = 0.0f64;
+    let mut stats = ExpmStats::default();
+    for &(s, e) in &parts {
+        if e - s == 1 {
+            // 1×1 block: the scalar exponential is exact and free —
+            // triangular matrices cost only their coupling solves.
+            let f = w[(s, s)].exp();
+            diag.push(Matrix::from_fn(1, 1, |_, _| f));
+            continue;
+        }
+        let a_ii = block(w, (s, e), (s, e));
+        let r = expm_dynamic(&a_ii, Method::Auto, &sel_opts);
+        let p = (e - s) as f64;
+        flops += r.stats.matrix_products as f64 * 2.0 * p * p * p;
+        stats.m = stats.m.max(r.stats.m);
+        stats.s = stats.s.max(r.stats.s);
+        diag.push(r.value);
+    }
+
+    // Off-diagonal recovery, sweeping by superdiagonal distance so every
+    // F_il, F_lj a block needs is already available. `None` = zero block.
+    let mut off: Vec<Option<Matrix>> = vec![None; k * k];
+    for d in 1..k {
+        for i in 0..k - d {
+            let j = i + d;
+            // Exact shortcut: if block row i is zero through column j,
+            // no path in any power of W connects i to j, so F_ij = 0
+            // (same for block column j back to row i). This keeps
+            // block-diagonal inputs entirely solve-free.
+            let row_clear = (i + 1..=j)
+                .all(|l| block_is_zero(w, parts[i], parts[l]));
+            let col_clear = (i..j)
+                .all(|l| block_is_zero(w, parts[l], parts[j]));
+            if row_clear || col_clear {
+                continue;
+            }
+            let a_ij = block(w, parts[i], parts[j]);
+            let (p, q) = (a_ij.rows() as f64, a_ij.cols() as f64);
+            // C = F_ii A_ij − A_ij F_jj + Σ_{i<l<j} (F_il A_lj − A_il F_lj)
+            let mut c = matmul(&diag[i], &a_ij);
+            c.axpy(-1.0, &matmul(&a_ij, &diag[j]));
+            flops += 2.0 * p * q * (p + q);
+            for l in i + 1..j {
+                if let Some(f_il) = &off[i * k + l] {
+                    if !block_is_zero(w, parts[l], parts[j]) {
+                        let a_lj = block(w, parts[l], parts[j]);
+                        c.axpy(1.0, &matmul(f_il, &a_lj));
+                        flops += 2.0 * p * (a_lj.rows() as f64) * q;
+                    }
+                }
+                if let Some(f_lj) = &off[l * k + j] {
+                    if !block_is_zero(w, parts[i], parts[l]) {
+                        let a_il = block(w, parts[i], parts[l]);
+                        c.axpy(-1.0, &matmul(&a_il, f_lj));
+                        flops += 2.0 * p * (a_il.cols() as f64) * q;
+                    }
+                }
+            }
+            let a_ii = block(w, parts[i], parts[i]);
+            let a_jj = block(w, parts[j], parts[j]);
+            let x = sylvester(&a_ii, &a_jj, &c)?;
+            // Residual guard: a formally nonsingular but ill-conditioned
+            // system (near-confluent spectra) must decline, not degrade.
+            let mut res = matmul(&a_ii, &x);
+            res.axpy(-1.0, &matmul(&x, &a_jj));
+            res.axpy(-1.0, &c);
+            let scale = (norm1(&a_ii) + norm1(&a_jj)).max(1.0)
+                * x.max_abs().max(c.max_abs()).max(1.0);
+            if !(res.max_abs() <= RESIDUAL_TOL * scale) {
+                return None;
+            }
+            let pq = p * q;
+            flops += 2.0 / 3.0 * pq * pq * pq // Kronecker LU
+                + 2.0 * pq * pq // back-substitution
+                + 4.0 * p * q * (p + q); // residual check
+            off[i * k + j] = Some(x);
+        }
+    }
+
+    // Assemble F from the blocks.
+    let owner: Vec<usize> = {
+        let mut o = vec![0usize; n];
+        for (bi, &(s, e)) in parts.iter().enumerate() {
+            for idx in o.iter_mut().take(e).skip(s) {
+                *idx = bi;
+            }
+        }
+        o
+    };
+    let value = Matrix::from_fn(n, n, |i, j| {
+        let (bi, bj) = (owner[i], owner[j]);
+        let (si, sj) = (parts[bi].0, parts[bj].0);
+        if bi == bj {
+            diag[bi][(i - si, j - sj)]
+        } else if bi < bj {
+            match &off[bi * k + bj] {
+                Some(f) => f[(i - si, j - sj)],
+                None => 0.0,
+            }
+        } else {
+            0.0
+        }
+    });
+    stats.matrix_products =
+        (flops / (2.0 * (n as f64).powi(3))).ceil() as usize;
+    Some(ExpmResult { value, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expm::pade::expm_pade13;
+    use crate::expm::{expm, ExpmOptions};
+    use crate::util::rng::Rng;
+
+    fn rel_err(a: &Matrix, b: &Matrix) -> f64 {
+        (a - b).max_abs() / b.max_abs().max(1e-300)
+    }
+
+    fn rand_block_upper(
+        n: usize,
+        splits: &[usize],
+        seed: u64,
+        scale: f64,
+    ) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut bounds = vec![0usize];
+        bounds.extend_from_slice(splits);
+        bounds.push(n);
+        let owner = |i: usize| {
+            (0..bounds.len() - 1)
+                .find(|&b| i >= bounds[b] && i < bounds[b + 1])
+                .unwrap()
+        };
+        Matrix::from_fn(n, n, |i, j| {
+            if owner(i) <= owner(j) {
+                rng.normal() * scale
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn partition_finds_exact_boundaries() {
+        let a = rand_block_upper(10, &[3, 7], 1, 0.3);
+        assert_eq!(block_partition(&a), vec![(0, 3), (3, 7), (7, 10)]);
+        assert!(triggers(&a));
+        // Dense matrix: single block, no trigger.
+        let mut rng = Rng::new(2);
+        let d = Matrix::from_fn(6, 6, |_, _| rng.normal());
+        assert_eq!(block_partition(&d), vec![(0, 6)]);
+        assert!(!triggers(&d));
+        // Diagonal matrix: all 1x1 blocks.
+        let i = Matrix::identity(4);
+        assert_eq!(block_partition(&i).len(), 4);
+        assert!(triggers(&i));
+    }
+
+    #[test]
+    fn partition_is_order_sensitive_exactly() {
+        // One sub-diagonal entry fuses exactly the blocks it couples.
+        let base = rand_block_upper(9, &[3, 6], 3, 0.2);
+        assert_eq!(block_partition(&base).len(), 3);
+        let fused = Matrix::from_fn(9, 9, |i, j| {
+            if (i, j) == (4, 2) {
+                0.5
+            } else {
+                base[(i, j)]
+            }
+        });
+        assert_eq!(block_partition(&fused), vec![(0, 6), (6, 9)]);
+    }
+
+    #[test]
+    fn sylvester_solves_and_flags_singular() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::from_fn(3, 3, |i, j| {
+            rng.normal() + if i == j { 3.0 } else { 0.0 }
+        });
+        let b = Matrix::from_fn(2, 2, |i, j| {
+            rng.normal() - if i == j { 3.0 } else { 0.0 }
+        });
+        let x_true = Matrix::from_fn(3, 2, |_, _| rng.normal());
+        let mut c = matmul(&a, &x_true);
+        c.axpy(-1.0, &matmul(&x_true, &b));
+        let x = sylvester(&a, &b, &c).expect("well-separated spectra");
+        assert!(rel_err(&x, &x_true) < 1e-10);
+        // A and B sharing an eigenvalue must be flagged, not solved.
+        let same = Matrix::identity(2);
+        assert!(sylvester(&same, &same, &Matrix::zeros(2, 2)).is_none());
+    }
+
+    #[test]
+    fn structured_matches_oracle_on_block_upper() {
+        for (seed, splits) in
+            [(10u64, vec![2usize, 5]), (11, vec![4]), (12, vec![1, 2, 6])]
+        {
+            let a = rand_block_upper(8, &splits, seed, 0.4);
+            let r = expm_structured(&a, 1e-10).expect("triggers");
+            let oracle = expm_pade13(&a);
+            assert!(
+                rel_err(&r.value, &oracle) < 1e-8,
+                "seed {seed}: {:e}",
+                rel_err(&r.value, &oracle)
+            );
+            // Lower blocks stay exactly zero.
+            for i in 0..8 {
+                for j in 0..8 {
+                    if a[(i, j)] == 0.0 && i > j {
+                        assert_eq!(r.value[(i, j)], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn structured_declines_confluent_spectra() {
+        // Jordan-like coupling between equal 1x1 eigenvalues: the
+        // Sylvester system is singular, the method must decline, and
+        // the public entry point must still produce the right answer
+        // through the dense fallback.
+        let a = Matrix::from_rows(&[vec![0.5, 1.0], vec![0.0, 0.5]]);
+        assert!(triggers(&a));
+        assert!(expm_structured(&a, 1e-10).is_none());
+        let r = expm(
+            &a,
+            &ExpmOptions { method: Method::Structured, tol: 1e-10 },
+        );
+        let oracle = expm_pade13(&a);
+        assert!(rel_err(&r.value, &oracle) < 1e-10);
+    }
+
+    #[test]
+    fn block_diagonal_needs_no_solves_and_few_products() {
+        // exp of block-diagonal = block-diagonal of exps; the zero
+        // shortcut keeps every off-diagonal block at exact 0 and the
+        // dense-equivalent product count far below any dense scheme.
+        let mut rng = Rng::new(13);
+        let n = 12;
+        let a = Matrix::from_fn(n, n, |i, j| {
+            if i / 3 == j / 3 {
+                rng.normal() * 0.5
+            } else {
+                0.0
+            }
+        });
+        let r = expm_structured(&a, 1e-10).expect("triggers");
+        let oracle = expm_pade13(&a);
+        assert!(rel_err(&r.value, &oracle) < 1e-9);
+        for i in 0..n {
+            for j in 0..n {
+                if i / 3 != j / 3 {
+                    assert_eq!(r.value[(i, j)], 0.0, "({i},{j})");
+                }
+            }
+        }
+        let dense = expm(
+            &a,
+            &ExpmOptions { method: Method::Sastre, tol: 1e-10 },
+        );
+        assert!(
+            r.stats.matrix_products < dense.stats.matrix_products,
+            "structured {} vs dense {}",
+            r.stats.matrix_products,
+            dense.stats.matrix_products
+        );
+    }
+
+    #[test]
+    fn identity_and_zero_cost_nothing() {
+        let z = Matrix::zeros(5, 5);
+        let r = expm_structured(&z, 1e-8).expect("triggers");
+        assert_eq!(r.value, Matrix::identity(5));
+        assert_eq!(r.stats.matrix_products, 0);
+        let i = Matrix::identity(5);
+        let r = expm_structured(&i, 1e-8).expect("triggers");
+        let want = Matrix::identity(5).scaled(1f64.exp());
+        // Scalar blocks use f64::exp directly: the diagonal is exact.
+        assert_eq!(r.value, want);
+        assert_eq!(r.stats.matrix_products, 0);
+    }
+
+    #[test]
+    fn oversized_blocks_decline() {
+        // A dense (MAX_BLOCK+1)-sized leading block drops the fast path.
+        let n = MAX_BLOCK + 3;
+        let a = rand_block_upper(n, &[MAX_BLOCK + 1], 14, 0.1);
+        assert!(!triggers(&a));
+        assert!(expm_structured(&a, 1e-8).is_none());
+    }
+}

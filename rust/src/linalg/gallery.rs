@@ -278,6 +278,152 @@ pub fn nilpotent_rand(n: usize, sigma: f64, rng: &mut Rng) -> Matrix {
     })
 }
 
+/// Block-upper-triangular "flow Jacobian": dense `block`-sized diagonal
+/// blocks coupled strictly upward, exact zeros below — the trigger shape
+/// of the structured (block-triangular) expm fast path. Reference
+/// exponential: high-precision dense oracle (the structure carries no
+/// closed form; the point is the exact-zero sparsity pattern).
+pub fn block_upper_flow(
+    n: usize,
+    block: usize,
+    sigma: f64,
+    rng: &mut Rng,
+) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i / block > j / block {
+            0.0
+        } else {
+            rng.normal() * sigma
+        }
+    })
+}
+
+/// Direct sum of 2×2 rotation generators θ_k · [[0, 1], [-1, 0]] — the
+/// flow sampler's block structure. Exact exponential: [`rotors_exp`].
+pub fn rotors(thetas: &[f64]) -> Matrix {
+    let n = 2 * thetas.len();
+    Matrix::from_fn(n, n, |i, j| {
+        let k = i / 2;
+        if j / 2 != k {
+            0.0
+        } else if i == j {
+            0.0
+        } else if j == i + 1 {
+            thetas[k]
+        } else {
+            -thetas[k]
+        }
+    })
+}
+
+/// Closed-form exponential of [`rotors`]: per block the plane rotation
+/// [[cos θ, sin θ], [-sin θ, cos θ]].
+///
+/// The closed form is what pins the expm golden tests:
+///
+/// ```
+/// use expmflow::expm::{expm, ExpmOptions, Method};
+/// use expmflow::linalg::gallery::{rotors, rotors_exp};
+/// let a = rotors(&[0.5, 1.2]);
+/// let r = expm(&a, &ExpmOptions { method: Method::Auto, tol: 1e-10 });
+/// let err = (&r.value - &rotors_exp(&[0.5, 1.2])).max_abs();
+/// assert!(err < 1e-9);
+/// ```
+pub fn rotors_exp(thetas: &[f64]) -> Matrix {
+    let n = 2 * thetas.len();
+    Matrix::from_fn(n, n, |i, j| {
+        let k = i / 2;
+        if j / 2 != k {
+            0.0
+        } else if i == j {
+            thetas[k].cos()
+        } else if j == i + 1 {
+            thetas[k].sin()
+        } else {
+            -thetas[k].sin()
+        }
+    })
+}
+
+/// Direct sum of Jordan blocks `(size, lambda)` — the defective/nilpotent
+/// mix whose exponential is known exactly: [`jordan_mix_exp`].
+pub fn jordan_mix(blocks: &[(usize, f64)]) -> Matrix {
+    let n: usize = blocks.iter().map(|b| b.0).sum();
+    let mut a = Matrix::zeros(n, n);
+    let mut at = 0;
+    for &(size, lambda) in blocks {
+        for i in 0..size {
+            a[(at + i, at + i)] = lambda;
+            if i + 1 < size {
+                a[(at + i, at + i + 1)] = 1.0;
+            }
+        }
+        at += size;
+    }
+    a
+}
+
+/// Exact exponential of [`jordan_mix`]: per block
+/// e^λ · Σ_{k < size} N^k / k!, i.e. entry (i, i+k) = e^λ / k!.
+pub fn jordan_mix_exp(blocks: &[(usize, f64)]) -> Matrix {
+    let n: usize = blocks.iter().map(|b| b.0).sum();
+    let mut f = Matrix::zeros(n, n);
+    for (bi, &(size, lambda)) in blocks.iter().enumerate() {
+        let at: usize = blocks[..bi].iter().map(|b| b.0).sum();
+        let e = lambda.exp();
+        for i in 0..size {
+            let mut kfac = 1.0;
+            for k in 0..size - i {
+                if k > 0 {
+                    kfac *= k as f64;
+                }
+                f[(at + i, at + i + k)] = e / kfac;
+            }
+        }
+    }
+    f
+}
+
+/// Deterministic defective mix covering order `n`: Jordan blocks of sizes
+/// cycling 3, 2, 1 with mixed-sign (and nilpotent, λ = 0) eigenvalues.
+pub fn jordan_mix_spec(n: usize) -> Vec<(usize, f64)> {
+    let sizes = [3usize, 2, 1];
+    let lams = [-0.4, 0.3, 0.0, -1.1];
+    let mut out = Vec::new();
+    let (mut used, mut k) = (0usize, 0usize);
+    while used < n {
+        let s = sizes[k % sizes.len()].min(n - used);
+        out.push((s, lams[k % lams.len()]));
+        used += s;
+        k += 1;
+    }
+    out
+}
+
+/// Stiff diagonal with log-spaced decay rates −1 … −rho: a log-norm
+/// outlier (‖A‖₁ = rho, benign exponential). Exact exponential:
+/// [`stiff_diag_exp`].
+pub fn stiff_diag(n: usize, rho: f64) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            -rho.powf(i as f64 / (n - 1) as f64)
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Closed-form exponential of [`stiff_diag`]: diag(e^{λ_i}).
+pub fn stiff_diag_exp(n: usize, rho: f64) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            (-rho.powf(i as f64 / (n - 1) as f64)).exp()
+        } else {
+            0.0
+        }
+    })
+}
+
 /// Build the full testbed: every generator at every size, plus scaled
 /// variants covering the norm range the selection logic must handle.
 ///
@@ -327,6 +473,31 @@ pub fn testbed(sizes: &[usize], seed: u64) -> Vec<TestMatrix> {
         let base = randn(n, 1.0 / n as f64, &mut rng);
         push(format!("scaled-1e-4_{n}"), base.scaled(1e-4));
         push(format!("scaled-1e2_{n}"), base.scaled(1e2));
+    }
+    // Beyond-P–S tier families, appended in a second pass with an
+    // independently seeded generator so every member above stays bitwise
+    // identical to earlier testbed versions (goldens pin them).
+    let mut rng2 = Rng::new(seed ^ 0x9e37_79b9);
+    for &n in sizes {
+        if n < 4 {
+            continue;
+        }
+        push(
+            format!("blocktri-flow_{n}"),
+            block_upper_flow(n, 4, 1.5 / n as f64, &mut rng2),
+        );
+        if n % 2 == 0 {
+            let thetas: Vec<f64> = (0..n / 2)
+                .map(|k| 0.3 + 1.7 * k as f64 / (n / 2) as f64)
+                .collect();
+            push(format!("rotors_{n}"), rotors(&thetas));
+        }
+        push(format!("jordan-mix_{n}"), jordan_mix(&jordan_mix_spec(n)));
+        push(format!("stiff-diag_{n}"), stiff_diag(n, 200.0));
+        push(
+            format!("near-id_{n}"),
+            randn(n, 1.0 / (n as f64).sqrt(), &mut rng2).scaled(1e-3),
+        );
     }
     out
 }
@@ -422,6 +593,91 @@ mod tests {
         let norms: Vec<f64> = t1.iter().map(|t| norm1(&t.a)).collect();
         assert!(norms.iter().cloned().fold(f64::INFINITY, f64::min) < 1e-3);
         assert!(norms.iter().cloned().fold(0.0, f64::max) > 10.0);
+    }
+
+    #[test]
+    fn rotors_closed_form_is_the_exponential() {
+        // d/dt exp(tA) = A exp(tA) pins the closed form; check it at the
+        // series level: exp(A) from a long Taylor sum matches rotors_exp.
+        let thetas = [0.3, 1.1, 2.4];
+        let a = rotors(&thetas);
+        let n = a.rows();
+        let mut term = Matrix::identity(n);
+        let mut sum = Matrix::identity(n);
+        for k in 1..40 {
+            term = matmul(&term, &a).scaled(1.0 / k as f64);
+            sum = &sum + &term;
+        }
+        let err = (&sum - &rotors_exp(&thetas)).max_abs();
+        assert!(err < 1e-13, "err {err}");
+    }
+
+    #[test]
+    fn jordan_mix_closed_form_is_the_exponential() {
+        let blocks = [(3usize, -0.4), (2, 0.3), (1, 0.0), (2, -1.1)];
+        let a = jordan_mix(&blocks);
+        let n = a.rows();
+        let mut term = Matrix::identity(n);
+        let mut sum = Matrix::identity(n);
+        for k in 1..40 {
+            term = matmul(&term, &a).scaled(1.0 / k as f64);
+            sum = &sum + &term;
+        }
+        let err = (&sum - &jordan_mix_exp(&blocks)).max_abs();
+        assert!(err < 1e-13, "err {err}");
+        // The λ = 0 singleton really is a nilpotent-free identity entry.
+        assert_eq!(jordan_mix_exp(&[(1, 0.0)])[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn stiff_diag_spans_the_norm_range() {
+        let a = stiff_diag(8, 200.0);
+        assert_eq!(norm1(&a), 200.0);
+        assert_eq!(a[(0, 0)], -1.0);
+        let f = stiff_diag_exp(8, 200.0);
+        assert_eq!(f[(0, 0)], (-1.0f64).exp());
+        assert_eq!(f[(7, 7)], (-200.0f64).exp());
+    }
+
+    #[test]
+    fn block_upper_flow_has_exact_zero_lower_blocks() {
+        let a = block_upper_flow(10, 4, 0.5, &mut Rng::new(9));
+        for i in 0..10 {
+            for j in 0..10 {
+                if i / 4 > j / 4 {
+                    assert_eq!(a[(i, j)], 0.0, "({i},{j})");
+                } else {
+                    assert_ne!(a[(i, j)], 0.0, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extended_testbed_keeps_legacy_prefix() {
+        // The second-pass families append; the legacy members (same seed)
+        // must stay bitwise identical, independent of the new generator.
+        let t = testbed(&[4, 8], 42);
+        assert!(t.len() >= 48, "got {}", t.len());
+        let names: Vec<&str> =
+            t.iter().map(|m| m.name.as_str()).collect();
+        for fam in ["blocktri-flow_8", "rotors_8", "jordan-mix_8",
+            "stiff-diag_8", "near-id_8"]
+        {
+            assert!(names.contains(&fam), "missing {fam}");
+        }
+        // New families land strictly after every legacy member, so the
+        // legacy prefix (and its RNG stream) is untouched.
+        let first_new =
+            names.iter().position(|n| n.starts_with("blocktri")).unwrap();
+        let new_tags =
+            ["blocktri", "rotors_", "jordan-mix", "stiff-diag", "near-id"];
+        assert!(names[..first_new]
+            .iter()
+            .all(|n| new_tags.iter().all(|t| !n.starts_with(t))));
+        assert!(names[first_new..]
+            .iter()
+            .all(|n| new_tags.iter().any(|t| n.starts_with(t))));
     }
 
     #[test]

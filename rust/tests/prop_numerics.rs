@@ -1,0 +1,217 @@
+//! Property tests for the beyond-Paterson–Stockmeyer numerics tier:
+//! BBC nested-product schemes, the tolerance-adaptive (BKS) selector,
+//! the scheme race behind `Method::Auto`, and the block-triangular
+//! structured fast path — all pinned against the extended gallery.
+//!
+//! Fixed seeds throughout: CI runs this suite deterministically.
+
+use expmflow::expm::pade::expm_pade13;
+use expmflow::expm::selection::{predicted_products, select_dynamic};
+use expmflow::expm::{expm, expm_multi, structured, ExpmOptions, Method};
+use expmflow::linalg::gallery::{
+    jordan_mix_exp, jordan_mix_spec, rotors_exp, stiff_diag_exp, testbed,
+    TestMatrix,
+};
+use expmflow::linalg::{matmul, norm1, Matrix};
+
+const SEED: u64 = 4242;
+const TOLS: [f64; 3] = [1e-6, 1e-9, 1e-13];
+
+fn opts(method: Method, tol: f64) -> ExpmOptions {
+    ExpmOptions { method, tol }
+}
+
+/// High-precision dense reference, independent of the tier under test:
+/// Padé-13 on a heavily downscaled copy, then repeated squaring.
+fn oracle(a: &Matrix) -> Matrix {
+    let mut s = 0u32;
+    let mut nrm = norm1(a);
+    while nrm > 0.25 && s < 40 {
+        nrm *= 0.5;
+        s += 1;
+    }
+    let mut f = expm_pade13(&a.scaled((2.0f64).powi(-(s as i32))));
+    for _ in 0..s {
+        f = matmul(&f, &f);
+    }
+    f
+}
+
+/// Reference exponential for one gallery member: the closed form where
+/// the family has one, the Padé oracle otherwise.
+fn reference(t: &TestMatrix) -> Matrix {
+    let n = t.a.rows();
+    if t.name.starts_with("rotors_") {
+        let thetas: Vec<f64> = (0..n / 2)
+            .map(|k| 0.3 + 1.7 * k as f64 / (n / 2) as f64)
+            .collect();
+        rotors_exp(&thetas)
+    } else if t.name.starts_with("jordan-mix_") {
+        jordan_mix_exp(&jordan_mix_spec(n))
+    } else if t.name.starts_with("stiff-diag_") {
+        stiff_diag_exp(n, 200.0)
+    } else {
+        oracle(&t.a)
+    }
+}
+
+fn rel(approx: &Matrix, exact: &Matrix) -> f64 {
+    (approx - exact).max_abs() / exact.max_abs().max(1e-300)
+}
+
+#[test]
+fn prop_new_tier_parity_on_gallery_across_tolerances() {
+    // (a) Accuracy parity: on every gallery member and every tolerance,
+    // BBC / tol-adaptive / Auto stay within a modest factor of Sastre's
+    // error against an independent reference. Where the selections land
+    // on the shared low-order rungs (m <= 2, same s), the evaluation
+    // formulas are identical and the results must be *bitwise* equal —
+    // that clause must fire on the near-identity families.
+    let bed = testbed(&[4, 8], SEED);
+    let mut bitwise_hits = 0usize;
+    for t in &bed {
+        let exact = reference(t);
+        for &tol in &TOLS {
+            let rs = expm(&t.a, &opts(Method::Sastre, tol));
+            let es = rel(&rs.value, &exact);
+            for method in [Method::Bbc, Method::TolAdaptive, Method::Auto] {
+                let rn = expm(&t.a, &opts(method, tol));
+                let en = rel(&rn.value, &exact);
+                // Parity margin: the new schemes truncate at the same
+                // tolerance contract as Sastre, so their error can
+                // exceed Sastre's only by conditioning noise (Sastre's
+                // coarser rung ladder often overshoots the requested
+                // tolerance). 1e4 is far below the O(1) failures a
+                // wrong coefficient produces.
+                assert!(
+                    en <= 1e4 * (es + tol),
+                    "{} tol {tol:e} {method:?}: err {en:e} vs sastre {es:e}",
+                    t.name
+                );
+                if method != Method::Auto
+                    && rn.stats.m <= 2
+                    && (rn.stats.m, rn.stats.s) == (rs.stats.m, rs.stats.s)
+                {
+                    assert_eq!(
+                        rn.value, rs.value,
+                        "{} tol {tol:e} {method:?}: shared rung not bitwise",
+                        t.name
+                    );
+                    bitwise_hits += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        bitwise_hits > 0,
+        "the bitwise shared-rung clause never fired — gallery lost its \
+         near-identity members?"
+    );
+}
+
+#[test]
+fn prop_race_is_never_beaten_by_a_registered_scheme() {
+    // (b) For every gallery member and tolerance, the Auto race never
+    // picks a plan whose predicted product count exceeds that of any
+    // registered scheme meeting the same tolerance.
+    let bed = testbed(&[4, 8], SEED);
+    for t in &bed {
+        for &tol in &[1e-6, 1e-9] {
+            let (win, _) = select_dynamic(&t.a, Method::Auto, tol);
+            let wc = predicted_products(&win);
+            assert_ne!(win.method, Method::Auto, "{}", t.name);
+            for method in Method::race_pool() {
+                let (sel, _) = select_dynamic(&t.a, method, tol);
+                assert!(
+                    wc <= predicted_products(&sel),
+                    "{} tol {tol:e}: race {wc} products loses to \
+                     {method:?} ({})",
+                    t.name,
+                    predicted_products(&sel)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_bbc_product_counts_match_paper_tables() {
+    // Exact end-to-end product counts on alpha*I at tol 1e-8, pinned
+    // against the BBC cost table: ladder probes + evaluation products +
+    // squarings. Degree 18 evaluates in 5 products total (2 ladder + 3
+    // nested), the headline number of the scheme.
+    for (alpha, m, s, products) in [
+        (0.25, 8, 0u32, 3usize),
+        (0.9, 12, 0, 4),
+        (2.0, 18, 0, 5),
+        (10.0, 18, 2, 7),
+    ] {
+        let a = Matrix::identity(6).scaled(alpha);
+        let r = expm(&a, &opts(Method::Bbc, 1e-8));
+        assert_eq!(
+            (r.stats.m, r.stats.s, r.stats.matrix_products),
+            (m, s, products),
+            "alpha {alpha}"
+        );
+    }
+}
+
+#[test]
+fn golden_structured_undercuts_dense_on_triggering_members() {
+    // On the gallery members built to trigger the block path (rotors,
+    // stiff diagonals), Auto must route structured and report strictly
+    // fewer products than the dense Sastre pipeline.
+    let bed = testbed(&[8], SEED);
+    let mut checked = 0usize;
+    for t in &bed {
+        if !(t.name.starts_with("rotors_")
+            || t.name.starts_with("stiff-diag_"))
+        {
+            continue;
+        }
+        assert!(structured::triggers(&t.a), "{}", t.name);
+        let dense = expm(&t.a, &opts(Method::Sastre, 1e-9));
+        let auto = expm(&t.a, &opts(Method::Auto, 1e-9));
+        assert!(
+            auto.stats.matrix_products < dense.stats.matrix_products,
+            "{}: structured {} vs dense {}",
+            t.name,
+            auto.stats.matrix_products,
+            dense.stats.matrix_products
+        );
+        // And it must still be accurate against the closed form.
+        let exact = reference(t);
+        let err = rel(&auto.value, &exact);
+        assert!(err < 1e-8, "{}: structured err {err:e}", t.name);
+        checked += 1;
+    }
+    assert_eq!(checked, 2, "expected rotors_8 and stiff-diag_8");
+}
+
+#[test]
+fn prop_batch_parity_for_new_methods_on_gallery() {
+    // A heterogeneous gallery batch mixing the new methods must come
+    // back bitwise identical (values and product counts) to the serial
+    // pipeline, member by member.
+    let bed = testbed(&[4, 8], 77);
+    let picks: Vec<&TestMatrix> = bed.iter().step_by(5).collect();
+    let methods = [Method::Bbc, Method::TolAdaptive, Method::Auto];
+    let jobs: Vec<(&Matrix, ExpmOptions)> = picks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            (&t.a, opts(methods[i % 3], [1e-6, 1e-9][i % 2]))
+        })
+        .collect();
+    let multi = expm_multi(&jobs);
+    for (i, r) in multi.iter().enumerate() {
+        let single = expm(jobs[i].0, &jobs[i].1);
+        assert_eq!(r.value, single.value, "{} (job {i})", picks[i].name);
+        assert_eq!(
+            r.stats.matrix_products,
+            single.stats.matrix_products,
+            "{} (job {i})",
+            picks[i].name
+        );
+    }
+}
