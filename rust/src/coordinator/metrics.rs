@@ -103,6 +103,12 @@ struct Inner {
     powers_hits: u64,
     powers_misses: u64,
     powers_evictions: u64,
+    prewarmed: u64,
+    snapshot_saves: u64,
+    snapshot_bytes: u64,
+    snapshot_rejections: u64,
+    snapshot_loaded: u64,
+    last_snapshot: Option<std::time::Instant>,
     submitted: u64,
     admitted: u64,
     shed: u64,
@@ -201,6 +207,20 @@ pub struct Snapshot {
     pub powers_misses: u64,
     /// Ladders evicted from the powers cache to respect its size bound.
     pub powers_evictions: u64,
+    /// Ladders planted in the powers cache by the startup prewarm pass
+    /// over a flow checkpoint's block generators (`--prewarm-from`).
+    pub prewarmed: u64,
+    /// Powers-cache snapshots written to disk (periodic + shutdown).
+    pub snapshot_saves: u64,
+    /// Size in bytes of the most recent snapshot written.
+    pub snapshot_bytes: u64,
+    /// Snapshot files refused at load (truncated, corrupt, or
+    /// version-mismatched) — each left the cache cold instead of wrong.
+    pub snapshot_rejections: u64,
+    /// Ladders restored from a snapshot at startup.
+    pub snapshot_loaded: u64,
+    /// Seconds since the most recent snapshot save, `None` if never.
+    pub snapshot_age_s: Option<f64>,
     /// Matrices per selected polynomial order m.
     pub degree_hist: BTreeMap<usize, u64>,
     /// Matrices per squaring count s.
@@ -316,6 +336,29 @@ impl Metrics {
         if n > 0 {
             self.inner.lock().unwrap().powers_evictions += n;
         }
+    }
+
+    /// `n` ladders planted by the startup prewarm pass.
+    pub fn record_prewarm(&self, n: u64) {
+        self.inner.lock().unwrap().prewarmed += n;
+    }
+
+    /// One powers-cache snapshot written to disk (`bytes` on the wire).
+    pub fn record_snapshot_save(&self, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.snapshot_saves += 1;
+        g.snapshot_bytes = bytes;
+        g.last_snapshot = Some(std::time::Instant::now());
+    }
+
+    /// One snapshot file refused at load (cache stays cold, never wrong).
+    pub fn record_snapshot_rejection(&self) {
+        self.inner.lock().unwrap().snapshot_rejections += 1;
+    }
+
+    /// `n` ladders restored from a snapshot at startup.
+    pub fn record_snapshot_load(&self, n: u64) {
+        self.inner.lock().unwrap().snapshot_loaded += n;
     }
 
     /// One group enqueued on the named scheduler lane.
@@ -443,6 +486,14 @@ impl Metrics {
             powers_hits: g.powers_hits,
             powers_misses: g.powers_misses,
             powers_evictions: g.powers_evictions,
+            prewarmed: g.prewarmed,
+            snapshot_saves: g.snapshot_saves,
+            snapshot_bytes: g.snapshot_bytes,
+            snapshot_rejections: g.snapshot_rejections,
+            snapshot_loaded: g.snapshot_loaded,
+            snapshot_age_s: g
+                .last_snapshot
+                .map(|t| t.elapsed().as_secs_f64()),
             degree_hist: g.degree_hist,
             scaling_hist: g.scaling_hist,
             backend_hist: g.backend_hist,
@@ -522,6 +573,19 @@ impl Snapshot {
         s.push_str(&format!(
             "powers_cache: hits={} misses={} evictions={}\n",
             self.powers_hits, self.powers_misses, self.powers_evictions
+        ));
+        s.push_str(&format!(
+            "warm_state: prewarmed={} snapshot_saves={} snapshot_bytes={} \
+             snapshot_rejections={} snapshot_loaded={} snapshot_age={}\n",
+            self.prewarmed,
+            self.snapshot_saves,
+            self.snapshot_bytes,
+            self.snapshot_rejections,
+            self.snapshot_loaded,
+            match self.snapshot_age_s {
+                Some(age) => format!("{age:.1}s"),
+                None => "never".to_string(),
+            }
         ));
         if !self.lane_stats.is_empty() {
             s.push_str("lanes:");
@@ -632,6 +696,34 @@ mod tests {
         assert!(out.contains("powers_cache: hits=2 misses=1 evictions=2"));
         assert!(out.contains("native:depth=1,inflight=0,done=1"), "{out}");
         assert!(out.contains("remote:1.2.3.4:9:depth=1"), "{out}");
+    }
+
+    #[test]
+    fn warm_state_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_prewarm(6);
+        m.record_snapshot_load(4);
+        m.record_snapshot_rejection();
+        let s = m.snapshot();
+        assert_eq!(s.prewarmed, 6);
+        assert_eq!(s.snapshot_loaded, 4);
+        assert_eq!(s.snapshot_rejections, 1);
+        assert!(s.snapshot_age_s.is_none(), "no save yet");
+        assert!(s.render().contains("snapshot_age=never"), "{}", s.render());
+        m.record_snapshot_save(1234);
+        let s = m.snapshot();
+        assert_eq!(s.snapshot_saves, 1);
+        assert_eq!(s.snapshot_bytes, 1234);
+        let age = s.snapshot_age_s.expect("age set after save");
+        assert!((0.0..60.0).contains(&age), "age {age}");
+        let out = s.render();
+        assert!(
+            out.contains(
+                "warm_state: prewarmed=6 snapshot_saves=1 \
+                 snapshot_bytes=1234 snapshot_rejections=1 snapshot_loaded=4"
+            ),
+            "{out}"
+        );
     }
 
     #[test]

@@ -44,7 +44,7 @@ pub mod server;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::expm::powers_cache::PowersCache;
@@ -83,6 +83,24 @@ pub struct ServiceConfig {
     /// worker CLIs enable it (`--powers-cache`). Values are bitwise
     /// identical either way — a hit only lowers the products *charged*.
     pub powers_cache: usize,
+    /// Powers-cache snapshot path (`--cache-snapshot`). `Some` loads the
+    /// snapshot at startup — a truncated, corrupt, or version-mismatched
+    /// file is *rejected* (counted, cache starts cold, never wrong) —
+    /// and re-saves on [`ServiceConfig::snapshot_interval`] and at
+    /// shutdown, so warm ladders survive restarts. Ignored when
+    /// [`ServiceConfig::powers_cache`] is 0.
+    pub cache_snapshot: Option<std::path::PathBuf>,
+    /// Periodic snapshot cadence; `None` (or zero) saves only at
+    /// shutdown. Only meaningful with
+    /// [`ServiceConfig::cache_snapshot`] set.
+    pub snapshot_interval: Option<std::time::Duration>,
+    /// Flow checkpoint to prewarm the powers cache from
+    /// (`--prewarm-from`): every block generator `A_k` in the
+    /// checkpoint — and `-A_k`, the sampling inverse direction — is
+    /// planned through the cache before the service accepts traffic, so
+    /// the first request window runs at warm-steady-state product
+    /// counts. Ignored when [`ServiceConfig::powers_cache`] is 0.
+    pub prewarm_from: Option<std::path::PathBuf>,
     /// Per-lane bound on queued groups; a full lane queue blocks the
     /// dispatcher (backpressure) instead of growing without bound.
     pub lane_queue_cap: usize,
@@ -123,6 +141,9 @@ impl Default for ServiceConfig {
             artifact_dir: Some(crate::runtime::default_artifact_dir()),
             remote: None,
             powers_cache: 0,
+            cache_snapshot: None,
+            snapshot_interval: None,
+            prewarm_from: None,
             lane_queue_cap: 256,
             latency_budget: None,
             admission_queue_cap: usize::MAX,
@@ -147,6 +168,14 @@ struct JobEnvelope {
     submitted: Instant,
 }
 
+/// The periodic snapshot writer: a thread parked on a condvar that
+/// saves the powers cache every interval and exits promptly when
+/// signalled at shutdown.
+struct SnapshotWorker {
+    handle: std::thread::JoinHandle<()>,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+}
+
 /// Handle to a running expm service.
 pub struct ExpmService {
     tx: Sender<Msg>,
@@ -160,29 +189,82 @@ pub struct ExpmService {
     /// scheduler is running (empty on non-elastic services and again
     /// after shutdown).
     control: Arc<Mutex<Option<Arc<ControlPlane>>>>,
+    /// The cross-request powers cache, shared with the dispatcher.
+    /// Zero-copy: planning, batch execution and the snapshot writer all
+    /// read the same `Arc`-shared ladder rungs.
+    cache: Option<Arc<PowersCache>>,
+    cache_snapshot: Option<std::path::PathBuf>,
+    snapshot_worker: Option<SnapshotWorker>,
 }
 
 impl ExpmService {
     /// Start the dispatcher thread. If the artifact dir is configured but
     /// unusable, the service logs once and runs native-only.
+    ///
+    /// Warm-state startup order, when a cache is configured: load the
+    /// snapshot (rejecting corrupt or mismatched files — cold, counted,
+    /// never wrong), run the checkpoint prewarm pass, *then* accept
+    /// traffic — so the first request window already sees warm ladders.
     pub fn start(config: ServiceConfig) -> ExpmService {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
         let latency_budget = config.latency_budget;
         let admission_queue_cap = config.admission_queue_cap;
+        let cache = if config.powers_cache > 0 {
+            Some(Arc::new(PowersCache::new(config.powers_cache)))
+        } else {
+            None
+        };
+        if let Some(cache) = &cache {
+            if let Some(path) = &config.cache_snapshot {
+                if path.exists() {
+                    match cache.load_snapshot(path) {
+                        Ok(n) => metrics.record_snapshot_load(n as u64),
+                        Err(e) => {
+                            eprintln!(
+                                "expm-service: cache snapshot rejected \
+                                 ({e}); starting cold"
+                            );
+                            metrics.record_snapshot_rejection();
+                        }
+                    }
+                }
+            }
+            if let Some(ckpt) = &config.prewarm_from {
+                prewarm_from_checkpoint(ckpt, cache, &metrics);
+            }
+        }
         let control: Arc<Mutex<Option<Arc<ControlPlane>>>> =
             Arc::new(Mutex::new(None));
         let c2 = control.clone();
+        let cache_snapshot = config.cache_snapshot.clone();
+        let snapshot_interval = config.snapshot_interval;
+        let dispatch_cache = cache.clone();
         // Block until the dispatcher has built its backends and filled
         // (or declined) the control-plane slot, so a register frame
         // arriving right after `start` returns never races the setup.
         let (ready_tx, ready_rx) = channel::<()>();
         let worker = std::thread::Builder::new()
             .name("expm-dispatch".into())
-            .spawn(move || dispatcher(rx, config, m2, c2, ready_tx))
+            .spawn(move || {
+                dispatcher(rx, config, m2, c2, ready_tx, dispatch_cache)
+            })
             .expect("spawn dispatcher");
         let _ = ready_rx.recv();
+        let snapshot_worker = match (&cache, &cache_snapshot) {
+            (Some(cache), Some(path)) => snapshot_interval
+                .filter(|iv| !iv.is_zero())
+                .map(|interval| {
+                    spawn_snapshot_worker(
+                        cache.clone(),
+                        path.clone(),
+                        interval,
+                        metrics.clone(),
+                    )
+                }),
+            _ => None,
+        };
         ExpmService {
             tx,
             worker: Some(worker),
@@ -191,6 +273,9 @@ impl ExpmService {
             latency_budget,
             admission_queue_cap,
             control,
+            cache,
+            cache_snapshot,
+            snapshot_worker,
         }
     }
 
@@ -282,7 +367,100 @@ impl Drop for ExpmService {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+        if let Some(sw) = self.snapshot_worker.take() {
+            *sw.stop.0.lock().unwrap() = true;
+            sw.stop.1.notify_all();
+            let _ = sw.handle.join();
+        }
+        // Snapshot-on-shutdown, after the dispatcher has drained: every
+        // ladder this run warmed survives into the next process.
+        if let (Some(cache), Some(path)) = (&self.cache, &self.cache_snapshot)
+        {
+            match cache.save_snapshot(path) {
+                Ok(bytes) => self.metrics.record_snapshot_save(bytes),
+                Err(e) => eprintln!(
+                    "expm-service: shutdown cache snapshot failed ({e})"
+                ),
+            }
+        }
     }
+}
+
+/// Plan every block generator of a flow checkpoint — both `A_k` and the
+/// sampling inverse `-A_k` — through the powers cache, so the first real
+/// request window runs at warm-steady-state product counts. A rejected
+/// checkpoint (truncated, corrupt, version-mismatched) leaves the cache
+/// as-is and is counted, mirroring the snapshot-load contract.
+fn prewarm_from_checkpoint(
+    path: &std::path::Path,
+    cache: &PowersCache,
+    metrics: &Metrics,
+) {
+    let state = match crate::flow::checkpoint::load(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "expm-service: prewarm checkpoint rejected ({e}); \
+                 skipping prewarm"
+            );
+            metrics.record_snapshot_rejection();
+            return;
+        }
+    };
+    let mut planted = 0u64;
+    for block in crate::flow::state_blocks(&state) {
+        for a in [block.a.clone(), block.a.scaled(-1.0)] {
+            let (_, _, outcome) = selector::plan_spec_cached(
+                &a,
+                crate::expm::Method::Sastre,
+                1e-8,
+                cache,
+            );
+            if let CacheOutcome::Miss(evicted) = outcome {
+                planted += 1;
+                metrics.record_powers_evictions(evicted);
+            }
+        }
+    }
+    metrics.record_prewarm(planted);
+}
+
+/// Spawn the periodic snapshot thread: save every `interval`, exit
+/// promptly (without a final save — [`ExpmService::drop`] owns that)
+/// when the stop flag is raised.
+fn spawn_snapshot_worker(
+    cache: Arc<PowersCache>,
+    path: std::path::PathBuf,
+    interval: std::time::Duration,
+    metrics: Arc<Metrics>,
+) -> SnapshotWorker {
+    let stop = Arc::new((Mutex::new(false), Condvar::new()));
+    let stop2 = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("expm-snapshot".into())
+        .spawn(move || {
+            let (lock, cvar) = &*stop2;
+            let mut stopped = lock.lock().unwrap();
+            while !*stopped {
+                let (guard, timeout) =
+                    cvar.wait_timeout(stopped, interval).unwrap();
+                stopped = guard;
+                if *stopped {
+                    break;
+                }
+                if timeout.timed_out() {
+                    match cache.save_snapshot(&path) {
+                        Ok(bytes) => metrics.record_snapshot_save(bytes),
+                        Err(e) => eprintln!(
+                            "expm-service: periodic cache snapshot \
+                             failed ({e})"
+                        ),
+                    }
+                }
+            }
+        })
+        .expect("spawn snapshot worker");
+    SnapshotWorker { handle, stop }
 }
 
 /// The dispatch loop — plan, route, batch. Execution happens on the
@@ -297,6 +475,7 @@ fn dispatcher(
     metrics: Arc<Metrics>,
     control: Arc<Mutex<Option<Arc<ControlPlane>>>>,
     ready_tx: Sender<()>,
+    cache: Option<Arc<PowersCache>>,
 ) {
     let mut registry = BackendRegistry::new();
     // Registration order is routing priority. A configured shard fleet
@@ -366,11 +545,6 @@ fn dispatcher(
         )));
     }
     let _ = ready_tx.send(());
-    let cache = if config.powers_cache > 0 {
-        Some(PowersCache::new(config.powers_cache))
-    } else {
-        None
-    };
     let mut batcher = Batcher::new();
     loop {
         let msg = match batcher.oldest_enqueued() {
@@ -777,6 +951,172 @@ mod tests {
             "no cache, no savings"
         );
         assert_eq!(p1[0].value, first[0].value);
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("expmflow-svc-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).expect("create tmpdir");
+        d
+    }
+
+    #[test]
+    fn snapshot_restart_restores_warm_products_bitwise() {
+        // The durability acceptance pin: a service restarted against its
+        // shutdown snapshot charges warm-steady-state products on its
+        // *first* request, with bitwise-identical values.
+        let dir = tmpdir("snap-restart");
+        let snap = dir.join("cache.pwc");
+        let a = randm(10, 2.0, 321);
+        let cfg = ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            cache_snapshot: Some(snap.clone()),
+            ..Default::default()
+        };
+        let (warm_products, warm_value) = {
+            let svc = ExpmService::start(cfg.clone());
+            let first = svc.compute(vec![a.clone()], 1e-8).unwrap();
+            let second = svc.compute(vec![a.clone()], 1e-8).unwrap();
+            assert_eq!(first[0].value, second[0].value);
+            (second[0].stats.matrix_products, second[0].value.clone())
+            // Drop writes the shutdown snapshot.
+        };
+        assert!(snap.exists(), "shutdown snapshot written");
+        let svc2 = ExpmService::start(cfg);
+        let m = svc2.metrics.snapshot();
+        assert!(m.snapshot_loaded >= 1, "ladders restored: {m:?}");
+        assert_eq!(m.snapshot_rejections, 0);
+        let r = svc2.compute(vec![a.clone()], 1e-8).unwrap();
+        assert_eq!(
+            r[0].stats.matrix_products, warm_products,
+            "first post-restart request runs at warm steady state"
+        );
+        assert_eq!(r[0].value, warm_value, "bitwise across restart");
+        assert_eq!(svc2.metrics.snapshot().powers_hits, 1);
+        drop(svc2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_starts_cold_and_counts_rejection() {
+        let dir = tmpdir("snap-corrupt");
+        let snap = dir.join("cache.pwc");
+        std::fs::write(&snap, b"definitely not a powers-cache image")
+            .unwrap();
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            cache_snapshot: Some(snap.clone()),
+            ..Default::default()
+        });
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.snapshot_rejections, 1, "rejection counted");
+        assert_eq!(m.snapshot_loaded, 0, "nothing restored");
+        // Service still works — cold, never wrong.
+        let a = randm(8, 1.0, 11);
+        let r = svc.compute(vec![a], 1e-8).unwrap();
+        assert_eq!(r.len(), 1);
+        drop(svc);
+        // Shutdown replaced the garbage with a valid snapshot.
+        let svc2 = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            cache_snapshot: Some(snap),
+            ..Default::default()
+        });
+        assert_eq!(svc2.metrics.snapshot().snapshot_rejections, 0);
+        drop(svc2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prewarm_from_checkpoint_matches_warm_steady_state() {
+        // The prewarm acceptance pin: a service prewarmed from a flow
+        // checkpoint answers its *first* request over the checkpoint's
+        // block generators with warm-steady-state product counts and
+        // bitwise-identical values.
+        let dir = tmpdir("prewarm");
+        let ckpt = dir.join("flow.ckpt");
+        let state = crate::flow::init_params(8, 2, 5);
+        crate::flow::checkpoint::save(&state, &ckpt).unwrap();
+        let blocks = crate::flow::state_blocks(&state);
+        let mats: Vec<Matrix> =
+            blocks.iter().map(|b| b.a.clone()).collect();
+        // Baseline: cold cached service, second pass = warm steady state.
+        let cold = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            ..Default::default()
+        });
+        let c1 = cold.compute(mats.clone(), 1e-8).unwrap();
+        let c2 = cold.compute(mats.clone(), 1e-8).unwrap();
+        // Prewarmed service: first pass already matches the warm pass.
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            prewarm_from: Some(ckpt),
+            ..Default::default()
+        });
+        let m = svc.metrics.snapshot();
+        assert!(m.prewarmed >= 4, "2 blocks x (+A, -A): {m:?}");
+        let r = svc.compute(mats, 1e-8).unwrap();
+        for (i, (res, (cold1, cold2))) in
+            r.iter().zip(c1.iter().zip(&c2)).enumerate()
+        {
+            assert_eq!(
+                res.stats.matrix_products, cold2.stats.matrix_products,
+                "block {i}: first prewarmed request = warm steady state"
+            );
+            assert_eq!(res.value, cold1.value, "block {i}: bitwise");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_prewarm_checkpoint_is_counted_not_fatal() {
+        let dir = tmpdir("prewarm-missing");
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            prewarm_from: Some(dir.join("absent.ckpt")),
+            ..Default::default()
+        });
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.snapshot_rejections, 1);
+        assert_eq!(m.prewarmed, 0);
+        let r = svc.compute(vec![randm(6, 0.5, 2)], 1e-8).unwrap();
+        assert_eq!(r.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn periodic_snapshot_thread_saves_on_interval() {
+        let dir = tmpdir("snap-interval");
+        let snap = dir.join("cache.pwc");
+        let svc = ExpmService::start(ServiceConfig {
+            artifact_dir: None,
+            powers_cache: 64,
+            cache_snapshot: Some(snap.clone()),
+            snapshot_interval: Some(std::time::Duration::from_millis(25)),
+            ..Default::default()
+        });
+        svc.compute(vec![randm(8, 1.0, 3)], 1e-8).unwrap();
+        // Wait for at least one periodic save (generous bound for CI).
+        let t0 = Instant::now();
+        while svc.metrics.snapshot().snapshot_saves == 0
+            && t0.elapsed() < std::time::Duration::from_secs(5)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let m = svc.metrics.snapshot();
+        assert!(m.snapshot_saves >= 1, "periodic save landed: {m:?}");
+        assert!(m.snapshot_bytes > 0);
+        assert!(m.snapshot_age_s.is_some());
+        assert!(snap.exists());
+        drop(svc);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

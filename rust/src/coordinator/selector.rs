@@ -140,9 +140,9 @@ pub fn plan_spec_cached(
                 // version cached. In the steady state nothing deepens,
                 // so the hit path skips the re-hash/re-lock of an
                 // insert entirely (lookup already refreshed the LRU
-                // recency).
+                // recency). The clone is shallow — rungs stay shared.
                 if powers.depth() > depth_before {
-                    cache.insert(&powers);
+                    cache.insert(powers.clone());
                 }
                 return (
                     Plan { n: w.order(), method: sel.method, m: sel.m, s: sel.s },
@@ -155,7 +155,7 @@ pub fn plan_spec_cached(
                 // Zero matrix: nothing worth caching (e^0 = I is free).
                 CacheOutcome::Bypass
             } else {
-                CacheOutcome::Miss(cache.insert(&powers))
+                CacheOutcome::Miss(cache.insert(powers.clone()))
             };
             (
                 Plan { n: w.order(), method: sel.method, m: sel.m, s: sel.s },

@@ -626,12 +626,39 @@ fn handle_line(
                         })
                         .collect(),
                 );
+                // Additive: durable warm-state counters — prewarmed
+                // ladders, snapshot saves/loads/rejections, and the age
+                // of the newest snapshot (`null` until one is written).
                 let powers_cache = obj(vec![
                     ("hits", Json::Num(snap.powers_hits as f64)),
                     ("misses", Json::Num(snap.powers_misses as f64)),
                     (
                         "evictions",
                         Json::Num(snap.powers_evictions as f64),
+                    ),
+                    ("prewarmed", Json::Num(snap.prewarmed as f64)),
+                    (
+                        "snapshot_saves",
+                        Json::Num(snap.snapshot_saves as f64),
+                    ),
+                    (
+                        "snapshot_bytes",
+                        Json::Num(snap.snapshot_bytes as f64),
+                    ),
+                    (
+                        "snapshot_rejections",
+                        Json::Num(snap.snapshot_rejections as f64),
+                    ),
+                    (
+                        "snapshot_loaded",
+                        Json::Num(snap.snapshot_loaded as f64),
+                    ),
+                    (
+                        "snapshot_age_s",
+                        match snap.snapshot_age_s {
+                            Some(age) => Json::Num(age),
+                            None => Json::Null,
+                        },
                     ),
                 ]);
                 // Additive (wire-compat rules): group execution latency
@@ -1236,6 +1263,11 @@ mod tests {
         assert!(reply.contains("\"lanes\""), "{reply}");
         assert!(reply.contains("\"powers_cache\""), "{reply}");
         assert!(reply.contains("\"hits\""), "{reply}");
+        // Additive warm-state surface: prewarm + snapshot counters; the
+        // age is null until a snapshot is written.
+        assert!(reply.contains("\"prewarmed\""), "{reply}");
+        assert!(reply.contains("\"snapshot_rejections\""), "{reply}");
+        assert!(reply.contains("\"snapshot_age_s\":null"), "{reply}");
         // Additive SLO surface: latency percentiles + admission counters.
         assert!(reply.contains("\"latency\""), "{reply}");
         assert!(reply.contains("\"p99_s\""), "{reply}");

@@ -582,8 +582,9 @@ pub fn expm_multi_cached(
                         // the deeper version for the next request (a
                         // steady-state hit deepens nothing and skips
                         // the insert — lookup already refreshed LRU).
+                        // The clone is shallow: rungs are Arc-shared.
                         if powers.depth() > depth_before {
-                            cache.insert(&powers);
+                            cache.insert(powers.clone());
                         }
                         return Planned::Dynamic(sel, powers);
                     }
@@ -592,7 +593,7 @@ pub fn expm_multi_cached(
                     selection::select_dynamic(w, opts.method, opts.tol);
                 if let Some(cache) = cache {
                     if sel.m != 0 {
-                        cache.insert(&powers);
+                        cache.insert(powers.clone());
                     }
                 }
                 Planned::Dynamic(sel, powers)

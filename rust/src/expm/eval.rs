@@ -6,14 +6,23 @@
 //! the remainder, and Algorithm 2 reuses them), so the *incremental*
 //! product counts here are the paper's totals minus the shared powers.
 
+use std::sync::Arc;
+
 use super::coeffs::{self, C15, C8};
 use crate::linalg::{matmul, Matrix};
 
 /// Precomputed powers of the (already scaled) matrix W.
 /// `pows[0]` is W itself, `pows[1]` = W^2, ... up to W^jmax.
+///
+/// Rungs are `Arc`-shared and immutable once computed: `Clone` is a
+/// shallow reference bump per rung, which is what lets the cross-request
+/// powers cache ([`super::powers_cache`]) hand ladders out and take them
+/// back with zero deep copies on the hot path. The only mutation a rung
+/// ever sees is [`Powers::rescale`], which copies-on-write
+/// ([`Arc::make_mut`]) so a cached (shared) ladder is never scribbled on.
 #[derive(Clone)]
 pub struct Powers {
-    pows: Vec<Matrix>,
+    pows: Vec<Arc<Matrix>>,
     /// Products spent building the powers.
     pub products: usize,
 }
@@ -21,7 +30,19 @@ pub struct Powers {
 impl Powers {
     /// Start from W alone (no products spent yet).
     pub fn new(w: Matrix) -> Powers {
-        Powers { pows: vec![w], products: 0 }
+        Powers { pows: vec![Arc::new(w)], products: 0 }
+    }
+
+    /// Rebuild a ladder from rungs computed earlier (snapshot load):
+    /// `rungs[k]` must be W^{k+1}. No products are charged — they were
+    /// paid by the run that built the rungs. Panics on an empty slice
+    /// (a ladder always holds at least W).
+    pub fn from_rungs(rungs: Vec<Matrix>) -> Powers {
+        assert!(!rungs.is_empty(), "a ladder holds at least W");
+        Powers {
+            pows: rungs.into_iter().map(Arc::new).collect(),
+            products: 0,
+        }
     }
 
     /// The base matrix W.
@@ -34,10 +55,17 @@ impl Powers {
         assert!(k >= 1);
         while self.pows.len() < k {
             let next = matmul(self.pows.last().unwrap(), &self.pows[0]);
-            self.pows.push(next);
+            self.pows.push(Arc::new(next));
             self.products += 1;
         }
         &self.pows[k - 1]
+    }
+
+    /// The shared handle for the rung W^k, if materialized. Exposed so
+    /// zero-copy sharing is testable ([`Arc::ptr_eq`] across two cache
+    /// hits) — readers should prefer [`Powers::get`].
+    pub fn rung(&self, k: usize) -> Option<&Arc<Matrix>> {
+        k.checked_sub(1).and_then(|i| self.pows.get(i))
     }
 
     /// Whether W^k is already cached (no product would be spent).
@@ -65,20 +93,29 @@ impl Powers {
     }
 
     /// Rescale all cached powers for W <- W / 2^s (W^k scales by 2^{-ks}).
+    ///
+    /// Copy-on-write: a rung still shared with the powers cache is
+    /// cloned before scaling, so cached ladders keep their unscaled
+    /// bits; an unshared rung is scaled in place, allocation-free.
     pub fn rescale(&mut self, s: u32) {
         if s == 0 {
             return;
         }
         for (idx, p) in self.pows.iter_mut().enumerate() {
             let k = (idx + 1) as i32;
-            p.scale_in_place((2.0f64).powi(-(k * s as i32)));
+            Arc::make_mut(p).scale_in_place((2.0f64).powi(-(k * s as i32)));
         }
     }
 
     /// Tear down into the raw power buffers so a batched-engine workspace
-    /// can recycle the allocations (see `expm::batch::Workspace`).
+    /// can recycle the allocations (see `expm::batch::Workspace`). Rungs
+    /// still shared (held by the powers cache) are skipped — their
+    /// allocation lives on in the cache, so recycling them would alias.
     pub fn into_buffers(self) -> Vec<Matrix> {
         self.pows
+            .into_iter()
+            .filter_map(|p| Arc::try_unwrap(p).ok())
+            .collect()
     }
 }
 
@@ -105,7 +142,7 @@ pub fn eval_sastre(p: &mut Powers, m: usize) -> EvalOut {
         2 => {
             // (11): A^2/2 + A + I
             let mut x = p.get(2).scaled(0.5);
-            x.axpy(1.0, &p.pows[0].clone());
+            x.axpy(1.0, p.w());
             x.add_diag(1.0);
             x
         }
@@ -242,7 +279,7 @@ pub fn eval_bbc(p: &mut Powers, m: usize) -> EvalOut {
         2 => {
             // T2 = A2/2 + A + I (shared with the Sastre ladder).
             let mut x = p.get(2).scaled(0.5);
-            x.axpy(1.0, &p.pows[0].clone());
+            x.axpy(1.0, p.w());
             x.add_diag(1.0);
             x
         }
@@ -533,6 +570,58 @@ mod tests {
         assert_eq!(p.get(1), &a);
         assert_eq!(p.products, before);
         assert!(p.have(1) && p.have(3) && !p.have(4));
+    }
+
+    #[test]
+    fn powers_clone_shares_rungs_and_rescale_copies_on_write() {
+        use std::sync::Arc;
+        let a = randm(5, 0.8, 20);
+        let mut p = Powers::new(a.clone());
+        p.get(3);
+        let shared = p.clone();
+        for k in 1..=3 {
+            assert!(
+                Arc::ptr_eq(p.rung(k).unwrap(), shared.rung(k).unwrap()),
+                "clone must share rung {k}, not copy it"
+            );
+        }
+        assert!(p.rung(4).is_none());
+        // Rescale is copy-on-write: the shared ladder keeps the unscaled
+        // bits and p moves to fresh buffers.
+        let w2_bits: Vec<u64> =
+            shared.rung(2).unwrap().data().iter().map(|x| x.to_bits()).collect();
+        p.rescale(1);
+        let still: Vec<u64> =
+            shared.rung(2).unwrap().data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(w2_bits, still, "shared rungs must never be scribbled on");
+        assert!(!Arc::ptr_eq(p.rung(2).unwrap(), shared.rung(2).unwrap()));
+        // A ladder whose rungs are still shared yields no buffers to
+        // recycle (the allocations live on in the other handle).
+        let q = shared.clone();
+        assert!(shared.into_buffers().is_empty());
+        // ... and once the last co-owner is gone, recycling works again.
+        let bufs = q.into_buffers();
+        assert_eq!(bufs.len(), 3);
+        assert_eq!(bufs[0], a);
+    }
+
+    #[test]
+    fn powers_from_rungs_reads_free_and_extends_charged() {
+        let a = randm(4, 0.6, 21);
+        let mut built = Powers::new(a.clone());
+        built.get(3);
+        let rungs: Vec<Matrix> =
+            (1..=3).map(|k| built.get(k).clone()).collect();
+        let mut p = Powers::from_rungs(rungs);
+        assert_eq!(p.products, 0, "restored rungs are already paid for");
+        assert_eq!(p.depth(), 3);
+        for k in 1..=3 {
+            assert_eq!(p.get(k), built.get(k), "rung {k} restored bitwise");
+        }
+        assert_eq!(p.products, 0, "re-reads stay free");
+        p.get(4);
+        assert_eq!(p.products, 1, "extension past the image still charges");
+        assert_eq!(p.get(4), built.get(4), "extension continues the ladder");
     }
 
     #[test]

@@ -24,36 +24,80 @@
 //!   colliding hash is a miss, never a wrong ladder.
 //! - **Bounded memory.** At most `capacity` ladders total (each at most
 //!   a handful of n×n buffers), evicted least-recently-used per shard.
+//! - **Zero deep copies on the hot path.** Ladder rungs are `Arc`-shared
+//!   ([`Powers`] clones shallowly), so a hit bumps k reference counts
+//!   instead of copying k n×n buffers, and `insert` moves the caller's
+//!   ladder into the shard. Two hits on the same entry return pointers
+//!   to the *same* rung allocations (pinned by the pointer-identity
+//!   test below).
 //!
 //! The cache is `Sync` (per-shard mutexes + atomic counters), so the
 //! batch engine's parallel planning sweep and the coordinator's
 //! dispatcher can share one instance.
+//!
+//! # Durable snapshots
+//!
+//! [`PowersCache::save_snapshot`] / [`PowersCache::load_snapshot`]
+//! persist the warm ladders as a versioned state image
+//! (`crate::util::image`: atomic temp-file-then-rename write; magic,
+//! version, and word-wise FNV-1a content hash validated on load;
+//! mismatched versions refused). Full ladders are stored — not just the
+//! keys — so a restart re-reads every rung for zero products. A
+//! truncated, corrupted, or version-mismatched file degrades to a cold
+//! cache with a counted rejection ([`CacheStats::snapshot_rejections`]),
+//! never a panic and never a wrong ladder.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::{fmt, io};
 
 use super::eval::Powers;
 use crate::linalg::Matrix;
+use crate::util::image::{ImageError, ImageReader, ImageWriter};
 
 /// Number of independently locked shards. A power of two so the shard
 /// index is a cheap mask of the key hash.
 const SHARDS: usize = 8;
 
+/// Snapshot file magic: "expm powers cache", format 1.
+const SNAPSHOT_MAGIC: [u8; 8] = *b"EXPMPWC1";
+
+/// Snapshot payload version. Bump on any layout change; loaders refuse
+/// other versions outright (no silent migration).
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Deepest ladder a snapshot entry may carry. Selection never walks past
+/// the BBC degree-18 probes plus P–S blocking, so real ladders stay in
+/// single digits; the cap only bounds what a (hash-valid) file can make
+/// the loader allocate.
+const MAX_SNAPSHOT_DEPTH: u64 = 64;
+
+/// Largest matrix order a snapshot entry may carry — same spirit as the
+/// wire's order cap: an allocation bound, far above anything real.
+const MAX_SNAPSHOT_ORDER: u64 = 1 << 16;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+
 /// FNV-1a over the matrix order and the raw f64 bit patterns — content
 /// identity, deterministic across runs and hosts (same rationale as the
 /// remote backend's group-shape routing hash).
+///
+/// The fold eats 8-byte words, not bytes: one xor/multiply per f64
+/// instead of eight, on a path that runs for every cache consult. The
+/// contract is pinned by a cross-check test against the shared word-hash
+/// primitive ([`fnv1a_words`](crate::util::image::fnv1a_words)) over the
+/// equivalent serialized buffer.
 pub fn matrix_hash(w: &Matrix) -> u64 {
-    const PRIME: u64 = 0x0100_0000_01b3;
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(PRIME);
-        }
+    let mut h: u64 = FNV_OFFSET;
+    let mut eat = |word: u64| {
+        h ^= word;
+        h = h.wrapping_mul(FNV_PRIME);
     };
-    eat(&(w.order() as u64).to_le_bytes());
+    eat(w.order() as u64);
     for &x in w.data() {
-        eat(&x.to_bits().to_le_bytes());
+        eat(x.to_bits());
     }
     h
 }
@@ -81,6 +125,9 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Ladders currently held.
     pub entries: usize,
+    /// Snapshot files refused on load (truncated, corrupt, or
+    /// version-mismatched — the cache stayed cold instead).
+    pub snapshot_rejections: u64,
 }
 
 /// Sharded LRU of powers ladders, bounded at `capacity` entries total.
@@ -90,6 +137,7 @@ pub struct PowersCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    snapshot_rejections: AtomicU64,
 }
 
 impl PowersCache {
@@ -103,6 +151,7 @@ impl PowersCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            snapshot_rejections: AtomicU64::new(0),
         }
     }
 
@@ -110,11 +159,12 @@ impl PowersCache {
         &self.shards[(key as usize) & (SHARDS - 1)]
     }
 
-    /// Fetch the ladder cached for `w`, if any. The returned clone has
-    /// its product counter reset to zero: the products were paid by an
-    /// earlier request, so a run planned from it charges only what it
-    /// newly spends. Collisions are verified away by comparing the
-    /// stored W with `w` before returning.
+    /// Fetch the ladder cached for `w`, if any. The returned handle
+    /// *shares* the stored rungs (shallow `Arc` clone — no matrix is
+    /// copied) and has its product counter reset to zero: the products
+    /// were paid by an earlier request, so a run planned from it charges
+    /// only what it newly spends. Collisions are verified away by
+    /// comparing the stored W with `w` before returning.
     pub fn lookup(&self, w: &Matrix) -> Option<Powers> {
         let key = matrix_hash(w);
         let mut shard = self.shard(key).lock().unwrap();
@@ -134,9 +184,12 @@ impl PowersCache {
     }
 
     /// Store (or refresh) the ladder for `powers.w()`, evicting the
-    /// least-recently-used entry of the shard when it is full. Returns
-    /// how many entries were evicted (0 or 1).
-    pub fn insert(&self, powers: &Powers) -> u64 {
+    /// least-recently-used entry of the shard when it is full. Takes the
+    /// ladder by value — rungs move (or share) into the shard, they are
+    /// never deep-copied; callers that keep using the ladder pass a
+    /// (shallow) `clone()`. Returns how many entries were evicted
+    /// (0 or 1).
+    pub fn insert(&self, powers: Powers) -> u64 {
         let key = matrix_hash(powers.w());
         let mut shard = self.shard(key).lock().unwrap();
         shard.tick += 1;
@@ -149,7 +202,7 @@ impl PowersCache {
             // Refresh in place — keep the deeper ladder, so a request
             // that extended the cached powers grows the entry.
             if powers.depth() > entry.powers.depth() {
-                entry.powers = powers.clone();
+                entry.powers = powers;
             }
             entry.last_used = tick;
             return 0;
@@ -168,11 +221,7 @@ impl PowersCache {
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        shard.entries.push(Entry {
-            key,
-            powers: powers.clone(),
-            last_used: tick,
-        });
+        shard.entries.push(Entry { key, powers, last_used: tick });
         evicted
     }
 
@@ -189,25 +238,148 @@ impl PowersCache {
         self.len() == 0
     }
 
-    /// Counter snapshot (hits, misses, evictions, current entries).
+    /// Counter snapshot (hits, misses, evictions, current entries,
+    /// snapshot rejections).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             entries: self.len(),
+            snapshot_rejections: self
+                .snapshot_rejections
+                .load(Ordering::Relaxed),
         }
+    }
+
+    /// Persist every cached ladder to `path` as a versioned state image
+    /// (atomic temp-file-then-rename; see `crate::util::image`). Full
+    /// ladders are written, so a later [`PowersCache::load_snapshot`]
+    /// restores warm state that re-reads every rung for zero products.
+    ///
+    /// Shard locks are held only while the shallow ladder handles are
+    /// collected — serialization and file I/O run outside them, so
+    /// concurrent lookups and inserts proceed during the write (they see
+    /// either the pre- or post-collection state; the snapshot is a
+    /// consistent point-in-time view per shard).
+    ///
+    /// Returns the image size in bytes.
+    pub fn save_snapshot(&self, path: &Path) -> io::Result<u64> {
+        // Shallow-clone the ladders under the locks (Arc bumps only)...
+        let mut ladders: Vec<Powers> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            ladders.extend(shard.entries.iter().map(|e| e.powers.clone()));
+        }
+        // ... then serialize without blocking the hot path.
+        let mut img = ImageWriter::new(SNAPSHOT_MAGIC, SNAPSHOT_VERSION);
+        img.put_u64(ladders.len() as u64);
+        for powers in &ladders {
+            img.put_u64(powers.order() as u64);
+            img.put_u64(powers.depth() as u64);
+            for k in 1..=powers.depth() {
+                let rung = powers
+                    .rung(k)
+                    .expect("depth() rungs are materialized");
+                img.put_f64s(rung.data());
+            }
+        }
+        img.commit(path)
+    }
+
+    /// Restore ladders from a snapshot written by
+    /// [`PowersCache::save_snapshot`]. Entries insert through the normal
+    /// LRU path, so the capacity bound holds regardless of how many the
+    /// image carries. Returns how many ladders were loaded.
+    ///
+    /// Any validation failure — unreadable file, bad magic, refused
+    /// version, truncation, content-hash mismatch, malformed payload —
+    /// leaves the cache exactly as it was (cold on startup), increments
+    /// [`CacheStats::snapshot_rejections`], and returns the typed error.
+    /// It never panics.
+    pub fn load_snapshot(&self, path: &Path) -> Result<usize, ImageError> {
+        match self.parse_snapshot(path) {
+            Ok(ladders) => {
+                let count = ladders.len();
+                for powers in ladders {
+                    self.insert(powers);
+                }
+                Ok(count)
+            }
+            Err(e) => {
+                self.snapshot_rejections.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Parse and fully validate a snapshot file into ladders, touching
+    /// no cache state. All-or-nothing: a malformed trailing entry
+    /// rejects the whole image.
+    fn parse_snapshot(&self, path: &Path) -> Result<Vec<Powers>, ImageError> {
+        let mut img =
+            ImageReader::open(path, SNAPSHOT_MAGIC, SNAPSHOT_VERSION)?;
+        let count = img.u64()?;
+        let mut ladders = Vec::new();
+        for _ in 0..count {
+            let order = img.u64()?;
+            if order == 0 || order > MAX_SNAPSHOT_ORDER {
+                return Err(ImageError::Malformed(
+                    "entry order out of range",
+                ));
+            }
+            let depth = img.u64()?;
+            if depth == 0 || depth > MAX_SNAPSHOT_DEPTH {
+                return Err(ImageError::Malformed(
+                    "entry ladder depth out of range",
+                ));
+            }
+            let n = order as usize;
+            let mut rungs = Vec::with_capacity(depth as usize);
+            for _ in 0..depth {
+                rungs.push(Matrix::from_vec(n, n, img.f64s(n * n)?));
+            }
+            ladders.push(Powers::from_rungs(rungs));
+        }
+        if !img.exhausted() {
+            return Err(ImageError::Malformed(
+                "trailing bytes after the last entry",
+            ));
+        }
+        Ok(ladders)
+    }
+}
+
+impl fmt::Debug for PowersCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.stats();
+        f.debug_struct("PowersCache")
+            .field("entries", &st.entries)
+            .field("hits", &st.hits)
+            .field("misses", &st.misses)
+            .field("evictions", &st.evictions)
+            .field("snapshot_rejections", &st.snapshot_rejections)
+            .finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::image::fnv1a_words;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     fn randm(n: usize, seed: u64) -> Matrix {
         let mut rng = Rng::new(seed);
         Matrix::from_fn(n, n, |_, _| rng.normal())
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("expmflow-pwc-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
     }
 
     #[test]
@@ -217,7 +389,7 @@ mod tests {
         powers.get(3);
         assert_eq!(powers.products, 2);
         let cache = PowersCache::new(16);
-        cache.insert(&powers);
+        cache.insert(powers.clone());
         let mut got = cache.lookup(&a).expect("hit");
         assert_eq!(got.products, 0, "cached products are already paid");
         assert!(got.have(3));
@@ -227,6 +399,31 @@ mod tests {
         assert_eq!(got.products, 0, "re-reads stay free");
         let st = cache.stats();
         assert_eq!((st.hits, st.misses, st.entries), (1, 0, 1));
+    }
+
+    #[test]
+    fn hits_share_rung_allocations_pointer_identical() {
+        // The zero-copy pin: two hits on the same entry hand back the
+        // *same* rung allocations (Arc identity), not copies — and both
+        // alias the buffers the insert moved in.
+        let a = randm(6, 31);
+        let mut powers = Powers::new(a.clone());
+        powers.get(3);
+        let inserted = powers.clone();
+        let cache = PowersCache::new(16);
+        cache.insert(powers);
+        let first = cache.lookup(&a).expect("hit");
+        let second = cache.lookup(&a).expect("hit");
+        for k in 1..=3 {
+            assert!(
+                Arc::ptr_eq(first.rung(k).unwrap(), second.rung(k).unwrap()),
+                "hits must share rung {k}, not deep-copy it"
+            );
+            assert!(
+                Arc::ptr_eq(first.rung(k).unwrap(), inserted.rung(k).unwrap()),
+                "insert must move rung {k}, not deep-copy it"
+            );
+        }
     }
 
     #[test]
@@ -244,7 +441,7 @@ mod tests {
         assert_eq!(cold_out.products, 5);
         assert_eq!(cold.products, 5);
         let cache = PowersCache::new(16);
-        cache.insert(&cold);
+        cache.insert(cold.clone());
         let mut warm = cache.lookup(&a).expect("hit");
         assert_eq!(warm.products, 0, "hit resets the counter");
         let warm_out = eval_bbc(&mut warm, 18);
@@ -282,7 +479,7 @@ mod tests {
         let a = randm(4, 3);
         let mut p = Powers::new(a.clone());
         p.get(2);
-        cache.insert(&p);
+        cache.insert(p);
         // Same order, different values: miss.
         assert!(cache.lookup(&randm(4, 4)).is_none());
         // Different order entirely: miss.
@@ -300,7 +497,7 @@ mod tests {
         let cache = PowersCache::new(8);
         for seed in 0..40u64 {
             let p = Powers::new(randm(3, 100 + seed));
-            cache.insert(&p);
+            cache.insert(p);
             assert!(cache.len() <= 8, "size bound violated");
         }
         let st = cache.stats();
@@ -314,15 +511,15 @@ mod tests {
         let mut shallow = Powers::new(a.clone());
         shallow.get(2);
         let cache = PowersCache::new(16);
-        assert_eq!(cache.insert(&shallow), 0);
+        assert_eq!(cache.insert(shallow.clone()), 0);
         let mut deep = Powers::new(a.clone());
         deep.get(4);
-        assert_eq!(cache.insert(&deep), 0, "refresh is not an eviction");
+        assert_eq!(cache.insert(deep), 0, "refresh is not an eviction");
         assert_eq!(cache.len(), 1, "one entry per matrix");
         let got = cache.lookup(&a).unwrap();
         assert!(got.have(4), "deeper ladder kept");
         // Re-inserting the shallow ladder must not shrink the entry.
-        cache.insert(&shallow);
+        cache.insert(shallow);
         assert!(cache.lookup(&a).unwrap().have(4));
     }
 
@@ -342,6 +539,165 @@ mod tests {
     }
 
     #[test]
+    fn hash_cross_checks_against_word_fnv_reference() {
+        // Determinism contract: matrix_hash is FNV-1a over the 8-byte
+        // little-endian words [order, bits(x_0), bits(x_1), …] — exactly
+        // what the shared image primitive computes over the serialized
+        // buffer. The two implementations must agree forever (snapshot
+        // keys and routing assume a stable hash).
+        for (n, seed) in [(1usize, 5u64), (3, 6), (7, 7), (16, 8)] {
+            let a = randm(n, seed);
+            let mut buf = Vec::with_capacity(8 + a.data().len() * 8);
+            buf.extend_from_slice(&(a.order() as u64).to_le_bytes());
+            for &x in a.data() {
+                buf.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            assert_eq!(
+                matrix_hash(&a),
+                fnv1a_words(&buf),
+                "word-FNV contract broken at n={n}"
+            );
+        }
+        // And it is a pure content function: a fresh identical matrix
+        // (different allocation) hashes the same.
+        let a = randm(5, 9);
+        let b = Matrix::from_vec(5, 5, a.data().to_vec());
+        assert_eq!(matrix_hash(&a), matrix_hash(&b));
+    }
+
+    #[test]
+    fn snapshot_round_trip_restores_warm_ladders_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("cache.img");
+        let cache = PowersCache::new(32);
+        let mats: Vec<Matrix> = (0..5).map(|i| randm(4 + i, 300 + i as u64)).collect();
+        for a in &mats {
+            let mut p = Powers::new(a.clone());
+            p.get(3);
+            cache.insert(p);
+        }
+        let bytes = cache.save_snapshot(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+
+        let restored = PowersCache::new(32);
+        let loaded = restored.load_snapshot(&path).unwrap();
+        assert_eq!(loaded, mats.len());
+        assert_eq!(restored.len(), mats.len());
+        for a in &mats {
+            let mut warm = restored.lookup(a).expect("restored hit");
+            let mut fresh = Powers::new(a.clone());
+            fresh.get(3);
+            assert_eq!(warm.products, 0, "restored rungs cost zero products");
+            for k in 1..=3 {
+                assert_eq!(warm.get(k), fresh.get(k), "rung {k} bitwise");
+            }
+            assert_eq!(warm.products, 0, "ladder reads stay free");
+        }
+        assert_eq!(restored.stats().snapshot_rejections, 0);
+    }
+
+    #[test]
+    fn snapshot_rejects_truncated_corrupt_and_mismatched_files() {
+        let dir = tmpdir("reject");
+        let path = dir.join("cache.img");
+        let cache = PowersCache::new(16);
+        let a = randm(5, 21);
+        let mut p = Powers::new(a.clone());
+        p.get(2);
+        cache.insert(p);
+        cache.save_snapshot(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let expect_cold = |bytes: &[u8], tag: &str| {
+            std::fs::write(&path, bytes).unwrap();
+            let fresh = PowersCache::new(16);
+            let before = fresh.stats().snapshot_rejections;
+            assert!(fresh.load_snapshot(&path).is_err(), "{tag} must fail");
+            assert!(fresh.is_empty(), "{tag}: cache must stay cold");
+            assert_eq!(
+                fresh.stats().snapshot_rejections,
+                before + 1,
+                "{tag}: rejection must be counted"
+            );
+            assert!(fresh.lookup(&a).is_none(), "{tag}: no ladder served");
+        };
+
+        // Truncated mid-entry (aligned), truncated unaligned, corrupted
+        // payload word, patched version word, wrong magic.
+        expect_cold(&good[..good.len() - 16], "truncated");
+        expect_cold(&good[..good.len() - 3], "unaligned");
+        let mut corrupt = good.clone();
+        corrupt[40] ^= 0x01;
+        expect_cold(&corrupt, "corrupt");
+        let mut vers = good.clone();
+        vers[8..16].copy_from_slice(&(SNAPSHOT_VERSION + 1).to_le_bytes());
+        expect_cold(&vers, "version-mismatch");
+        let mut magic = good.clone();
+        magic[..8].copy_from_slice(b"NOTACACH");
+        expect_cold(&magic, "bad-magic");
+        // Missing file: same clean rejection.
+        let fresh = PowersCache::new(16);
+        assert!(fresh.load_snapshot(&dir.join("absent.img")).is_err());
+        assert_eq!(fresh.stats().snapshot_rejections, 1);
+    }
+
+    #[test]
+    fn snapshot_load_respects_capacity_bound() {
+        let dir = tmpdir("cap");
+        let path = dir.join("cache.img");
+        let big = PowersCache::new(64);
+        for seed in 0..24u64 {
+            big.insert(Powers::new(randm(3, 400 + seed)));
+        }
+        big.save_snapshot(&path).unwrap();
+        let small = PowersCache::new(8);
+        let loaded = small.load_snapshot(&path).unwrap();
+        assert_eq!(loaded, 24, "every image entry is offered");
+        assert!(small.len() <= 8, "LRU bound holds through load");
+        assert!(small.stats().evictions > 0);
+    }
+
+    #[test]
+    fn concurrent_lookups_during_snapshot_write_stay_correct() {
+        let dir = tmpdir("concurrent");
+        let path = dir.join("cache.img");
+        let cache = std::sync::Arc::new(PowersCache::new(32));
+        let mats: Vec<Matrix> = (0..8).map(|i| randm(4, 500 + i)).collect();
+        for a in &mats {
+            let mut p = Powers::new(a.clone());
+            p.get(3);
+            cache.insert(p);
+        }
+        std::thread::scope(|scope| {
+            let saver = cache.clone();
+            let save_path = path.clone();
+            scope.spawn(move || {
+                for _ in 0..20 {
+                    saver.save_snapshot(&save_path).unwrap();
+                }
+            });
+            for t in 0..3usize {
+                let cache = cache.clone();
+                let mats = &mats;
+                scope.spawn(move || {
+                    for round in 0..200usize {
+                        let a = &mats[(t + round) % mats.len()];
+                        let mut got =
+                            cache.lookup(a).expect("warm entry stays");
+                        assert_eq!(got.w(), a);
+                        assert_eq!(got.products, 0);
+                        got.get(3);
+                        assert_eq!(got.products, 0, "rungs stay free");
+                    }
+                });
+            }
+        });
+        // The final image is valid and complete.
+        let restored = PowersCache::new(32);
+        assert_eq!(restored.load_snapshot(&path).unwrap(), mats.len());
+    }
+
+    #[test]
     fn concurrent_access_is_safe() {
         let cache = std::sync::Arc::new(PowersCache::new(32));
         let mats: Vec<Matrix> = (0..8).map(|i| randm(4, 200 + i)).collect();
@@ -357,7 +713,7 @@ mod tests {
                             None => {
                                 let mut p = Powers::new(a.clone());
                                 p.get(2);
-                                cache.insert(&p);
+                                cache.insert(p);
                             }
                         }
                     }

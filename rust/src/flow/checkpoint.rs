@@ -1,0 +1,188 @@
+//! Durable flow checkpoints: versioned [`TrainState`] images on disk.
+//!
+//! A checkpoint is a [`crate::util::image`] state image (magic `XPFLOWC1`,
+//! version 1) holding the full training state — parameters plus Adam
+//! accumulators — in manifest order (`A0, b0, A1, b1, ...`). The same
+//! framing guarantees apply as for every state image: atomic
+//! temp-file-then-rename commit, and magic / version / content-hash
+//! validation on load, so a torn write or a stale format is rejected
+//! cleanly instead of producing a corrupt `TrainState`.
+//!
+//! Checkpoints are what the coordinator's `--prewarm-from` pass walks:
+//! each block's `A_k` (and `-A_k`, for the inverse direction) is planned
+//! through the powers cache before traffic arrives, so the first real
+//! request window runs at warm-steady-state product counts.
+
+use std::path::Path;
+
+use super::train::{param_shapes, TrainState};
+use crate::util::image::{ImageError, ImageReader, ImageWriter};
+
+/// Magic bytes identifying a flow-checkpoint image.
+pub const CHECKPOINT_MAGIC: [u8; 8] = *b"XPFLOWC1";
+/// Current checkpoint format version. Loads refuse any other version.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// Allocation guards: reject absurd headers before sizing buffers.
+const MAX_DIM: u64 = 1 << 16;
+const MAX_BLOCKS: u64 = 1 << 16;
+
+/// Save `state` to `path` atomically. Returns the image size in bytes.
+///
+/// Layout after the shared `[magic][version]` header: `dim`, `blocks`,
+/// `step`, then the three tensor groups (`params`, `adam_m`, `adam_v`),
+/// each tensor as a `len` word followed by `len` f64 bit-patterns, in
+/// manifest order.
+pub fn save(state: &TrainState, path: &Path) -> std::io::Result<u64> {
+    let mut w = ImageWriter::new(CHECKPOINT_MAGIC, CHECKPOINT_VERSION);
+    w.put_u64(state.dim as u64);
+    w.put_u64(state.blocks as u64);
+    w.put_u64(state.step);
+    for group in [&state.params, &state.adam_m, &state.adam_v] {
+        for tensor in group.iter() {
+            w.put_u64(tensor.len() as u64);
+            w.put_f64s(tensor);
+        }
+    }
+    w.commit(path)
+}
+
+/// Load a checkpoint from `path`, validating framing and shapes.
+///
+/// All-or-nothing: any framing error (truncation, bad magic, version or
+/// hash mismatch) or shape mismatch against [`param_shapes`] returns an
+/// [`ImageError`] and no partial state escapes.
+pub fn load(path: &Path) -> Result<TrainState, ImageError> {
+    let mut img =
+        ImageReader::open(path, CHECKPOINT_MAGIC, CHECKPOINT_VERSION)?;
+    let dim = img.u64()?;
+    let blocks = img.u64()?;
+    if dim == 0 || dim > MAX_DIM {
+        return Err(ImageError::Malformed("checkpoint dim out of range"));
+    }
+    if blocks == 0 || blocks > MAX_BLOCKS {
+        return Err(ImageError::Malformed("checkpoint blocks out of range"));
+    }
+    let step = img.u64()?;
+    let shapes = param_shapes(dim as usize, blocks as usize);
+    let mut groups: Vec<Vec<Vec<f64>>> = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let mut group = Vec::with_capacity(shapes.len());
+        for shape in &shapes {
+            let want: usize = shape.iter().product();
+            let len = img.u64()? as usize;
+            if len != want {
+                return Err(ImageError::Malformed(
+                    "checkpoint tensor length does not match manifest shape",
+                ));
+            }
+            group.push(img.f64s(len)?);
+        }
+        groups.push(group);
+    }
+    if !img.exhausted() {
+        return Err(ImageError::Malformed(
+            "checkpoint has trailing bytes after final tensor",
+        ));
+    }
+    let adam_v = groups.pop().expect("three groups");
+    let adam_m = groups.pop().expect("three groups");
+    let params = groups.pop().expect("three groups");
+    Ok(TrainState {
+        dim: dim as usize,
+        blocks: blocks as usize,
+        params,
+        adam_m,
+        adam_v,
+        step,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::train::init_params;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("expmflow-ckpt-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).expect("create tmpdir");
+        d
+    }
+
+    #[test]
+    fn round_trips_full_train_state_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("flow.ckpt");
+        let mut state = init_params(6, 3, 99);
+        state.step = 41;
+        state.adam_m[0][0] = -0.5;
+        state.adam_v[2][1] = 1e-12;
+        let bytes = save(&state, &path).expect("save");
+        assert_eq!(bytes, fs::metadata(&path).expect("meta").len());
+        let back = load(&path).expect("load");
+        assert_eq!(back.dim, 6);
+        assert_eq!(back.blocks, 3);
+        assert_eq!(back.step, 41);
+        assert_eq!(back.params, state.params);
+        assert_eq!(back.adam_m, state.adam_m);
+        assert_eq!(back.adam_v, state.adam_v);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_truncated_corrupt_and_mismatched_checkpoints() {
+        let dir = tmpdir("reject");
+        let path = dir.join("flow.ckpt");
+        let state = init_params(4, 2, 7);
+        save(&state, &path).expect("save");
+        let good = fs::read(&path).expect("read");
+
+        // Truncated: drop the trailing hash and a bit more.
+        fs::write(&path, &good[..good.len() - 16]).expect("write");
+        assert!(load(&path).is_err());
+
+        // Corrupt: flip one payload byte; the content hash catches it.
+        let mut bad = good.clone();
+        bad[32] ^= 0x40;
+        fs::write(&path, &bad).expect("write");
+        assert!(load(&path).is_err());
+
+        // Version mismatch: patch the version word (checked before hash).
+        let mut vbad = good.clone();
+        vbad[8..16].copy_from_slice(&2u64.to_le_bytes());
+        fs::write(&path, &vbad).expect("write");
+        assert!(matches!(
+            load(&path),
+            Err(ImageError::BadVersion { want: 1, found: 2 })
+        ));
+
+        // Wrong magic.
+        let mut mbad = good;
+        mbad[..8].copy_from_slice(b"NOTFLOWC");
+        fs::write(&path, &mbad).expect("write");
+        assert!(matches!(load(&path), Err(ImageError::BadMagic)));
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_against_manifest() {
+        let dir = tmpdir("shape");
+        let path = dir.join("flow.ckpt");
+        // Hand-build an image whose first tensor length disagrees with
+        // the manifest shape for (dim=4, blocks=1): A0 must be 16 long.
+        let mut w = ImageWriter::new(CHECKPOINT_MAGIC, CHECKPOINT_VERSION);
+        w.put_u64(4); // dim
+        w.put_u64(1); // blocks
+        w.put_u64(0); // step
+        w.put_u64(9); // wrong: A0 should be 16
+        w.put_f64s(&[0.0; 9]);
+        w.commit(&path).expect("commit");
+        assert!(matches!(load(&path), Err(ImageError::Malformed(_))));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -3,6 +3,7 @@
 //! Rust through the AOT artifacts, plus a pure-native mirror used for
 //! cross-validation. See python/compile/model.py for the graph definitions.
 
+pub mod checkpoint;
 pub mod data;
 pub mod native;
 pub mod sample;

@@ -117,6 +117,42 @@ pub struct LoadReport {
     /// `cmd:stats` frame fetched after the run, if the daemon was
     /// still reachable.
     pub server_stats: Option<Json>,
+    /// Warm-vs-cold comparison from a [`run_prewarm`] double pass;
+    /// `None` on a plain [`run`].
+    pub prewarm: Option<PrewarmStats>,
+}
+
+/// Warm-vs-cold comparison from a `--prewarm` run: the identical
+/// workload (same seed, same matrices) offered twice against one
+/// daemon. Pass 1 populates the powers cache; pass 2 replays the very
+/// same matrices, so its first window runs fully warm. The deltas are
+/// taken from the daemon's own `cmd:stats` counters, not client-side
+/// guesses.
+#[derive(Clone, Debug)]
+pub struct PrewarmStats {
+    /// Matrix products the daemon charged during the cold pass.
+    pub cold_products: u64,
+    /// Matrix products charged during the warm pass (same workload).
+    pub warm_products: u64,
+    /// Powers-cache hits during the cold pass.
+    pub cold_hits: u64,
+    /// Powers-cache hits during the warm pass.
+    pub warm_hits: u64,
+    /// Median request latency over the cold pass, seconds.
+    pub cold_p50_s: f64,
+    /// Median request latency over the warm pass, seconds.
+    pub warm_p50_s: f64,
+    /// Mean request latency over the cold pass, seconds.
+    pub cold_mean_s: f64,
+    /// Mean request latency over the warm pass, seconds.
+    pub warm_mean_s: f64,
+}
+
+impl PrewarmStats {
+    /// Products the warm pass avoided relative to the cold pass.
+    pub fn products_saved(&self) -> u64 {
+        self.cold_products.saturating_sub(self.warm_products)
+    }
 }
 
 impl LoadReport {
@@ -182,6 +218,22 @@ impl LoadReport {
             self.wall_s,
             self.max_lag_s * 1e3,
         ));
+        if let Some(p) = &self.prewarm {
+            out.push_str(&format!(
+                "prewarm:  cold products={} hits={} p50={:.3}ms; \
+                 warm products={} hits={} p50={:.3}ms\n",
+                p.cold_products,
+                p.cold_hits,
+                p.cold_p50_s * 1e3,
+                p.warm_products,
+                p.warm_hits,
+                p.warm_p50_s * 1e3,
+            ));
+            out.push_str(&format!(
+                "prewarm:  warm pass avoided {} products\n",
+                p.products_saved(),
+            ));
+        }
         out
     }
 }
@@ -400,10 +452,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
-    let server_stats = Client::connect(addr)
-        .ok()
-        .and_then(|mut c| c.roundtrip(r#"{"cmd": "stats"}"#).ok())
-        .and_then(|r| json::parse(r.trim()).ok());
+    let server_stats = fetch_stats(addr);
     LoadReport {
         kind_name: cfg.kind.name(),
         rate: cfg.rate,
@@ -420,7 +469,68 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
         max_lag_s: tally.max_lag_s,
         latencies_s: tally.latencies_s,
         server_stats,
+        prewarm: None,
     }
+}
+
+/// One `cmd:stats` round-trip against the daemon, if reachable.
+fn fetch_stats(addr: SocketAddr) -> Option<Json> {
+    Client::connect(addr)
+        .ok()
+        .and_then(|mut c| c.roundtrip(r#"{"cmd": "stats"}"#).ok())
+        .and_then(|r| json::parse(r.trim()).ok())
+}
+
+/// Walk `path` into an optional stats frame; 0.0 on any missing hop.
+fn stat_num(stats: Option<&Json>, path: &[&str]) -> f64 {
+    let mut v = match stats {
+        Some(v) => v,
+        None => return 0.0,
+    };
+    for key in path {
+        match v.get(key) {
+            Some(inner) => v = inner,
+            None => return 0.0,
+        }
+    }
+    v.as_f64().unwrap_or(0.0)
+}
+
+/// Run the identical workload twice (`--prewarm`): pass 1 cold, pass 2
+/// against the ladders pass 1 cached. Returns the warm pass's report
+/// with [`LoadReport::prewarm`] filled from the daemon's own counter
+/// deltas — products charged and cache hits per pass, plus each pass's
+/// client-side latency summary.
+///
+/// The two passes share the config verbatim; [`build_requests`] is
+/// seed-deterministic, so pass 2 offers bitwise-identical matrices and
+/// its first window measures exactly the warm-start behaviour a daemon
+/// restarted onto a snapshot (or prewarmed from a checkpoint) shows.
+pub fn run_prewarm(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
+    let before = fetch_stats(addr);
+    let cold = run(addr, cfg);
+    let warm = run(addr, cfg);
+    let products0 = stat_num(before.as_ref(), &["products"]);
+    let hits0 = stat_num(before.as_ref(), &["powers_cache", "hits"]);
+    let mid = cold.server_stats.as_ref();
+    let products1 = stat_num(mid, &["products"]);
+    let hits1 = stat_num(mid, &["powers_cache", "hits"]);
+    let after = warm.server_stats.as_ref();
+    let products2 = stat_num(after, &["products"]);
+    let hits2 = stat_num(after, &["powers_cache", "hits"]);
+    let stats = PrewarmStats {
+        cold_products: (products1 - products0).max(0.0) as u64,
+        warm_products: (products2 - products1).max(0.0) as u64,
+        cold_hits: (hits1 - hits0).max(0.0) as u64,
+        warm_hits: (hits2 - hits1).max(0.0) as u64,
+        cold_p50_s: cold.percentile(50.0),
+        warm_p50_s: warm.percentile(50.0),
+        cold_mean_s: cold.mean_latency_s(),
+        warm_mean_s: warm.mean_latency_s(),
+    };
+    let mut report = warm;
+    report.prewarm = Some(stats);
+    report
 }
 
 /// The `BENCH_<pr>.json` document for a run.
@@ -428,7 +538,10 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
 /// Schema (checked by `tools/check_bench_json.py`):
 /// `schema`, `pr`, `workload{..}`, `requests{sent,ok,shed,failed}`,
 /// `latency_s{p50,p95,p99,mean,max}`, `goodput{requests_per_s,
-/// matrices_per_s}`, `arrival{max_lag_s}`, `server_stats`.
+/// matrices_per_s}`, `arrival{max_lag_s}`, `server_stats`. A
+/// [`run_prewarm`] report additionally carries `prewarm{cold{..},
+/// warm{..}, products_saved}` — additive, so older checkers keep
+/// passing.
 pub fn bench_json(report: &LoadReport, pr: usize) -> Json {
     fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(
@@ -469,7 +582,7 @@ pub fn bench_json(report: &LoadReport, pr: usize) -> Json {
     ]);
     let arrival =
         obj(vec![("max_lag_s", Json::Num(report.max_lag_s))]);
-    obj(vec![
+    let mut fields = vec![
         ("schema", Json::Num(1.0)),
         ("pr", Json::Num(pr as f64)),
         ("workload", workload),
@@ -481,7 +594,37 @@ pub fn bench_json(report: &LoadReport, pr: usize) -> Json {
             "server_stats",
             report.server_stats.clone().unwrap_or(Json::Null),
         ),
-    ])
+    ];
+    if let Some(p) = &report.prewarm {
+        fields.push((
+            "prewarm",
+            obj(vec![
+                (
+                    "cold",
+                    obj(vec![
+                        ("products", Json::Num(p.cold_products as f64)),
+                        ("hits", Json::Num(p.cold_hits as f64)),
+                        ("p50_s", Json::Num(p.cold_p50_s)),
+                        ("mean_s", Json::Num(p.cold_mean_s)),
+                    ]),
+                ),
+                (
+                    "warm",
+                    obj(vec![
+                        ("products", Json::Num(p.warm_products as f64)),
+                        ("hits", Json::Num(p.warm_hits as f64)),
+                        ("p50_s", Json::Num(p.warm_p50_s)),
+                        ("mean_s", Json::Num(p.warm_mean_s)),
+                    ]),
+                ),
+                (
+                    "products_saved",
+                    Json::Num(p.products_saved() as f64),
+                ),
+            ]),
+        ));
+    }
+    obj(fields)
 }
 
 /// Persist the run as a `BENCH_<pr>.json` document at `path`.
@@ -596,6 +739,7 @@ mod tests {
             max_lag_s: 0.003,
             latencies_s: vec![0.010, 0.020, 0.030],
             server_stats: None,
+            prewarm: None,
         };
         let doc = bench_json(&report, 6);
         for key in [
@@ -627,5 +771,72 @@ mod tests {
         // Round-trips through the serializer.
         let text = json::to_string(&doc);
         assert!(json::parse(&text).is_ok());
+        // Plain runs carry no prewarm section (additive schema).
+        assert!(doc.get("prewarm").is_none());
+    }
+
+    #[test]
+    fn prewarm_section_is_additive_and_consistent() {
+        let mut report = LoadReport {
+            kind_name: "CIFAR-10",
+            rate: 50.0,
+            duration_s: 2.0,
+            conns: 4,
+            seed: 42,
+            planned: 100,
+            sent: 100,
+            ok: 100,
+            shed: 0,
+            failed: 0,
+            matrices_ok: 800,
+            wall_s: 2.1,
+            max_lag_s: 0.003,
+            latencies_s: vec![0.005, 0.006, 0.007],
+            server_stats: None,
+            prewarm: None,
+        };
+        report.prewarm = Some(PrewarmStats {
+            cold_products: 900,
+            warm_products: 300,
+            cold_hits: 10,
+            warm_hits: 790,
+            cold_p50_s: 0.012,
+            warm_p50_s: 0.006,
+            cold_mean_s: 0.013,
+            warm_mean_s: 0.007,
+        });
+        assert_eq!(report.prewarm.as_ref().unwrap().products_saved(), 600);
+        let doc = bench_json(&report, 9);
+        let p = doc.get("prewarm").expect("prewarm section");
+        assert_eq!(
+            p.get("cold").unwrap().get("products").and_then(Json::as_f64),
+            Some(900.0)
+        );
+        assert_eq!(
+            p.get("warm").unwrap().get("products").and_then(Json::as_f64),
+            Some(300.0)
+        );
+        assert_eq!(
+            p.get("products_saved").and_then(Json::as_f64),
+            Some(600.0)
+        );
+        let out = report.render();
+        assert!(out.contains("warm pass avoided 600 products"), "{out}");
+        // Additive: every schema-1 key is still present.
+        for key in ["schema", "pr", "requests", "latency_s", "goodput"] {
+            assert!(doc.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn stat_num_walks_paths_and_degrades_to_zero() {
+        let v = json::parse(
+            r#"{"products": 41, "powers_cache": {"hits": 7}}"#,
+        )
+        .unwrap();
+        assert_eq!(stat_num(Some(&v), &["products"]), 41.0);
+        assert_eq!(stat_num(Some(&v), &["powers_cache", "hits"]), 7.0);
+        assert_eq!(stat_num(Some(&v), &["powers_cache", "absent"]), 0.0);
+        assert_eq!(stat_num(None, &["products"]), 0.0);
     }
 }

@@ -20,7 +20,15 @@
 //!                          `--latency-budget MS` enables deadline-aware
 //!                          admission control (0 = off; shed frames
 //!                          carry `"shed": true`), with
-//!                          `--admission-queue N` as a hard backlog cap
+//!                          `--admission-queue N` as a hard backlog cap;
+//!                          `--cache-snapshot PATH` makes the powers
+//!                          cache durable (load at startup — corrupt or
+//!                          mismatched files start cold, counted — save
+//!                          every `--snapshot-interval SECS` [300; 0
+//!                          disables] and at shutdown), and
+//!                          `--prewarm-from CKPT` plans a flow
+//!                          checkpoint's block generators before
+//!                          serving traffic
 //!   worker --addr A        run one worker shard (same binary, same v2
 //!                          protocol; a worker is a daemon that serves
 //!                          compute and forwards nothing; same
@@ -29,11 +37,17 @@
 //!                          `--register-to HOST:PORT` joins a live
 //!                          elastic daemon on startup (with
 //!                          `--member-token T`, and `--advertise A` to
-//!                          announce an address other than the bind)
+//!                          announce an address other than the bind);
+//!                          same --cache-snapshot/--prewarm-from knobs
 //!   loadgen [--rate R]     open-loop Poisson load against a daemon
 //!                          (`--addr`, or an in-process one), reporting
 //!                          p50/p95/p99 latency, goodput, and shed
-//!                          counts, persisted as `BENCH_<pr>.json`
+//!                          counts, persisted as `BENCH_<pr>.json`;
+//!                          `--prewarm` offers the identical workload
+//!                          twice and reports warm-vs-cold first-window
+//!                          latency and product counts
+//!   checkpoint --out P     write a deterministic flow checkpoint
+//!                          (XPFLOWC1 state image) for `--prewarm-from`
 //!   info                   artifact manifest + platform report
 
 use expmflow::coordinator::{ExpmService, ServiceConfig};
@@ -59,11 +73,12 @@ fn main() {
         "daemon" => cmd_daemon(&args),
         "worker" => cmd_worker(&args),
         "loadgen" => cmd_loadgen(&args),
+        "checkpoint" => cmd_checkpoint(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command {other:?}");
             eprintln!(
-                "usage: expmflow <demo|serve|gallery|trace|flow|sample|daemon|worker|loadgen|info> [--flags]"
+                "usage: expmflow <demo|serve|gallery|trace|flow|sample|daemon|worker|loadgen|checkpoint|info> [--flags]"
             );
             2
         }
@@ -331,6 +346,37 @@ fn admission_from_args(
     (budget, args.get_usize("admission-queue", usize::MAX))
 }
 
+/// Durable warm-state knobs shared by `daemon` and `worker`:
+/// `--cache-snapshot PATH` (load at startup, save every interval and at
+/// shutdown), `--snapshot-interval SECS` (default 300 once a snapshot
+/// path is set; 0 disables the periodic saves, shutdown still saves),
+/// `--prewarm-from CKPT` (plan a flow checkpoint's block generators
+/// through the cache before serving).
+fn warm_state_from_args(
+    args: &Args,
+) -> (
+    Option<std::path::PathBuf>,
+    Option<std::time::Duration>,
+    Option<std::path::PathBuf>,
+) {
+    let snapshot = match args.get_str("cache-snapshot", "") {
+        "" => None,
+        p => Some(std::path::PathBuf::from(p)),
+    };
+    let secs = args.get_f64("snapshot-interval", 300.0);
+    let interval = if snapshot.is_some() && secs.is_finite() && secs > 0.0 {
+        // Same cap as the other duration knobs: conversion never panics.
+        Some(std::time::Duration::from_secs_f64(secs.min(1e9)))
+    } else {
+        None
+    };
+    let prewarm = match args.get_str("prewarm-from", "") {
+        "" => None,
+        p => Some(std::path::PathBuf::from(p)),
+    };
+    (snapshot, interval, prewarm)
+}
+
 fn cmd_daemon(args: &Args) -> i32 {
     use expmflow::coordinator::server::Server;
     use expmflow::coordinator::RemoteConfig;
@@ -361,6 +407,9 @@ fn cmd_daemon(args: &Args) -> i32 {
         t => Some(t.to_string()),
     };
     let token_gated = member_token.is_some();
+    let (cache_snapshot, snapshot_interval, prewarm_from) =
+        warm_state_from_args(args);
+    let warm_banner = cache_snapshot.is_some() || prewarm_from.is_some();
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -373,6 +422,9 @@ fn cmd_daemon(args: &Args) -> i32 {
             Some(RemoteConfig::new(shards.clone()))
         },
         powers_cache,
+        cache_snapshot,
+        snapshot_interval,
+        prewarm_from,
         lane_queue_cap,
         latency_budget,
         admission_queue_cap,
@@ -380,6 +432,11 @@ fn cmd_daemon(args: &Args) -> i32 {
         member_token,
         ..Default::default()
     }));
+    let warm_snap = if warm_banner {
+        Some(svc.metrics.snapshot())
+    } else {
+        None
+    };
     match Server::spawn(&addr, svc) {
         Ok(mut server) => {
             println!(
@@ -395,6 +452,13 @@ fn cmd_daemon(args: &Args) -> i32 {
                     "off".into()
                 }
             );
+            if let Some(m) = warm_snap {
+                println!(
+                    "warm state: restored {} ladder(s), prewarmed {}, \
+                     rejected {} image(s)",
+                    m.snapshot_loaded, m.prewarmed, m.snapshot_rejections
+                );
+            }
             if let Some(b) = latency_budget {
                 println!(
                     "admission control: latency budget {:.0}ms",
@@ -442,6 +506,8 @@ fn cmd_worker(args: &Args) -> i32 {
         "" => None,
         t => Some(t.to_string()),
     };
+    let (cache_snapshot, snapshot_interval, prewarm_from) =
+        warm_state_from_args(args);
     let svc = std::sync::Arc::new(ExpmService::start(ServiceConfig {
         artifact_dir: if native_only {
             None
@@ -451,6 +517,9 @@ fn cmd_worker(args: &Args) -> i32 {
         // Workers see whatever group mix their coordinator routes to
         // them, repeats included, so the cache defaults on here too.
         powers_cache: args.get_usize("powers-cache", 256),
+        cache_snapshot,
+        snapshot_interval,
+        prewarm_from,
         lane_queue_cap: args.get_usize("lane-queue", 256),
         latency_budget,
         admission_queue_cap,
@@ -589,7 +658,8 @@ fn cmd_loadgen(args: &Args) -> i32 {
             .clamp(0.0, 1.0),
         ..LoadgenConfig::default()
     };
-    let pr = args.get_usize("pr", 7);
+    let pr = args.get_usize("pr", 9);
+    let prewarm = args.has("prewarm");
     let out = match args.get_str("out", "") {
         "" => format!("BENCH_{pr}.json"),
         path => path.to_string(),
@@ -604,6 +674,13 @@ fn cmd_loadgen(args: &Args) -> i32 {
             let svc = std::sync::Arc::new(ExpmService::start(
                 ServiceConfig {
                     artifact_dir: None,
+                    // A --prewarm run measures warm-vs-cold cache
+                    // behaviour, so the in-process daemon needs a
+                    // cache big enough to hold the whole workload.
+                    powers_cache: args.get_usize(
+                        "powers-cache",
+                        if prewarm { 1024 } else { 0 },
+                    ),
                     lane_queue_cap: args.get_usize("lane-queue", 256),
                     latency_budget,
                     admission_queue_cap,
@@ -630,7 +707,11 @@ fn cmd_loadgen(args: &Args) -> i32 {
             }
         },
     };
-    let report = loadgen::run(addr, &cfg);
+    let report = if prewarm {
+        loadgen::run_prewarm(addr, &cfg)
+    } else {
+        loadgen::run(addr, &cfg)
+    };
     if let Some(mut s) = server.take() {
         s.shutdown();
     }
@@ -647,6 +728,36 @@ fn cmd_loadgen(args: &Args) -> i32 {
         0
     } else {
         1
+    }
+}
+
+/// Write a deterministic flow checkpoint (`XPFLOWC1` state image) —
+/// the file `daemon --prewarm-from` walks to warm its powers cache.
+/// Uses the same init as `flow`/`sample`, so a daemon prewarmed from
+/// it is warm for exactly the block generators those paths submit.
+fn cmd_checkpoint(args: &Args) -> i32 {
+    let dim = args.get_usize("dim", 8);
+    let blocks = args.get_usize("blocks", 2);
+    let seed = args.get_usize("seed", 2024) as u64;
+    let out = args.get_str("out", "flow.ckpt").to_string();
+    if dim == 0 || blocks == 0 {
+        eprintln!("--dim and --blocks must be positive");
+        return 2;
+    }
+    let state = flow::init_params(dim, blocks, seed);
+    match flow::checkpoint::save(&state, std::path::Path::new(&out)) {
+        Ok(bytes) => {
+            println!(
+                "wrote {out}: dim={dim} blocks={blocks} seed={seed} \
+                 step={} ({bytes} bytes)",
+                state.step
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
     }
 }
 

@@ -1,0 +1,323 @@
+//! Versioned binary state images: the save/load framing shared by the
+//! powers-cache snapshot ([`crate::expm::powers_cache`]) and the flow
+//! checkpoint ([`crate::flow::checkpoint`]).
+//!
+//! The format is deliberately boring — every field is a little-endian
+//! 64-bit word, so the whole file is 8-byte aligned and the integrity
+//! hash can run word-wise:
+//!
+//! ```text
+//! [magic: 8 bytes] [version: u64] [payload: 8k bytes] [fnv1a64(words): u64]
+//! ```
+//!
+//! Safety-by-construction rules (the `state_image.rs` idiom):
+//!
+//! - **Atomic write.** [`ImageWriter::commit`] writes a sibling
+//!   `<name>.tmp` file and `rename`s it into place, so a crash mid-write
+//!   leaves the previous image (or none) — never a torn file.
+//! - **Validate on load.** [`ImageReader::open`] checks length, magic,
+//!   version, and the trailing FNV-1a word hash *before* any field is
+//!   handed out; every failure is a typed [`ImageError`], never a panic.
+//! - **Refuse mismatched versions.** A version bump is a hard
+//!   [`ImageError::BadVersion`]; there is no silent migration.
+
+use std::fmt;
+use std::fs;
+use std::io::{self, Write};
+use std::path::Path;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+
+/// FNV-1a over 8-byte little-endian words. `bytes.len()` must be a
+/// multiple of 8 (every image field is a word, so this holds by
+/// construction for whole payloads).
+pub fn fnv1a_words(bytes: &[u8]) -> u64 {
+    debug_assert_eq!(bytes.len() % 8, 0, "image payloads are word-aligned");
+    let mut h = FNV_OFFSET;
+    for chunk in bytes.chunks_exact(8) {
+        h ^= u64::from_le_bytes(chunk.try_into().unwrap());
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Why an image failed to load. Callers degrade gracefully (cold cache,
+/// fresh state) and count the rejection; none of these ever panics.
+#[derive(Debug)]
+pub enum ImageError {
+    /// The file could not be read at all.
+    Io(io::Error),
+    /// Shorter than the fixed header + trailer, or not word-aligned.
+    Truncated,
+    /// The first 8 bytes are not the expected magic.
+    BadMagic,
+    /// Magic matched but the version word is not the one supported.
+    BadVersion {
+        /// The version this build reads and writes.
+        want: u64,
+        /// The version found in the file.
+        found: u64,
+    },
+    /// The trailing content hash does not match the payload.
+    HashMismatch,
+    /// Structurally invalid payload (bad count, out-of-range length, …).
+    Malformed(&'static str),
+}
+
+impl fmt::Display for ImageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImageError::Io(e) => write!(f, "cannot read image: {e}"),
+            ImageError::Truncated => write!(f, "image truncated"),
+            ImageError::BadMagic => write!(f, "not a state image (bad magic)"),
+            ImageError::BadVersion { want, found } => {
+                write!(f, "image version {found} unsupported (want {want})")
+            }
+            ImageError::HashMismatch => {
+                write!(f, "image content hash mismatch (corrupt)")
+            }
+            ImageError::Malformed(what) => write!(f, "malformed image: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ImageError {}
+
+/// Buffered writer for one image. Append words, then [`commit`]
+/// (temp-file-then-rename) — nothing touches `path` until the full,
+/// hashed image exists on disk.
+///
+/// [`commit`]: ImageWriter::commit
+pub struct ImageWriter {
+    buf: Vec<u8>,
+}
+
+impl ImageWriter {
+    /// Start an image with the given 8-byte magic and version word.
+    pub fn new(magic: [u8; 8], version: u64) -> ImageWriter {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&magic);
+        buf.extend_from_slice(&version.to_le_bytes());
+        ImageWriter { buf }
+    }
+
+    /// Append one unsigned word.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a run of f64s as raw bit patterns (exact round-trip,
+    /// -0.0 and NaN payloads included).
+    pub fn put_f64s(&mut self, vals: &[f64]) {
+        self.buf.reserve(vals.len() * 8);
+        for &v in vals {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Seal the image (append the word hash over everything so far) and
+    /// atomically install it at `path` via a sibling `<name>.tmp` file.
+    /// Returns the image size in bytes.
+    pub fn commit(mut self, path: &Path) -> io::Result<u64> {
+        let hash = fnv1a_words(&self.buf);
+        self.buf.extend_from_slice(&hash.to_le_bytes());
+        let tmp = sibling_tmp(path);
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&self.buf)?;
+            f.sync_all()?;
+        }
+        match fs::rename(&tmp, path) {
+            Ok(()) => Ok(self.buf.len() as u64),
+            Err(e) => {
+                // Best effort: do not leave the temp file behind.
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// The `<name>.tmp` sibling used for atomic installs — same directory,
+/// so the final `rename` never crosses filesystems.
+fn sibling_tmp(path: &Path) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| "image".into());
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// A fully validated image: magic, version, and content hash were
+/// checked at [`open`] time, so field reads can only fail on structural
+/// bounds ([`ImageError::Truncated`] / [`ImageError::Malformed`]).
+///
+/// [`open`]: ImageReader::open
+pub struct ImageReader {
+    payload: Vec<u8>,
+    pos: usize,
+}
+
+impl ImageReader {
+    /// Read and validate the image at `path`: length, magic, version,
+    /// trailing hash — in that order, before any payload is exposed.
+    pub fn open(
+        path: &Path,
+        magic: [u8; 8],
+        version: u64,
+    ) -> Result<ImageReader, ImageError> {
+        let bytes = fs::read(path).map_err(ImageError::Io)?;
+        // Header (magic + version) + trailer (hash) minimum, word-aligned.
+        if bytes.len() < 24 || bytes.len() % 8 != 0 {
+            return Err(ImageError::Truncated);
+        }
+        if bytes[..8] != magic {
+            return Err(ImageError::BadMagic);
+        }
+        let found =
+            u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        if found != version {
+            return Err(ImageError::BadVersion { want: version, found });
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().unwrap());
+        if fnv1a_words(body) != want {
+            return Err(ImageError::HashMismatch);
+        }
+        Ok(ImageReader { payload: body[16..].to_vec(), pos: 0 })
+    }
+
+    /// Read the next unsigned word.
+    pub fn u64(&mut self) -> Result<u64, ImageError> {
+        let end = self.pos.checked_add(8).ok_or(ImageError::Truncated)?;
+        let bytes = self
+            .payload
+            .get(self.pos..end)
+            .ok_or(ImageError::Truncated)?;
+        self.pos = end;
+        Ok(u64::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    /// Read the next `len` f64 words (raw bit patterns).
+    pub fn f64s(&mut self, len: usize) -> Result<Vec<f64>, ImageError> {
+        let bytes = len.checked_mul(8).ok_or(ImageError::Malformed(
+            "f64 run length overflows",
+        ))?;
+        let end =
+            self.pos.checked_add(bytes).ok_or(ImageError::Truncated)?;
+        let chunk = self
+            .payload
+            .get(self.pos..end)
+            .ok_or(ImageError::Truncated)?;
+        self.pos = end;
+        Ok(chunk
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Whether every payload word has been consumed — loaders check this
+    /// so trailing garbage (a concatenated or padded file that happens to
+    /// re-hash) cannot pass silently.
+    pub fn exhausted(&self) -> bool {
+        self.pos == self.payload.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAGIC: [u8; 8] = *b"IMGTEST\0";
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("expmflow-image-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn round_trips_words_and_f64_bits() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("img.bin");
+        let vals = [1.5f64, -0.0, f64::MIN_POSITIVE, 3.25e300];
+        let mut w = ImageWriter::new(MAGIC, 3);
+        w.put_u64(42);
+        w.put_f64s(&vals);
+        let bytes = w.commit(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let mut r = ImageReader::open(&path, MAGIC, 3).unwrap();
+        assert_eq!(r.u64().unwrap(), 42);
+        let got = r.f64s(vals.len()).unwrap();
+        for (g, v) in got.iter().zip(&vals) {
+            assert_eq!(g.to_bits(), v.to_bits(), "bit-exact round trip");
+        }
+        assert!(r.exhausted());
+        assert!(matches!(r.u64(), Err(ImageError::Truncated)));
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_hash_and_truncation() {
+        let dir = tmpdir("reject");
+        let path = dir.join("img.bin");
+        let mut w = ImageWriter::new(MAGIC, 1);
+        w.put_u64(7);
+        w.commit(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Wrong magic expectation.
+        assert!(matches!(
+            ImageReader::open(&path, *b"OTHERMAG", 1),
+            Err(ImageError::BadMagic)
+        ));
+        // Version mismatch (reader expects 2).
+        assert!(matches!(
+            ImageReader::open(&path, MAGIC, 2),
+            Err(ImageError::BadVersion { want: 2, found: 1 })
+        ));
+        // Flipped payload bit: hash mismatch.
+        let mut corrupt = good.clone();
+        corrupt[17] ^= 0x40;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(matches!(
+            ImageReader::open(&path, MAGIC, 1),
+            Err(ImageError::HashMismatch)
+        ));
+        // Truncated to a non-aligned length, and below the minimum.
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(matches!(
+            ImageReader::open(&path, MAGIC, 1),
+            Err(ImageError::Truncated)
+        ));
+        std::fs::write(&path, &good[..16]).unwrap();
+        assert!(matches!(
+            ImageReader::open(&path, MAGIC, 1),
+            Err(ImageError::Truncated)
+        ));
+        // Missing file is an Io error, not a panic.
+        assert!(matches!(
+            ImageReader::open(&dir.join("absent.bin"), MAGIC, 1),
+            Err(ImageError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn commit_is_atomic_and_leaves_no_temp_file() {
+        let dir = tmpdir("atomic");
+        let path = dir.join("img.bin");
+        let mut w = ImageWriter::new(MAGIC, 1);
+        w.put_u64(1);
+        w.commit(&path).unwrap();
+        // Overwrite with new content: the old image stays valid until
+        // the rename lands, and no .tmp sibling survives.
+        let mut w = ImageWriter::new(MAGIC, 1);
+        w.put_u64(2);
+        w.commit(&path).unwrap();
+        let mut r = ImageReader::open(&path, MAGIC, 1).unwrap();
+        assert_eq!(r.u64().unwrap(), 2);
+        assert!(!sibling_tmp(&path).exists());
+    }
+}

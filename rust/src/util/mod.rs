@@ -1,9 +1,10 @@
 //! Zero-dependency utilities: PRNG, JSON, scoped thread-pool, statistics,
-//! CLI parsing. These exist because the offline vendor set ships neither
-//! rand, serde, rayon, criterion nor clap; each submodule documents the
-//! crate it replaces.
+//! CLI parsing, versioned state images. These exist because the offline
+//! vendor set ships neither rand, serde, rayon, criterion nor clap; each
+//! submodule documents the crate it replaces.
 
 pub mod cli;
+pub mod image;
 pub mod json;
 pub mod rng;
 pub mod stats;

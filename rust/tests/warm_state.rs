@@ -1,0 +1,277 @@
+//! Integration: durable warm state over the wire.
+//!
+//! Pins the PR's acceptance criteria end-to-end against real TCP
+//! daemons: a daemon restarted onto its shutdown snapshot — and a
+//! fresh daemon prewarmed from a flow checkpoint — must answer its
+//! *first* request window with warm-steady-state product counts and
+//! bitwise-identical values, while a corrupt snapshot starts cold
+//! (counted, never wrong). Also smokes the loadgen `--prewarm` double
+//! pass.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use expmflow::coordinator::server::{Client, Server};
+use expmflow::coordinator::{ExpmService, ServiceConfig};
+use expmflow::flow::{self, checkpoint, state_blocks};
+use expmflow::linalg::Matrix;
+use expmflow::loadgen::{self, LoadgenConfig};
+use expmflow::trace::TraceKind;
+use expmflow::util::json::{self, Json};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("expmflow-warmstate-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("create tmpdir");
+    d
+}
+
+fn start_server(cfg: ServiceConfig) -> (Server, Arc<ExpmService>) {
+    let svc = Arc::new(ExpmService::start(cfg));
+    let server = Server::spawn("127.0.0.1:0", svc.clone()).unwrap();
+    (server, svc)
+}
+
+/// Build one v2 frame submitting `mats` under (sastre, 1e-8) — the
+/// same contract the daemon's prewarm pass plans with.
+fn frame(id: usize, mats: &[Matrix]) -> String {
+    let mut orders = Vec::new();
+    let mut data = Vec::new();
+    let mut method = Vec::new();
+    let mut tol = Vec::new();
+    for a in mats {
+        orders.push(Json::Num(a.order() as f64));
+        data.push(Json::Arr(
+            a.data().iter().map(|&x| Json::Num(x)).collect(),
+        ));
+        method.push(Json::Str("sastre".into()));
+        tol.push(Json::Num(1e-8));
+    }
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("v".to_string(), Json::Num(2.0));
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("orders".to_string(), Json::Arr(orders));
+    obj.insert("matrices".to_string(), Json::Arr(data));
+    obj.insert("method".to_string(), Json::Arr(method));
+    obj.insert("tol".to_string(), Json::Arr(tol));
+    json::to_string(&Json::Obj(obj))
+}
+
+/// Round-trip one frame; return (total products charged, result values).
+fn submit(client: &mut Client, line: &str) -> (u64, Vec<Vec<f64>>) {
+    let reply = client.roundtrip(line).unwrap();
+    let v = json::parse(reply.trim()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    let products = v
+        .get("stats")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|s| {
+            s.get("products").and_then(Json::as_f64).unwrap() as u64
+        })
+        .sum();
+    let values = v
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|r| {
+            r.as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect()
+        })
+        .collect();
+    (products, values)
+}
+
+fn stats(client: &mut Client) -> Json {
+    let reply = client.roundtrip(r#"{"cmd": "stats"}"#).unwrap();
+    json::parse(reply.trim()).unwrap()
+}
+
+fn num(v: &Json, path: &[&str]) -> f64 {
+    let mut cur = v;
+    for k in path {
+        cur = cur
+            .get(k)
+            .unwrap_or_else(|| panic!("missing key {k} in {cur:?}"));
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("{path:?} not a number"))
+}
+
+#[test]
+fn restart_onto_snapshot_reproduces_warm_steady_state() {
+    let dir = tmpdir("restart");
+    let snap = dir.join("cache.pwc");
+    let mats: Vec<Matrix> = (0..3)
+        .map(|i| common::randm_norm(9, 1.5 + i as f64, 400 + i as u64))
+        .collect();
+    let line = frame(1, &mats);
+    let cfg = || ServiceConfig {
+        artifact_dir: None,
+        powers_cache: 64,
+        cache_snapshot: Some(snap.clone()),
+        ..Default::default()
+    };
+    // Run 1: cold then warm; shutdown writes the snapshot.
+    let (warm_products, warm_values) = {
+        let (mut server, svc) = start_server(cfg());
+        let mut client = Client::connect(server.addr).unwrap();
+        let (cold_products, cold_values) = submit(&mut client, &line);
+        let (warm_products, warm_values) = submit(&mut client, &line);
+        assert!(
+            warm_products < cold_products,
+            "second pass must be cheaper ({warm_products} vs \
+             {cold_products})"
+        );
+        assert_eq!(cold_values, warm_values, "hits are bitwise");
+        server.shutdown();
+        drop(server);
+        drop(svc); // ExpmService::drop writes the shutdown snapshot
+        (warm_products, warm_values)
+    };
+    assert!(snap.exists(), "shutdown snapshot written");
+    // Run 2: a fresh daemon on the same snapshot answers its FIRST
+    // request at warm-steady-state cost, bitwise.
+    let (mut server, svc) = start_server(cfg());
+    let mut client = Client::connect(server.addr).unwrap();
+    let st = stats(&mut client);
+    assert!(
+        num(&st, &["powers_cache", "snapshot_loaded"]) >= 3.0,
+        "{st:?}"
+    );
+    assert_eq!(num(&st, &["powers_cache", "snapshot_rejections"]), 0.0);
+    let (products, values) = submit(&mut client, &line);
+    assert_eq!(
+        products, warm_products,
+        "first post-restart request = warm steady state"
+    );
+    assert_eq!(values, warm_values, "bitwise across restart");
+    let st = stats(&mut client);
+    assert!(num(&st, &["powers_cache", "hits"]) >= 3.0, "{st:?}");
+    server.shutdown();
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prewarm_from_checkpoint_matches_warm_steady_state_over_tcp() {
+    let dir = tmpdir("prewarm");
+    let ckpt = dir.join("flow.ckpt");
+    let state = flow::init_params(8, 3, 77);
+    checkpoint::save(&state, &ckpt).unwrap();
+    let mats: Vec<Matrix> =
+        state_blocks(&state).iter().map(|b| b.a.clone()).collect();
+    let line = frame(1, &mats);
+    // Reference daemon: cold pass then warm pass.
+    let (mut ref_server, ref_svc) = start_server(ServiceConfig {
+        artifact_dir: None,
+        powers_cache: 64,
+        ..Default::default()
+    });
+    let mut client = Client::connect(ref_server.addr).unwrap();
+    let (_, cold_values) = submit(&mut client, &line);
+    let (warm_products, warm_values) = submit(&mut client, &line);
+    assert_eq!(cold_values, warm_values);
+    ref_server.shutdown();
+    drop(ref_server);
+    drop(ref_svc);
+    // Prewarmed daemon: its FIRST request matches the warm pass.
+    let (mut server, svc) = start_server(ServiceConfig {
+        artifact_dir: None,
+        powers_cache: 64,
+        prewarm_from: Some(ckpt),
+        ..Default::default()
+    });
+    let mut client = Client::connect(server.addr).unwrap();
+    let st = stats(&mut client);
+    assert!(
+        num(&st, &["powers_cache", "prewarmed"]) >= 6.0,
+        "3 blocks x (+A, -A): {st:?}"
+    );
+    let (products, values) = submit(&mut client, &line);
+    assert_eq!(
+        products, warm_products,
+        "first prewarmed request = warm steady state"
+    );
+    assert_eq!(values, warm_values, "bitwise vs the unprewarmed daemon");
+    server.shutdown();
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_snapshot_is_rejected_cold_over_tcp() {
+    let dir = tmpdir("corrupt");
+    let snap = dir.join("cache.pwc");
+    std::fs::write(&snap, b"junk that is not a state image").unwrap();
+    let (mut server, svc) = start_server(ServiceConfig {
+        artifact_dir: None,
+        powers_cache: 64,
+        cache_snapshot: Some(snap),
+        ..Default::default()
+    });
+    let mut client = Client::connect(server.addr).unwrap();
+    let st = stats(&mut client);
+    assert_eq!(num(&st, &["powers_cache", "snapshot_rejections"]), 1.0);
+    assert_eq!(num(&st, &["powers_cache", "snapshot_loaded"]), 0.0);
+    // Still serves correctly, just cold.
+    let a = common::randm_norm(8, 1.0, 5);
+    let (products, values) = submit(&mut client, &frame(1, &[a]));
+    assert!(products > 0);
+    assert!(values[0].iter().all(|x| x.is_finite()));
+    server.shutdown();
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn loadgen_prewarm_double_pass_reports_warm_savings() {
+    let (mut server, svc) = start_server(ServiceConfig {
+        artifact_dir: None,
+        powers_cache: 2048,
+        ..Default::default()
+    });
+    let cfg = LoadgenConfig {
+        kind: TraceKind::Cifar10,
+        rate: 120.0,
+        duration: Duration::from_millis(500),
+        conns: 2,
+        seed: 11,
+        max_matrices: 4,
+        deadline_fraction: 0.0,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run_prewarm(server.addr, &cfg);
+    let p = report.prewarm.as_ref().expect("prewarm stats");
+    assert!(report.ok > 0, "{}", report.render());
+    assert!(
+        p.warm_products <= p.cold_products,
+        "warm pass cannot charge more: {p:?}"
+    );
+    assert!(
+        p.warm_hits >= p.cold_hits,
+        "identical replayed workload hits the cache: {p:?}"
+    );
+    assert!(p.warm_hits > 0, "{p:?}");
+    // The BENCH document carries the additive prewarm section.
+    let doc = loadgen::bench_json(&report, 9);
+    assert_eq!(
+        doc.get("prewarm")
+            .and_then(|p| p.get("products_saved"))
+            .and_then(Json::as_f64),
+        Some(p.products_saved() as f64)
+    );
+    server.shutdown();
+    drop(server);
+    drop(svc);
+}

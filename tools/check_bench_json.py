@@ -4,8 +4,11 @@
 Validates that each given file is well-formed JSON carrying the SLO
 surface the loadgen harness promises (see rust/src/loadgen/): request
 counts that reconcile (sent == ok + shed + failed), ordered latency
-percentiles, and non-negative goodput. Exits non-zero listing every
-violation so a malformed bench artifact cannot land silently.
+percentiles, and non-negative goodput. Runs produced with `--prewarm`
+additionally carry a "prewarm" object (cold/warm pass counters plus
+products_saved), validated only when present so the schema stays
+additive. Exits non-zero listing every violation so a malformed bench
+artifact cannot land silently.
 
 Usage: tools/check_bench_json.py BENCH_6.json [more.json ...]
 """
@@ -31,6 +34,12 @@ NUMBER_FIELDS = [
     ("arrival", "max_lag_s"),
 ]
 COUNT_OBJS = {"requests"}
+
+# Optional "prewarm" section (emitted by `loadgen --prewarm` double-pass
+# runs): per-pass counters plus the headline savings figure. Absent on
+# plain runs — the schema stays additive.
+PREWARM_PASS_FIELDS = ("products", "hits", "p50_s", "mean_s")
+PREWARM_COUNT_FIELDS = {"products", "hits"}
 
 
 def check(path: Path):
@@ -89,7 +98,52 @@ def check(path: Path):
                 "latency percentiles out of order: "
                 f"p50={lat['p50']} p95={lat['p95']} p99={lat['p99']}"
             )
+
+    if "prewarm" in doc:
+        check_prewarm(doc["prewarm"], err)
     return errors
+
+
+def check_prewarm(pre, err):
+    """Validate the optional --prewarm section when present."""
+    if not isinstance(pre, dict):
+        err(f"prewarm must be an object, got {pre!r}")
+        return
+    passes = {}
+    for name in ("cold", "warm"):
+        holder = pre.get(name)
+        if not isinstance(holder, dict):
+            err(f"prewarm.{name} missing or not an object")
+            continue
+        passes[name] = holder
+        for field in PREWARM_PASS_FIELDS:
+            val = holder.get(field)
+            if not isinstance(val, (int, float)) or isinstance(val, bool):
+                err(f"prewarm.{name}.{field} must be a number, got {val!r}")
+            elif val < 0:
+                err(f"prewarm.{name}.{field} must be >= 0, got {val!r}")
+            elif field in PREWARM_COUNT_FIELDS and val != int(val):
+                err(
+                    f"prewarm.{name}.{field} must be an integer count, "
+                    f"got {val!r}"
+                )
+    saved = pre.get("products_saved")
+    if not isinstance(saved, (int, float)) or isinstance(saved, bool):
+        err(f"prewarm.products_saved must be a number, got {saved!r}")
+    elif saved < 0 or saved != int(saved):
+        err(
+            "prewarm.products_saved must be a non-negative integer, "
+            f"got {saved!r}"
+        )
+    if len(passes) == 2:
+        cold, warm = passes["cold"], passes["warm"]
+        if all(
+            isinstance(p.get("products"), (int, float)) for p in (cold, warm)
+        ) and warm["products"] > cold["products"]:
+            err(
+                "prewarm warm pass charged more products than cold: "
+                f"warm={warm['products']} > cold={cold['products']}"
+            )
 
 
 def main(argv):
