@@ -39,6 +39,9 @@ pub struct Item {
     pub slot: usize,
     /// When the item entered the batcher (drives `max_wait`).
     pub enqueued: Instant,
+    /// Whether planning reused a cached powers ladder — the admission
+    /// estimator accounts warm groups apart from cold ones.
+    pub warm: bool,
 }
 
 impl Item {
@@ -191,6 +194,7 @@ mod tests {
             collector: Collector::new(0, 1, tx),
             slot: 0,
             enqueued: Instant::now(),
+            warm: false,
         }
     }
 

@@ -91,6 +91,75 @@ impl Reservoir {
     }
 }
 
+/// EWMA smoothing factor for per-class group latencies: heavy enough
+/// that a class estimate tracks load shifts within a few groups, light
+/// enough that one straggler does not whipsaw admission.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// Bucket a matrix order for the admission estimator: orders up to 8
+/// share one bucket, everything else rounds up to the next power of two
+/// — the granularity the trace generators draw orders from, so one
+/// bucket maps onto one workload order class.
+pub fn n_bucket(n: usize) -> usize {
+    n.max(8).next_power_of_two()
+}
+
+/// The admission estimator's latency key: what the batcher would group
+/// a matrix under — order bucket and resolved method — plus whether the
+/// group's ladders were powers-cache hits. Warm groups are tracked
+/// apart so a snapshot-prewarmed restart's cheap replays do not drag
+/// the cold estimates down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GroupClass {
+    /// Matrix order bucket ([`n_bucket`]).
+    pub n_bucket: usize,
+    /// Resolved method name (the `Method::name` static string).
+    pub method: &'static str,
+    /// Whether every matrix in the group reused a cached powers ladder.
+    pub warm: bool,
+}
+
+/// Exponentially weighted moving average of one class's group latency.
+#[derive(Clone, Copy, Debug, Default)]
+struct Ewma {
+    value: f64,
+    count: u64,
+}
+
+impl Ewma {
+    fn push(&mut self, x: f64) {
+        if self.count == 0 {
+            self.value = x;
+        } else {
+            self.value += EWMA_ALPHA * (x - self.value);
+        }
+        self.count += 1;
+    }
+}
+
+/// Which fallback tier answered one class lookup.
+#[derive(Clone, Copy, PartialEq)]
+enum Tier {
+    Exact,
+    Class,
+    Global,
+}
+
+/// One admission-time delay estimate and how its per-class lookups
+/// resolved — surfaced through `cmd:stats` so operators can see whether
+/// the estimator runs on exact per-lane classes or coarse fallbacks.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DelayEstimate {
+    /// Estimated queueing delay for the job, in seconds.
+    pub delay_s: f64,
+    /// Class lookups answered by an exact (lane, class) EWMA.
+    pub exact: u64,
+    /// Class lookups answered by a cross-lane class/bucket mean.
+    pub class: u64,
+    /// Class lookups that fell through to the global mean latency.
+    pub global: u64,
+}
+
 #[derive(Default, Clone)]
 struct Inner {
     requests: u64,
@@ -119,6 +188,13 @@ struct Inner {
     membership_evicts: u64,
     register_rejected: u64,
     batcher_depth: u64,
+    class_ewma: BTreeMap<String, BTreeMap<GroupClass, Ewma>>,
+    lane_outstanding: BTreeMap<String, BTreeMap<GroupClass, u64>>,
+    class_route: BTreeMap<(usize, &'static str), String>,
+    estimator_estimates: u64,
+    estimator_exact: u64,
+    estimator_class: u64,
+    estimator_global: u64,
     degree_hist: BTreeMap<usize, u64>,
     scaling_hist: BTreeMap<u32, u64>,
     backend_hist: BTreeMap<&'static str, u64>,
@@ -266,6 +342,14 @@ pub struct Snapshot {
     /// `register`/`deregister` frames refused by the membership token
     /// gate.
     pub register_rejected: u64,
+    /// Admission delay estimates produced by the per-class estimator.
+    pub estimator_estimates: u64,
+    /// Estimator class lookups answered by an exact (lane, class) EWMA.
+    pub estimator_exact: u64,
+    /// Estimator class lookups answered by a cross-lane class mean.
+    pub estimator_class: u64,
+    /// Estimator class lookups that fell back to the global mean.
+    pub estimator_global: u64,
 }
 
 impl Metrics {
@@ -380,6 +464,61 @@ impl Metrics {
         g.lane_stats.entry(lane.to_string()).or_default().finished += 1;
     }
 
+    /// One classed group enqueued on the named scheduler lane: counts
+    /// the lane stat, registers the class as outstanding work ahead of
+    /// later arrivals, and learns the class → lane route the selector
+    /// and batcher actually took.
+    pub fn record_group_enqueued(&self, lane: &str, class: GroupClass) {
+        let mut g = self.inner.lock().unwrap();
+        g.lane_stats.entry(lane.to_string()).or_default().enqueued += 1;
+        *g.lane_outstanding
+            .entry(lane.to_string())
+            .or_default()
+            .entry(class)
+            .or_default() += 1;
+        let key = (class.n_bucket, class.method);
+        if g.class_route.get(&key).map(String::as_str) != Some(lane) {
+            g.class_route.insert(key, lane.to_string());
+        }
+    }
+
+    /// One classed execution attempt finished on the named lane
+    /// (delivered, degraded onward, cancelled, or failed): the class is
+    /// no longer outstanding work ahead of new arrivals. Decrements
+    /// saturate — a degraded group finishes on a lane that never saw
+    /// its enqueue under the legacy counters.
+    pub fn record_group_finished(&self, lane: &str, class: GroupClass) {
+        let mut g = self.inner.lock().unwrap();
+        g.lane_stats.entry(lane.to_string()).or_default().finished += 1;
+        if let Some(per) = g.lane_outstanding.get_mut(lane) {
+            if let Some(c) = per.get_mut(&class) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    per.remove(&class);
+                }
+            }
+        }
+    }
+
+    /// One classed group execution latency: feeds both the global
+    /// reservoir (percentiles, legacy mean) and the per-(lane, class)
+    /// EWMA the admission estimator reads.
+    pub fn record_group_latency(
+        &self,
+        lane: &str,
+        class: GroupClass,
+        d: Duration,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_s.push(d.as_secs_f64());
+        g.class_ewma
+            .entry(lane.to_string())
+            .or_default()
+            .entry(class)
+            .or_default()
+            .push(d.as_secs_f64());
+    }
+
     /// One batch group executed successfully on shard `addr` with the
     /// given round-trip latency.
     pub fn record_shard_ok(&self, addr: &str, latency: Duration) {
@@ -462,14 +601,88 @@ impl Metrics {
     /// zero delay, so admission always opens up for the first requests.
     pub fn queue_pressure(&self) -> (u64, f64) {
         let g = self.inner.lock().unwrap();
-        let undispatched = g.submitted.saturating_sub(g.requests);
-        let lanes: u64 = g
-            .lane_stats
-            .values()
-            .map(|st| st.queue_depth() + st.in_flight())
-            .sum();
-        let backlog = undispatched + g.batcher_depth + lanes;
-        (backlog, backlog as f64 * g.latencies_s.mean())
+        global_pressure(&g)
+    }
+
+    /// Admission-time delay estimate for a job whose matrices resolve
+    /// to the given `(order, method-name)` classes — the per-lane,
+    /// per-order-class replacement for backlog × global mean latency.
+    ///
+    /// Each class routes to the lane the scheduler last sent that class
+    /// to; the estimate is the slowest target lane's outstanding
+    /// classed work (each queued group costed at its own class
+    /// estimate) plus the job's own service time, with per-class
+    /// fallbacks — exact (lane, class) EWMA, then cross-lane class
+    /// means of decreasing specificity, then the global mean — when a
+    /// key is cold. A job none of whose classes has a learned route (a
+    /// cold service) degrades to exactly the legacy global estimate, so
+    /// first-request admission is unchanged. Jobs are costed cold
+    /// (`warm = false`): cache residency is unknown at admission, and
+    /// over-estimating a warm job is the safe direction.
+    pub fn estimate_delay(
+        &self,
+        classes: &[(usize, &'static str)],
+    ) -> DelayEstimate {
+        let mut g = self.inner.lock().unwrap();
+        g.estimator_estimates += 1;
+        let routed: Vec<(GroupClass, Option<String>)> = classes
+            .iter()
+            .map(|&(n, method)| {
+                let class = GroupClass {
+                    n_bucket: n_bucket(n),
+                    method,
+                    warm: false,
+                };
+                let lane = g
+                    .class_route
+                    .get(&(class.n_bucket, class.method))
+                    .cloned();
+                (class, lane)
+            })
+            .collect();
+        if routed.iter().all(|(_, lane)| lane.is_none()) {
+            let (_, delay_s) = global_pressure(&g);
+            g.estimator_global += classes.len() as u64;
+            return DelayEstimate {
+                delay_s,
+                global: classes.len() as u64,
+                ..DelayEstimate::default()
+            };
+        }
+        // Queued work ahead: the job completes when its slowest target
+        // lane does, so take the max over its lanes of the outstanding
+        // classed work already queued or in flight there.
+        let mut wait = 0.0f64;
+        for lane in routed.iter().filter_map(|(_, l)| l.as_deref()) {
+            let work: f64 = g
+                .lane_outstanding
+                .get(lane)
+                .map(|per| {
+                    per.iter()
+                        .map(|(c, &count)| {
+                            count as f64
+                                * service_estimate(&g, Some(lane), *c).0
+                        })
+                        .sum()
+                })
+                .unwrap_or(0.0);
+            wait = wait.max(work);
+        }
+        let mut est =
+            DelayEstimate { delay_s: wait, ..DelayEstimate::default() };
+        for (class, lane) in &routed {
+            let (v, tier) = service_estimate(&g, lane.as_deref(), *class);
+            est.delay_s += v;
+            match tier {
+                Tier::Exact => est.exact += 1,
+                Tier::Class => est.class += 1,
+                Tier::Global => est.global += 1,
+            }
+        }
+        g.estimator_exact += est.exact;
+        g.estimator_class += est.class;
+        g.estimator_global += est.global;
+        est
     }
 
     /// Point-in-time copy of every counter.
@@ -513,8 +726,75 @@ impl Metrics {
             membership_leaves: g.membership_leaves,
             membership_evicts: g.membership_evicts,
             register_rejected: g.register_rejected,
+            estimator_estimates: g.estimator_estimates,
+            estimator_exact: g.estimator_exact,
+            estimator_class: g.estimator_class,
+            estimator_global: g.estimator_global,
         }
     }
+}
+
+/// The legacy global estimate: total backlog × mean group latency.
+fn global_pressure(g: &Inner) -> (u64, f64) {
+    let undispatched = g.submitted.saturating_sub(g.requests);
+    let lanes: u64 = g
+        .lane_stats
+        .values()
+        .map(|st| st.queue_depth() + st.in_flight())
+        .sum();
+    let backlog = undispatched + g.batcher_depth + lanes;
+    (backlog, backlog as f64 * g.latencies_s.mean())
+}
+
+/// Mean EWMA value over every (lane, class) entry matching `keep`, or
+/// `None` when nothing matches.
+fn mean_over<F: Fn(&GroupClass) -> bool>(g: &Inner, keep: F) -> Option<f64> {
+    let (mut sum, mut n) = (0.0, 0u64);
+    for per in g.class_ewma.values() {
+        for (c, e) in per {
+            if keep(c) {
+                sum += e.value;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        None
+    } else {
+        Some(sum / n as f64)
+    }
+}
+
+/// Estimated service time for one class, with the fallback tier that
+/// answered: exact (lane, class) EWMA → cross-lane (bucket, method,
+/// warm) mean → (bucket, method) mean → bucket mean → global mean.
+fn service_estimate(
+    g: &Inner,
+    lane: Option<&str>,
+    class: GroupClass,
+) -> (f64, Tier) {
+    if let Some(lane) = lane {
+        if let Some(e) = g.class_ewma.get(lane).and_then(|m| m.get(&class))
+        {
+            return (e.value, Tier::Exact);
+        }
+    }
+    let full = |c: &GroupClass| {
+        c.n_bucket == class.n_bucket
+            && c.method == class.method
+            && c.warm == class.warm
+    };
+    let method = |c: &GroupClass| {
+        c.n_bucket == class.n_bucket && c.method == class.method
+    };
+    let bucket = |c: &GroupClass| c.n_bucket == class.n_bucket;
+    if let Some(v) = mean_over(g, full)
+        .or_else(|| mean_over(g, method))
+        .or_else(|| mean_over(g, bucket))
+    {
+        return (v, Tier::Class);
+    }
+    (g.latencies_s.mean(), Tier::Global)
 }
 
 impl Snapshot {
@@ -541,6 +821,13 @@ impl Snapshot {
         s.push_str(&format!(
             "admission: submitted={} admitted={} shed={}\n",
             self.submitted, self.admitted, self.shed
+        ));
+        s.push_str(&format!(
+            "estimator: estimates={} exact={} class={} global={}\n",
+            self.estimator_estimates,
+            self.estimator_exact,
+            self.estimator_class,
+            self.estimator_global
         ));
         s.push_str(&format!(
             "membership: joins={} leaves={} evicts={} rejected={}\n",
@@ -812,6 +1099,144 @@ mod tests {
         );
         assert!(out.contains("sibling_retries=2"), "{out}");
         assert!(out.contains("cancelled_expired=1"), "{out}");
+    }
+
+    fn class(n: usize, method: &'static str, warm: bool) -> GroupClass {
+        GroupClass { n_bucket: n_bucket(n), method, warm }
+    }
+
+    /// Route one `class` group through a full enqueue → start → finish
+    /// → latency cycle on `lane`, leaving queue depth and in-flight at
+    /// zero but the route and EWMA learned.
+    fn teach(m: &Metrics, lane: &str, c: GroupClass, d: Duration) {
+        m.record_group_enqueued(lane, c);
+        m.record_lane_started(lane);
+        m.record_group_finished(lane, c);
+        m.record_group_latency(lane, c, d);
+    }
+
+    #[test]
+    fn n_bucket_rounds_up_to_powers_of_two() {
+        assert_eq!(n_bucket(1), 8);
+        assert_eq!(n_bucket(8), 8);
+        assert_eq!(n_bucket(9), 16);
+        assert_eq!(n_bucket(16), 16);
+        assert_eq!(n_bucket(33), 64);
+    }
+
+    #[test]
+    fn cold_estimator_degrades_to_global_pressure() {
+        // No class has a learned route yet: the estimator must answer
+        // exactly what the legacy global heuristic would, so cold-start
+        // admission behaviour is unchanged.
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_submitted();
+        m.record_lane_enqueued("native");
+        m.record_latency(Duration::from_millis(50));
+        let legacy = m.queue_pressure().1;
+        assert!(legacy > 0.0);
+        let est = m.estimate_delay(&[(16, "expm_flow_sastre")]);
+        assert_eq!(est.delay_s, legacy);
+        assert_eq!((est.exact, est.class, est.global), (0, 0, 1));
+    }
+
+    #[test]
+    fn classed_estimator_prefers_exact_lane_class_ewma() {
+        let m = Metrics::new();
+        let big = class(64, "expm_flow_sastre", false);
+        teach(&m, "remote", big, Duration::from_millis(80));
+        // A cheap warm class elsewhere must not skew the big estimate.
+        let cheap = class(8, "expm_flow_sastre", true);
+        teach(&m, "native", cheap, Duration::from_millis(1));
+        let est = m.estimate_delay(&[(64, "expm_flow_sastre")]);
+        assert_eq!((est.exact, est.class, est.global), (1, 0, 0));
+        assert!((est.delay_s - 0.080).abs() < 1e-9, "{est:?}");
+    }
+
+    #[test]
+    fn estimator_counts_outstanding_work_ahead() {
+        let m = Metrics::new();
+        let big = class(64, "expm_flow_ps", false);
+        teach(&m, "remote", big, Duration::from_millis(40));
+        // Three groups of the class queued ahead on the same lane.
+        for _ in 0..3 {
+            m.record_group_enqueued("remote", big);
+        }
+        let est = m.estimate_delay(&[(64, "expm_flow_ps")]);
+        // 3 outstanding × 40ms ahead, plus the job's own 40ms.
+        assert!((est.delay_s - 0.160).abs() < 1e-9, "{est:?}");
+        // Draining the queue removes the wait component again.
+        for _ in 0..3 {
+            m.record_lane_started("remote");
+            m.record_group_finished("remote", big);
+        }
+        let est = m.estimate_delay(&[(64, "expm_flow_ps")]);
+        assert!((est.delay_s - 0.040).abs() < 1e-9, "{est:?}");
+    }
+
+    #[test]
+    fn estimator_falls_back_through_class_means() {
+        let m = Metrics::new();
+        let warm = class(32, "expm_flow_sastre", true);
+        teach(&m, "native", warm, Duration::from_millis(10));
+        // Same bucket+method, cold: no exact cold EWMA exists anywhere,
+        // so the (bucket, method) cross-lane mean answers.
+        let est = m.estimate_delay(&[(32, "expm_flow_sastre")]);
+        assert_eq!((est.exact, est.class, est.global), (0, 1, 0));
+        assert!((est.delay_s - 0.010).abs() < 1e-9, "{est:?}");
+        // A different method in the same bucket rides the bucket mean
+        // (its own route is unknown, but the sastre route anchors the
+        // job on a lane).
+        let est = m.estimate_delay(&[
+            (32, "expm_flow_sastre"),
+            (32, "expm_flow_ps"),
+        ]);
+        assert_eq!((est.exact, est.class, est.global), (0, 2, 0));
+        assert!((est.delay_s - 0.020).abs() < 1e-9, "{est:?}");
+    }
+
+    #[test]
+    fn warm_groups_do_not_skew_cold_estimates() {
+        // The PR-9 follow-up bug in miniature: a prewarmed restart
+        // replays many ~free warm groups; the global mean craters while
+        // the cold class estimate must hold.
+        let m = Metrics::new();
+        let cold = class(16, "expm_flow_sastre", false);
+        let warm = class(16, "expm_flow_sastre", true);
+        teach(&m, "native", cold, Duration::from_millis(60));
+        for _ in 0..10 {
+            teach(&m, "native", warm, Duration::from_millis(1));
+        }
+        let est = m.estimate_delay(&[(16, "expm_flow_sastre")]);
+        assert_eq!(est.exact, 1);
+        assert!((est.delay_s - 0.060).abs() < 1e-9, "{est:?}");
+        // The global mean is dragged toward the warm replays — exactly
+        // the skew the per-class estimate avoids.
+        assert!(m.snapshot().mean_latency_s < 0.01);
+    }
+
+    #[test]
+    fn estimator_counters_surface_in_snapshot_and_render() {
+        let m = Metrics::new();
+        teach(
+            &m,
+            "native",
+            class(16, "expm_flow_sastre", false),
+            Duration::from_millis(5),
+        );
+        let _ = m.estimate_delay(&[(16, "expm_flow_sastre")]);
+        let _ = m.estimate_delay(&[(64, "expm_flow_bbc")]);
+        let s = m.snapshot();
+        assert_eq!(s.estimator_estimates, 2);
+        assert_eq!(s.estimator_exact, 1);
+        // The bbc job had no learned route: its lookup went global.
+        assert_eq!(s.estimator_global, 1);
+        let out = s.render();
+        assert!(
+            out.contains("estimator: estimates=2 exact=1 class=0 global=1"),
+            "{out}"
+        );
     }
 
     #[test]

@@ -66,6 +66,35 @@ pub use remote::{RemoteBackend, RemoteConfig};
 pub use request::MatrixResult;
 pub use selector::Plan;
 
+/// Which queueing-delay model admission control consults
+/// ([`ExpmService::submit_admitted`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionEstimator {
+    /// Per-lane, per-order-class EWMA delay model
+    /// ([`Metrics::estimate_delay`](metrics::Metrics::estimate_delay)):
+    /// each spec in a job is routed through the same selector class it
+    /// would execute under, so a warm-hit flood never hides a slow
+    /// big-`n` class and one degraded lane never sheds cheap jobs that
+    /// would make their deadline elsewhere.
+    #[default]
+    PerClass,
+    /// The legacy backlog × global-mean-latency heuristic
+    /// ([`Metrics::queue_pressure`](metrics::Metrics::queue_pressure)),
+    /// kept selectable for A/B comparison on replayed traces.
+    GlobalMean,
+}
+
+impl AdmissionEstimator {
+    /// Wire-protocol name of the estimator (`cmd:stats`
+    /// `admission.estimator.kind`).
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionEstimator::PerClass => "per_class",
+            AdmissionEstimator::GlobalMean => "global_mean",
+        }
+    }
+}
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -106,13 +135,16 @@ pub struct ServiceConfig {
     pub lane_queue_cap: usize,
     /// Admission-control latency budget: `Some(budget)` makes
     /// [`ExpmService::submit_admitted`] shed a job — reject fast,
-    /// without queueing — when the estimated queueing delay
-    /// ([`Metrics::queue_pressure`](metrics::Metrics::queue_pressure))
-    /// exceeds the budget, or the job's own deadline when that is
-    /// tighter. `None` (the default) disables admission control;
-    /// `submit_admitted` then behaves exactly like
-    /// [`ExpmService::submit`].
+    /// without queueing — when the estimated queueing delay (per
+    /// [`ServiceConfig::admission_estimator`]) exceeds the budget, or
+    /// the job's own deadline when that is tighter. `None` (the
+    /// default) disables admission control; `submit_admitted` then
+    /// behaves exactly like [`ExpmService::submit`].
     pub latency_budget: Option<std::time::Duration>,
+    /// Which delay model [`ExpmService::submit_admitted`] consults.
+    /// Defaults to the per-lane/per-class estimator; the legacy
+    /// global-mean heuristic stays selectable for A/B replays.
+    pub admission_estimator: AdmissionEstimator,
     /// Admission-control depth bound: with a latency budget configured,
     /// a job is also shed while the backlog (undispatched jobs +
     /// batcher matrices + queued/in-flight lane groups) exceeds this
@@ -146,6 +178,7 @@ impl Default for ServiceConfig {
             prewarm_from: None,
             lane_queue_cap: 256,
             latency_budget: None,
+            admission_estimator: AdmissionEstimator::default(),
             admission_queue_cap: usize::MAX,
             elastic: false,
             member_token: None,
@@ -184,6 +217,7 @@ pub struct ExpmService {
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     latency_budget: Option<std::time::Duration>,
+    admission_estimator: AdmissionEstimator,
     admission_queue_cap: usize,
     /// The elastic control plane, filled by the dispatcher once the
     /// scheduler is running (empty on non-elastic services and again
@@ -210,6 +244,7 @@ impl ExpmService {
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
         let latency_budget = config.latency_budget;
+        let admission_estimator = config.admission_estimator;
         let admission_queue_cap = config.admission_queue_cap;
         let cache = if config.powers_cache > 0 {
             Some(Arc::new(PowersCache::new(config.powers_cache)))
@@ -271,6 +306,7 @@ impl ExpmService {
             metrics,
             next_id: AtomicU64::new(1),
             latency_budget,
+            admission_estimator,
             admission_queue_cap,
             control,
             cache,
@@ -307,6 +343,13 @@ impl ExpmService {
         Ok(Ticket::new(id, count, jrx))
     }
 
+    /// Which delay model this service's admission control runs
+    /// ([`ServiceConfig::admission_estimator`]); surfaced as
+    /// `admission.estimator.kind` in `cmd:stats`.
+    pub fn admission_estimator(&self) -> AdmissionEstimator {
+        self.admission_estimator
+    }
+
     /// Deadline-aware admission control in front of [`submit`]
     /// ([`ServiceConfig::latency_budget`]): while the backlog exceeds
     /// [`ServiceConfig::admission_queue_cap`], or the estimated queueing
@@ -316,14 +359,39 @@ impl ExpmService {
     /// time out in. Without a configured budget this is exactly
     /// [`submit`].
     ///
+    /// The delay estimate comes from the configured
+    /// [`ServiceConfig::admission_estimator`]: the default per-class
+    /// model routes each spec through the selector class it would
+    /// execute under and prices the queued work ahead of it on that
+    /// class's lane ([`Metrics::estimate_delay`]); the legacy
+    /// global-mean model multiplies the whole backlog by one mean
+    /// group latency ([`Metrics::queue_pressure`]).
+    ///
     /// [`submit`]: ExpmService::submit
+    /// [`Metrics::estimate_delay`]: metrics::Metrics::estimate_delay
+    /// [`Metrics::queue_pressure`]: metrics::Metrics::queue_pressure
     pub fn submit_admitted(
         &self,
         spec: JobSpec,
     ) -> Result<Ticket, SubmitError> {
         if let Some(budget) = self.latency_budget {
-            let (backlog, estimated_delay_s) =
+            let (backlog, global_delay_s) =
                 self.metrics.queue_pressure();
+            let estimated_delay_s = match self.admission_estimator {
+                AdmissionEstimator::GlobalMean => global_delay_s,
+                AdmissionEstimator::PerClass => {
+                    let classes: Vec<(usize, &'static str)> = spec
+                        .specs()
+                        .iter()
+                        .map(|s| {
+                            selector::admission_class(
+                                &s.matrix, s.method,
+                            )
+                        })
+                        .collect();
+                    self.metrics.estimate_delay(&classes).delay_s
+                }
+            };
             let limit = match spec.get_deadline() {
                 Some(d) if d < budget => d,
                 _ => budget,
@@ -594,7 +662,7 @@ fn dispatcher(
                     for (slot, spec) in
                         envelope.spec.into_specs().into_iter().enumerate()
                     {
-                        let (plan, powers) = match &cache {
+                        let (plan, powers, warm) = match &cache {
                             Some(cache) => {
                                 let (plan, powers, outcome) =
                                     selector::plan_spec_cached(
@@ -603,6 +671,8 @@ fn dispatcher(
                                         spec.tol,
                                         cache,
                                     );
+                                let warm =
+                                    matches!(outcome, CacheOutcome::Hit);
                                 match outcome {
                                     CacheOutcome::Hit => {
                                         metrics.record_powers_cache(true)
@@ -614,13 +684,16 @@ fn dispatcher(
                                     }
                                     CacheOutcome::Bypass => {}
                                 }
-                                (plan, powers)
+                                (plan, powers, warm)
                             }
-                            None => selector::plan_spec(
-                                &spec.matrix,
-                                spec.method,
-                                spec.tol,
-                            ),
+                            None => {
+                                let (plan, powers) = selector::plan_spec(
+                                    &spec.matrix,
+                                    spec.method,
+                                    spec.tol,
+                                );
+                                (plan, powers, false)
+                            }
                         };
                         let routed = registry.route(&plan.shape());
                         batcher.push(Item {
@@ -634,6 +707,7 @@ fn dispatcher(
                             collector: collector.clone(),
                             slot,
                             enqueued: Instant::now(),
+                            warm,
                         });
                     }
                     scheduler

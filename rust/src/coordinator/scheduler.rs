@@ -44,7 +44,7 @@ use crate::linalg::Matrix;
 
 use super::backend::{BackendRegistry, GroupShape};
 use super::batcher::{BatchPolicy, Item};
-use super::metrics::Metrics;
+use super::metrics::{n_bucket, GroupClass, Metrics};
 use super::request::{Collector, MatrixResult};
 
 /// Where one matrix's result goes: its job collector, slot, deadline.
@@ -66,6 +66,9 @@ pub struct SealedGroup {
     enqueued: Instant,
     seq: u64,
     attempt: u32,
+    /// Whether every item's planning reused a cached powers ladder —
+    /// the estimator accounts warm groups apart from cold ones.
+    warm: bool,
     mats: Vec<Matrix>,
     tols: Vec<f64>,
     powers: Vec<Option<Powers>>,
@@ -85,6 +88,7 @@ impl SealedGroup {
             .map(|i| i.enqueued)
             .min()
             .expect("non-empty group");
+        let warm = items.iter().all(|i| i.warm);
         let mut mats = Vec::with_capacity(items.len());
         let mut tols = Vec::with_capacity(items.len());
         let mut powers = Vec::with_capacity(items.len());
@@ -106,10 +110,21 @@ impl SealedGroup {
             enqueued,
             seq: 0,
             attempt: 0,
+            warm,
             mats,
             tols,
             powers,
             dests,
+        }
+    }
+
+    /// The admission estimator's latency class for this group: order
+    /// bucket, resolved method name, warmness.
+    pub fn class(&self) -> GroupClass {
+        GroupClass {
+            n_bucket: n_bucket(self.shape.n),
+            method: self.shape.method.name(),
+            warm: self.warm,
         }
     }
 
@@ -423,7 +438,8 @@ impl Shared {
                     q = lane.cv.wait(q).unwrap();
                 }
                 if !lane.closed.load(Ordering::SeqCst) {
-                    self.metrics.record_lane_enqueued(&lane.name);
+                    self.metrics
+                        .record_group_enqueued(&lane.name, group.class());
                     q.push(group);
                     lane.cv.notify_all();
                     return;
@@ -536,7 +552,7 @@ fn execute_group(lane: &Lane, mut group: SealedGroup, shared: &Shared) {
         // Every job lapsed while the group sat in the queue: the
         // whole group is cancelled before execution starts.
         shared.metrics.record_cancelled_expired();
-        shared.metrics.record_lane_finished(&lane.name);
+        shared.metrics.record_group_finished(&lane.name, group.class());
         shared.resolve();
         return;
     }
@@ -563,7 +579,7 @@ fn execute_group(lane: &Lane, mut group: SealedGroup, shared: &Shared) {
         },
     ))
     .unwrap_or_else(|_| Err("backend panicked".into()));
-    shared.metrics.record_lane_finished(&lane.name);
+    shared.metrics.record_group_finished(&lane.name, group.class());
     match outcome {
         Ok(results) => {
             let name = backend.name();
@@ -584,7 +600,11 @@ fn execute_group(lane: &Lane, mut group: SealedGroup, shared: &Shared) {
                     },
                 );
             }
-            shared.metrics.record_latency(started.elapsed());
+            shared.metrics.record_group_latency(
+                &lane.name,
+                group.class(),
+                started.elapsed(),
+            );
             shared.resolve();
         }
         Err(e) => {
@@ -708,6 +728,7 @@ mod tests {
                     collector: collector.clone(),
                     slot,
                     enqueued: Instant::now(),
+                    warm: false,
                 }
             })
             .collect();
@@ -945,6 +966,7 @@ mod tests {
                 collector: dead_collector.clone(),
                 slot,
                 enqueued: Instant::now(),
+                warm: false,
             });
         }
         items.push(Item {
@@ -958,6 +980,7 @@ mod tests {
             collector: live_collector.clone(),
             slot: 0,
             enqueued: Instant::now(),
+            warm: false,
         });
         scheduler.submit(SealedGroup::seal(items));
         let err = wait_done(&dead_rx).expect_err("expired job must fail");

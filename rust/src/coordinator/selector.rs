@@ -171,6 +171,25 @@ pub fn plan_spec_cached(
     }
 }
 
+/// The admission estimator's view of one spec: its order and the method
+/// name it would resolve to, mirroring the planners above *without*
+/// paying for selection — admission runs on every submit, planning only
+/// after. Auto requests on structured matrices resolve to Structured
+/// exactly like planning does; dense Auto keeps its own name (the race
+/// winner is unknowable before selection), which never matches a
+/// recorded class, so the estimator prices it at the order-bucket mean
+/// — the right coarse answer for a method mix.
+pub fn admission_class(
+    w: &Matrix,
+    method: Method,
+) -> (usize, &'static str) {
+    let resolved = match method {
+        Method::Auto if structured::triggers(w) => Method::Structured,
+        m => m,
+    };
+    (w.order(), resolved.name())
+}
+
 /// Plan a single matrix under tolerance `tol` with the default (Sastre)
 /// method — the v1 surface, kept for benches and tests.
 pub fn plan_matrix(w: &Matrix, tol: f64) -> Plan {
@@ -346,6 +365,41 @@ mod tests {
             // The warm ladder replays for free.
             assert_eq!(warm_powers.unwrap().products, 0);
         }
+    }
+
+    #[test]
+    fn admission_class_mirrors_planning_routes() {
+        let mut rng = Rng::new(44);
+        let dense = Matrix::from_fn(8, 8, |_, _| rng.normal() * 0.2);
+        // Direct methods keep their own name at admission time.
+        assert_eq!(
+            admission_class(&dense, Method::Sastre),
+            (8, Method::Sastre.name())
+        );
+        assert_eq!(
+            admission_class(&dense, Method::Pade),
+            (8, Method::Pade.name())
+        );
+        // Auto on a structured matrix resolves to Structured, exactly
+        // like plan_spec routes it.
+        let tri = Matrix::from_fn(6, 6, |i, j| {
+            if i >= 3 && j < 3 {
+                0.0
+            } else {
+                rng.normal() * 0.2
+            }
+        });
+        assert!(structured::triggers(&tri));
+        let (n, name) = admission_class(&tri, Method::Auto);
+        assert_eq!((n, name), (6, Method::Structured.name()));
+        let (p, _) = plan_spec(&tri, Method::Auto, 1e-8);
+        assert_eq!(name, p.method.name());
+        // Dense Auto keeps its own (never-recorded) name: pricing falls
+        // to the order-bucket mean rather than guessing a race winner.
+        assert_eq!(
+            admission_class(&dense, Method::Auto),
+            (8, Method::Auto.name())
+        );
     }
 
     #[test]

@@ -670,11 +670,30 @@ fn handle_line(
                     ("p99_s", Json::Num(snap.p99_latency_s)),
                 ]);
                 // Additive: admission-control counters (all zero unless
-                // the daemon runs with a latency budget).
+                // the daemon runs with a latency budget). The nested
+                // estimator object names the active delay model and how
+                // its per-class lookups resolved — exact (lane, class)
+                // EWMAs, cross-lane class means, or global fallbacks.
+                let estimator = obj(vec![
+                    (
+                        "kind",
+                        Json::Str(
+                            svc.admission_estimator().name().to_string(),
+                        ),
+                    ),
+                    (
+                        "estimates",
+                        Json::Num(snap.estimator_estimates as f64),
+                    ),
+                    ("exact", Json::Num(snap.estimator_exact as f64)),
+                    ("class", Json::Num(snap.estimator_class as f64)),
+                    ("global", Json::Num(snap.estimator_global as f64)),
+                ]);
                 let admission = obj(vec![
                     ("submitted", Json::Num(snap.submitted as f64)),
                     ("admitted", Json::Num(snap.admitted as f64)),
                     ("shed", Json::Num(snap.shed as f64)),
+                    ("estimator", estimator),
                 ]);
                 // Additive: the elastic fleet view — `null` on a
                 // non-elastic daemon, so clients can tell "membership
@@ -1273,6 +1292,11 @@ mod tests {
         assert!(reply.contains("\"p99_s\""), "{reply}");
         assert!(reply.contains("\"admission\""), "{reply}");
         assert!(reply.contains("\"shed\""), "{reply}");
+        // Additive estimator surface inside admission: the active delay
+        // model and its lookup-tier counters.
+        assert!(reply.contains("\"estimator\""), "{reply}");
+        assert!(reply.contains("\"kind\":\"per_class\""), "{reply}");
+        assert!(reply.contains("\"estimates\""), "{reply}");
         // Additive elastic surface: failover counters always present;
         // membership is null on this non-elastic daemon.
         assert!(reply.contains("\"sibling_retries\""), "{reply}");

@@ -532,7 +532,7 @@ mod tests {
         // Looser tolerance must never pick a larger (m, s).
         let a = scaled_randn(10, 4.0, 4);
         let mut tols = [1e-14, 1e-10, 1e-8, 1e-4, 1e-1];
-        tols.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        tols.sort_by(f64::total_cmp);
         let mut prev: Option<(usize, u32)> = None;
         for &t in tols.iter().rev() {
             let mut p = Powers::new(a.clone());

@@ -18,6 +18,12 @@
 //! persisted as `BENCH_<pr>.json` at the repo root (see
 //! [`write_bench`]) so runs can be diffed between PRs; the schema is
 //! checked by `tools/check_bench_json.py`.
+//!
+//! Any run's offered arrivals can be recorded with
+//! [`LoadgenConfig::capture`] as an `XPTRACE1` file
+//! ([`crate::trace::capture`]) and offered again verbatim with
+//! [`LoadSource::Replay`] — byte-deterministic, so two
+//! configurations can be A/B'd on identical traffic.
 
 use std::net::SocketAddr;
 use std::path::Path;
@@ -27,10 +33,33 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::server::Client;
 use crate::expm::Method;
+use crate::trace::capture::{self, CapturedMatrix, CapturedRequest};
 use crate::trace::{self, TraceKind};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use crate::util::stats;
+
+/// Where a run's arrivals come from.
+#[derive(Clone, Debug)]
+pub enum LoadSource {
+    /// Draw Poisson arrivals over a synthetic trace workload
+    /// (seed-deterministic).
+    Synthetic,
+    /// Replay a captured arrival trace (`--replay`): offsets, matrices,
+    /// contracts, and deadlines are reproduced verbatim, so two replays
+    /// of one capture offer byte-identical request sequences.
+    Replay(Arc<Vec<CapturedRequest>>),
+}
+
+impl LoadSource {
+    /// Label for reports and the BENCH workload section.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadSource::Synthetic => "synthetic",
+            LoadSource::Replay(_) => "replay",
+        }
+    }
+}
 
 /// Knobs for one load run.
 #[derive(Clone, Debug)]
@@ -55,6 +84,14 @@ pub struct LoadgenConfig {
     pub deadline_ms: f64,
     /// Fraction of requests carrying a deadline, in `[0, 1]`.
     pub deadline_fraction: f64,
+    /// Arrival source: synthetic Poisson draws (the default) or a
+    /// captured-trace replay. A replay ignores the synthetic knobs
+    /// above — the capture *is* the workload.
+    pub source: LoadSource,
+    /// Save the offered workload as an `XPTRACE1` capture at this path
+    /// ([`crate::trace::capture`]); works for synthetic runs (to make
+    /// them replayable) and replays (re-capture round-trips bitwise).
+    pub capture: Option<std::path::PathBuf>,
 }
 
 impl Default for LoadgenConfig {
@@ -70,6 +107,8 @@ impl Default for LoadgenConfig {
             tols: vec![1e-6, 1e-8, 1e-10],
             deadline_ms: 250.0,
             deadline_fraction: 0.25,
+            source: LoadSource::Synthetic,
+            capture: None,
         }
     }
 }
@@ -88,6 +127,8 @@ struct RequestSpec {
 pub struct LoadReport {
     /// Workload name (e.g. `CIFAR-10`).
     pub kind_name: &'static str,
+    /// Arrival source label: `"synthetic"` or `"replay"`.
+    pub source: &'static str,
     /// Offered rate in requests per second.
     pub rate: f64,
     /// Configured run duration in seconds.
@@ -189,9 +230,10 @@ impl LoadReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "loadgen: {} @ {:.0} req/s for {:.1}s over {} conns \
+            "loadgen: {} [{}] @ {:.0} req/s for {:.1}s over {} conns \
              (seed {})\n",
             self.kind_name,
+            self.source,
             self.rate,
             self.duration_s,
             self.conns,
@@ -291,29 +333,22 @@ impl Tally {
     }
 }
 
-/// Build a v2 request frame from trace matrices.
-fn request_line(
-    id: usize,
-    call: &trace::TraceCall,
-    take: usize,
-    methods: &[Method],
-    tols: &[f64],
-    deadline_ms: Option<f64>,
-    rng: &mut Rng,
-) -> (String, usize) {
-    let mats = &call.matrices[..take];
+/// Build the v2 request frame for one captured request. Deterministic:
+/// the frame serializer writes keys in `BTreeMap` order, so the same
+/// request always yields the same bytes.
+fn request_line(id: usize, req: &CapturedRequest) -> (String, usize) {
+    let take = req.matrices.len();
     let mut orders = Vec::with_capacity(take);
     let mut data = Vec::with_capacity(take);
     let mut method = Vec::with_capacity(take);
     let mut tol = Vec::with_capacity(take);
-    for a in mats {
-        orders.push(Json::Num(a.order() as f64));
+    for m in &req.matrices {
+        orders.push(Json::Num(m.matrix.order() as f64));
         data.push(Json::Arr(
-            a.data().iter().map(|&x| Json::Num(x)).collect(),
+            m.matrix.data().iter().map(|&x| Json::Num(x)).collect(),
         ));
-        let m = methods[rng.below(methods.len())];
-        method.push(Json::Str(m.name().into()));
-        tol.push(Json::Num(tols[rng.below(tols.len())]));
+        method.push(Json::Str(m.method.name().into()));
+        tol.push(Json::Num(m.tol));
     }
     let mut obj = std::collections::BTreeMap::new();
     obj.insert("v".into(), Json::Num(2.0));
@@ -322,14 +357,18 @@ fn request_line(
     obj.insert("matrices".into(), Json::Arr(data));
     obj.insert("method".into(), Json::Arr(method));
     obj.insert("tol".into(), Json::Arr(tol));
-    if let Some(ms) = deadline_ms {
+    if let Some(ms) = req.deadline_ms {
         obj.insert("deadline_ms".into(), Json::Num(ms));
     }
     (json::to_string(&Json::Obj(obj)), take)
 }
 
-/// Draw Poisson arrival offsets and pair each with a trace call.
-fn build_requests(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
+/// Draw the synthetic workload: Poisson arrival offsets, each paired
+/// with a trace call whose matrices get per-matrix `(method, tol)`
+/// contracts and an optional deadline. This *is* the capture format —
+/// `--capture` saves exactly this list, and a replay feeds the same
+/// shape back in.
+fn synth_workload(cfg: &LoadgenConfig) -> Vec<CapturedRequest> {
     let mut rng = Rng::new(cfg.seed);
     let dur = cfg.duration.as_secs_f64().max(0.0);
     let rate = cfg.rate.max(1e-9);
@@ -356,23 +395,47 @@ fn build_requests(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
     };
     let calls =
         trace::generate(cfg.kind, offsets.len().max(1), cfg.seed ^ 0x10AD);
-    let mut specs = Vec::with_capacity(offsets.len());
+    let mut reqs = Vec::with_capacity(offsets.len());
     for (i, &offset_s) in offsets.iter().enumerate() {
         let call = &calls[i % calls.len()];
         let take = call.matrices.len().min(cfg.max_matrices.max(1));
-        let deadline = if cfg.deadline_ms > 0.0
+        let deadline_ms = if cfg.deadline_ms > 0.0
             && rng.uniform() < cfg.deadline_fraction
         {
             Some(cfg.deadline_ms)
         } else {
             None
         };
-        let (line, matrices) = request_line(
-            i, call, take, &methods, &tols, deadline, &mut rng,
-        );
-        specs.push(RequestSpec { line, offset_s, matrices });
+        let matrices = call.matrices[..take]
+            .iter()
+            .map(|a| CapturedMatrix {
+                matrix: a.clone(),
+                method: methods[rng.below(methods.len())],
+                tol: tols[rng.below(tols.len())],
+            })
+            .collect();
+        reqs.push(CapturedRequest { offset_s, deadline_ms, matrices });
     }
-    specs
+    reqs
+}
+
+/// Encode a workload (synthetic or replayed) into wire-ready specs.
+fn to_specs(reqs: &[CapturedRequest]) -> Vec<RequestSpec> {
+    reqs.iter()
+        .enumerate()
+        .map(|(i, req)| {
+            let (line, matrices) = request_line(i, req);
+            RequestSpec { line, offset_s: req.offset_s, matrices }
+        })
+        .collect()
+}
+
+/// The run's workload per its configured source.
+fn workload(cfg: &LoadgenConfig) -> Arc<Vec<CapturedRequest>> {
+    match &cfg.source {
+        LoadSource::Synthetic => Arc::new(synth_workload(cfg)),
+        LoadSource::Replay(reqs) => Arc::clone(reqs),
+    }
 }
 
 /// One worker: claim specs off the shared cursor, pace each to its
@@ -433,7 +496,21 @@ fn worker_loop(
 /// Blocks for roughly `cfg.duration` plus the drain time of the
 /// final in-flight requests.
 pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
-    let specs = Arc::new(build_requests(cfg));
+    let reqs = workload(cfg);
+    if let Some(path) = &cfg.capture {
+        match capture::save(&reqs, path) {
+            Ok(bytes) => eprintln!(
+                "loadgen: captured {} requests ({bytes} bytes) to {}",
+                reqs.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!(
+                "loadgen: capture to {} failed ({e}); run continues",
+                path.display()
+            ),
+        }
+    }
+    let specs = Arc::new(to_specs(&reqs));
     let planned = specs.len();
     let cursor = Arc::new(AtomicUsize::new(0));
     let start = Instant::now();
@@ -455,6 +532,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
     let server_stats = fetch_stats(addr);
     LoadReport {
         kind_name: cfg.kind.name(),
+        source: cfg.source.name(),
         rate: cfg.rate,
         duration_s: cfg.duration.as_secs_f64(),
         conns: cfg.conns.max(1),
@@ -502,10 +580,11 @@ fn stat_num(stats: Option<&Json>, path: &[&str]) -> f64 {
 /// deltas — products charged and cache hits per pass, plus each pass's
 /// client-side latency summary.
 ///
-/// The two passes share the config verbatim; [`build_requests`] is
-/// seed-deterministic, so pass 2 offers bitwise-identical matrices and
-/// its first window measures exactly the warm-start behaviour a daemon
-/// restarted onto a snapshot (or prewarmed from a checkpoint) shows.
+/// The two passes share the config verbatim; the workload is
+/// seed-deterministic (and a replay is verbatim), so pass 2 offers
+/// bitwise-identical matrices and its first window measures exactly
+/// the warm-start behaviour a daemon restarted onto a snapshot (or
+/// prewarmed from a checkpoint) shows.
 pub fn run_prewarm(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
     let before = fetch_stats(addr);
     let cold = run(addr, cfg);
@@ -536,7 +615,8 @@ pub fn run_prewarm(addr: SocketAddr, cfg: &LoadgenConfig) -> LoadReport {
 /// The `BENCH_<pr>.json` document for a run.
 ///
 /// Schema (checked by `tools/check_bench_json.py`):
-/// `schema`, `pr`, `workload{..}`, `requests{sent,ok,shed,failed}`,
+/// `schema`, `pr`, `workload{..}` (including the additive `source`
+/// label), `requests{sent,ok,shed,failed}`,
 /// `latency_s{p50,p95,p99,mean,max}`, `goodput{requests_per_s,
 /// matrices_per_s}`, `arrival{max_lag_s}`, `server_stats`. A
 /// [`run_prewarm`] report additionally carries `prewarm{cold{..},
@@ -553,6 +633,7 @@ pub fn bench_json(report: &LoadReport, pr: usize) -> Json {
     }
     let workload = obj(vec![
         ("kind", Json::Str(report.kind_name.into())),
+        ("source", Json::Str(report.source.into())),
         ("rate_rps", Json::Num(report.rate)),
         ("duration_s", Json::Num(report.duration_s)),
         ("conns", Json::Num(report.conns as f64)),
@@ -648,7 +729,7 @@ mod tests {
             duration: Duration::from_millis(500),
             ..LoadgenConfig::default()
         };
-        let specs = build_requests(&cfg);
+        let specs = to_specs(&synth_workload(&cfg));
         assert!(!specs.is_empty());
         let mut prev = 0.0;
         for s in &specs {
@@ -658,7 +739,7 @@ mod tests {
             prev = s.offset_s;
         }
         // Deterministic for a fixed seed.
-        let again = build_requests(&cfg);
+        let again = to_specs(&synth_workload(&cfg));
         assert_eq!(specs.len(), again.len());
         assert_eq!(specs[0].line, again[0].line);
     }
@@ -672,7 +753,7 @@ mod tests {
             deadline_fraction: 1.0,
             ..LoadgenConfig::default()
         };
-        let specs = build_requests(&cfg);
+        let specs = to_specs(&synth_workload(&cfg));
         assert!(!specs.is_empty());
         for s in &specs {
             let v = json::parse(&s.line).unwrap();
@@ -695,6 +776,54 @@ mod tests {
                 Some(250.0)
             );
         }
+    }
+
+    #[test]
+    fn capture_replay_reproduces_identical_request_sequences() {
+        // The replay-determinism acceptance pin, client-side: a
+        // synthetic workload captured to disk and loaded twice encodes
+        // to byte-identical wire frames, at the same offsets, both
+        // times — and matches the frames the original run would send.
+        let dir = std::env::temp_dir().join(format!(
+            "expmflow-loadgen-replay-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.xpt");
+        let cfg = LoadgenConfig {
+            rate: 300.0,
+            duration: Duration::from_millis(300),
+            deadline_fraction: 0.5,
+            ..LoadgenConfig::default()
+        };
+        let original = synth_workload(&cfg);
+        capture::save(&original, &path).unwrap();
+        let replay_a = capture::load(&path).unwrap();
+        let replay_b = capture::load(&path).unwrap();
+        let (s0, sa, sb) = (
+            to_specs(&original),
+            to_specs(&replay_a),
+            to_specs(&replay_b),
+        );
+        assert!(!s0.is_empty());
+        assert_eq!(s0.len(), sa.len());
+        for ((o, a), b) in s0.iter().zip(&sa).zip(&sb) {
+            assert_eq!(o.line, a.line, "replay reproduces the frame");
+            assert_eq!(a.line, b.line, "two replays agree");
+            assert_eq!(o.offset_s, a.offset_s);
+            assert_eq!(a.offset_s, b.offset_s);
+        }
+        // A replay-sourced config round-trips through the workload
+        // selector unchanged (no re-draw, no re-ordering).
+        let replay_cfg = LoadgenConfig {
+            source: LoadSource::Replay(Arc::new(replay_a)),
+            ..LoadgenConfig::default()
+        };
+        assert_eq!(replay_cfg.source.name(), "replay");
+        let via_source = workload(&replay_cfg);
+        assert_eq!(to_specs(&via_source).len(), s0.len());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -725,6 +854,7 @@ mod tests {
     fn bench_json_has_required_schema() {
         let report = LoadReport {
             kind_name: "CIFAR-10",
+            source: "synthetic",
             rate: 50.0,
             duration_s: 2.0,
             conns: 4,
@@ -768,6 +898,14 @@ mod tests {
             lat.get("p50").and_then(Json::as_f64),
             Some(0.020)
         );
+        // Additive arrival-source label in the workload section.
+        assert_eq!(
+            doc.get("workload")
+                .unwrap()
+                .get("source")
+                .and_then(Json::as_str),
+            Some("synthetic")
+        );
         // Round-trips through the serializer.
         let text = json::to_string(&doc);
         assert!(json::parse(&text).is_ok());
@@ -779,6 +917,7 @@ mod tests {
     fn prewarm_section_is_additive_and_consistent() {
         let mut report = LoadReport {
             kind_name: "CIFAR-10",
+            source: "synthetic",
             rate: 50.0,
             duration_s: 2.0,
             conns: 4,

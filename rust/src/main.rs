@@ -45,7 +45,12 @@
 //!                          counts, persisted as `BENCH_<pr>.json`;
 //!                          `--prewarm` offers the identical workload
 //!                          twice and reports warm-vs-cold first-window
-//!                          latency and product counts
+//!                          latency and product counts;
+//!                          `--capture PATH` saves the offered arrivals
+//!                          as an XPTRACE1 trace and `--replay PATH`
+//!                          reproduces a captured trace verbatim
+//!                          (deterministic arrival source; the
+//!                          synthetic workload knobs are then ignored)
 //!   checkpoint --out P     write a deterministic flow checkpoint
 //!                          (XPFLOWC1 state image) for `--prewarm-from`
 //!   info                   artifact manifest + platform report
@@ -626,10 +631,13 @@ fn deregister_worker_with(
 /// control on (`--latency-budget`, default 250 ms) so a single command
 /// exercises the full shed path; `--addr HOST:PORT` targets a running
 /// daemon instead. The run is persisted as `BENCH_<pr>.json` at the
-/// current directory (override with `--out`).
+/// current directory (override with `--out`). `--capture PATH`
+/// records the offered arrivals as an `XPTRACE1` file; `--replay
+/// PATH` offers a previously captured trace instead of drawing a
+/// synthetic one.
 fn cmd_loadgen(args: &Args) -> i32 {
     use expmflow::coordinator::server::Server;
-    use expmflow::loadgen::{self, LoadgenConfig};
+    use expmflow::loadgen::{self, LoadSource, LoadgenConfig};
     let kind = match args.get_str("dataset", "cifar10") {
         "cifar10" => TraceKind::Cifar10,
         "imagenet32" => TraceKind::ImageNet32,
@@ -645,6 +653,24 @@ fn cmd_loadgen(args: &Args) -> i32 {
     } else {
         2.0
     };
+    let source = match args.get_str("replay", "") {
+        "" => LoadSource::Synthetic,
+        path => {
+            let path = std::path::Path::new(path);
+            match expmflow::trace::capture::load(path) {
+                Ok(reqs) => {
+                    LoadSource::Replay(std::sync::Arc::new(reqs))
+                }
+                Err(e) => {
+                    eprintln!(
+                        "cannot replay {}: {e}",
+                        path.display()
+                    );
+                    return 1;
+                }
+            }
+        }
+    };
     let cfg = LoadgenConfig {
         kind,
         rate: args.get_f64("rate", 50.0).max(1e-3),
@@ -656,9 +682,14 @@ fn cmd_loadgen(args: &Args) -> i32 {
         deadline_fraction: args
             .get_f64("deadline-fraction", 0.25)
             .clamp(0.0, 1.0),
+        source,
+        capture: match args.get_str("capture", "") {
+            "" => None,
+            path => Some(path.into()),
+        },
         ..LoadgenConfig::default()
     };
-    let pr = args.get_usize("pr", 9);
+    let pr = args.get_usize("pr", 10);
     let prewarm = args.has("prewarm");
     let out = match args.get_str("out", "") {
         "" => format!("BENCH_{pr}.json"),

@@ -1,0 +1,292 @@
+//! Captured arrival traces (`XPTRACE1`): the loadgen's `--capture`
+//! output and `--replay` input.
+//!
+//! A capture records exactly what an arrival source offered a daemon —
+//! per request: the scheduled arrival offset, the optional deadline,
+//! and every matrix with its `(method, tol)` contract — as a versioned
+//! [`crate::util::image`] file. Matrix entries are raw `f64` bit
+//! patterns, so a round-trip through disk is bitwise lossless and two
+//! replays of one capture offer byte-identical request sequences; that
+//! determinism is what lets BENCH artifacts (and the admission
+//! estimator A/B in `rust/tests/admission_estimator.rs`) compare two
+//! configurations on *the same* traffic instead of two samples of a
+//! synthetic distribution.
+//!
+//! Layout after the image header (all words little-endian):
+//! request count, then per request: `offset_s` (f64), `deadline_ms`
+//! (f64, `0.0` = no deadline), matrix count, then per matrix: order,
+//! method tag, `tol` (f64), and `n*n` row-major entries. The image
+//! trailer hash rejects truncated or corrupted files at open.
+
+use std::path::Path;
+
+use crate::expm::Method;
+use crate::linalg::Matrix;
+use crate::util::image::{ImageError, ImageReader, ImageWriter};
+
+/// Magic tag of a captured arrival trace.
+pub const MAGIC: [u8; 8] = *b"XPTRACE1";
+/// Current format version.
+pub const VERSION: u64 = 1;
+
+/// One matrix of a captured request, with its per-matrix contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapturedMatrix {
+    /// The matrix offered on the wire.
+    pub matrix: Matrix,
+    /// Requested method (as named in the frame, before resolution).
+    pub method: Method,
+    /// Requested tolerance.
+    pub tol: f64,
+}
+
+/// One captured request: when it was scheduled and what it carried.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapturedRequest {
+    /// Scheduled send offset from the start of the run, seconds.
+    pub offset_s: f64,
+    /// Deadline attached to the request, if any, in milliseconds.
+    pub deadline_ms: Option<f64>,
+    /// The request's matrices with their `(method, tol)` contracts.
+    pub matrices: Vec<CapturedMatrix>,
+}
+
+/// Stable on-disk tag for each method. Explicit (not `as u64`) so a
+/// reordered enum can never silently change the format.
+fn method_tag(m: Method) -> u64 {
+    match m {
+        Method::Sastre => 0,
+        Method::PatersonStockmeyer => 1,
+        Method::Baseline => 2,
+        Method::Pade => 3,
+        Method::Bbc => 4,
+        Method::TolAdaptive => 5,
+        Method::Structured => 6,
+        Method::Auto => 7,
+    }
+}
+
+fn method_from_tag(tag: u64) -> Option<Method> {
+    Some(match tag {
+        0 => Method::Sastre,
+        1 => Method::PatersonStockmeyer,
+        2 => Method::Baseline,
+        3 => Method::Pade,
+        4 => Method::Bbc,
+        5 => Method::TolAdaptive,
+        6 => Method::Structured,
+        7 => Method::Auto,
+        _ => return None,
+    })
+}
+
+/// Save a captured trace to `path` (atomic tmp+rename, like every
+/// image writer). Returns the bytes written. Saving the same requests
+/// always produces byte-identical files — the encoder has no
+/// timestamps, ordering choices, or platform-dependent formatting.
+pub fn save(
+    requests: &[CapturedRequest],
+    path: &Path,
+) -> std::io::Result<u64> {
+    let mut w = ImageWriter::new(MAGIC, VERSION);
+    w.put_u64(requests.len() as u64);
+    for req in requests {
+        w.put_f64s(&[req.offset_s, req.deadline_ms.unwrap_or(0.0)]);
+        w.put_u64(req.matrices.len() as u64);
+        for m in &req.matrices {
+            w.put_u64(m.matrix.order() as u64);
+            w.put_u64(method_tag(m.method));
+            w.put_f64s(&[m.tol]);
+            w.put_f64s(m.matrix.data());
+        }
+    }
+    w.commit(path)
+}
+
+/// Cap on one matrix's order at load time: generous for every real
+/// workload, small enough that a corrupt length word cannot drive a
+/// multi-gigabyte allocation before the payload bound catches it.
+const MAX_ORDER: u64 = 1 << 16;
+
+/// Load a captured trace, validating magic, version, hash, bounds, and
+/// that the payload is fully consumed.
+pub fn load(path: &Path) -> Result<Vec<CapturedRequest>, ImageError> {
+    let mut r = ImageReader::open(path, MAGIC, VERSION)?;
+    let count = r.u64()?;
+    let mut out = Vec::new();
+    for _ in 0..count {
+        let head = r.f64s(2)?;
+        let (offset_s, deadline) = (head[0], head[1]);
+        if !offset_s.is_finite() || offset_s < 0.0 {
+            return Err(ImageError::Malformed(
+                "capture offset not finite and non-negative",
+            ));
+        }
+        let deadline_ms = if deadline == 0.0 {
+            None
+        } else if deadline.is_finite() && deadline > 0.0 {
+            Some(deadline)
+        } else {
+            return Err(ImageError::Malformed(
+                "capture deadline not finite and positive",
+            ));
+        };
+        let mats = r.u64()?;
+        let mut matrices = Vec::new();
+        for _ in 0..mats {
+            let n = r.u64()?;
+            if n == 0 || n > MAX_ORDER {
+                return Err(ImageError::Malformed(
+                    "capture matrix order out of bounds",
+                ));
+            }
+            let n = n as usize;
+            let method = method_from_tag(r.u64()?).ok_or(
+                ImageError::Malformed("unknown capture method tag"),
+            )?;
+            let tol = r.f64s(1)?[0];
+            if !tol.is_finite() || tol <= 0.0 {
+                return Err(ImageError::Malformed(
+                    "capture tolerance not finite and positive",
+                ));
+            }
+            let data = r.f64s(n * n)?;
+            matrices.push(CapturedMatrix {
+                matrix: Matrix::from_vec(n, n, data),
+                method,
+                tol,
+            });
+        }
+        out.push(CapturedRequest { offset_s, deadline_ms, matrices });
+    }
+    if !r.exhausted() {
+        return Err(ImageError::Malformed(
+            "trailing words after the last captured request",
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "expmflow-capture-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample(seed: u64) -> Vec<CapturedRequest> {
+        let mut rng = Rng::new(seed);
+        let methods = [Method::Sastre, Method::Auto, Method::Pade];
+        (0..5)
+            .map(|i| CapturedRequest {
+                offset_s: i as f64 * 0.01,
+                deadline_ms: if i % 2 == 0 { Some(250.0) } else { None },
+                matrices: (0..=(i % 3))
+                    .map(|j| CapturedMatrix {
+                        matrix: Matrix::from_fn(4 + j, 4 + j, |_, _| {
+                            rng.normal()
+                        }),
+                        method: methods[(i + j) % methods.len()],
+                        tol: 10f64.powi(-(6 + (i % 3) as i32)),
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("trace.xpt");
+        let reqs = sample(9);
+        save(&reqs, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, reqs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repeated_saves_are_byte_identical() {
+        let dir = tmpdir("determinism");
+        let (a, b) = (dir.join("a.xpt"), dir.join("b.xpt"));
+        let reqs = sample(11);
+        save(&reqs, &a).unwrap();
+        save(&reqs, &b).unwrap();
+        assert_eq!(
+            std::fs::read(&a).unwrap(),
+            std::fs::read(&b).unwrap(),
+            "same requests must encode to identical bytes"
+        );
+        // And a load→save round trip is byte-stable too.
+        let c = dir.join("c.xpt");
+        save(&load(&a).unwrap(), &c).unwrap();
+        assert_eq!(
+            std::fs::read(&a).unwrap(),
+            std::fs::read(&c).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_method_survives_the_tag_round_trip() {
+        for m in [
+            Method::Sastre,
+            Method::PatersonStockmeyer,
+            Method::Baseline,
+            Method::Pade,
+            Method::Bbc,
+            Method::TolAdaptive,
+            Method::Structured,
+            Method::Auto,
+        ] {
+            assert_eq!(method_from_tag(method_tag(m)), Some(m));
+        }
+        assert_eq!(method_from_tag(8), None);
+    }
+
+    #[test]
+    fn corrupt_and_mismatched_files_are_rejected() {
+        let dir = tmpdir("reject");
+        let path = dir.join("trace.xpt");
+        save(&sample(3), &path).unwrap();
+        // Flip one payload byte: the trailer hash must catch it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            load(&path),
+            Err(ImageError::HashMismatch)
+        ));
+        // Not an image at all.
+        std::fs::write(&path, b"plainly not a capture").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_deadline_loads_as_none() {
+        let dir = tmpdir("deadline");
+        let path = dir.join("trace.xpt");
+        let reqs = vec![CapturedRequest {
+            offset_s: 0.0,
+            deadline_ms: None,
+            matrices: vec![CapturedMatrix {
+                matrix: Matrix::identity(3),
+                method: Method::Sastre,
+                tol: 1e-8,
+            }],
+        }];
+        save(&reqs, &path).unwrap();
+        assert_eq!(load(&path).unwrap()[0].deadline_ms, None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,7 @@
 //! only observe (n, batch, norms), so matching those distributions
 //! reproduces the degree/scaling/product/time distributions (DESIGN.md §3).
 
+pub mod capture;
 pub mod replay;
 
 use crate::linalg::{norm1, Matrix};

@@ -5,10 +5,18 @@
 use std::time::Instant;
 
 /// Percentile by linear interpolation on the sorted copy (MATLAB-style).
+///
+/// Non-finite samples (NaN from a failed timer delta, ±inf from a
+/// degenerate ratio) are dropped before ranking rather than poisoning
+/// the sort; an all-non-finite input returns NaN instead of panicking.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> =
+        xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (v.len() as f64 - 1.0);
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -179,5 +187,16 @@ mod tests {
         assert_eq!(median(&xs), 5.0);
         assert_eq!(min(&xs), 1.0);
         assert_eq!(max(&xs), 9.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_infinity() {
+        // A NaN sample used to panic the partial_cmp comparator; now
+        // non-finite samples are dropped before ranking.
+        let xs = [2.0, f64::NAN, 1.0, f64::INFINITY, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert_eq!(median(&xs), 2.0);
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 }

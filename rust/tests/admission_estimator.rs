@@ -1,0 +1,285 @@
+//! Acceptance: the per-lane/per-class admission estimator against the
+//! legacy global-mean heuristic, A/B'd on one replayed mixed
+//! warm/cold trace (PR 10's tentpole).
+//!
+//! The global heuristic prices every queued job at one mean group
+//! latency, so a mixed workload mis-sheds in both directions: a slow
+//! big-`n` class drags the mean up and sheds cheap jobs that would
+//! make their deadline easily, while a warm-hit flood drags the mean
+//! down and over-admits cold big jobs into queues they can only time
+//! out in. Both directions are pinned here with deterministic classed
+//! state seeded through the public metrics seams — the same calls the
+//! scheduler makes — and a captured `XPTRACE1` trace offered to two
+//! services that differ only in
+//! [`ServiceConfig::admission_estimator`].
+
+use expmflow::coordinator::metrics::{n_bucket, GroupClass};
+use expmflow::coordinator::{
+    AdmissionEstimator, ExpmService, JobSpec, ServiceConfig,
+    SubmitError,
+};
+use expmflow::expm::Method;
+use expmflow::linalg::Matrix;
+use expmflow::trace::capture::{
+    self, CapturedMatrix, CapturedRequest,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Admission budget shared by every service in this suite.
+const BUDGET: Duration = Duration::from_millis(200);
+
+fn service(estimator: AdmissionEstimator) -> Arc<ExpmService> {
+    Arc::new(ExpmService::start(ServiceConfig {
+        artifact_dir: None,
+        latency_budget: Some(BUDGET),
+        admission_estimator: estimator,
+        ..Default::default()
+    }))
+}
+
+/// A well-conditioned deterministic test matrix of order `n` (norm
+/// well under 1, so every method resolves it in a few products).
+fn matrix(n: usize, seed: u64) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            0.4
+        } else {
+            let h = (i * 31 + j * 7 + seed as usize) % 13;
+            (h as f64 - 6.0) * 1e-3
+        }
+    })
+}
+
+fn class(n: usize, warm: bool) -> GroupClass {
+    GroupClass {
+        n_bucket: n_bucket(n),
+        method: Method::Sastre.name(),
+        warm,
+    }
+}
+
+/// Teach one class latency through the exact seams the scheduler
+/// drives: enqueue, start, finish, latency. The triplet nets zero
+/// queue depth, so only the route, the EWMA, and the global latency
+/// reservoir learn from it.
+fn teach(
+    svc: &ExpmService,
+    lane: &str,
+    c: GroupClass,
+    secs: f64,
+    times: usize,
+) {
+    for _ in 0..times {
+        svc.metrics.record_group_enqueued(lane, c);
+        svc.metrics.record_lane_started(lane);
+        svc.metrics.record_group_finished(lane, c);
+        svc.metrics
+            .record_group_latency(lane, c, Duration::from_secs_f64(secs));
+    }
+}
+
+/// Park `count` groups of `c` on `lane`'s queue (enqueued, never
+/// finished): the outstanding work a newly admitted job would wait
+/// behind.
+fn park(svc: &ExpmService, lane: &str, c: GroupClass, count: usize) {
+    for _ in 0..count {
+        svc.metrics.record_group_enqueued(lane, c);
+    }
+}
+
+/// A mixed trace: `cheap` small-order requests interleaved with `big`
+/// large-order ones, every matrix under the Sastre contract, half the
+/// requests carrying a (generous) deadline.
+fn mixed_trace(cheap: usize, big: usize) -> Vec<CapturedRequest> {
+    let mut reqs = Vec::new();
+    for i in 0..cheap.max(big) {
+        for (order, want) in [(8usize, cheap), (64usize, big)] {
+            if i < want {
+                reqs.push(CapturedRequest {
+                    offset_s: reqs.len() as f64 * 0.005,
+                    deadline_ms: if reqs.len() % 2 == 0 {
+                        Some(5_000.0)
+                    } else {
+                        None
+                    },
+                    matrices: vec![CapturedMatrix {
+                        matrix: matrix(order, i as u64),
+                        method: Method::Sastre,
+                        tol: 1e-8,
+                    }],
+                });
+            }
+        }
+    }
+    reqs
+}
+
+fn job_from(req: &CapturedRequest) -> JobSpec {
+    let mut job = JobSpec::new();
+    for m in &req.matrices {
+        job = job.push_with(m.matrix.clone(), m.method, m.tol);
+    }
+    if let Some(ms) = req.deadline_ms {
+        job = job.deadline(Duration::from_secs_f64(ms / 1e3));
+    }
+    job
+}
+
+/// Offer every request of `reqs` to `svc` in order, waiting each
+/// admitted ticket to completion. Returns (admitted, shed, failed).
+fn offer(
+    svc: &ExpmService,
+    reqs: &[CapturedRequest],
+) -> (u64, u64, u64) {
+    let (mut admitted, mut shed, mut failed) = (0, 0, 0);
+    for req in reqs {
+        match svc.submit_admitted(job_from(req)) {
+            Ok(ticket) => {
+                admitted += 1;
+                if ticket.wait().is_err() {
+                    failed += 1;
+                }
+            }
+            Err(SubmitError::Shed { estimated_delay_s }) => {
+                shed += 1;
+                assert!(
+                    estimated_delay_s > BUDGET.as_secs_f64(),
+                    "shed below budget: {estimated_delay_s}"
+                );
+            }
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    (admitted, shed, failed)
+}
+
+/// Tentpole acceptance: on the same replayed trace and the same
+/// seeded state — a slow big-`n` history inflating the global mean,
+/// with only cheap groups actually queued — the per-class estimator
+/// sheds strictly fewer jobs than the global-mean one, and every job
+/// it admits completes with zero loss and zero post-admission
+/// deadline cancellations.
+#[test]
+fn per_class_sheds_strictly_fewer_on_a_replayed_trace() {
+    let dir = std::env::temp_dir().join(format!(
+        "expmflow-adm-ab-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mixed.xpt");
+    capture::save(&mixed_trace(6, 4), &path).unwrap();
+    let reqs = capture::load(&path).unwrap();
+
+    let pc = service(AdmissionEstimator::PerClass);
+    let gm = service(AdmissionEstimator::GlobalMean);
+    for svc in [&pc, &gm] {
+        // History: cheap groups run in ~1 ms on the native lane; the
+        // big class runs at 180 ms a group on its own lane, dragging
+        // the global mean latency to ~78 ms.
+        teach(svc, "native", class(8, false), 1e-3, 40);
+        teach(svc, "big:0", class(64, false), 0.18, 30);
+        // The actual queue holds only cheap work: ~4 ms of real delay
+        // ahead of a cheap job, but 3 x 78 ms = 233 ms under the
+        // global model — past the 200 ms budget.
+        park(svc, "native", class(8, false), 3);
+    }
+
+    let (gm_admitted, gm_shed, _) = offer(&gm, &reqs);
+    let (pc_admitted, pc_shed, pc_failed) = offer(&pc, &reqs);
+
+    // The global model sheds the entire trace; the per-class model
+    // prices the cheap queue correctly and admits everything.
+    assert_eq!(gm_shed, reqs.len() as u64, "gm admitted {gm_admitted}");
+    assert_eq!(pc_admitted, reqs.len() as u64);
+    assert!(
+        pc_shed < gm_shed,
+        "per-class must shed strictly fewer: {pc_shed} vs {gm_shed}"
+    );
+    // Zero job loss and zero post-admission deadline cancellations on
+    // everything admitted.
+    assert_eq!(pc_failed, 0);
+    let (pc_snap, gm_snap) =
+        (pc.metrics.snapshot(), gm.metrics.snapshot());
+    assert_eq!(pc_snap.cancelled_expired, 0);
+    assert_eq!(gm_snap.cancelled_expired, 0);
+    assert_eq!(pc_snap.shed, pc_shed);
+    assert_eq!(gm_snap.shed, gm_shed);
+    // The per-class service actually ran its estimator (one estimate
+    // per offered job, every class answered by a learned tier)...
+    assert_eq!(pc_snap.estimator_estimates, reqs.len() as u64);
+    assert!(pc_snap.estimator_exact > 0, "{pc_snap:?}");
+    // ...and the global-mean service never did.
+    assert_eq!(gm_snap.estimator_estimates, 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the over-admission direction. A warm-hit flood drags
+/// the global mean to ~9 ms, so the global model happily admits a
+/// cold big-`n` job whose own lane holds 1.5 s of learned work — into
+/// a queue it could only time out in — while still admitting cheap
+/// jobs. The per-class model sheds exactly the doomed class and keeps
+/// admitting the cheap one; counters are pinned both ways.
+#[test]
+fn warm_flood_does_not_hide_a_slow_cold_class() {
+    let reqs = mixed_trace(6, 4);
+    let n_big =
+        reqs.iter().filter(|r| r.matrices[0].matrix.order() == 64).count();
+    let n_cheap = reqs.len() - n_big;
+
+    let pc = service(AdmissionEstimator::PerClass);
+    let gm = service(AdmissionEstimator::GlobalMean);
+    for svc in [&pc, &gm] {
+        // Warm-cache-heavy stream: hundreds of ~1 ms warm groups on
+        // the native lane...
+        teach(svc, "native", class(8, true), 1e-3, 200);
+        // ...while the big cold class lives on its own lane at 150 ms
+        // a group, with 10 groups already queued there.
+        teach(svc, "big:0", class(64, false), 0.15, 12);
+        park(svc, "big:0", class(64, false), 10);
+    }
+
+    let (gm_admitted, gm_shed, gm_failed) = offer(&gm, &reqs);
+    let (pc_admitted, pc_shed, pc_failed) = offer(&pc, &reqs);
+
+    // Global mean: backlog 10 x ~9 ms mean = ~94 ms, under the 200 ms
+    // budget, so it admits *everything* — including the cold big jobs
+    // its own per-class history says face 1.5 s of queue.
+    assert_eq!(gm_shed, 0, "global mean saw the slow class: {gm_shed}");
+    assert_eq!(gm_admitted, reqs.len() as u64);
+    // Per-class: exactly the doomed class is shed; the cheap stream
+    // is untouched.
+    assert_eq!(pc_shed, n_big as u64);
+    assert_eq!(pc_admitted, n_cheap as u64);
+    // Admitted work completes cleanly on both services.
+    assert_eq!(pc_failed, 0);
+    assert_eq!(gm_failed, 0);
+    assert_eq!(pc.metrics.snapshot().cancelled_expired, 0);
+    assert_eq!(gm.metrics.snapshot().cancelled_expired, 0);
+}
+
+/// Acceptance: a captured trace replays byte-deterministically —
+/// saving the same requests twice, and re-saving what `load` returns,
+/// all produce identical files, and the loaded requests are exactly
+/// the captured ones.
+#[test]
+fn captured_trace_replay_is_byte_deterministic() {
+    let dir = std::env::temp_dir().join(format!(
+        "expmflow-adm-det-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let reqs = mixed_trace(3, 2);
+    let (a, b, c) =
+        (dir.join("a.xpt"), dir.join("b.xpt"), dir.join("c.xpt"));
+    capture::save(&reqs, &a).unwrap();
+    capture::save(&reqs, &b).unwrap();
+    let loaded = capture::load(&a).unwrap();
+    assert_eq!(loaded, reqs, "replay must reproduce the capture");
+    capture::save(&loaded, &c).unwrap();
+    let bytes = std::fs::read(&a).unwrap();
+    assert_eq!(bytes, std::fs::read(&b).unwrap());
+    assert_eq!(bytes, std::fs::read(&c).unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}

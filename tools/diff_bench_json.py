@@ -7,22 +7,43 @@ or goodput drops beyond the allowed thresholds:
 
   * latency_s.p99 may grow by at most --max-p99-regress percent;
   * goodput.requests_per_s may shrink by at most --max-goodput-drop
-    percent.
+    percent;
+  * prewarm.warm.p50_s (when both runs carry a prewarm section) is
+    gated like a latency metric.
+
+Sections are optional on BOTH sides: bench artifacts evolve
+additively (a --prewarm run carries a `prewarm` section, a plain run
+does not), so a metric absent from either artifact skips that single
+comparison with a note instead of failing the gate. Mixed-schema
+pairs — e.g. a prewarm baseline diffed against a capture/replay run —
+therefore compare exactly the metrics they share.
 
 A missing or unreadable baseline is not an error — first runs and
 renamed artifacts print a note and exit 0, so the gate only ever
-compares real apples to real apples. Malformed *new* artifacts are an
-error (run tools/check_bench_json.py first for the full schema check).
+compares real apples to real apples. Malformed *new* artifacts (not a
+JSON object at the top level) are still an error; run
+tools/check_bench_json.py first for the full schema check.
 
 Usage:
-  tools/diff_bench_json.py BENCH_7.json --baseline BENCH_6.json \
+  tools/diff_bench_json.py BENCH_10.json --baseline BENCH_9.json \
       [--max-p99-regress 50] [--max-goodput-drop 30]
+  tools/diff_bench_json.py --self-test
 """
 
 import argparse
 import json
 import sys
 from pathlib import Path
+
+# (dotted path, kind) — "latency" metrics may grow by at most
+# --max-p99-regress percent, "throughput" metrics may shrink by at
+# most --max-goodput-drop percent. Paths absent from either artifact
+# are skipped (optional sections), never failed.
+COMPARISONS = [
+    ("latency_s.p99", "latency"),
+    ("goodput.requests_per_s", "throughput"),
+    ("prewarm.warm.p50_s", "latency"),
+]
 
 
 def load(path: Path):
@@ -36,22 +57,156 @@ def load(path: Path):
     return doc, None
 
 
-def metric(doc, obj, field):
-    holder = doc.get(obj)
-    val = holder.get(field) if isinstance(holder, dict) else None
-    if not isinstance(val, (int, float)) or isinstance(val, bool):
+def metric(doc, dotted):
+    """Resolve a dotted path to a finite number, else None."""
+    node = doc
+    for key in dotted.split("."):
+        if not isinstance(node, dict):
+            return None
+        node = node.get(key)
+    if not isinstance(node, (int, float)) or isinstance(node, bool):
         return None
-    return float(val)
+    return float(node)
+
+
+def compare(new_doc, base_doc, new_name, args):
+    """Run every shared comparison; returns (failures, compared)."""
+    failures = []
+    compared = 0
+    for dotted, kind in COMPARISONS:
+        old = metric(base_doc, dotted)
+        new = metric(new_doc, dotted)
+        if old is None or new is None:
+            sides = []
+            if old is None:
+                sides.append("baseline")
+            if new is None:
+                sides.append("new")
+            print(
+                f"{dotted}: absent in {' and '.join(sides)}, "
+                "skipped (optional section)"
+            )
+            continue
+        if old <= 0:
+            print(f"{dotted}: baseline {old:g} not positive, skipped")
+            continue
+        compared += 1
+        if kind == "latency":
+            growth = (new / old - 1.0) * 100.0
+            limit = args.max_p99_regress
+            line = (
+                f"{dotted} {old:.6f}s -> {new:.6f}s "
+                f"({growth:+.1f}%, limit +{limit:.1f}%)"
+            )
+            bad = growth > limit
+        else:
+            drop = (1.0 - new / old) * 100.0
+            limit = args.max_goodput_drop
+            line = (
+                f"{dotted} {old:.2f} -> {new:.2f} "
+                f"({-drop:+.1f}%, limit -{limit:.1f}%)"
+            )
+            bad = drop > limit
+        if bad:
+            failures.append(f"{new_name}: {line}")
+        else:
+            print(line)
+    return failures, compared
+
+
+def self_test():
+    """Exercise the gate on synthetic mixed-schema artifact pairs."""
+    import tempfile
+
+    full = {
+        "schema": 1,
+        "latency_s": {"p99": 0.10},
+        "goodput": {"requests_per_s": 100.0},
+        "prewarm": {"warm": {"p50_s": 0.02}},
+    }
+    plain = {  # no prewarm section (a non --prewarm run)
+        "schema": 1,
+        "latency_s": {"p99": 0.10},
+        "goodput": {"requests_per_s": 100.0},
+    }
+    slow = {
+        "schema": 1,
+        "latency_s": {"p99": 0.30},
+        "goodput": {"requests_per_s": 100.0},
+    }
+    starved = {
+        "schema": 1,
+        "latency_s": {"p99": 0.10},
+        "goodput": {"requests_per_s": 10.0},
+    }
+    sparse = {"schema": 1}  # no shared metric at all
+    zero = {
+        "schema": 1,
+        "latency_s": {"p99": 0.0},
+        "goodput": {"requests_per_s": 100.0},
+    }
+
+    cases = [
+        # (name, new_doc, base_doc, expected_exit)
+        ("identical full pair", full, full, 0),
+        ("prewarm new vs plain baseline", full, plain, 0),
+        ("plain new vs prewarm baseline", plain, full, 0),
+        ("p99 regression", slow, plain, 1),
+        ("goodput collapse", starved, plain, 1),
+        ("sparse new artifact", sparse, full, 0),
+        ("sparse baseline", full, sparse, 0),
+        ("zero baseline p99", full, zero, 0),
+        ("malformed new artifact", [1, 2, 3], full, 1),
+        ("malformed baseline", full, "not an object", 0),
+    ]
+    bad = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        tmp = Path(tmp)
+        for name, new_doc, base_doc, want in cases:
+            new_path = tmp / "new.json"
+            base_path = tmp / "base.json"
+            new_path.write_text(json.dumps(new_doc))
+            base_path.write_text(json.dumps(base_doc))
+            got = main(
+                [
+                    "diff_bench_json.py",
+                    str(new_path),
+                    "--baseline",
+                    str(base_path),
+                ]
+            )
+            status = "ok" if got == want else "FAIL"
+            print(f"self-test [{status}] {name}: exit {got}, want {want}")
+            if got != want:
+                bad += 1
+        # Missing baseline file entirely: first-run case, exit 0.
+        lone = tmp / "lone.json"
+        lone.write_text(json.dumps(plain))
+        got = main(
+            [
+                "diff_bench_json.py",
+                str(lone),
+                "--baseline",
+                str(tmp / "nonexistent.json"),
+            ]
+        )
+        status = "ok" if got == 0 else "FAIL"
+        print(f"self-test [{status}] missing baseline file: exit {got}")
+        if got != 0:
+            bad += 1
+    print(f"self-test: {bad} failure(s)")
+    return 1 if bad else 0
 
 
 def main(argv):
     parser = argparse.ArgumentParser(
         description="Fail on bench regressions between two runs."
     )
-    parser.add_argument("new", help="latest BENCH_<pr>.json")
+    parser.add_argument(
+        "new", nargs="?", help="latest BENCH_<pr>.json"
+    )
     parser.add_argument(
         "--baseline",
-        required=True,
         help="previous PR's bench artifact to compare against",
     )
     parser.add_argument(
@@ -59,7 +214,7 @@ def main(argv):
         type=float,
         default=50.0,
         metavar="PCT",
-        help="allowed p99 latency growth in percent (default 50)",
+        help="allowed latency-metric growth in percent (default 50)",
     )
     parser.add_argument(
         "--max-goodput-drop",
@@ -68,7 +223,17 @@ def main(argv):
         metavar="PCT",
         help="allowed requests/s shrinkage in percent (default 30)",
     )
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the built-in mixed-schema scenarios and exit",
+    )
     args = parser.parse_args(argv[1:])
+
+    if args.self_test:
+        return self_test()
+    if args.new is None or args.baseline is None:
+        parser.error("NEW and --baseline are required outside --self-test")
 
     base_path = Path(args.baseline)
     base, base_err = load(base_path)
@@ -81,45 +246,16 @@ def main(argv):
         print(new_err)
         return 1
 
-    failures = []
-
-    old_p99 = metric(base, "latency_s", "p99")
-    new_p99 = metric(new, "latency_s", "p99")
-    if new_p99 is None:
-        failures.append(f"{args.new}: latency_s.p99 missing or non-numeric")
-    elif old_p99 is not None and old_p99 > 0:
-        growth = (new_p99 / old_p99 - 1.0) * 100.0
-        limit = args.max_p99_regress
-        line = (
-            f"p99 {old_p99:.6f}s -> {new_p99:.6f}s "
-            f"({growth:+.1f}%, limit +{limit:.1f}%)"
-        )
-        if growth > limit:
-            failures.append(f"{args.new}: {line}")
-        else:
-            print(line)
-
-    old_rps = metric(base, "goodput", "requests_per_s")
-    new_rps = metric(new, "goodput", "requests_per_s")
-    if new_rps is None:
-        failures.append(
-            f"{args.new}: goodput.requests_per_s missing or non-numeric"
-        )
-    elif old_rps is not None and old_rps > 0:
-        drop = (1.0 - new_rps / old_rps) * 100.0
-        limit = args.max_goodput_drop
-        line = (
-            f"goodput {old_rps:.2f} req/s -> {new_rps:.2f} req/s "
-            f"({-drop:+.1f}%, limit -{limit:.1f}%)"
-        )
-        if drop > limit:
-            failures.append(f"{args.new}: {line}")
-        else:
-            print(line)
-
+    failures, compared = compare(new, base, args.new, args)
     if failures:
         print("\n".join(failures))
         return 1
+    if compared == 0:
+        print(
+            f"no shared metrics between {args.new} and {args.baseline}; "
+            "nothing to gate"
+        )
+        return 0
     print(f"bench diff ok ({args.new} vs {args.baseline})")
     return 0
 
